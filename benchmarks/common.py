@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + result emission."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6            # microseconds
+
+
+def emit(name: str, payload) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+
+
+def row(name: str, us: float, derived: str):
+    return (name, us, derived)

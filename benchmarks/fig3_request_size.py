@@ -1,0 +1,52 @@
+"""Fig. 3: relative T/$ of A10G vs A100 across request sizes (Llama2-7b).
+
+(a) equal input/output lengths; (b) input × output grid.  Derived value:
+max A10G advantage and max A100 advantage (paper: 2.6× and 1.5×).
+"""
+from __future__ import annotations
+
+from repro.core import EngineModel, ModelPerf, PAPER_GPUS
+
+from .common import emit, row, timed
+
+SIZES = (25, 50, 100, 250, 500, 1000, 2000)
+SLO = 0.12
+
+
+def compute():
+    em = EngineModel(ModelPerf.llama2_7b())
+    a10, a100 = PAPER_GPUS["A10G"], PAPER_GPUS["A100"]
+    diag = {}
+    for s in SIZES:
+        t1 = em.tokens_per_dollar(a10, s, s, SLO)
+        t2 = em.tokens_per_dollar(a100, s, s, SLO)
+        diag[s] = {"A10G": t1, "A100": t2,
+                   "winner": "A10G" if t1 > t2 else "A100",
+                   "ratio": max(t1, t2) / max(1e-9, min(t1, t2))}
+    grid = {}
+    for i in SIZES:
+        for o in SIZES:
+            t1 = em.tokens_per_dollar(a10, i, o, SLO)
+            t2 = em.tokens_per_dollar(a100, i, o, SLO)
+            grid[f"{i}x{o}"] = {
+                "winner": "A10G" if t1 > t2 else "A100",
+                "pct_gain": 100 * (max(t1, t2) / max(1e-9, min(t1, t2)) - 1)}
+    return diag, grid
+
+
+def main():
+    (diag, grid), us = timed(compute)
+    a10_adv = max(d["ratio"] for d in diag.values()
+                  if d["winner"] == "A10G")
+    a100_adv = max(d["ratio"] for d in diag.values()
+                   if d["winner"] == "A100")
+    emit("fig3_request_size", {"diagonal": diag, "grid": grid})
+    derived = (f"A10G_best_small={a10_adv:.2f}x "
+               f"A100_best_large={a100_adv:.2f}x "
+               f"crossover_exists={a10_adv > 1 and a100_adv > 1}")
+    return [row("fig3_request_size", us, derived)]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,45 @@
+"""Fig. 5: best-T/$ GPU across the (input × output) grid for all four GPUs.
+
+Derived: the low->high-end progression of winners as sizes grow (paper's
+key qualitative claim) + the max %-advantage of best over second best.
+"""
+from __future__ import annotations
+
+from repro.core import EngineModel, ModelPerf, PAPER_GPUS
+
+from .common import emit, row, timed
+
+SIZES = (25, 100, 250, 500, 1000, 2000, 4000)
+SLO = 0.12
+
+
+def compute():
+    em = EngineModel(ModelPerf.llama2_7b())
+    tiles = {}
+    for i in SIZES:
+        for o in SIZES:
+            vals = {g: em.tokens_per_dollar(acc, i, o, SLO)
+                    for g, acc in PAPER_GPUS.items()}
+            order = sorted(vals, key=vals.get, reverse=True)
+            best, second = order[0], order[1]
+            gain = 100 * (vals[best] / max(1e-9, vals[second]) - 1)
+            tiles[f"{i}x{o}"] = {"best": best, "second": second,
+                                 "pct_over_second": gain}
+    return tiles
+
+
+def main():
+    tiles, us = timed(compute)
+    diag_winners = [tiles[f"{s}x{s}"]["best"] for s in SIZES]
+    rank = {"L4": 0, "A10G": 1, "A100": 2, "H100": 3}
+    monotone = all(rank[a] <= rank[b] + 1
+                   for a, b in zip(diag_winners, diag_winners[1:]))
+    emit("fig5_four_gpus", {"tiles": tiles, "diag_winners": diag_winners})
+    return [row("fig5_four_gpus", us,
+                f"diag_winners={'>'.join(diag_winners)} "
+                f"low_to_high_progression={monotone}")]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

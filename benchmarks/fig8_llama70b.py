@@ -1,0 +1,40 @@
+"""Fig. 8: H100x2 vs A100x2 serving Llama2-70b across sizes and SLOs."""
+from __future__ import annotations
+
+from repro.core import EngineModel, ModelPerf
+from repro.core.accelerators import PAPER_GPUS_70B
+
+from .common import emit, row, timed
+
+SIZES = (64, 250, 1000, 2000)
+SLOS = (0.04, 0.12)
+
+
+def compute():
+    em = EngineModel(ModelPerf.llama2_70b())
+    out = {}
+    for slo in SLOS:
+        for s in SIZES:
+            va = em.tokens_per_dollar(PAPER_GPUS_70B["A100x2"], s, s, slo)
+            vh = em.tokens_per_dollar(PAPER_GPUS_70B["H100x2"], s, s, slo)
+            out[f"{int(slo*1000)}ms_{s}"] = {
+                "A100x2": va, "H100x2": vh,
+                "winner": "A100x2" if va > vh else "H100x2"}
+    return out
+
+
+def main():
+    out, us = timed(compute)
+    h100_tight = all(v["winner"] == "H100x2" for k, v in out.items()
+                     if k.startswith("40ms"))
+    a100_loose = sum(v["winner"] == "A100x2" for k, v in out.items()
+                     if k.startswith("120ms"))
+    emit("fig8_llama70b", out)
+    return [row("fig8_llama70b", us,
+                f"H100_wins_all_tight={h100_tight} "
+                f"A100_wins_loose={a100_loose}/{len(SIZES)}")]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,74 @@
+"""§Perf helper: run a variant cell and diff its roofline terms against the
+baseline record.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        --arch kimi-k2-1t-a32b --shape train_4k --variant fsdp
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.roofline import DRYRUN, analyze_record
+
+
+def load(arch, shape, mesh, variant):
+    f = DRYRUN / f"{arch}__{shape}__{mesh}__{variant}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    return rec if rec.get("ok") else None
+
+
+def run_variant(arch, shape, variant, mesh_flag="single"):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh_flag,
+           "--variant", variant]
+    subprocess.run(cmd, check=True, capture_output=True,
+                   cwd=Path(__file__).resolve().parents[1],
+                   env={**__import__("os").environ,
+                        "PYTHONPATH": "src"})
+
+
+def compare(arch, shape, variant, mesh="pod_16x16"):
+    base = load(arch, shape, mesh, "baseline")
+    var = load(arch, shape, mesh, variant)
+    assert base and var, (arch, shape, variant)
+    rb, rv = analyze_record(base), analyze_record(var)
+    out = {"arch": arch, "shape": shape, "variant": variant}
+    for term in ("compute", "memory", "collective"):
+        b, v = rb["terms_s"][term], rv["terms_s"][term]
+        out[term] = {"before": b, "after": v,
+                     "delta_pct": round(100 * (v - b) / max(b, 1e-12), 1)}
+    out["dominant_before"] = rb["dominant"]
+    out["dominant_after"] = rv["dominant"]
+    dom = rb["dominant"]
+    b, v = rb["terms_s"][dom], rv["terms_s"][dom]
+    out["dominant_term_speedup"] = round(b / max(v, 1e-12), 2)
+    out["roofline_fraction"] = {"before": rb["roofline_fraction"],
+                                "after": rv["roofline_fraction"]}
+    out["peak_bytes_per_device"] = {
+        "before": base.get("memory", {}).get("peak_bytes_per_device"),
+        "after": var.get("memory", {}).get("peak_bytes_per_device")}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--no-run", action="store_true",
+                    help="only compare existing records")
+    args = ap.parse_args()
+    if not args.no_run:
+        run_variant(args.arch, args.shape, args.variant)
+    out = compare(args.arch, args.shape, args.variant)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_link_bytes / link_bw  (per chip)
+
+HLO terms come from ``compiled.cost_analysis()`` (which is per-device on the
+partitioned module and accounts scan trip counts); collective bytes from the
+HLO-text parser (launch/hlo_analysis.py), ring-model per-device link bytes.
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+
+MODEL_FLOPS (analytic useful work): 6·N·D for dense training (2·N_active·D
+for inference), plus exact causal-attention matmul FLOPs; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch overhead.  The reported
+``roofline_fraction`` = ideal-time / bound-time, where ideal-time is the
+*model* work through the dominant resource and bound-time the measured
+dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+
+from .common import emit, row
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+DRYRUN = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _attn_flops(cfg, B, S, causal=True, train=False):
+    total = 0.0
+    for spec in cfg.layer_specs():
+        if spec.kind != "attn":
+            continue
+        if spec.attn_type == "cross":
+            kv = cfg.n_vision_tokens
+            f = 4 * B * S * kv * cfg.n_heads * cfg.head_dim
+        else:
+            eff = S
+            if spec.attn_type == "local" and cfg.sliding_window:
+                eff = min(S, cfg.sliding_window)
+            f = 4 * B * S * eff * cfg.n_heads * cfg.head_dim
+            if causal and eff == S:
+                f /= 2
+        total += f * (3 if train else 1)
+    return total
+
+
+def model_terms(cfg, case, n_params, n_active):
+    """(model_flops, model_min_bytes) — global, per step."""
+    B, S = case.global_batch, case.seq_len
+    pb = 2  # bf16
+    if case.kind == "train":
+        D = B * S
+        flops = 6 * n_active * D + _attn_flops(cfg, B, S, train=True)
+        min_bytes = 3 * n_params * pb          # fwd read + bwd read + update
+    elif case.kind == "prefill":
+        D = B * S
+        flops = 2 * n_active * D + _attn_flops(cfg, B, S)
+        min_bytes = n_params * pb
+    else:  # decode: one token against an S-token cache
+        flops = 2 * n_active * B
+        kv_pt = 0.0
+        state_rw = 0.0           # recurrent state must be read+written/step
+        for spec in cfg.layer_specs():
+            if spec.kind == "attn" and spec.attn_type != "cross":
+                eff = (min(S, cfg.sliding_window)
+                       if spec.attn_type == "local" and cfg.sliding_window
+                       else S)
+                kv_pt += 2 * cfg.n_kv_heads * cfg.head_dim * pb * eff / S
+            elif spec.kind == "mamba":
+                state_rw += 2 * (cfg.d_inner * cfg.mamba_d_state * 4
+                                 + cfg.d_inner * (cfg.mamba_conv - 1) * pb)
+            elif spec.kind == "rwkv":
+                state_rw += 2 * (cfg.rwkv_heads * cfg.rwkv_head_dim ** 2 * 4
+                                 + 2 * cfg.d_model * pb)
+        min_bytes = n_params * pb + B * S * kv_pt + B * state_rw
+    return flops, min_bytes
+
+
+def analyze_record(rec: dict) -> dict:
+    devices = 512 if "multipod" in rec["mesh"] else 256
+    cfg = get_config(rec["arch"])
+    case = SHAPES[rec["shape"]]
+    # trip-count-corrected text-model terms (cost_analysis counts while
+    # bodies once — see hlo_analysis.full_cost); fall back for old records
+    hlo_flops = rec.get("flops_tc", rec["flops"])          # per device
+    hlo_bytes = rec.get("bytes_tc", rec["bytes_accessed"])
+    coll_bytes = rec["collectives"]["total_bytes"]
+    t_comp = hlo_flops / PEAK_FLOPS
+    t_mem = hlo_bytes / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf, mb = model_terms(cfg, case, rec["n_params"], rec["n_params_active"])
+    mf_dev, mb_dev = mf / devices, mb / devices
+    t_ideal = max(mf_dev / PEAK_FLOPS, mb_dev / HBM_BW)
+    t_bound = max(terms.values())
+    frac = t_ideal / t_bound if t_bound > 0 else 0.0
+    flops_ratio = mf_dev / hlo_flops if hlo_flops else 0.0
+    if dominant == "compute":
+        hint = ("cut recompute/dispatch waste (remat policy, fused attention"
+                " bwd, drop dead compute) to close FLOPs toward 6ND")
+    elif dominant == "memory":
+        hint = ("reduce HBM traffic: larger fusion blocks, bf16 buffers, "
+                "re-layout to avoid transposes, shard saved activations")
+    else:
+        hint = ("reshard to cut collective volume: move the all-gather "
+                "axis, overlap collectives with compute, or use "
+                "reduce-scatter forms")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "terms_s": {k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "flops_ratio_useful": round(flops_ratio, 4),
+        "roofline_fraction": round(frac, 4),
+        "peak_bytes_per_device": rec.get("memory", {}).get(
+            "peak_bytes_per_device"),
+        "hint": hint,
+    }
+
+
+def load_records(variant: str = "baseline"):
+    recs = []
+    for f in sorted(DRYRUN.glob(f"*__{variant}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            recs.append(rec)
+    return recs
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | useful-FLOP ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        t = r["terms_s"]
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                 f"| {t['compute']:.4g} | {t['memory']:.4g} "
+                 f"| {t['collective']:.4g} | **{r['dominant']}** "
+                 f"| {r['flops_ratio_useful']:.3f} "
+                 f"| {r['roofline_fraction']:.3f} |\n")
+    return hdr + body
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        return [row("roofline", 0.0, "no dry-run artifacts; run "
+                    "`python -m repro.launch.dryrun` first")]
+    rows = [analyze_record(r) for r in recs]
+    emit("roofline", rows)
+    (DRYRUN.parent / "roofline.md").write_text(markdown_table(rows))
+    single = [r for r in rows if "multipod" not in r["mesh"]]
+    worst = min(single, key=lambda r: r["roofline_fraction"])
+    most_coll = max(single, key=lambda r: r["terms_s"]["collective"]
+                    / max(1e-12, sum(r["terms_s"].values())))
+    by_dom = {}
+    for r in single:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    return [row("roofline", 0.0,
+                f"cells={len(rows)} dominants={by_dom} "
+                f"worst_frac={worst['arch']}/{worst['shape']}"
+                f"={worst['roofline_fraction']} "
+                f"most_collective={most_coll['arch']}/{most_coll['shape']}")]
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig3_request_size",
+    "benchmarks.fig5_four_gpus",
+    "benchmarks.fig6_slo",
+    "benchmarks.fig8_llama70b",
+    "benchmarks.fig9_rate",
+    "benchmarks.fig11_cost_savings",
+    "benchmarks.table2_solver_time",
+    "benchmarks.fig12_slo_attainment",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.main():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failed.append(modname)
+            traceback.print_exc()
+            print(f"{modname},0,FAILED: {e}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Table 2: ILP solver execution time across datasets and request rates.
+Paper: 0.14-1.2s with CBC; ours must stay in the same practical range."""
+from __future__ import annotations
+
+import time
+
+from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
+from repro.core.loadmatrix import build_problem
+from repro.core.ilp import solve
+
+from .common import emit, row
+
+RATES = (1, 2, 4, 8, 16, 32)
+DATASETS = ("arena", "pubmed", "mixed")
+
+
+def main():
+    model = ModelPerf.llama2_7b()
+    out = {}
+    rows = []
+    for slo in (0.12, 0.04):
+        mel = Melange(PAPER_GPUS, model, slo)
+        for ds in DATASETS:
+            times = {}
+            for rate in RATES:
+                wl = make_workload(ds, rate)
+                prob = build_problem(wl, mel.profile, 8)
+                t0 = time.perf_counter()
+                sol = solve(prob, time_budget_s=1.0)
+                times[rate] = round(time.perf_counter() - t0, 3)
+            out[f"{ds}_{int(slo*1000)}ms"] = times
+            rows.append(row(
+                f"table2_{ds}_{int(slo*1000)}ms",
+                max(times.values()) * 1e6,
+                f"max_solve_s={max(times.values()):.3f} "
+                f"paper_max=1.2s within_budget="
+                f"{max(times.values()) <= 1.25}"))
+    emit("table2_solver_time", out)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

@@ -1,0 +1,49 @@
+"""Elastic allocation under drift + failures (beyond-paper §7 follow-up).
+
+Simulates a day with a rising/falling request rate and a mid-day A100
+stockout: the autoscaler re-solves the ILP on drift and on failure,
+always keeping the SLO-feasible minimal-cost pool.
+
+    PYTHONPATH=src python examples/autoscale_elastic.py
+"""
+import numpy as np
+
+from repro.core import Autoscaler, Melange, ModelPerf, PAPER_GPUS, make_workload
+
+
+def main():
+    model = ModelPerf.llama2_7b()
+    mel = Melange(PAPER_GPUS, model, 0.12)
+    initial = make_workload("mixed", 2.0)
+    asc = Autoscaler(mel, initial, headroom=0.10, drift_threshold=0.15)
+    print(f"[t=00h] initial allocation {asc.current.counts} "
+          f"(${asc.current.cost_per_hour:.2f}/h)")
+
+    profile_of_day = [2, 2, 4, 8, 16, 24, 16, 8, 4, 2]
+    for hour, rate in enumerate(profile_of_day, start=1):
+        observed = make_workload("mixed", rate, seed=hour)
+        asc.observe_rates(observed.rates)
+        diff = asc.maybe_rescale()
+        tag = ""
+        if diff and not diff.is_noop:
+            tag = f"  RESCALE add={diff.add} remove={diff.remove}"
+        print(f"[t={hour:02d}h] rate~{rate:>2} req/s drift={asc.drift():.2f} "
+              f"alloc={asc.current.counts} "
+              f"(${asc.current.cost_per_hour:.2f}/h){tag}")
+        if hour == 5:
+            # mid-peak failure: one A100 dies and the type is stocked out
+            gpu = "A100" if asc.current.counts.get("A100") else \
+                max(asc.current.counts, key=asc.current.counts.get)
+            diff = asc.on_instance_failure(gpu, 1, stockout=True)
+            print(f"[t={hour:02d}h] !! {gpu} failure+stockout -> "
+                  f"re-solved alloc={asc.current.counts} "
+                  f"(${asc.current.cost_per_hour:.2f}/h) "
+                  f"add={diff.add}")
+
+    print("\nevent log:")
+    for ev in asc.history:
+        print("  ", {k: v for k, v in ev.items() if k != 'old'})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: derive the minimal-cost GPU allocation for an LLM service.
+
+    PYTHONPATH=src python examples/quickstart.py [--dataset mixed]
+                                                 [--rate 4] [--slo-ms 120]
+
+Mirrors the paper's Fig. 1 flow: accelerator catalog + service definition
+-> one-time offline profiling -> ILP -> allocation, compared against the
+single-GPU-type baselines of §6.
+"""
+import argparse
+
+from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="mixed",
+                    choices=["arena", "pubmed", "mixed"])
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--slo-ms", type=float, default=120.0)
+    ap.add_argument("--model", default="llama2-7b",
+                    help="llama2-7b | llama2-70b | any assigned arch id")
+    args = ap.parse_args()
+
+    if args.model == "llama2-7b":
+        model = ModelPerf.llama2_7b()
+    elif args.model == "llama2-70b":
+        model = ModelPerf.llama2_70b()
+    else:
+        from repro.configs import get_config
+        model = ModelPerf.from_config(get_config(args.model))
+
+    print(f"service: {args.dataset} @ {args.rate} req/s, "
+          f"TPOT SLO {args.slo_ms:.0f} ms, model {model.name}")
+    mel = Melange(PAPER_GPUS, model, args.slo_ms / 1000.0)
+    wl = make_workload(args.dataset, args.rate)
+
+    alloc = mel.allocate(wl, time_budget_s=2.0)
+    if alloc is None:
+        raise SystemExit("no feasible allocation under this SLO")
+    print(f"\nMélange allocation: {alloc.counts}  "
+          f"-> ${alloc.cost_per_hour:.2f}/h  "
+          f"(solver {'optimal' if alloc.solution.optimal else 'any-time'}"
+          f", {alloc.solution.solve_time_s:.2f}s)")
+
+    print("\nsingle-GPU-type baselines (§6.1):")
+    for gpu, base in mel.all_baselines(wl, time_budget_s=0.5).items():
+        if base is None:
+            print(f"  {gpu:>5}-only: infeasible (memory or SLO)")
+        else:
+            save = 100 * (1 - alloc.cost_per_hour / base.cost_per_hour)
+            print(f"  {gpu:>5}-only: ${base.cost_per_hour:7.2f}/h  "
+                  f"-> Mélange saves {save:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Train a model for a few hundred steps with checkpoint/restart.
+
+Default is a fast CPU-sized run; ``--full`` trains the ~100M-parameter
+configuration (slow on CPU — intended shape demonstration).
+
+    PYTHONPATH=src python examples/train_small.py [--arch internlm2-1.8b]
+        [--steps 200] [--full]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params instead of the reduced config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if args.full:
+        cfg = dataclasses.replace(
+            cfg, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+            d_ff=2048, vocab_size=32_000,
+            name=cfg.name + "-100m")
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps")
+    out = train(cfg, TrainConfig(
+        steps=args.steps, global_batch=8, seq_len=64,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=20))
+    print(f"loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"(resumed_from={out['resumed_from']})")
+
+
+if __name__ == "__main__":
+    main()

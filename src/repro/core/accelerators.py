@@ -1,0 +1,84 @@
+"""Accelerator catalog: the paper's four GPUs (Table 1, exact prices/specs)
+plus a TPU-fleet extension (the beyond-paper, TPU-native deployment target).
+
+Multi-chip TPU slice entries aggregate chip specs with a tensor-parallel
+efficiency factor (collective overhead across ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Accelerator:
+    name: str
+    mem_gb: float              # usable HBM
+    bw_gbs: float              # HBM bandwidth, GB/s
+    flops_tf: float            # peak half-precision TFLOP/s
+    price_hr: float            # on-demand $/h
+    chips: int = 1
+    tp_efficiency: float = 1.0  # effective fraction of aggregate peak
+    max_request_tokens: Optional[int] = None  # paper: L4/A10G capped at 12k
+
+    @property
+    def eff_flops(self) -> float:
+        return self.flops_tf * 1e12 * self.tp_efficiency
+
+    @property
+    def eff_bw(self) -> float:
+        return self.bw_gbs * 1e9 * self.tp_efficiency
+
+    @property
+    def mem_bytes(self) -> float:
+        return self.mem_gb * 1e9
+
+
+def _tpu(name, chips, chip_flops_tf, chip_bw, chip_mem, price_per_chip):
+    eff = 1.0 if chips == 1 else max(0.75, 1.0 - 0.04 * (chips.bit_length()))
+    return Accelerator(
+        name=name, chips=chips,
+        mem_gb=chip_mem * chips, bw_gbs=chip_bw * chips,
+        flops_tf=chip_flops_tf * chips,
+        price_hr=price_per_chip * chips, tp_efficiency=eff)
+
+
+# --- the paper's GPU set (Table 1) --------------------------------------
+PAPER_GPUS = {
+    "L4": Accelerator("L4", mem_gb=24, bw_gbs=300, flops_tf=121,
+                      price_hr=0.70, max_request_tokens=12_000),
+    "A10G": Accelerator("A10G", mem_gb=24, bw_gbs=600, flops_tf=125,
+                        price_hr=1.01, max_request_tokens=12_000),
+    "A100": Accelerator("A100", mem_gb=80, bw_gbs=1935, flops_tf=312,
+                        price_hr=3.67),
+    "H100": Accelerator("H100", mem_gb=80, bw_gbs=3350, flops_tf=989,
+                        price_hr=7.516),
+}
+
+# Multi-GPU nodes for the Llama2-70b experiment (Fig. 8)
+PAPER_GPUS_70B = {
+    "A100x2": Accelerator("A100x2", mem_gb=160, bw_gbs=3870, flops_tf=624,
+                          price_hr=7.34, chips=2, tp_efficiency=0.9),
+    "H100x2": Accelerator("H100x2", mem_gb=160, bw_gbs=6700, flops_tf=1978,
+                          price_hr=15.032, chips=2, tp_efficiency=0.9),
+}
+
+# --- TPU fleet (beyond-paper; public on-demand list prices) -------------
+TPU_FLEET = {
+    "v5e-1": _tpu("v5e-1", 1, 197, 819, 16, 1.20),
+    "v5e-4": _tpu("v5e-4", 4, 197, 819, 16, 1.20),
+    "v5e-8": _tpu("v5e-8", 8, 197, 819, 16, 1.20),
+    "v4-8": _tpu("v4-8", 4, 275, 1228, 32, 3.22),   # v4 "8" = 4 chips
+    "v5p-8": _tpu("v5p-8", 4, 459, 2765, 95, 4.20),
+}
+
+CATALOGS = {
+    "paper": PAPER_GPUS,
+    "paper70b": PAPER_GPUS_70B,
+    "tpu": TPU_FLEET,
+    "all": {**PAPER_GPUS, **TPU_FLEET},
+}
+
+
+def get_catalog(name: str) -> dict[str, Accelerator]:
+    return dict(CATALOGS[name])

@@ -1,0 +1,94 @@
+"""Mélange end-to-end (Fig. 1): inputs -> profile -> ILP -> allocation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+from .accelerators import Accelerator
+from .engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
+from .ilp import ILPProblem, ILPSolution, solve
+from .loadmatrix import build_problem
+from .profiler import Profile, profile_catalog
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class Allocation:
+    counts: dict[str, int]              # GPU type -> instances
+    cost_per_hour: float
+    solution: ILPSolution
+    profile: Profile
+    workload: Workload
+
+    @property
+    def total_instances(self) -> int:
+        return sum(self.counts.values())
+
+    solution_gpu_names: list[str] = dataclasses.field(default_factory=list)
+
+    def bucket_assignment(self, slice_factor: int = 8):
+        """bucket index -> {gpu: fraction of bucket's slices} (for the LB)."""
+        slices = self.workload.slices(slice_factor)
+        out: dict[int, dict[str, float]] = {}
+        names = self.solution_gpu_names
+        for (bi, _), j in zip(slices, self.solution.assignment):
+            d = out.setdefault(bi, {})
+            g = names[j]
+            d[g] = d.get(g, 0.0) + 1.0
+        for bi, d in out.items():
+            tot = sum(d.values())
+            for g in d:
+                d[g] /= tot
+        return out
+
+
+class Melange:
+    """The allocation framework. Profiling is one-time per (model, SLO)."""
+
+    def __init__(self, gpus: Mapping[str, Accelerator], model: ModelPerf,
+                 slo_tpot_s: float,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 profile: Optional[Profile] = None,
+                 slice_factor: int = 8,
+                 buckets=None):
+        from .workload import bucket_grid
+        self.gpus = dict(gpus)
+        self.model = model
+        self.slo = slo_tpot_s
+        self.slice_factor = slice_factor
+        self.buckets = buckets or bucket_grid()
+        self.profile = profile or profile_catalog(
+            self.gpus, self.buckets, model, slo_tpot_s, engine_params)
+
+    def allocate(self, workload: Workload, *,
+                 caps: dict[str, int] | None = None,
+                 gpu_subset: list[str] | None = None,
+                 over_provision: float = 0.0,
+                 time_budget_s: float = 5.0) -> Optional[Allocation]:
+        """Derive the minimal-cost allocation (§5.4). ``over_provision``
+        inflates bucket rates (§6.3's burst-absorption knob)."""
+        wl = workload if over_provision <= 0 else Workload(
+            workload.buckets, workload.rates * (1 + over_provision),
+            name=workload.name + f"+op{over_provision}")
+        prob = build_problem(wl, self.profile, self.slice_factor,
+                             caps=caps, gpu_subset=gpu_subset)
+        sol = solve(prob, time_budget_s=time_budget_s)
+        if sol is None:
+            return None
+        counts = sol.by_gpu(prob.gpu_names)
+        alloc = Allocation(counts, sol.cost, sol, self.profile, wl,
+                           solution_gpu_names=prob.gpu_names)
+        return alloc
+
+    def single_type_baseline(self, workload: Workload, gpu: str,
+                             **kw) -> Optional[Allocation]:
+        """§6.1 baseline: the same ILP restricted to one GPU type."""
+        return self.allocate(workload, gpu_subset=[gpu], **kw)
+
+    def all_baselines(self, workload: Workload, **kw):
+        out = {}
+        for g in sorted(self.gpus):
+            out[g] = self.single_type_baseline(workload, g, **kw)
+        return out

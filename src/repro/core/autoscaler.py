@@ -1,0 +1,115 @@
+"""Beyond-paper: elastic allocation control loop.
+
+The paper (§7) scopes Mélange to a fixed workload snapshot and lists
+autoscaling / GPU unavailability as deployment challenges for the broader
+serving system.  This module closes that loop:
+
+  * re-solve on drift: the controller tracks an EWMA of observed per-bucket
+    rates; when the observed workload departs from the provisioned one by
+    more than ``drift_threshold`` (L1 relative), it re-runs the ILP and
+    emits an allocation diff (scale-up instances to launch, scale-down
+    instances to drain).
+  * over-provisioning: rates handed to the solver are inflated by
+    ``headroom`` (the paper's own suggestion in §6.3 for burst absorption).
+  * availability caps: cloud stockouts enter the ILP as per-type caps
+    (B_j ≤ cap_j); on instance failure the controller re-solves with the
+    lost capacity excluded — allocation-level fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .allocator import Allocation, Melange
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class AllocationDiff:
+    add: dict[str, int]
+    remove: dict[str, int]
+
+    @property
+    def is_noop(self) -> bool:
+        return not self.add and not self.remove
+
+
+def allocation_diff(old: dict[str, int], new: dict[str, int]) -> AllocationDiff:
+    add, rem = {}, {}
+    for g in set(old) | set(new):
+        d = new.get(g, 0) - old.get(g, 0)
+        if d > 0:
+            add[g] = d
+        elif d < 0:
+            rem[g] = -d
+    return AllocationDiff(add, rem)
+
+
+class Autoscaler:
+    def __init__(self, melange: Melange, initial: Workload, *,
+                 headroom: float = 0.10, drift_threshold: float = 0.15,
+                 ewma: float = 0.3):
+        self.melange = melange
+        self.headroom = headroom
+        self.drift_threshold = drift_threshold
+        self.ewma = ewma
+        self.observed = initial.rates.copy()
+        self.buckets = initial.buckets
+        self.caps: dict[str, int] = {}
+        self.current: Optional[Allocation] = melange.allocate(
+            initial, over_provision=headroom)
+        self.history: list[dict] = []
+
+    # -- telemetry -----------------------------------------------------------
+    def observe_rates(self, rates: np.ndarray) -> None:
+        self.observed = (1 - self.ewma) * self.observed + self.ewma * rates
+
+    def drift(self) -> float:
+        prov = self.current.workload.rates / (1 + self.headroom)
+        denom = max(prov.sum(), 1e-9)
+        return float(np.abs(self.observed - prov).sum() / denom)
+
+    # -- control -------------------------------------------------------------
+    def maybe_rescale(self, *, force: bool = False) -> Optional[AllocationDiff]:
+        if not force and self.drift() < self.drift_threshold:
+            return None
+        wl = Workload(self.buckets, self.observed.copy(), name="observed")
+        new = self.melange.allocate(
+            wl, over_provision=self.headroom,
+            caps=self.caps or None)
+        if new is None:
+            return None
+        diff = allocation_diff(self.current.counts, new.counts)
+        self.history.append({
+            "event": "rescale", "drift": self.drift(),
+            "old": dict(self.current.counts), "new": dict(new.counts),
+            "old_cost": self.current.cost_per_hour,
+            "new_cost": new.cost_per_hour,
+        })
+        self.current = new
+        return diff
+
+    def on_instance_failure(self, gpu: str, n: int = 1,
+                            *, stockout: bool = False) -> AllocationDiff:
+        """Allocation-level fault handling: capacity lost; optionally the
+        type is unavailable for replacement (cloud stockout)."""
+        counts = dict(self.current.counts)
+        counts[gpu] = max(0, counts.get(gpu, 0) - n)
+        if stockout:
+            self.caps[gpu] = counts[gpu]
+        wl = Workload(self.buckets, self.observed.copy(), name="post-failure")
+        new = self.melange.allocate(
+            wl, over_provision=self.headroom, caps=self.caps or None)
+        if new is None:
+            raise RuntimeError(
+                "infeasible after failure: no capacity able to serve "
+                "workload under SLO — page a human")
+        diff = allocation_diff(counts, new.counts)
+        self.history.append({
+            "event": "failure", "gpu": gpu, "n": n, "stockout": stockout,
+            "new": dict(new.counts), "new_cost": new.cost_per_hour,
+        })
+        self.current = new
+        return diff

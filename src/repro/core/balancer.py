@@ -1,0 +1,98 @@
+"""Heterogeneity-aware load balancer (paper App. A.2).
+
+For each input-length bucket the LB keeps a running average of observed
+output lengths; a new request's output length is estimated from its input
+bucket, identifying its (input, estimated-output) bucket.  The request is
+then routed by weighted-random selection over instances, weights
+proportional to each instance's MaxTput for that bucket.
+
+Beyond-paper: optional straggler-aware weighting — instances report a TPOT
+EWMA and weights are scaled by (slo / max(tpot, slo))^k so slow/overloaded
+instances shed load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .profiler import Profile
+from .workload import INPUT_EDGES, OUTPUT_EDGES
+
+
+@dataclasses.dataclass
+class InstanceRef:
+    inst_id: int
+    gpu: str
+
+
+class LoadBalancer:
+    def __init__(self, profile: Profile, instances: Sequence[InstanceRef],
+                 *, seed: int = 0, straggler_factor: float = 0.0):
+        self.profile = profile
+        self.instances = list(instances)
+        self.rng = np.random.default_rng(seed)
+        self.straggler_factor = straggler_factor
+        ni = len(INPUT_EDGES) - 1
+        # output-length estimator state per input bucket
+        self._sum = np.zeros(ni)
+        self._cnt = np.zeros(ni)
+        self._tpot_ewma = {}        # inst_id -> observed tpot
+        self._i_edges = np.asarray(INPUT_EDGES)
+        self._o_edges = np.asarray(OUTPUT_EDGES)
+        self._no = len(OUTPUT_EDGES) - 1
+
+    # -- output length estimation ------------------------------------------
+    def _input_bucket(self, input_len: int) -> int:
+        return int(np.clip(np.searchsorted(self._i_edges, input_len, "right")
+                           - 1, 0, len(self._i_edges) - 2))
+
+    def estimate_output(self, input_len: int) -> float:
+        bi = self._input_bucket(input_len)
+        if self._cnt[bi] > 0:
+            return self._sum[bi] / self._cnt[bi]
+        tot_c, tot_s = self._cnt.sum(), self._sum.sum()
+        return tot_s / tot_c if tot_c > 0 else 128.0
+
+    def observe(self, input_len: int, output_len: int,
+                inst_id: Optional[int] = None,
+                tpot: Optional[float] = None) -> None:
+        bi = self._input_bucket(input_len)
+        self._sum[bi] += output_len
+        self._cnt[bi] += 1
+        if inst_id is not None and tpot is not None:
+            prev = self._tpot_ewma.get(inst_id, tpot)
+            self._tpot_ewma[inst_id] = 0.8 * prev + 0.2 * tpot
+
+    # -- routing -------------------------------------------------------------
+    def bucket_index(self, input_len: int, output_len_est: float) -> int:
+        bi = self._input_bucket(input_len)
+        bo = int(np.clip(np.searchsorted(self._o_edges, output_len_est,
+                                         "right") - 1, 0, self._no - 1))
+        return bi * self._no + bo
+
+    def route(self, input_len: int) -> InstanceRef:
+        est = self.estimate_output(input_len)
+        bidx = self.bucket_index(input_len, est)
+        weights = np.zeros(len(self.instances))
+        for k, inst in enumerate(self.instances):
+            w = self.profile.max_tput[inst.gpu][bidx]
+            if self.straggler_factor > 0 and inst.inst_id in self._tpot_ewma:
+                slo = self.profile.slo_tpot_s
+                t = self._tpot_ewma[inst.inst_id]
+                w *= (slo / max(t, slo)) ** self.straggler_factor
+            weights[k] = w
+        if weights.sum() <= 0:
+            # nothing profiled-feasible: fall back to biggest-memory instance
+            weights = np.array([
+                self.profile.gpus[i.gpu].mem_gb for i in self.instances])
+        weights = weights / weights.sum()
+        k = int(self.rng.choice(len(self.instances), p=weights))
+        return self.instances[k]
+
+    def add_instance(self, inst: InstanceRef) -> None:
+        self.instances.append(inst)
+
+    def remove_instance(self, inst_id: int) -> None:
+        self.instances = [i for i in self.instances if i.inst_id != inst_id]

@@ -1,0 +1,311 @@
+"""Cost-aware bin-packing ILP (§5.4.3) and an exact solver.
+
+    min  Σ_j c_j · B_j
+    s.t. Σ_j A_ij = 1            (every slice assigned once)
+         Σ_i A_ij · L_ij ≤ B_j   (capacity)
+         A ∈ {0,1},  B ∈ Z≥0     (+ optional availability caps B_j ≤ cap_j)
+
+No off-the-shelf ILP solver is installed in this environment, so we exploit
+the problem's structure (an optimal B is always B_j = ceil(load_j)):
+
+  * LP relaxation is *separable*: relaxing the ceil, the optimum assigns each
+    slice to argmin_j c_j·L_ij, giving the lower bound
+        LB = Σ_i min_j c_j·L_ij.
+  * Branch-and-bound over slices (sorted by decreasing cost spread), pruning
+    with  fractional-partial-cost + remaining-LB ≥ incumbent.  Slices of the
+    same bucket are interchangeable, so assignments are canonicalized
+    (symmetry breaking) by forcing non-decreasing GPU index within a bucket
+    group.
+  * A greedy + local-search warm start provides the initial incumbent, so
+    the solver emits an any-time solution under a time budget.
+
+Solutions carry an ``optimal`` flag; tests verify exactness against brute
+force on small instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import math
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+INFEASIBLE = float("inf")
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class ILPProblem:
+    loads: np.ndarray               # (N, M) fractional load; inf = forbidden
+    costs: np.ndarray               # (M,) $/h per GPU type
+    gpu_names: list[str]
+    bucket_of_slice: np.ndarray     # (N,) bucket group id (symmetry breaking)
+    caps: Optional[np.ndarray] = None   # (M,) max instances (availability)
+
+
+@dataclasses.dataclass
+class ILPSolution:
+    assignment: np.ndarray          # (N,) gpu index per slice
+    counts: np.ndarray              # (M,) B_j
+    cost: float
+    optimal: bool
+    solve_time_s: float
+    nodes: int = 0
+
+    def by_gpu(self, names: Sequence[str]) -> dict[str, int]:
+        return {n: int(c) for n, c in zip(names, self.counts) if c > 0}
+
+
+def _counts_cost(loads_sum: np.ndarray, costs: np.ndarray) -> float:
+    return float(np.sum(costs * np.ceil(loads_sum - _EPS)))
+
+
+def _greedy(prob: ILPProblem) -> Optional[np.ndarray]:
+    """Warm start: assign to argmin marginal-cost, then local moves."""
+    N, M = prob.loads.shape
+    assign = np.full(N, -1, dtype=int)
+    load = np.zeros(M)
+    order = np.argsort(-np.nanmax(
+        np.where(np.isfinite(prob.loads), prob.loads, np.nan), axis=1))
+    for i in order:
+        best_j, best_inc = -1, INFEASIBLE
+        for j in range(M):
+            lij = prob.loads[i, j]
+            if not np.isfinite(lij):
+                continue
+            new_load = load[j] + lij
+            if prob.caps is not None and math.ceil(new_load - _EPS) > prob.caps[j]:
+                continue
+            inc = (math.ceil(new_load - _EPS) - math.ceil(load[j] - _EPS)
+                   ) * prob.costs[j] + prob.costs[j] * lij * 1e-6
+            if inc < best_inc - _EPS:
+                best_inc, best_j = inc, j
+        if best_j < 0:
+            return None
+        assign[i] = best_j
+        load[best_j] += prob.loads[i, best_j]
+    # local search: single-slice moves while improving
+    improved = True
+    it = 0
+    while improved and it < 50:
+        improved = False
+        it += 1
+        for i in range(N):
+            cur = assign[i]
+            for j in range(M):
+                if j == cur or not np.isfinite(prob.loads[i, j]):
+                    continue
+                new_load = load.copy()
+                new_load[cur] -= prob.loads[i, cur]
+                new_load[j] += prob.loads[i, j]
+                if prob.caps is not None and math.ceil(
+                        new_load[j] - _EPS) > prob.caps[j]:
+                    continue
+                if _counts_cost(new_load, prob.costs) < _counts_cost(
+                        load, prob.costs) - _EPS:
+                    assign[i] = j
+                    load = new_load
+                    improved = True
+                    break
+    return assign
+
+
+def _compositions(m: int, k: int):
+    """All ways to write m as an ordered sum of k non-negatives."""
+    if k == 1:
+        yield (m,)
+        return
+    for first in range(m + 1):
+        for rest in _compositions(m - first, k - 1):
+            yield (first,) + rest
+
+
+@functools.lru_cache(maxsize=256)
+def _compositions_cached(m: int, k: int):
+    return list(_compositions(m, k))
+
+
+def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]:
+    """Exact branch-and-bound at bucket-group granularity.
+
+    Slices within a bucket are identical, so the search assigns *counts* per
+    (group, gpu) — compositions of the group's multiplicity — rather than
+    permutations of individual slices.  Separable-LP suffix bound + strong
+    warm starts (greedy+LS, LP rounding, single-type) give an any-time
+    solution; ``optimal`` reports whether the search completed.
+    """
+    t0 = time.time()
+    N, M = prob.loads.shape
+    if N == 0:
+        return ILPSolution(np.zeros(0, int), np.zeros(M, int), 0.0, True, 0.0)
+
+    finite = np.isfinite(prob.loads)
+    if not finite.any(axis=1).all():
+        return None                                    # some slice fits nowhere
+
+    # ---- warm starts: greedy+local-search, LP rounding, single-type
+    candidates: list[np.ndarray] = []
+    warm = _greedy(prob)
+    if warm is not None:
+        candidates.append(warm)
+    # LP-relaxation rounding: each slice to argmin c_j L_ij
+    lp = np.argmin(np.where(finite, prob.loads * prob.costs, np.inf), axis=1)
+    candidates.append(lp)
+    # single-type solutions (the paper's baselines are feasible points)
+    for j in range(M):
+        if finite[:, j].all():
+            total = prob.loads[:, j].sum()
+            if prob.caps is None or math.ceil(total - _EPS) <= prob.caps[j]:
+                candidates.append(np.full(N, j, dtype=int))
+
+    best_cost, best_assign = INFEASIBLE, None
+    for cand in candidates:
+        load_c = np.array([prob.loads[np.arange(N)[cand == j], j].sum()
+                           for j in range(M)])
+        if not np.isfinite(load_c).all():
+            continue
+        counts_c = np.ceil(load_c - _EPS)
+        if prob.caps is not None and np.any(counts_c > prob.caps):
+            continue
+        c = _counts_cost(load_c, prob.costs)
+        if c < best_cost:
+            best_cost, best_assign = c, cand.copy()
+    if best_assign is None:
+        return None
+
+    # ---- group interchangeable slices: same bucket id + identical rows
+    groups: list[dict] = []
+    key_of = {}
+    for i in range(N):
+        row = prob.loads[i]
+        key = (int(prob.bucket_of_slice[i]),
+               tuple(np.round(np.where(np.isfinite(row), row, -1.0), 12)))
+        if key not in key_of:
+            key_of[key] = len(groups)
+            groups.append({"row": row, "idx": []})
+        groups[key_of[key]]["idx"].append(i)
+    G = len(groups)
+    rows = np.stack([g["row"] for g in groups])          # (G, M)
+    mult = np.array([len(g["idx"]) for g in groups])
+    gfinite = np.isfinite(rows)
+    cost_g = np.where(gfinite, rows * prob.costs, np.inf)
+
+    # search order: largest total-load, biggest spread first
+    if M > 1:
+        spread = np.where(gfinite.sum(axis=1) > 1,
+                          np.sort(cost_g, axis=1)[:, 1] - cost_g.min(axis=1),
+                          0.0)
+    else:
+        spread = np.zeros(G)
+    size_key = np.nanmax(np.where(gfinite, rows, np.nan), axis=1) * mult
+    gorder = np.lexsort((-size_key, -spread))
+    rows_o = rows[gorder]
+    mult_o = mult[gorder]
+    min_unit = cost_g.min(axis=1)[gorder] * mult_o
+    suffix_lb = np.concatenate([np.cumsum(min_unit[::-1])[::-1], [0.0]])
+
+    nodes = 0
+    timeout = False
+    best_counts_per_group = None
+    cur_counts: list[Optional[tuple]] = [None] * G
+
+    def dfs(gi: int, load: np.ndarray, frac: float):
+        nonlocal nodes, timeout, best_cost, best_counts_per_group
+        if timeout:
+            return
+        nodes += 1
+        if nodes % 512 == 0 and time.time() - t0 > time_budget_s:
+            timeout = True
+            return
+        if gi == G:
+            cost = _counts_cost(load, prob.costs)
+            if cost < best_cost - 1e-9:
+                best_cost = cost
+                best_counts_per_group = [c for c in cur_counts]
+            return
+        feas = [j for j in range(M) if gfinite[gorder[gi]][j]]
+        m = int(mult_o[gi])
+        comps = _compositions_cached(m, len(feas))
+        # visit cheapest-fractional-cost compositions first
+        unit = np.array([cost_g[gorder[gi]][j] for j in feas])
+        comps = sorted(comps, key=lambda c: float(np.dot(c, unit)))
+        for comp in comps:
+            add = np.zeros(M)
+            ok = True
+            inc = 0.0
+            for n_j, j in zip(comp, feas):
+                if n_j == 0:
+                    continue
+                add[j] = n_j * rows_o[gi][j]
+                inc += n_j * cost_g[gorder[gi]][j]
+                if prob.caps is not None and math.ceil(
+                        load[j] + add[j] - _EPS) > prob.caps[j]:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            lb_frac = frac + inc + suffix_lb[gi + 1]
+            if lb_frac >= best_cost - 1e-7:
+                # comps sorted by inc => all later comps also pruned
+                break
+            # committed-ceiling bound: loads only grow, so
+            # B_j >= ceil(current load_j) already — a valid lower bound.
+            lb_ceil = _counts_cost(load + add, prob.costs)
+            if lb_ceil >= best_cost - 1e-7:
+                continue
+            full = np.zeros(M, dtype=int)
+            for n_j, j in zip(comp, feas):
+                full[j] = n_j
+            cur_counts[gi] = tuple(full)
+            dfs(gi + 1, load + add, frac + inc)
+            cur_counts[gi] = None
+            if timeout:
+                return
+
+    dfs(0, np.zeros(M), 0.0)
+
+    if best_counts_per_group is not None:
+        best_assign = np.empty(N, dtype=int)
+        for gi_o, comp in enumerate(best_counts_per_group):
+            g = groups[gorder[gi_o]]
+            pos = 0
+            for j in range(M):
+                for _ in range(comp[j]):
+                    best_assign[g["idx"][pos]] = j
+                    pos += 1
+
+    counts = np.zeros(M, dtype=int)
+    for j in range(M):
+        lj = prob.loads[np.arange(N)[best_assign == j], j].sum()
+        counts[j] = int(math.ceil(lj - _EPS))
+    return ILPSolution(best_assign, counts, float(np.sum(counts * prob.costs)),
+                       optimal=not timeout, solve_time_s=time.time() - t0,
+                       nodes=nodes)
+
+
+def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
+    """Exhaustive reference for tests (tiny N only)."""
+    N, M = prob.loads.shape
+    best = None
+    t0 = time.time()
+    for combo in itertools.product(range(M), repeat=N):
+        load = np.zeros(M)
+        ok = True
+        for i, j in enumerate(combo):
+            if not np.isfinite(prob.loads[i, j]):
+                ok = False
+                break
+            load[j] += prob.loads[i, j]
+        if not ok:
+            continue
+        counts = np.ceil(load - _EPS)
+        if prob.caps is not None and np.any(counts > prob.caps):
+            continue
+        cost = float(np.sum(counts * prob.costs))
+        if best is None or cost < best.cost - 1e-12:
+            best = ILPSolution(np.array(combo), counts.astype(int), cost,
+                               True, time.time() - t0)
+    return best

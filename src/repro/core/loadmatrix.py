@@ -1,0 +1,30 @@
+"""Load matrix construction (§5.4.2): L[i,j] = r_i / MaxTput(G_j, s_i, SLO)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .ilp import ILPProblem
+from .profiler import Profile
+from .workload import Workload
+
+
+def build_problem(workload: Workload, profile: Profile,
+                  slice_factor: int = 8,
+                  caps: dict[str, int] | None = None,
+                  gpu_subset: list[str] | None = None) -> ILPProblem:
+    gpu_names = sorted(gpu_subset or profile.gpus)
+    slices = workload.slices(slice_factor)
+    N, M = len(slices), len(gpu_names)
+    loads = np.full((N, M), np.inf)
+    bucket_of = np.zeros(N, dtype=int)
+    for i, (bi, rate) in enumerate(slices):
+        bucket_of[i] = bi
+        for j, g in enumerate(gpu_names):
+            tput = profile.max_tput[g][bi]
+            if tput > 0:
+                loads[i, j] = rate / tput
+    costs = np.array([profile.gpus[g].price_hr for g in gpu_names])
+    caps_arr = None
+    if caps is not None:
+        caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
+    return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr)

@@ -1,0 +1,94 @@
+"""Offline profiling (§5.3): MaxTput(G, bucket, SLO) tables.
+
+Profile sources:
+  * "analytic"  — the roofline engine model (engine_model.py), evaluated at
+    each workload bucket's representative request size.
+  * "xla"       — same queueing model, but per-token FLOP/byte terms replaced
+    by the dry-run's compiled cost_analysis numbers for the chosen
+    architecture (ties profiles to *our* engine's compiled HLO).
+
+The profile is exactly what Mélange consumes: for every accelerator type and
+every histogram bucket, the max request rate that meets the TPOT SLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Mapping, Optional
+
+import numpy as np
+
+from .accelerators import Accelerator
+from .engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams, ModelPerf
+from .workload import Bucket
+
+
+@dataclasses.dataclass
+class Profile:
+    """max_tput[gpu][bucket_index] in req/s (0 = infeasible under SLO)."""
+
+    gpus: dict[str, Accelerator]
+    buckets: list[Bucket]
+    slo_tpot_s: float
+    max_tput: dict[str, np.ndarray]
+    model_name: str = ""
+
+    def feasible(self, gpu: str, bucket_idx: int) -> bool:
+        return self.max_tput[gpu][bucket_idx] > 0
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "model": self.model_name,
+            "slo_tpot_s": self.slo_tpot_s,
+            "gpus": sorted(self.gpus),
+            "max_tput": {g: list(map(float, v))
+                         for g, v in self.max_tput.items()},
+        }, indent=1)
+
+
+def profile_catalog(
+    gpus: Mapping[str, Accelerator],
+    buckets: list[Bucket],
+    model: ModelPerf,
+    slo_tpot_s: float,
+    engine_params: EngineModelParams = DEFAULT_ENGINE,
+    flops_per_token: Optional[float] = None,
+    bytes_per_step_base: Optional[float] = None,
+) -> Profile:
+    """One-time offline profiling step (fast: closed-form model)."""
+    em = EngineModel(model, engine_params,
+                     flops_per_token=flops_per_token,
+                     bytes_per_step_base=bytes_per_step_base)
+    table: dict[str, np.ndarray] = {}
+    for name, acc in gpus.items():
+        row = np.zeros(len(buckets))
+        for k, b in enumerate(buckets):
+            row[k] = em.max_throughput(acc, b.rep_input, b.rep_output,
+                                       slo_tpot_s)
+        table[name] = row
+    return Profile(dict(gpus), buckets, slo_tpot_s, table, model.name)
+
+
+def profile_from_dryrun(
+    gpus: Mapping[str, Accelerator],
+    buckets: list[Bucket],
+    cfg,
+    dryrun_record: dict,
+    slo_tpot_s: float,
+    engine_params: EngineModelParams = DEFAULT_ENGINE,
+) -> Profile:
+    """XLA-derived profile: per-token decode FLOPs/bytes from the compiled
+    serve_step of the dry-run (decode_32k cell), scaled per accelerator."""
+    model = ModelPerf.from_config(cfg)
+    nb = dryrun_record["global_batch"]
+    flops_per_token = dryrun_record["flops"] * dryrun_record.get(
+        "devices", 256) / max(1, nb)
+    # bytes per step base: weights actually read per step
+    return profile_catalog(
+        gpus, buckets, model, slo_tpot_s, engine_params,
+        flops_per_token=flops_per_token)
+
+
+def decode_flops_per_token_from_record(rec: dict, n_devices: int = 256):
+    return rec["flops"] * n_devices / max(1, rec["global_batch"])

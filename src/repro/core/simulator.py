@@ -1,0 +1,207 @@
+"""Discrete-event cluster simulator (§6.3's SLO-attainment experiment).
+
+Requests arrive by a Poisson process, sizes sampled from a dataset; the LB
+routes to instances; each instance runs a continuous-batching loop whose
+step time comes from the same engine model used for profiling.  Per-request
+TTFT and average TPOT are recorded, giving the Fig.-12 CDFs and the SLO
+attainment rate.  Also accounts cost, enabling the Fig.-9-style comparisons
+under bursty (non-steady-state) load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from .accelerators import Accelerator
+from .balancer import InstanceRef, LoadBalancer
+from .engine_model import EngineModel, ModelPerf, EngineModelParams, DEFAULT_ENGINE
+from .profiler import Profile
+from .workload import sample_requests
+
+
+@dataclasses.dataclass
+class SimRequest:
+    rid: int
+    arrival: float
+    input_len: int
+    output_len: int
+    inst_id: int = -1
+    first_token_t: float = -1.0
+    finish_t: float = -1.0
+    decoded: int = 0
+
+    @property
+    def tpot(self) -> float:
+        if self.decoded <= 1 or self.first_token_t < 0:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / max(1, self.decoded - 1)
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_t - self.arrival
+
+
+class _Instance:
+    def __init__(self, inst_id: int, gpu: Accelerator, em: EngineModel,
+                 max_prefill_tokens_per_step: int = 4096):
+        self.inst_id = inst_id
+        self.gpu = gpu
+        self.em = em
+        self.queue: list[SimRequest] = []
+        self.prefilling: list[tuple[SimRequest, int]] = []  # (req, remaining)
+        self.active: list[SimRequest] = []
+        self.pf_budget = max_prefill_tokens_per_step
+
+    def kv_tokens(self) -> float:
+        return (sum(r.input_len + r.decoded for r in self.active)
+                + sum(r.input_len - rem for r, rem in self.prefilling))
+
+    def can_admit(self, r: SimRequest) -> bool:
+        m = self.em.m
+        n_seqs = len(self.active) + len(self.prefilling) + 1
+        need = (m.param_bytes + m.state_bytes * n_seqs
+                + (self.kv_tokens() + r.input_len + 8) * m.kv_bytes_per_token)
+        return need <= self.gpu.mem_bytes * 0.92
+
+    def step(self, now: float):
+        """One engine step with Sarathi-style chunked prefill: at most
+        pf_budget prompt tokens share the step with decode, so one huge
+        prefill never stalls co-resident decodes for seconds (the paper's
+        §6.3 co-location violation source)."""
+        budget = self.pf_budget
+        pf_tokens = 0
+        while budget > 0:
+            if not self.prefilling:
+                if (self.queue and self.queue[0].arrival <= now
+                        and self.can_admit(self.queue[0])):
+                    r = self.queue.pop(0)
+                    self.prefilling.append((r, r.input_len))
+                else:
+                    break
+            r, rem = self.prefilling[0]
+            chunk = min(budget, rem)
+            pf_tokens += chunk
+            budget -= chunk
+            rem -= chunk
+            if rem == 0:
+                self.prefilling.pop(0)
+                self.active.append(r)
+            else:
+                self.prefilling[0] = (r, rem)
+        b = len(self.active)
+        if b == 0 and pf_tokens == 0:
+            return None, []
+        dur = self.em.decode_step_time(self.gpu, b, self.kv_tokens()
+                                       / max(1, b)) if b else 0.0
+        if pf_tokens:
+            dur += pf_tokens / self.em.prefill_rate(self.gpu, pf_tokens)
+        done = []
+        for r in self.active:
+            if r.decoded == 0:
+                r.first_token_t = now + dur
+            r.decoded += 1
+            if r.decoded >= r.output_len:
+                r.finish_t = now + dur
+                done.append(r)
+        self.active = [r for r in self.active if r.decoded < r.output_len]
+        return dur, done
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: list[SimRequest]
+    duration_s: float
+    cost: float
+    slo_tpot_s: float
+
+    @property
+    def tpots(self) -> np.ndarray:
+        return np.array([r.tpot for r in self.requests if r.decoded > 1])
+
+    @property
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft for r in self.requests
+                         if r.first_token_t >= 0])
+
+    @property
+    def slo_attainment(self) -> float:
+        t = self.tpots
+        if len(t) == 0:
+            return 1.0
+        return float((t <= self.slo_tpot_s + 1e-9).mean())
+
+    def tpot_percentiles(self, qs=(50, 90, 99, 99.5)):
+        t = self.tpots
+        return {q: float(np.percentile(t, q)) for q in qs} if len(t) else {}
+
+
+def simulate(
+    allocation_counts: dict[str, int],
+    profile: Profile,
+    model: ModelPerf,
+    dataset: str,
+    rate: float,
+    n_requests: int = 2000,
+    *,
+    engine_params: EngineModelParams = DEFAULT_ENGINE,
+    seed: int = 0,
+    straggler_factor: float = 0.0,
+    prefill_chunk: int = 4096,
+) -> SimResult:
+    rng = np.random.default_rng(seed)
+    em = EngineModel(model, engine_params)
+    # build instances
+    instances: list[_Instance] = []
+    refs = []
+    iid = 0
+    for gpu_name, n in sorted(allocation_counts.items()):
+        for _ in range(int(n)):
+            instances.append(_Instance(iid, profile.gpus[gpu_name], em,
+                                       prefill_chunk))
+            refs.append(InstanceRef(iid, gpu_name))
+            iid += 1
+    lb = LoadBalancer(profile, refs, seed=seed,
+                      straggler_factor=straggler_factor)
+
+    ins, outs = sample_requests(dataset, n_requests, seed=seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    reqs = [SimRequest(i, float(arrivals[i]), int(ins[i]), int(outs[i]))
+            for i in range(n_requests)]
+
+    # event loop: (time, kind, payload)   kind 0=arrival, 1=instance step
+    ev: list[tuple[float, int, int]] = [(r.arrival, 0, r.rid) for r in reqs]
+    heapq.heapify(ev)
+    stepping: set[int] = set()
+    t_end = 0.0
+    while ev:
+        now, kind, pid = heapq.heappop(ev)
+        t_end = max(t_end, now)
+        if kind == 0:
+            r = reqs[pid]
+            ref = lb.route(r.input_len)
+            r.inst_id = ref.inst_id
+            inst = instances[ref.inst_id]
+            inst.queue.append(r)
+            if ref.inst_id not in stepping:
+                stepping.add(ref.inst_id)
+                heapq.heappush(ev, (now, 1, ref.inst_id))
+        else:
+            inst = instances[pid]
+            dur, done = inst.step(now)
+            for r in done:
+                lb.observe(r.input_len, r.output_len, inst_id=pid,
+                           tpot=r.tpot)
+            if dur is None:
+                stepping.discard(pid)
+                if inst.queue:      # waiting on future arrivals
+                    stepping.add(pid)
+                    heapq.heappush(ev, (inst.queue[0].arrival, 1, pid))
+            else:
+                heapq.heappush(ev, (now + dur, 1, pid))
+    cost_hr = sum(profile.gpus[g].price_hr * n
+                  for g, n in allocation_counts.items())
+    return SimResult(reqs, t_end, cost_hr * t_end / 3600.0,
+                     profile.slo_tpot_s)

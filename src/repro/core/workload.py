@@ -1,0 +1,162 @@
+"""LLM service workloads: request-size histograms, buckets, slices (§5.1,
+§5.4.1) and the three evaluation datasets of §6.1 / App. A.1.
+
+A workload is a 2-D histogram over (input length, output length) whose bucket
+values are request rates (req/s).  The exact Arena / PubMed datasets are not
+downloadable offline, so the generators below are synthetic distributions
+matching the paper's descriptions (Fig. 10): Arena skews short (<2000
+tokens), PubMed has long document inputs with short summaries, Mixed samples
+80% Arena / 20% PubMed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# Paper §6.1: "10 input length ranges and 6 output length ranges (60 buckets)"
+INPUT_EDGES = (1, 25, 100, 250, 500, 1000, 2000, 4000, 8000, 16000, 32000)
+OUTPUT_EDGES = (1, 25, 100, 250, 500, 1000, 2000)
+
+DEFAULT_SLICE_FACTOR = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    i_lo: int
+    i_hi: int
+    o_lo: int
+    o_hi: int
+
+    @property
+    def rep_input(self) -> int:
+        """Representative (conservative: upper-mid) request size."""
+        return int((self.i_lo + self.i_hi) / 2)
+
+    @property
+    def rep_output(self) -> int:
+        return int((self.o_lo + self.o_hi) / 2)
+
+    @property
+    def max_tokens(self) -> int:
+        return self.i_hi + self.o_hi
+
+
+def bucket_grid(input_edges=INPUT_EDGES, output_edges=OUTPUT_EDGES):
+    out = []
+    for a, b in zip(input_edges[:-1], input_edges[1:]):
+        for c, d in zip(output_edges[:-1], output_edges[1:]):
+            out.append(Bucket(a, b, c, d))
+    return out
+
+
+@dataclasses.dataclass
+class Workload:
+    """Histogram workload: bucket -> request rate (req/s)."""
+
+    buckets: list[Bucket]
+    rates: np.ndarray                      # (n_buckets,) req/s
+    name: str = "workload"
+
+    @property
+    def total_rate(self) -> float:
+        return float(self.rates.sum())
+
+    def scaled(self, total_rate: float) -> "Workload":
+        cur = self.total_rate
+        f = total_rate / cur if cur > 0 else 0.0
+        return Workload(self.buckets, self.rates * f,
+                        name=f"{self.name}@{total_rate}")
+
+    def slices(self, slice_factor: int = DEFAULT_SLICE_FACTOR):
+        """§5.4.1: split each non-empty bucket into `slice_factor` slices.
+
+        Returns (bucket_index, slice_rate) pairs.
+        """
+        out = []
+        for bi, r in enumerate(self.rates):
+            if r <= 0:
+                continue
+            for _ in range(slice_factor):
+                out.append((bi, r / slice_factor))
+        return out
+
+    def nonzero(self):
+        return [(b, float(r)) for b, r in zip(self.buckets, self.rates)
+                if r > 0]
+
+
+def workload_from_samples(inputs: Sequence[int], outputs: Sequence[int],
+                          total_rate: float, name: str = "sampled",
+                          input_edges=INPUT_EDGES,
+                          output_edges=OUTPUT_EDGES) -> Workload:
+    buckets = bucket_grid(input_edges, output_edges)
+    counts = np.zeros(len(buckets))
+    idx = {}
+    ni = len(input_edges) - 1
+    no = len(output_edges) - 1
+    for k, b in enumerate(buckets):
+        idx[(b.i_lo, b.o_lo)] = k
+    i_edges = np.asarray(input_edges)
+    o_edges = np.asarray(output_edges)
+    for i, o in zip(inputs, outputs):
+        bi = int(np.clip(np.searchsorted(i_edges, i, "right") - 1, 0, ni - 1))
+        bo = int(np.clip(np.searchsorted(o_edges, o, "right") - 1, 0, no - 1))
+        counts[bi * no + bo] += 1
+    rates = counts / max(1, len(inputs)) * total_rate
+    return Workload(buckets, rates, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset samplers (App. A.1 stand-ins)
+# ---------------------------------------------------------------------------
+def _lognormal(rng, median, sigma, size, lo, hi):
+    x = rng.lognormal(mean=math.log(median), sigma=sigma, size=size)
+    return np.clip(x, lo, hi).astype(int)
+
+
+def sample_arena(rng: np.random.Generator, n: int):
+    """Short-context chat: inputs & outputs < 2000, output-skewed."""
+    i = _lognormal(rng, median=90, sigma=1.3, size=n, lo=1, hi=2000)
+    o = _lognormal(rng, median=210, sigma=0.9, size=n, lo=1, hi=2000)
+    return i, o
+
+
+def sample_pubmed(rng: np.random.Generator, n: int):
+    """Document summarization: long inputs (papers), short outputs."""
+    i = _lognormal(rng, median=3200, sigma=0.55, size=n, lo=200, hi=32000)
+    o = _lognormal(rng, median=230, sigma=0.45, size=n, lo=30, hi=1200)
+    return i, o
+
+
+def sample_mixed(rng: np.random.Generator, n: int):
+    """80% Arena + 20% PubMed (paper's synthetic mixed workload)."""
+    n_a = int(round(0.8 * n))
+    ia, oa = sample_arena(rng, n_a)
+    ip, op = sample_pubmed(rng, n - n_a)
+    i = np.concatenate([ia, ip])
+    o = np.concatenate([oa, op])
+    perm = rng.permutation(n)
+    return i[perm], o[perm]
+
+
+DATASETS = {
+    "arena": sample_arena,
+    "pubmed": sample_pubmed,
+    "mixed": sample_mixed,
+}
+
+
+def make_workload(dataset: str, total_rate: float, *, n_samples: int = 20_000,
+                  seed: int = 0) -> Workload:
+    rng = np.random.default_rng(seed)
+    i, o = DATASETS[dataset](rng, n_samples)
+    return workload_from_samples(i, o, total_rate, name=dataset)
+
+
+def sample_requests(dataset: str, n: int, *, seed: int = 0):
+    """(input_len, output_len) pairs for the simulator."""
+    rng = np.random.default_rng(seed)
+    return DATASETS[dataset](rng, n)

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules with divisibility-aware mapping.
+
+The production meshes are ("data", "model") single-pod and
+("pod", "data", "model") multi-pod.  Parameters and activations are annotated
+with *logical* axis names; :func:`logical_to_spec` maps them to mesh axes,
+replicating any tensor dimension whose size does not divide the mesh axis size
+(e.g. qwen2's 12 query heads on a 16-way model axis, granite's 49155 vocab).
+
+Model code calls :func:`constrain` with logical axis names; the launcher
+installs a :class:`ShardingContext` (mesh + rules) before tracing. Outside a
+context (unit tests, single-device smoke runs) ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis name -> mesh axes (in order of preference / outer-to-inner).
+# "batch" spans the data-parallel axes (pod+data when multi-pod).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),              # unsharded by default; perf flag remaps -> ("model",)
+    "kv_seq": (),           # KV-cache sequence dim; perf flag remaps -> ("data",)
+    "model_d": (),          # residual/embedding feature dim: replicated
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "experts": ("model",),  # expert parallelism
+    "expert_cap": ("pod", "data"),
+    "expert_ff": ("pod", "data"),  # expert weight d_ff: FSDP-style over data
+    "flat_tokens": ("pod", "data"),  # flattened (B*S)±topk token dims in MoE
+    "d_inner": ("model",),  # mamba inner dim
+    "rwkv_heads": ("model",),
+    "conv": (),
+    "state": (),
+    "layers": (),           # stacked-layer leading axis
+    "unsharded": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Sharding rule table; override entries for perf experiments."""
+
+    rules: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def with_overrides(self, **overrides: tuple[str, ...]) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(rules=merged)
+
+
+def mesh_axes_size(sizes: Mapping[str, int], axes: Sequence[str]) -> int:
+    total = 1
+    for ax in axes:
+        total *= sizes[ax]
+    return total
+
+
+def _resolve(
+    axis_sizes: Mapping[str, int],
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int] | None,
+    rules: ShardingRules,
+) -> P:
+    spec: list[Any] = []
+    used: set[str] = set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = tuple(
+            a for a in rules.rules.get(name, ()) if a in axis_sizes and a not in used
+        )
+        if axes and shape is not None:
+            # drop leading axes until the dim divides evenly (replicate if never)
+            while axes and (shape[i] == 0 or shape[i] % mesh_axes_size(axis_sizes, axes) != 0):
+                axes = axes[1:]
+        if not axes:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else axes)
+    return P(*spec)
+
+
+def logical_to_spec(
+    mesh: Mesh,
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    rules: ShardingRules | None = None,
+) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return _resolve(sizes, logical_axes, shape, rules or ShardingRules())
+
+
+def named_sharding(
+    mesh: Mesh,
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int] | None = None,
+    rules: ShardingRules | None = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, logical_axes, shape, rules))
+
+
+# ---------------------------------------------------------------------------
+# Trace-time sharding context (installed by the launcher around tracing).
+# ---------------------------------------------------------------------------
+class _Ctx(threading.local):
+    mesh: Mesh | None = None
+    rules: ShardingRules | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh | None, rules: ShardingRules | None = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules or ShardingRules()
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> ShardingRules:
+    return _CTX.rules or ShardingRules()
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint using logical axes; no-op outside a context."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_spec(mesh, logical_axes, x.shape, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(mesh: Mesh, tree_axes: Any, tree_shapes: Any,
+                   rules: ShardingRules | None = None) -> Any:
+    """Map a pytree of logical-axis tuples + matching shapes -> NamedShardings."""
+    return jax.tree.map(
+        lambda axes, shape: named_sharding(mesh, axes, shape, rules),
+        tree_axes,
+        tree_shapes,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v
+        ),
+    )

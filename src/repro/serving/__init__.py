@@ -1,0 +1,4 @@
+from .engine import EngineConfig, Request, ServingEngine
+from .cluster import ServingCluster
+from .kv_cache import BlockManager, OutOfBlocks
+from .metrics import LatencyStats

@@ -1,0 +1,79 @@
+"""Heterogeneous serving cluster: Mélange allocation -> engine instances
+-> App-A.2 load balancer routing.
+
+On CPU every instance executes at host speed, so latency-SLO *evaluation*
+belongs to core.simulator (which models per-accelerator step times); this
+module demonstrates the full control-plane/data-plane integration — the LB's
+output-length estimator and throughput-weighted routing run against real
+engines serving real models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.balancer import InstanceRef, LoadBalancer
+from repro.core.profiler import Profile
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    completed: int
+    rejected: int
+    per_instance: dict[int, int]
+    mean_tokens: float
+
+
+class ServingCluster:
+    def __init__(self, cfg, params, allocation_counts: dict[str, int],
+                 profile: Profile, ecfg: Optional[EngineConfig] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        self.engines: list[ServingEngine] = []
+        refs = []
+        iid = 0
+        for gpu, n in sorted(allocation_counts.items()):
+            for _ in range(int(n)):
+                self.engines.append(ServingEngine(cfg, params, self.ecfg))
+                refs.append(InstanceRef(iid, gpu))
+                iid += 1
+        self.lb = LoadBalancer(profile, refs, seed=seed,
+                               straggler_factor=0.5)
+        self.routed: dict[int, int] = {}
+
+    def submit(self, req: Request) -> int:
+        ref = self.lb.route(len(req.prompt))
+        self.engines[ref.inst_id].submit(req)
+        self.routed[req.rid] = ref.inst_id
+        return ref.inst_id
+
+    def run(self, max_steps: int = 10_000) -> ClusterStats:
+        done_total: list[Request] = []
+        for _ in range(max_steps):
+            busy = False
+            for e in self.engines:
+                if e.queue or e.n_active:
+                    e.step()
+                    busy = True
+            if not busy:
+                break
+        per_inst: dict[int, int] = {}
+        rejected = 0
+        for i, e in enumerate(self.engines):
+            for r in e.finished:
+                if not r.generated:
+                    rejected += 1
+                    continue
+                done_total.append(r)
+                per_inst[i] = per_inst.get(i, 0) + 1
+                self.lb.observe(len(r.prompt), len(r.generated),
+                                inst_id=i, tpot=max(r.tpot, 1e-6))
+        mean_toks = (np.mean([len(r.generated) for r in done_total])
+                     if done_total else 0.0)
+        return ClusterStats(len(done_total), rejected, per_inst,
+                            float(mean_toks))

@@ -1,0 +1,143 @@
+"""Optimizers: AdamW and Adafactor (factored second moment).
+
+Pure-function API (no optax dependency):
+    state  = init(params, kind)                  # eval_shape-safe
+    axes   = state_axes(params_like, param_axes, kind)
+    params, state = update(params, grads, state, kind, lr, ...)
+
+Adafactor (beta1=0, factored v) is used for the ≥398B configs so optimizer
+state fits v5e HBM at 512 chips; AdamW elsewhere.  AdamW moments remap
+"model_d" -> data axes at sharding time (ZeRO-1-style optimizer-state
+sharding) — see launch/steps.py:opt_rules.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+_IS_AXES_LEAF = lambda v: isinstance(v, tuple) and all(
+    isinstance(e, (str, type(None))) for e in v)
+
+
+def _leaf_key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def init(params: Tree, kind: str) -> Tree:
+    if kind == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if kind == "adafactor":
+        fac = {}
+        for path, p in jax.tree_util.tree_leaves_with_path(params):
+            if len(p.shape) >= 2:
+                fac[_leaf_key(path)] = {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            else:
+                fac[_leaf_key(path)] = {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": fac, "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(kind)
+
+
+def state_axes(params_like: Tree, param_axes: Tree, kind: str) -> Tree:
+    """Logical-axes tree matching init()'s structure. ``params_like`` may be
+    ShapeDtypeStructs (only .shape is used)."""
+    if kind == "adamw":
+        return {"m": param_axes, "v": param_axes, "count": ()}
+    if kind == "adafactor":
+        fac = {}
+        leaves_p = jax.tree_util.tree_leaves_with_path(params_like)
+        leaves_a = [a for _, a in jax.tree_util.tree_leaves_with_path(
+            param_axes, is_leaf=_IS_AXES_LEAF)]
+        for (path, p), a in zip(leaves_p, leaves_a):
+            if len(p.shape) >= 2:
+                fac[_leaf_key(path)] = {
+                    "vr": tuple(a[:-1]),
+                    "vc": tuple(a[:-2]) + (a[-1],),
+                }
+            else:
+                fac[_leaf_key(path)] = {"v": tuple(a)}
+        return {"fac": fac, "count": ()}
+    raise ValueError(kind)
+
+
+def _adamw_update(p, g, m, v, lr, b1, b2, eps, wd, count):
+    gf = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * gf
+    v_new = b2 * v + (1 - b2) * gf * gf
+    c = count.astype(jnp.float32)
+    mhat = m_new / (1 - b1 ** c)
+    vhat = v_new / (1 - b2 ** c)
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def _adafactor_update(p, g, st, lr, decay, count):
+    gf = g.astype(jnp.float32)
+    g2 = gf * gf + 1e-30
+    out_st = {}
+    if p.ndim >= 2:
+        vr = decay * st["vr"] + (1 - decay) * g2.mean(axis=-1)
+        vc = decay * st["vc"] + (1 - decay) * g2.mean(axis=-2)
+        out_st["vr"], out_st["vc"] = vr, vc
+        denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30))[
+            ..., None] * vc[..., None, :]
+        upd = gf * jax.lax.rsqrt(jnp.maximum(denom, 1e-30))
+    else:
+        v = decay * st["v"] + (1 - decay) * g2
+        out_st["v"] = v
+        upd = gf * jax.lax.rsqrt(jnp.maximum(v, 1e-30))
+    # update clipping (RMS <= 1)
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+    return p_new, out_st
+
+
+def update(params: Tree, grads: Tree, state: Tree, kind: str, lr,
+           *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.0, fac_decay: float = 0.99):
+    count = state["count"] + 1
+    if kind == "adamw":
+        out = jax.tree.map(
+            lambda p, g, m, v: _adamw_update(
+                p, g, m, v, lr, b1, b2, eps, weight_decay, count),
+            params, grads, state["m"], state["v"])
+        is_triple = lambda t: isinstance(t, tuple) and len(t) == 3
+        p_new = jax.tree.map(lambda t: t[0], out, is_leaf=is_triple)
+        m_new = jax.tree.map(lambda t: t[1], out, is_leaf=is_triple)
+        v_new = jax.tree.map(lambda t: t[2], out, is_leaf=is_triple)
+        return p_new, {"m": m_new, "v": v_new, "count": count}
+    if kind == "adafactor":
+        leaves_p = jax.tree_util.tree_leaves_with_path(params)
+        grads_flat = jax.tree_util.tree_leaves(grads)
+        new_p_flat, new_fac = [], {}
+        for (path, p), g in zip(leaves_p, grads_flat):
+            key = _leaf_key(path)
+            p_new, st_new = _adafactor_update(
+                p, g, state["fac"][key], lr, fac_decay, count)
+            new_p_flat.append(p_new)
+            new_fac[key] = st_new
+        treedef = jax.tree_util.tree_structure(params)
+        return (jax.tree_util.tree_unflatten(treedef, new_p_flat),
+                {"fac": new_fac, "count": count})
+    raise ValueError(kind)
+
+
+def lr_schedule(step, *, peak: float = 3e-4, warmup: int = 100,
+                total: int = 10_000, floor: float = 3e-5):
+    stepf = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(1.0, stepf / warmup)
+    frac = jnp.clip((stepf - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(stepf < warmup, warm, cos)

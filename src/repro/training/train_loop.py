@@ -1,0 +1,93 @@
+"""Training loop with checkpoint/restart fault tolerance.
+
+Wraps launch/steps.build_train_step with: data pipeline, periodic
+checkpointing (async, atomic), automatic resume from the latest committed
+step, and a failure-injection hook used by the fault-tolerance test and the
+elastic example.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.launch.steps import build_train_step
+from repro.models import transformer as T
+from repro.training import optimizer as OPT
+from repro.training.data import DataConfig, SyntheticDataset
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    n_micro: int = 1
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 25
+    ckpt_async: bool = True
+    log_every: int = 10
+    seed: int = 0
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          *, fail_at_step: Optional[int] = None,
+          log_fn: Callable[[str], None] = print) -> dict:
+    """Returns {"losses": [...], "resumed_from": int|None, "steps_run": int}."""
+    data = SyntheticDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+        global_batch=tcfg.global_batch, seed=tcfg.seed,
+        n_codebooks=cfg.n_codebooks))
+    step_fn = jax.jit(build_train_step(cfg, n_micro=tcfg.n_micro),
+                      donate_argnums=(0, 1))
+
+    params = T.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt_state = OPT.init(params, cfg.optimizer)
+
+    ckpt = Checkpointer(tcfg.ckpt_dir, async_save=tcfg.ckpt_async) \
+        if tcfg.ckpt_dir else None
+    start = 0
+    resumed_from = None
+    if ckpt is not None:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            state = ckpt.restore(latest, {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = latest
+            resumed_from = latest
+            log_fn(f"[train] resumed from step {latest}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start, tcfg.steps):
+        if fail_at_step is not None and step == fail_at_step:
+            if ckpt:
+                ckpt.wait()
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        if cfg.n_vision_tokens:
+            batch["vision_embeds"] = jax.random.normal(
+                jax.random.fold_in(jax.random.PRNGKey(tcfg.seed), step),
+                (tcfg.global_batch, cfg.n_vision_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if (step + 1) % tcfg.log_every == 0:
+            dt = (time.time() - t0) / max(1, len(losses))
+            log_fn(f"[train] step {step+1}/{tcfg.steps} "
+                   f"loss={loss:.4f} ({dt*1e3:.0f} ms/step)")
+        if ckpt is not None and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if ckpt is not None:
+        ckpt.save(tcfg.steps, {"params": params, "opt": opt_state})
+        ckpt.wait()
+    return {"losses": losses, "resumed_from": resumed_from,
+            "steps_run": len(losses), "params": params}

@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# tests run on the default single CPU device; the 512-device placeholder
+# mesh belongs exclusively to launch/dryrun.py (see its header).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,105 @@
+"""Mélange allocator end-to-end + autoscaler (paper §5/§6 + beyond)."""
+import numpy as np
+import pytest
+
+from repro.core import (Autoscaler, Melange, ModelPerf, PAPER_GPUS,
+                        make_workload)
+
+
+@pytest.fixture(scope="module")
+def mel():
+    return Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+
+
+def test_allocation_feasible_and_beats_singles(mel):
+    wl = make_workload("arena", 4.0)
+    alloc = mel.allocate(wl, time_budget_s=1.0)
+    assert alloc is not None and alloc.total_instances >= 1
+    for g, base in mel.all_baselines(wl, time_budget_s=0.5).items():
+        if base is not None:
+            assert alloc.cost_per_hour <= base.cost_per_hour + 1e-9
+
+
+def test_allocation_serves_all_load(mel):
+    """Σ assigned load per type ≤ B_j (the ILP capacity constraint)."""
+    wl = make_workload("mixed", 8.0)
+    alloc = mel.allocate(wl, time_budget_s=1.0)
+    sol = alloc.solution
+    names = alloc.solution_gpu_names
+    slices = wl.slices(8)
+    load = {g: 0.0 for g in names}
+    for (bi, rate), j in zip(slices, sol.assignment):
+        tput = mel.profile.max_tput[names[j]][bi]
+        assert tput > 0
+        load[names[j]] += rate / tput
+    for g in names:
+        assert load[g] <= alloc.counts.get(g, 0) + 1e-9
+
+
+def test_small_gpus_excluded_for_long_context(mel):
+    """Paper §6.1: PubMed's big requests exceed L4/A10G memory."""
+    wl = make_workload("pubmed", 4.0)
+    a = mel.single_type_baseline(wl, "A10G", time_budget_s=0.5)
+    b = mel.single_type_baseline(wl, "L4", time_budget_s=0.5)
+    assert a is None and b is None
+    assert mel.single_type_baseline(wl, "A100", time_budget_s=0.5) is not None
+
+
+def test_tight_slo_shifts_to_big_gpus():
+    wl = make_workload("arena", 8.0)
+    loose = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.16).allocate(
+        wl, time_budget_s=1.0)
+    tight = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.03).allocate(
+        wl, time_budget_s=1.0)
+
+    def big_cost_share(a):
+        big = (a.counts.get("A100", 0) * PAPER_GPUS["A100"].price_hr
+               + a.counts.get("H100", 0) * PAPER_GPUS["H100"].price_hr)
+        return big / a.cost_per_hour
+
+    assert big_cost_share(tight) >= big_cost_share(loose)
+    assert tight.cost_per_hour >= loose.cost_per_hour
+
+
+def test_over_provisioning_increases_capacity(mel):
+    wl = make_workload("arena", 8.0)
+    base = mel.allocate(wl, time_budget_s=0.5)
+    op = mel.allocate(wl, over_provision=0.5, time_budget_s=0.5)
+    assert op.cost_per_hour >= base.cost_per_hour
+
+
+def test_availability_caps(mel):
+    wl = make_workload("arena", 16.0)
+    capped = mel.allocate(wl, caps={"A10G": 0, "L4": 0}, time_budget_s=0.5)
+    assert capped is not None
+    assert capped.counts.get("A10G", 0) == 0
+    assert capped.counts.get("L4", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler (beyond-paper)
+# ---------------------------------------------------------------------------
+def test_autoscaler_rescale_on_drift(mel):
+    wl = make_workload("arena", 2.0)
+    asc = Autoscaler(mel, wl, headroom=0.1, drift_threshold=0.2)
+    before = dict(asc.current.counts)
+    assert asc.maybe_rescale() is None          # no drift yet
+    asc.observe_rates(make_workload("arena", 16.0).rates)
+    asc.observe_rates(make_workload("arena", 16.0).rates)
+    asc.observe_rates(make_workload("arena", 16.0).rates)
+    diff = asc.maybe_rescale()
+    assert diff is not None and not diff.is_noop
+    assert asc.current.cost_per_hour > 0
+    assert sum(asc.current.counts.values()) >= sum(before.values())
+
+
+def test_autoscaler_failure_and_stockout(mel):
+    wl = make_workload("mixed", 8.0)
+    asc = Autoscaler(mel, wl, headroom=0.0)
+    counts = dict(asc.current.counts)
+    gpu = max(counts, key=counts.get)
+    diff = asc.on_instance_failure(gpu, 1, stockout=True)
+    assert asc.current.counts.get(gpu, 0) <= max(0, counts[gpu] - 1)
+    # capacity was replaced by other types (workload still fully served)
+    slices = asc.current.workload.slices(8)
+    assert len(slices) > 0

@@ -1,0 +1,75 @@
+"""Analytical engine model: reproduces the paper's §4 structure."""
+import pytest
+
+from repro.core.accelerators import PAPER_GPUS, PAPER_GPUS_70B
+from repro.core.engine_model import EngineModel, ModelPerf
+
+
+@pytest.fixture(scope="module")
+def em():
+    return EngineModel(ModelPerf.llama2_7b())
+
+
+def test_small_requests_prefer_cheap_gpus(em):
+    """Fig 3a/5: at loose SLO, L4/A10G beat A100/H100 for tiny requests."""
+    t = {g: em.tokens_per_dollar(PAPER_GPUS[g], 25, 25, 0.12)
+         for g in PAPER_GPUS}
+    assert max(t["L4"], t["A10G"]) > max(t["A100"], t["H100"])
+
+
+def test_large_requests_prefer_big_gpus(em):
+    t = {g: em.tokens_per_dollar(PAPER_GPUS[g], 2000, 2000, 0.12)
+         for g in PAPER_GPUS}
+    assert t["A100"] > t["A10G"] > t["L4"]
+
+
+def test_request_size_crossover_exists(em):
+    """There is a size below which A10G wins and above which A100 wins."""
+    small = [s for s in (25, 50, 100, 250, 500, 1000, 2000)
+             if em.tokens_per_dollar(PAPER_GPUS["A10G"], s, s, 0.12)
+             > em.tokens_per_dollar(PAPER_GPUS["A100"], s, s, 0.12)]
+    assert small and max(small) < 2000
+
+
+def test_slo_crossover(em):
+    """Fig 6: A100 wins tight SLO; A10G wins loose SLO (≥40% better)."""
+    a10, a100 = PAPER_GPUS["A10G"], PAPER_GPUS["A100"]
+    assert em.tokens_per_dollar(a100, 64, 64, 0.04) > \
+        2.0 * em.tokens_per_dollar(a10, 64, 64, 0.04) * 0.9
+    loose_a10 = em.tokens_per_dollar(a10, 64, 64, 0.16)
+    loose_a100 = em.tokens_per_dollar(a100, 64, 64, 0.16)
+    assert loose_a10 > 1.2 * loose_a100
+
+
+def test_maxtput_monotone_in_slo(em):
+    prev = 0.0
+    for slo in (0.03, 0.05, 0.08, 0.12, 0.2):
+        r = em.max_throughput(PAPER_GPUS["A100"], 500, 250, slo)
+        assert r >= prev - 1e-12
+        prev = r
+
+
+def test_memory_infeasibility():
+    em = EngineModel(ModelPerf.llama2_7b())
+    # 24 GB GPUs can't host 20k-token KV contexts (paper excludes them)
+    assert em.max_throughput(PAPER_GPUS["A10G"], 16000, 1900, 0.12) == 0.0
+    assert em.max_throughput(PAPER_GPUS["A100"], 16000, 1900, 0.12) > 0.0
+
+
+def test_llama70b_fig8():
+    em = EngineModel(ModelPerf.llama2_70b())
+    a, h = PAPER_GPUS_70B["A100x2"], PAPER_GPUS_70B["H100x2"]
+    assert em.tokens_per_dollar(h, 250, 250, 0.04) > \
+        em.tokens_per_dollar(a, 250, 250, 0.04)
+    assert em.tokens_per_dollar(a, 250, 250, 0.12) > \
+        em.tokens_per_dollar(h, 250, 250, 0.12)
+
+
+def test_model_perf_from_config():
+    from repro.configs import get_config
+    mp = ModelPerf.from_config(get_config("qwen2-1.5b"))
+    assert 1.2e9 < mp.param_bytes / 2 < 2.5e9
+    assert mp.kv_bytes_per_token == 2 * 28 * 2 * 128 * 2
+    mp_rwkv = ModelPerf.from_config(get_config("rwkv6-1.6b"))
+    assert mp_rwkv.kv_bytes_per_token == 0      # constant state, no KV
+    assert mp_rwkv.state_bytes > 0

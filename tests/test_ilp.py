@@ -1,0 +1,98 @@
+"""ILP solver: exactness vs brute force + invariants (property-based)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ilp import ILPProblem, solve, solve_brute_force
+
+_EPS = 1e-9
+
+
+def _rand_problem(rng, n_max=8, m_max=3, with_caps=True):
+    N = int(rng.integers(3, n_max + 1))
+    M = int(rng.integers(2, m_max + 1))
+    loads = rng.uniform(0.05, 0.9, size=(N, M))
+    mask = rng.random((N, M)) < 0.15
+    loads = np.where(mask, np.inf, loads)
+    loads[:, 0] = np.where(np.isfinite(loads[:, 0]), loads[:, 0], 0.5)
+    costs = rng.uniform(0.5, 8.0, size=M)
+    buckets = np.sort(rng.integers(0, 3, size=N))
+    caps = (rng.integers(2, 6, size=M).astype(float)
+            if with_caps and rng.random() < 0.5 else None)
+    return ILPProblem(loads, costs, [f"g{j}" for j in range(M)], buckets, caps)
+
+
+def test_matches_brute_force():
+    rng = np.random.default_rng(42)
+    for _ in range(40):
+        prob = _rand_problem(rng)
+        bf = solve_brute_force(prob)
+        bb = solve(prob, time_budget_s=10)
+        assert (bf is None) == (bb is None)
+        if bf is not None:
+            assert bb.optimal
+            assert abs(bf.cost - bb.cost) < 1e-6
+
+
+def test_counts_are_ceil_of_loads():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        prob = _rand_problem(rng, with_caps=False)
+        sol = solve(prob, time_budget_s=5)
+        N, M = prob.loads.shape
+        for j in range(M):
+            lj = prob.loads[np.arange(N)[sol.assignment == j], j].sum()
+            assert sol.counts[j] == math.ceil(lj - _EPS)
+
+
+def test_never_worse_than_single_type():
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        N, M = 24, 4
+        loads = rng.uniform(0.01, 0.5, size=(N, M))
+        costs = rng.uniform(0.5, 8.0, size=M)
+        buckets = np.repeat(np.arange(3), 8)
+        prob = ILPProblem(loads, costs, list("abcd"), buckets)
+        sol = solve(prob, time_budget_s=1.0)
+        for j in range(M):
+            single = costs[j] * math.ceil(loads[:, j].sum() - _EPS)
+            assert sol.cost <= single + 1e-9
+
+
+def test_respects_caps():
+    loads = np.full((6, 2), 0.5)
+    costs = np.array([1.0, 10.0])
+    buckets = np.zeros(6, dtype=int)
+    caps = np.array([1.0, 10.0])        # only 1 cheap instance available
+    sol = solve(ILPProblem(loads, costs, ["a", "b"], buckets, caps),
+                time_budget_s=5)
+    assert sol is not None
+    assert sol.counts[0] <= 1
+
+
+def test_infeasible_slice_returns_none():
+    loads = np.array([[np.inf, np.inf]])
+    prob = ILPProblem(loads, np.array([1.0, 2.0]), ["a", "b"],
+                      np.zeros(1, int))
+    assert solve(prob) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_assignment_complete_and_lb(seed):
+    """Every slice assigned to a finite-load type; cost ≥ separable LP bound."""
+    rng = np.random.default_rng(seed)
+    prob = _rand_problem(rng, n_max=10, m_max=3)
+    sol = solve(prob, time_budget_s=3)
+    if sol is None:
+        # must be because some slice has no feasible type under caps
+        return
+    N, M = prob.loads.shape
+    assert sol.assignment.shape == (N,)
+    for i in range(N):
+        assert np.isfinite(prob.loads[i, sol.assignment[i]])
+    lp_bound = np.where(np.isfinite(prob.loads),
+                        prob.loads * prob.costs, np.inf).min(axis=1).sum()
+    assert sol.cost >= lp_bound - 1e-6

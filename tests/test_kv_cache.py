@@ -1,0 +1,97 @@
+"""Paged-KV block manager invariants (hypothesis stateful testing)."""
+import pytest
+from hypothesis import settings
+from hypothesis.stateful import (Bundle, RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+from hypothesis import strategies as st
+
+from repro.serving.kv_cache import BlockManager, OutOfBlocks
+
+
+def test_basic_lifecycle():
+    bm = BlockManager(n_blocks=8, block_size=4)
+    a = bm.allocate(1, 10)                     # 3 blocks
+    assert len(a.blocks) == 3 and bm.n_free == 5
+    for _ in range(2):
+        bm.append_token(1)                     # 10->12: same block
+    assert len(bm.block_table(1)) == 3
+    bm.append_token(1)                         # 13 tokens: new block
+    assert len(bm.block_table(1)) == 4
+    bm.free_seq(1)
+    assert bm.n_free == 8
+    bm.check_invariants()
+
+
+def test_out_of_blocks():
+    bm = BlockManager(n_blocks=2, block_size=4)
+    bm.allocate(1, 8)
+    with pytest.raises(OutOfBlocks):
+        bm.allocate(2, 1)
+    with pytest.raises(OutOfBlocks):
+        bm.append_token(1)
+    bm.check_invariants()
+
+
+def test_fork_shares_blocks():
+    bm = BlockManager(n_blocks=8, block_size=4)
+    bm.allocate(1, 8)
+    bm.fork(1, 2)
+    assert bm.n_used == 2                      # shared, not copied
+    bm.free_seq(1)
+    assert bm.n_used == 2                      # still referenced by 2
+    bm.free_seq(2)
+    assert bm.n_used == 0
+    bm.check_invariants()
+
+
+class CacheMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.bm = BlockManager(n_blocks=24, block_size=4)
+        self.live = set()
+        self.next_id = 0
+
+    @rule(n_tokens=st.integers(1, 40))
+    def allocate(self, n_tokens):
+        sid = self.next_id
+        self.next_id += 1
+        try:
+            self.bm.allocate(sid, n_tokens)
+            self.live.add(sid)
+        except OutOfBlocks:
+            pass
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def append(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live)))
+        try:
+            self.bm.append_token(sid)
+        except OutOfBlocks:
+            pass
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def fork(self, data):
+        src = data.draw(st.sampled_from(sorted(self.live)))
+        dst = self.next_id
+        self.next_id += 1
+        self.bm.fork(src, dst)
+        self.live.add(dst)
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def free(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live)))
+        self.bm.free_seq(sid)
+        self.live.discard(sid)
+
+    @invariant()
+    def invariants_hold(self):
+        self.bm.check_invariants()
+
+
+TestCacheMachine = CacheMachine.TestCase
+TestCacheMachine.settings = settings(max_examples=25,
+                                     stateful_step_count=30,
+                                     deadline=None)

@@ -1,0 +1,78 @@
+"""Serving engine + heterogeneous cluster integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Melange, ModelPerf, PAPER_GPUS
+from repro.models import transformer as T
+from repro.serving import EngineConfig, Request, ServingCluster, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def _ref_generate(cfg, params, prompt, n_new):
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _, _ = T.forward(cfg, params, jnp.asarray([toks]))
+        toks.append(int(jnp.argmax(logits[0, len(toks) - 1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_reference(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=4, max_seq=64))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=L))
+               for L in (5, 9, 13, 7)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 4
+    for r in done:
+        assert r.generated == _ref_generate(cfg, params, prompts[r.rid], 6)
+        assert r.ttft >= 0 and r.tpot >= 0
+    # all cache blocks returned
+    assert eng.blocks.n_used == 0
+    eng.blocks.check_invariants()
+
+
+def test_engine_rejects_too_long(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_seq=32))
+    eng.submit(Request(rid=0, prompt=list(range(1, 30)), max_new_tokens=20))
+    done = eng.run()
+    assert len(done) == 1 and done[0].generated == []
+
+
+def test_engine_continuous_batching_overlap(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_seq=64))
+    for i in range(5):                      # more requests than slots
+        eng.submit(Request(rid=i, prompt=[3 + i, 5, 7], max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 5
+    assert eng.n_active == 0 and not eng.queue
+
+
+def test_cluster_routes_and_serves(setup):
+    cfg, params = setup
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+    cluster = ServingCluster(
+        cfg, params, {"A100": 1, "A10G": 1}, mel.profile,
+        EngineConfig(max_batch=2, max_seq=64))
+    rng = np.random.default_rng(1)
+    for i in range(8):
+        cluster.submit(Request(
+            rid=i, prompt=list(rng.integers(1, cfg.vocab_size, size=6)),
+            max_new_tokens=4))
+    stats = cluster.run()
+    assert stats.completed == 8
+    assert sum(stats.per_instance.values()) == 8
+    assert len(stats.per_instance) >= 1

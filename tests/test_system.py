@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests: the paper's full pipeline on one model —
+profile -> allocate -> beat single-type baselines -> simulate -> meet SLO —
+plus the headline claims from §6 validated against our profile source.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Melange, ModelPerf, PAPER_GPUS, make_workload,
+                        simulate)
+
+
+@pytest.fixture(scope="module")
+def mel_by_slo():
+    m = ModelPerf.llama2_7b()
+    return {slo: Melange(PAPER_GPUS, m, slo) for slo in (0.12, 0.04)}
+
+
+def test_full_pipeline_meets_slo(mel_by_slo):
+    mel = mel_by_slo[0.12]
+    wl = make_workload("mixed", 4.0)
+    alloc = mel.allocate(wl, over_provision=0.15, time_budget_s=1.5)
+    assert alloc is not None
+    res = simulate(alloc.counts, mel.profile, ModelPerf.llama2_7b(),
+                   "mixed", rate=4.0, n_requests=600, seed=11)
+    assert res.slo_attainment >= 0.95
+
+
+@pytest.mark.parametrize("ds,min_best_saving", [
+    ("arena", 0.15),      # paper: 9-77% savings vs worst single type
+    ("mixed", 0.04),      # paper: 4-51%
+])
+def test_melange_saves_vs_single_types(mel_by_slo, ds, min_best_saving):
+    mel = mel_by_slo[0.12]
+    savings_best = []
+    for rate in (1, 4, 16):
+        wl = make_workload(ds, rate)
+        alloc = mel.allocate(wl, time_budget_s=1.5)
+        base = mel.all_baselines(wl, time_budget_s=0.5)
+        feas = [a.cost_per_hour for a in base.values() if a is not None]
+        assert feas
+        assert all(alloc.cost_per_hour <= c + 1e-9 for c in feas)
+        savings_best.append(1 - alloc.cost_per_hour / max(feas))
+    assert max(savings_best) >= min_best_saving
+
+
+def test_heterogeneous_mix_appears(mel_by_slo):
+    """The paper's core claim: the optimal allocation mixes GPU types."""
+    mel = mel_by_slo[0.12]
+    mixed_seen = False
+    for rate in (8, 16, 32):
+        alloc = mel.allocate(make_workload("arena", rate), time_budget_s=2.0)
+        if len([g for g, n in alloc.counts.items() if n > 0]) > 1:
+            mixed_seen = True
+    assert mixed_seen
+
+
+def test_solver_time_practical(mel_by_slo):
+    """Table 2: sub-~1.2s solver times at paper scale."""
+    import time
+    mel = mel_by_slo[0.04]
+    wl = make_workload("mixed", 32)
+    t0 = time.time()
+    alloc = mel.allocate(wl, time_budget_s=1.2)
+    assert time.time() - t0 < 2.5
+    assert alloc is not None

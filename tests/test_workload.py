@@ -1,0 +1,52 @@
+"""Workload histograms and slicing (§5.1, §5.4.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workload import (Workload, bucket_grid, make_workload,
+                                 sample_requests, workload_from_samples)
+
+
+def test_bucket_grid_is_paper_sized():
+    assert len(bucket_grid()) == 60        # 10 input × 6 output ranges
+
+
+@pytest.mark.parametrize("ds", ["arena", "pubmed", "mixed"])
+def test_dataset_rates_sum(ds):
+    wl = make_workload(ds, total_rate=4.0)
+    assert abs(wl.total_rate - 4.0) < 1e-6
+    assert (wl.rates >= 0).all()
+
+
+def test_arena_is_short_pubmed_is_long():
+    i_a, o_a = sample_requests("arena", 5000, seed=1)
+    i_p, o_p = sample_requests("pubmed", 5000, seed=1)
+    assert np.median(i_a) < 500
+    assert np.median(i_p) > 1500
+    assert i_a.max() <= 2000
+    assert np.median(o_p) < np.median(i_p)   # summaries shorter than docs
+
+
+def test_slices_partition_rates():
+    wl = make_workload("mixed", 8.0)
+    slices = wl.slices(8)
+    per_bucket = {}
+    for bi, r in slices:
+        per_bucket[bi] = per_bucket.get(bi, 0.0) + r
+    for bi, tot in per_bucket.items():
+        assert abs(tot - wl.rates[bi]) < 1e-9
+    # paper's configuration: ≤ 60×8 slices
+    assert len(slices) <= 480
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 30000), st.integers(1, 1900)),
+                min_size=1, max_size=200),
+       st.floats(0.25, 64.0))
+def test_property_histogram_conserves_rate(pairs, rate):
+    ins = [p[0] for p in pairs]
+    outs = [p[1] for p in pairs]
+    wl = workload_from_samples(ins, outs, rate)
+    assert abs(wl.total_rate - rate) < 1e-6 * max(1, rate)
+    sc = wl.scaled(2 * rate)
+    assert abs(sc.total_rate - 2 * rate) < 1e-6 * max(1, rate)
