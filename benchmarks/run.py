@@ -14,6 +14,7 @@ MODULES = [
     "benchmarks.fig11_cost_savings",
     "benchmarks.table2_solver_time",
     "benchmarks.fig12_slo_attainment",
+    "benchmarks.bench_elastic_trace",
     "benchmarks.roofline",
 ]
 

@@ -1,48 +1,67 @@
-"""Elastic allocation under drift + failures (beyond-paper §7 follow-up).
+"""Elastic allocation under a time-varying trace (beyond-paper §7 follow-up).
 
-Simulates a day with a rising/falling request rate and a mid-day A100
-stockout: the autoscaler re-solves the ILP on drift and on failure,
-always keeping the SLO-feasible minimal-cost pool.
+Runs the real autoscaler-in-the-loop orchestrator over a compressed diurnal
+day: the controller observes per-window arrival rates inside the simulation
+clock, re-solves the ILP on drift, launches instances after a boot delay,
+drains instances on scale-down (they finish in-flight work but get no new
+routes), and rides out a mid-day A100 spot preemption + stockout.
 
     PYTHONPATH=src python examples/autoscale_elastic.py
 """
-import numpy as np
+from repro.core import Melange, ModelPerf, PAPER_GPUS
+from repro.orchestrator import ClusterOrchestrator, run_static
+from repro.traces import FleetEvent, diurnal_trace
 
-from repro.core import Autoscaler, Melange, ModelPerf, PAPER_GPUS, make_workload
+HOUR_S = 100.0          # one "hour" of the day, clock-compressed
 
 
 def main():
-    model = ModelPerf.llama2_7b()
-    mel = Melange(PAPER_GPUS, model, 0.12)
-    initial = make_workload("mixed", 2.0)
-    asc = Autoscaler(mel, initial, headroom=0.10, drift_threshold=0.15)
-    print(f"[t=00h] initial allocation {asc.current.counts} "
-          f"(${asc.current.cost_per_hour:.2f}/h)")
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+    trace = diurnal_trace(1.0, 8.0, duration_s=24 * HOUR_S, segment_s=HOUR_S,
+                          peak_frac=14 / 24, dataset="mixed", seed=7)
+    trace = trace.with_events([
+        FleetEvent(15 * HOUR_S, "preemption", "A100", 1, stockout=True),
+        FleetEvent(18 * HOUR_S, "restock", "A100"),
+    ])
 
-    profile_of_day = [2, 2, 4, 8, 16, 24, 16, 8, 4, 2]
-    for hour, rate in enumerate(profile_of_day, start=1):
-        observed = make_workload("mixed", rate, seed=hour)
-        asc.observe_rates(observed.rates)
-        diff = asc.maybe_rescale()
-        tag = ""
-        if diff and not diff.is_noop:
-            tag = f"  RESCALE add={diff.add} remove={diff.remove}"
-        print(f"[t={hour:02d}h] rate~{rate:>2} req/s drift={asc.drift():.2f} "
-              f"alloc={asc.current.counts} "
-              f"(${asc.current.cost_per_hour:.2f}/h){tag}")
-        if hour == 5:
-            # mid-peak failure: one A100 dies and the type is stocked out
-            gpu = "A100" if asc.current.counts.get("A100") else \
-                max(asc.current.counts, key=asc.current.counts.get)
-            diff = asc.on_instance_failure(gpu, 1, stockout=True)
-            print(f"[t={hour:02d}h] !! {gpu} failure+stockout -> "
-                  f"re-solved alloc={asc.current.counts} "
-                  f"(${asc.current.cost_per_hour:.2f}/h) "
-                  f"add={diff.add}")
+    orch = ClusterOrchestrator(mel, trace, window_s=HOUR_S,
+                               launch_delay_s=HOUR_S / 4,
+                               headroom=0.10, drift_threshold=0.15,
+                               solver_budget_s=1.0, seed=7)
+    print(f"[t=00h] initial allocation {orch.autoscaler.current.counts} "
+          f"(${orch.autoscaler.current.cost_per_hour:.2f}/h), "
+          f"trace peak {trace.peak_rate:.1f} req/s")
+    res = orch.run()
 
-    print("\nevent log:")
-    for ev in asc.history:
-        print("  ", {k: v for k, v in ev.items() if k != 'old'})
+    print("\nper-window timeline (hour, rate, fleet, $/h, SLO):")
+    for w in res.timeline.windows:
+        hour = w.t1 / HOUR_S
+        drain = f" drain={w.draining}" if w.draining else ""
+        print(f"  [{hour:04.1f}h] rate={w.observed_rate:5.2f} "
+              f"fleet={w.fleet}{drain} ${w.cost_rate:5.2f}/h "
+              f"slo={w.slo_attainment*100:6.2f}%")
+
+    print("\ncontroller decisions:")
+    for d in res.timeline.decisions:
+        hour = d.t / HOUR_S
+        print(f"  [{hour:04.1f}h] {d.kind}: "
+              f"{ {k: v for k, v in d.detail.items() if v} }")
+
+    static_alloc = mel.allocate(trace.workload_at(trace.peak_time, seed=7),
+                                over_provision=0.10, time_budget_s=2.0)
+    static = run_static(mel, static_alloc.counts, trace, seed=7)
+
+    s = res.timeline.summary()
+    print(f"\nelastic : ${res.cost:.2f} for the day, "
+          f"SLO attainment {res.slo_attainment*100:.2f}%, "
+          f"{s['scale_ups']} scale-ups, {s['scale_downs']} scale-downs, "
+          f"{s['preemption_resolves']} preemption re-solve(s), "
+          f"mean solver latency {s['mean_solver_latency_s']*1e3:.0f}ms")
+    print(f"static  : ${static.cost:.2f} for the day "
+          f"(peak-provisioned {static_alloc.counts}), "
+          f"SLO attainment {static.slo_attainment*100:.2f}%")
+    print(f"savings : {(1 - res.cost / static.cost) * 100:.1f}%  "
+          f"(requests conserved: {res.conserved})")
 
 
 if __name__ == "__main__":

@@ -50,16 +50,17 @@ def allocation_diff(old: dict[str, int], new: dict[str, int]) -> AllocationDiff:
 class Autoscaler:
     def __init__(self, melange: Melange, initial: Workload, *,
                  headroom: float = 0.10, drift_threshold: float = 0.15,
-                 ewma: float = 0.3):
+                 ewma: float = 0.3, solver_budget_s: float = 5.0):
         self.melange = melange
         self.headroom = headroom
         self.drift_threshold = drift_threshold
         self.ewma = ewma
+        self.solver_budget_s = solver_budget_s
         self.observed = initial.rates.copy()
         self.buckets = initial.buckets
         self.caps: dict[str, int] = {}
         self.current: Optional[Allocation] = melange.allocate(
-            initial, over_provision=headroom)
+            initial, over_provision=headroom, time_budget_s=solver_budget_s)
         self.history: list[dict] = []
 
     # -- telemetry -----------------------------------------------------------
@@ -78,7 +79,7 @@ class Autoscaler:
         wl = Workload(self.buckets, self.observed.copy(), name="observed")
         new = self.melange.allocate(
             wl, over_provision=self.headroom,
-            caps=self.caps or None)
+            caps=self.caps or None, time_budget_s=self.solver_budget_s)
         if new is None:
             return None
         diff = allocation_diff(self.current.counts, new.counts)
@@ -87,6 +88,7 @@ class Autoscaler:
             "old": dict(self.current.counts), "new": dict(new.counts),
             "old_cost": self.current.cost_per_hour,
             "new_cost": new.cost_per_hour,
+            "solve_time_s": new.solution.solve_time_s,
         })
         self.current = new
         return diff
@@ -101,7 +103,8 @@ class Autoscaler:
             self.caps[gpu] = counts[gpu]
         wl = Workload(self.buckets, self.observed.copy(), name="post-failure")
         new = self.melange.allocate(
-            wl, over_provision=self.headroom, caps=self.caps or None)
+            wl, over_provision=self.headroom, caps=self.caps or None,
+            time_budget_s=self.solver_budget_s)
         if new is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve "
@@ -110,6 +113,12 @@ class Autoscaler:
         self.history.append({
             "event": "failure", "gpu": gpu, "n": n, "stockout": stockout,
             "new": dict(new.counts), "new_cost": new.cost_per_hour,
+            "solve_time_s": new.solution.solve_time_s,
         })
         self.current = new
         return diff
+
+    def lift_stockout(self, gpu: str) -> None:
+        """Capacity restocked: the per-type cap is removed; the next re-solve
+        may use the type again."""
+        self.caps.pop(gpu, None)

@@ -9,11 +9,20 @@ proportional to each instance's MaxTput for that bucket.
 Beyond-paper: optional straggler-aware weighting — instances report a TPOT
 EWMA and weights are scaled by (slo / max(tpot, slo))^k so slow/overloaded
 instances shed load.
+
+Elastic extensions (trace-driven orchestration):
+  * the instance set is mutable (``add_instance`` / ``remove_instance``);
+  * *drain-aware* routing — instances marked draining finish their in-flight
+    requests but receive no new routes (``mark_draining`` / ``undrain``);
+  * *backlog-aware* routing — an optional ``depth_probe`` reports each
+    instance's admission-queue depth and weights are divided by
+    ``1 + depth``, so a backlogged instance is not chosen purely on
+    throughput weight.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -29,11 +38,14 @@ class InstanceRef:
 
 class LoadBalancer:
     def __init__(self, profile: Profile, instances: Sequence[InstanceRef],
-                 *, seed: int = 0, straggler_factor: float = 0.0):
+                 *, seed: int = 0, straggler_factor: float = 0.0,
+                 depth_probe: Optional[Callable[[int], float]] = None):
         self.profile = profile
         self.instances = list(instances)
         self.rng = np.random.default_rng(seed)
         self.straggler_factor = straggler_factor
+        self.depth_probe = depth_probe
+        self.draining: set[int] = set()
         ni = len(INPUT_EDGES) - 1
         # output-length estimator state per input bucket
         self._sum = np.zeros(ni)
@@ -73,10 +85,15 @@ class LoadBalancer:
         return bi * self._no + bo
 
     def route(self, input_len: int) -> InstanceRef:
+        if not self.instances:
+            raise RuntimeError("LoadBalancer.route: no instances registered")
+        cand = [i for i in self.instances if i.inst_id not in self.draining]
+        if not cand:          # whole fleet draining: keep serving somewhere
+            cand = list(self.instances)
         est = self.estimate_output(input_len)
         bidx = self.bucket_index(input_len, est)
-        weights = np.zeros(len(self.instances))
-        for k, inst in enumerate(self.instances):
+        weights = np.zeros(len(cand))
+        for k, inst in enumerate(cand):
             w = self.profile.max_tput[inst.gpu][bidx]
             if self.straggler_factor > 0 and inst.inst_id in self._tpot_ewma:
                 slo = self.profile.slo_tpot_s
@@ -86,13 +103,31 @@ class LoadBalancer:
         if weights.sum() <= 0:
             # nothing profiled-feasible: fall back to biggest-memory instance
             weights = np.array([
-                self.profile.gpus[i.gpu].mem_gb for i in self.instances])
+                self.profile.gpus[i.gpu].mem_gb for i in cand])
+        if self.depth_probe is not None:
+            depths = np.array([max(0.0, float(self.depth_probe(i.inst_id)))
+                               for i in cand])
+            weights = weights / (1.0 + depths)
         weights = weights / weights.sum()
-        k = int(self.rng.choice(len(self.instances), p=weights))
-        return self.instances[k]
+        k = int(self.rng.choice(len(cand), p=weights))
+        return cand[k]
 
+    # -- fleet mutation (elastic orchestration) ------------------------------
     def add_instance(self, inst: InstanceRef) -> None:
         self.instances.append(inst)
+        self.draining.discard(inst.inst_id)
 
     def remove_instance(self, inst_id: int) -> None:
         self.instances = [i for i in self.instances if i.inst_id != inst_id]
+        self.draining.discard(inst_id)
+        self._tpot_ewma.pop(inst_id, None)
+
+    def mark_draining(self, inst_id: int) -> None:
+        """Drain: the instance finishes in-flight work, gets no new routes."""
+        self.draining.add(inst_id)
+
+    def undrain(self, inst_id: int) -> None:
+        self.draining.discard(inst_id)
+
+    def is_draining(self, inst_id: int) -> bool:
+        return inst_id in self.draining

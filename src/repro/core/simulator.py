@@ -6,12 +6,24 @@ step time comes from the same engine model used for profiling.  Per-request
 TTFT and average TPOT are recorded, giving the Fig.-12 CDFs and the SLO
 attainment rate.  Also accounts cost, enabling the Fig.-9-style comparisons
 under bursty (non-steady-state) load.
+
+The engine is split into reusable pieces so the trace-driven orchestrator
+(`repro.orchestrator`) can run the same simulation with a *mutable* fleet:
+
+  * ``InstanceEngine`` — one continuous-batching engine loop (chunked
+    prefill, deque admission queue, memory-bounded admission);
+  * ``ClusterEngine``  — the event queue + fleet: dynamic instance
+    add/drain/remove, per-instance-lifetime cost accounting, and control
+    callbacks that let an external controller run inside the sim clock;
+  * ``simulate``       — the original fixed-allocation entry point, now a
+    thin wrapper over ``ClusterEngine``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -32,6 +44,9 @@ class SimRequest:
     first_token_t: float = -1.0
     finish_t: float = -1.0
     decoded: int = 0
+    preemptions: int = 0
+    reroutes: int = 0
+    dropped: bool = False
 
     @property
     def tpot(self) -> float:
@@ -43,21 +58,47 @@ class SimRequest:
     def ttft(self) -> float:
         return self.first_token_t - self.arrival
 
+    def reset_progress(self) -> None:
+        """Lose all generation progress (instance preempted mid-flight)."""
+        self.first_token_t = -1.0
+        self.finish_t = -1.0
+        self.decoded = 0
+        self.preemptions += 1
 
-class _Instance:
+
+class InstanceEngine:
+    """One serving instance: continuous batching with chunked prefill."""
+
     def __init__(self, inst_id: int, gpu: Accelerator, em: EngineModel,
-                 max_prefill_tokens_per_step: int = 4096):
+                 max_prefill_tokens_per_step: int = 4096,
+                 gpu_name: str = "", launched_at: float = 0.0):
         self.inst_id = inst_id
         self.gpu = gpu
+        self.gpu_name = gpu_name or gpu.name
         self.em = em
-        self.queue: list[SimRequest] = []
+        self.queue: collections.deque[SimRequest] = collections.deque()
         self.prefilling: list[tuple[SimRequest, int]] = []  # (req, remaining)
         self.active: list[SimRequest] = []
         self.pf_budget = max_prefill_tokens_per_step
+        self.launched_at = launched_at
+        self.retired_at: Optional[float] = None
+        self.draining = False
 
     def kv_tokens(self) -> float:
         return (sum(r.input_len + r.decoded for r in self.active)
                 + sum(r.input_len - rem for r, rem in self.prefilling))
+
+    def load(self) -> int:
+        """Total in-flight requests (queued + prefilling + decoding)."""
+        return len(self.queue) + len(self.prefilling) + len(self.active)
+
+    def backlog(self) -> int:
+        """Requests not yet decoding — the LB's queue-depth signal."""
+        return len(self.queue) + len(self.prefilling)
+
+    def in_flight(self) -> list[SimRequest]:
+        return (list(self.queue) + [r for r, _ in self.prefilling]
+                + list(self.active))
 
     def can_admit(self, r: SimRequest) -> bool:
         m = self.em.m
@@ -77,7 +118,7 @@ class _Instance:
             if not self.prefilling:
                 if (self.queue and self.queue[0].arrival <= now
                         and self.can_admit(self.queue[0])):
-                    r = self.queue.pop(0)
+                    r = self.queue.popleft()
                     self.prefilling.append((r, r.input_len))
                 else:
                     break
@@ -110,28 +151,260 @@ class _Instance:
         return dur, done
 
 
+_Instance = InstanceEngine        # backwards-compatible alias
+
+
+class ClusterEngine:
+    """Event-driven simulation over a mutable fleet of ``InstanceEngine``s.
+
+    Event kinds (heap order at equal timestamps): request arrival, engine
+    step, control callback.  Control callbacks are how the orchestrator's
+    telemetry windows, delayed instance launches, and fleet events run
+    *inside* the simulation clock.
+    """
+
+    ARRIVAL, STEP, CONTROL = 0, 1, 2
+
+    def __init__(self, profile: Profile, em: EngineModel, *,
+                 seed: int = 0, straggler_factor: float = 0.0,
+                 prefill_chunk: int = 4096, depth_aware: bool = True):
+        self.profile = profile
+        self.em = em
+        self.prefill_chunk = prefill_chunk
+        self.instances: dict[int, InstanceEngine] = {}
+        self.retired: list[InstanceEngine] = []
+        # depth_aware=False restores the paper's pure MaxTput-weighted
+        # routing (App. A.2) for fidelity experiments
+        self.lb = LoadBalancer(profile, [], seed=seed,
+                               straggler_factor=straggler_factor,
+                               depth_probe=self._backlog_of if depth_aware
+                               else None)
+        self.completed: list[SimRequest] = []
+        self.dropped: list[SimRequest] = []
+        self.now = 0.0
+        self._ev: list[tuple[float, int, int]] = []   # (t, kind, seq)
+        self._payload: dict[int, object] = {}
+        self._seq = 0
+        self._stepping: set[int] = set()
+        self._next_id = 0
+        self._pending: list[SimRequest] = []   # arrivals during a fleet gap
+
+    # -- wiring --------------------------------------------------------------
+    def _backlog_of(self, inst_id: int) -> float:
+        inst = self.instances.get(inst_id)
+        return float(inst.backlog()) if inst is not None else 0.0
+
+    def _push(self, t: float, kind: int, payload) -> None:
+        self._seq += 1
+        self._payload[self._seq] = payload
+        heapq.heappush(self._ev, (t, kind, self._seq))
+
+    # -- fleet mutation ------------------------------------------------------
+    def add_instance(self, gpu_name: str, at: Optional[float] = None) -> int:
+        t = self.now if at is None else at
+        iid = self._next_id
+        self._next_id += 1
+        inst = InstanceEngine(iid, self.profile.gpus[gpu_name], self.em,
+                              self.prefill_chunk, gpu_name=gpu_name,
+                              launched_at=t)
+        self.instances[iid] = inst
+        self.lb.add_instance(InstanceRef(iid, gpu_name))
+        if self._pending:            # capacity is back: requeue held arrivals
+            held, self._pending = self._pending, []
+            for r in held:
+                self._push(t, self.ARRIVAL, r)
+        return iid
+
+    def begin_drain(self, inst_id: int) -> None:
+        """No new routes; the instance retires once its in-flight work ends."""
+        inst = self.instances.get(inst_id)
+        if inst is None:
+            return
+        inst.draining = True
+        self.lb.mark_draining(inst_id)
+        if inst.load() == 0:
+            self._retire(inst_id)
+
+    def cancel_drain(self, inst_id: int) -> bool:
+        """Reuse a still-warm draining instance instead of launching anew."""
+        inst = self.instances.get(inst_id)
+        if inst is None or not inst.draining:
+            return False
+        inst.draining = False
+        self.lb.undrain(inst_id)
+        return True
+
+    def draining_ids(self, gpu_name: Optional[str] = None) -> list[int]:
+        return [i for i, inst in self.instances.items() if inst.draining
+                and (gpu_name is None or inst.gpu_name == gpu_name)]
+
+    def _retire(self, inst_id: int) -> None:
+        inst = self.instances.pop(inst_id)
+        inst.retired_at = self.now
+        self.retired.append(inst)
+        self.lb.remove_instance(inst_id)
+        self._stepping.discard(inst_id)
+
+    def remove_instance(self, inst_id: int) -> list[SimRequest]:
+        """Hard removal (preemption): in-flight requests are returned to the
+        caller, which decides whether to resubmit or drop them."""
+        inst = self.instances.get(inst_id)
+        if inst is None:
+            return []
+        orphans = inst.in_flight()
+        inst.queue.clear()
+        inst.prefilling.clear()
+        inst.active.clear()
+        self._retire(inst_id)
+        return orphans
+
+    def fleet_counts(self, include_draining: bool = True) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for inst in self.instances.values():
+            if not include_draining and inst.draining:
+                continue
+            out[inst.gpu_name] = out.get(inst.gpu_name, 0) + 1
+        return out
+
+    def cost_rate(self) -> float:
+        """Current fleet $/h (draining instances still bill)."""
+        return sum(self.profile.gpus[i.gpu_name].price_hr
+                   for i in self.instances.values())
+
+    def cost(self, until: Optional[float] = None) -> float:
+        """$ spent: per-instance lifetime integral of the hourly price."""
+        t_end = self.now if until is None else until
+        total = 0.0
+        for inst in list(self.instances.values()) + self.retired:
+            t1 = inst.retired_at if inst.retired_at is not None else t_end
+            total += (self.profile.gpus[inst.gpu_name].price_hr
+                      * max(0.0, t1 - inst.launched_at) / 3600.0)
+        return total
+
+    # -- request flow --------------------------------------------------------
+    def submit(self, req: SimRequest, at: Optional[float] = None) -> None:
+        self._push(req.arrival if at is None else at, self.ARRIVAL, req)
+
+    def resubmit(self, reqs: list[SimRequest], at: float) -> None:
+        """Re-route preempted requests; they restart prefill from scratch."""
+        for r in reqs:
+            r.reset_progress()
+            self._push(at, self.ARRIVAL, r)
+
+    def drop(self, req: SimRequest) -> None:
+        req.dropped = True
+        self.dropped.append(req)
+
+    def schedule(self, t: float, fn: Callable[["ClusterEngine"], None]) -> None:
+        """Run ``fn(engine)`` at simulated time ``t`` (control event)."""
+        self._push(t, self.CONTROL, fn)
+
+    def _route(self, r: SimRequest, now: float) -> None:
+        if not self.instances:       # fleet gap (e.g. mass preemption):
+            self._pending.append(r)  # hold until the next launch
+            return
+        ref = self.lb.route(r.input_len)
+        r.inst_id = ref.inst_id
+        inst = self.instances[ref.inst_id]
+        inst.queue.append(r)
+        if ref.inst_id not in self._stepping:
+            self._stepping.add(ref.inst_id)
+            self._push(now, self.STEP, ref.inst_id)
+
+    # -- event loop ----------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> None:
+        """Process events until the heap empties (or past ``until``)."""
+        while self._ev:
+            if until is not None and self._ev[0][0] > until:
+                break
+            now, kind, seq = heapq.heappop(self._ev)
+            payload = self._payload.pop(seq)
+            self.now = max(self.now, now)
+            if kind == self.ARRIVAL:
+                self._route(payload, now)
+            elif kind == self.CONTROL:
+                payload(self)
+            else:
+                self._on_step(payload, now)
+
+    def _on_step(self, iid: int, now: float) -> None:
+        inst = self.instances.get(iid)
+        if inst is None:                  # preempted with a step in flight
+            self._stepping.discard(iid)
+            return
+        dur, done = inst.step(now)
+        for r in done:
+            self.lb.observe(r.input_len, r.output_len, inst_id=iid,
+                            tpot=r.tpot)
+            self.completed.append(r)
+        if dur is None:
+            self._stepping.discard(iid)
+            if inst.queue:
+                head = inst.queue[0]
+                if head.arrival > now:    # waiting on a future arrival
+                    self._stepping.add(iid)
+                    self._push(head.arrival, self.STEP, iid)
+                else:
+                    # head can never be admitted on an otherwise-empty
+                    # instance (request larger than its memory): re-route it
+                    # — another type in the fleet may fit it — with a
+                    # bounded retry budget so the loop always progresses.
+                    inst.queue.popleft()
+                    if head.reroutes < 3 * max(1, len(self.instances)):
+                        head.reroutes += 1
+                        self._push(now, self.ARRIVAL, head)
+                    else:
+                        self.drop(head)
+                    if inst.load():
+                        self._stepping.add(iid)
+                        self._push(now, self.STEP, iid)
+            if inst.draining and inst.load() == 0:
+                self._retire(iid)
+        else:
+            self._push(now + dur, self.STEP, iid)
+
+    def drop_stranded(self) -> int:
+        """Explicitly drop arrivals still held with no instance ever coming
+        back (call after the event loop drains)."""
+        held, self._pending = self._pending, []
+        for r in held:
+            self.drop(r)
+        return len(held)
+
+    def conservation(self) -> dict[str, int]:
+        """Every submitted request is completed, dropped, or in flight."""
+        in_flight = (sum(i.load() for i in self.instances.values())
+                     + len(self._pending))
+        return {"completed": len(self.completed),
+                "dropped": len(self.dropped), "in_flight": in_flight}
+
+
 @dataclasses.dataclass
 class SimResult:
     requests: list[SimRequest]
     duration_s: float
     cost: float
     slo_tpot_s: float
+    n_dropped: int = 0
 
     @property
     def tpots(self) -> np.ndarray:
-        return np.array([r.tpot for r in self.requests if r.decoded > 1])
+        return np.array([r.tpot for r in self.requests
+                         if r.decoded > 1 and not r.dropped])
 
     @property
     def ttfts(self) -> np.ndarray:
         return np.array([r.ttft for r in self.requests
-                         if r.first_token_t >= 0])
+                         if r.first_token_t >= 0 and not r.dropped])
 
     @property
     def slo_attainment(self) -> float:
+        """Dropped requests count as SLO misses."""
         t = self.tpots
-        if len(t) == 0:
+        denom = len(t) + self.n_dropped
+        if denom == 0:
             return 1.0
-        return float((t <= self.slo_tpot_s + 1e-9).mean())
+        return float((t <= self.slo_tpot_s + 1e-9).sum() / denom)
 
     def tpot_percentiles(self, qs=(50, 90, 99, 99.5)):
         t = self.tpots
@@ -150,58 +423,25 @@ def simulate(
     seed: int = 0,
     straggler_factor: float = 0.0,
     prefill_chunk: int = 4096,
+    depth_aware: bool = True,
 ) -> SimResult:
+    """Fixed-allocation simulation (the paper's §6.3 setup)."""
     rng = np.random.default_rng(seed)
     em = EngineModel(model, engine_params)
-    # build instances
-    instances: list[_Instance] = []
-    refs = []
-    iid = 0
+    eng = ClusterEngine(profile, em, seed=seed,
+                        straggler_factor=straggler_factor,
+                        prefill_chunk=prefill_chunk,
+                        depth_aware=depth_aware)
     for gpu_name, n in sorted(allocation_counts.items()):
         for _ in range(int(n)):
-            instances.append(_Instance(iid, profile.gpus[gpu_name], em,
-                                       prefill_chunk))
-            refs.append(InstanceRef(iid, gpu_name))
-            iid += 1
-    lb = LoadBalancer(profile, refs, seed=seed,
-                      straggler_factor=straggler_factor)
+            eng.add_instance(gpu_name, at=0.0)
 
     ins, outs = sample_requests(dataset, n_requests, seed=seed + 1)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
     reqs = [SimRequest(i, float(arrivals[i]), int(ins[i]), int(outs[i]))
             for i in range(n_requests)]
-
-    # event loop: (time, kind, payload)   kind 0=arrival, 1=instance step
-    ev: list[tuple[float, int, int]] = [(r.arrival, 0, r.rid) for r in reqs]
-    heapq.heapify(ev)
-    stepping: set[int] = set()
-    t_end = 0.0
-    while ev:
-        now, kind, pid = heapq.heappop(ev)
-        t_end = max(t_end, now)
-        if kind == 0:
-            r = reqs[pid]
-            ref = lb.route(r.input_len)
-            r.inst_id = ref.inst_id
-            inst = instances[ref.inst_id]
-            inst.queue.append(r)
-            if ref.inst_id not in stepping:
-                stepping.add(ref.inst_id)
-                heapq.heappush(ev, (now, 1, ref.inst_id))
-        else:
-            inst = instances[pid]
-            dur, done = inst.step(now)
-            for r in done:
-                lb.observe(r.input_len, r.output_len, inst_id=pid,
-                           tpot=r.tpot)
-            if dur is None:
-                stepping.discard(pid)
-                if inst.queue:      # waiting on future arrivals
-                    stepping.add(pid)
-                    heapq.heappush(ev, (inst.queue[0].arrival, 1, pid))
-            else:
-                heapq.heappush(ev, (now + dur, 1, pid))
-    cost_hr = sum(profile.gpus[g].price_hr * n
-                  for g, n in allocation_counts.items())
-    return SimResult(reqs, t_end, cost_hr * t_end / 3600.0,
-                     profile.slo_tpot_s)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return SimResult(reqs, eng.now, eng.cost(), profile.slo_tpot_s,
+                     n_dropped=len(eng.dropped))

@@ -1,0 +1,3 @@
+"""Trace-driven cluster orchestration: Autoscaler-in-the-loop simulation."""
+from .orchestrator import ClusterOrchestrator, OrchestratorResult, run_static
+from .timeline import Decision, Timeline, WindowRecord

@@ -1,0 +1,405 @@
+"""Autoscaler-in-the-loop cluster orchestration over workload traces.
+
+The paper (§7) scopes Mélange to a static workload snapshot; this module
+closes the loop the way ThunderServe/ShuntServe-style follow-ups do for
+online serving: the drift-triggered re-solver (``repro.core.autoscaler``)
+runs *inside* the discrete-event simulation clock.
+
+  * every ``window_s`` of simulated time, the observed per-bucket arrival
+    rates feed ``Autoscaler.observe_rates`` and a re-solve may emit an
+    ``AllocationDiff``;
+  * scale-ups take effect after ``launch_delay_s`` (instance boot + weight
+    load); scale-downs drain — the instance finishes in-flight requests but
+    receives no new routes — and warm draining instances are reused before
+    new launches;
+  * trace ``FleetEvent``s remove capacity mid-run: preempted instances lose
+    all in-flight progress (requests are re-routed and re-prefilled), and
+    the controller re-solves via ``on_instance_failure`` with stockout caps;
+  * a ``Timeline`` records per-window cost, SLO attainment, fleet
+    composition, and solver latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.allocator import Melange
+from repro.core.autoscaler import AllocationDiff, Autoscaler
+from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
+from repro.core.simulator import ClusterEngine, SimRequest
+from repro.core.workload import workload_from_samples
+from repro.traces.trace import FleetEvent, WorkloadTrace
+
+from .timeline import Timeline, WindowRecord
+
+
+@dataclasses.dataclass
+class OrchestratorResult:
+    requests: list[SimRequest]
+    timeline: Timeline
+    duration_s: float
+    cost: float
+    slo_tpot_s: float
+    n_completed: int
+    n_dropped: int
+    final_fleet: dict[str, int]
+    autoscaler_history: list[dict]
+
+    @property
+    def tpots(self) -> np.ndarray:
+        return np.array([r.tpot for r in self.requests
+                         if r.decoded > 1 and not r.dropped])
+
+    @property
+    def slo_attainment(self) -> float:
+        """Dropped requests count as SLO misses — a lost request can't be
+        declared in-SLO just because it never produced a TPOT sample."""
+        t = self.tpots
+        denom = len(t) + self.n_dropped
+        if denom == 0:
+            return 1.0
+        return float((t <= self.slo_tpot_s + 1e-9).sum() / denom)
+
+    @property
+    def conserved(self) -> bool:
+        """Every arrived request finished or was explicitly dropped."""
+        return self.n_completed + self.n_dropped == len(self.requests)
+
+    @property
+    def cost_per_hour(self) -> float:
+        return self.cost / (self.duration_s / 3600.0) if self.duration_s \
+            else 0.0
+
+
+def _requests_from_trace(trace: WorkloadTrace,
+                         seed: Optional[int] = None) -> list[SimRequest]:
+    rz = trace.realize(seed)
+    return [SimRequest(i, float(rz.arrivals[i]), int(rz.input_lens[i]),
+                       int(rz.output_lens[i])) for i in range(rz.n)]
+
+
+def _build_engine(melange: Melange, counts: dict[str, int], *,
+                  seed: int, straggler_factor: float, prefill_chunk: int,
+                  engine_params: EngineModelParams) -> ClusterEngine:
+    eng = ClusterEngine(melange.profile,
+                        EngineModel(melange.model, engine_params),
+                        seed=seed, straggler_factor=straggler_factor,
+                        prefill_chunk=prefill_chunk)
+    for gpu, n in sorted(counts.items()):
+        for _ in range(int(n)):
+            eng.add_instance(gpu, at=0.0)
+    return eng
+
+
+def _select_victims(eng: ClusterEngine, gpu: str, n: int):
+    """Spot reclaims hit newest-first; already-draining instances last (they
+    are leaving anyway and their loss must not touch the solver target)."""
+    victims = [i for i in eng.instances.values() if i.gpu_name == gpu]
+    return sorted(victims, key=lambda i: (i.draining, -i.inst_id))[:n]
+
+
+class ClusterOrchestrator:
+    """Runs a ``WorkloadTrace`` against an elastic Mélange-allocated fleet."""
+
+    def __init__(self, melange: Melange, trace: WorkloadTrace, *,
+                 window_s: float = 300.0,
+                 launch_delay_s: float = 60.0,
+                 headroom: float = 0.10,
+                 drift_threshold: float = 0.15,
+                 ewma: float = 0.3,
+                 solver_budget_s: float = 2.0,
+                 seed: int = 0,
+                 straggler_factor: float = 0.0,
+                 prefill_chunk: int = 4096,
+                 min_instances: int = 1,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE):
+        self.melange = melange
+        self.trace = trace
+        self.window_s = window_s
+        self.launch_delay_s = launch_delay_s
+        self.seed = seed
+        self.straggler_factor = straggler_factor
+        self.prefill_chunk = prefill_chunk
+        self.min_instances = min_instances
+        self.engine_params = engine_params
+        initial = trace.workload_at(0.0, seed=seed)
+        if initial.total_rate <= 0:
+            # trace opens with a dead zone: provision for the first segment
+            # that carries traffic so early arrivals have somewhere to land
+            t_active = next((s.t_start for s in trace.segments if s.rate > 0),
+                            None)
+            if t_active is None:
+                raise ValueError(f"trace '{trace.name}' carries no traffic")
+            initial = trace.workload_at(t_active, seed=seed)
+        self.autoscaler = Autoscaler(
+            melange, initial, headroom=headroom,
+            drift_threshold=drift_threshold, ewma=ewma,
+            solver_budget_s=solver_budget_s)
+        if self.autoscaler.current is None:
+            raise ValueError(
+                f"initial workload of trace '{trace.name}' is infeasible "
+                "for every GPU type under the SLO")
+        self.timeline = Timeline()
+
+    # -- fleet-change application -------------------------------------------
+    def _apply_diff(self, eng: ClusterEngine, diff: AllocationDiff,
+                    now: float, kind: str, **detail) -> None:
+        launched: dict[str, int] = {}
+        reused: dict[str, int] = {}
+        for gpu, n in diff.add.items():
+            need = n
+            for iid in eng.draining_ids(gpu):       # reuse warm instances
+                if need == 0:
+                    break
+                if eng.cancel_drain(iid):
+                    reused[gpu] = reused.get(gpu, 0) + 1
+                    need -= 1
+            for _ in range(need):
+                eng.schedule(now + self.launch_delay_s,
+                             lambda e, g=gpu: e.add_instance(g))
+                launched[gpu] = launched.get(gpu, 0) + 1
+        drained: dict[str, int] = {}
+        # min-capacity floor: never drain below ``min_instances`` of
+        # routable capacity *right now* — launches still in flight don't
+        # count.  Drains the floor blocks are retried once the scheduled
+        # launches have landed, so the fleet still converges to the target.
+        live = sum(1 for i in eng.instances.values() if not i.draining)
+        drain_budget = max(0, live - self.min_instances)
+        deferred: list[int] = []
+        for gpu, n in diff.remove.items():
+            victims = sorted(
+                (i for i in eng.instances.values()
+                 if i.gpu_name == gpu and not i.draining),
+                key=lambda i: i.backlog())[:n]
+            for v in victims:
+                if drain_budget > 0:
+                    eng.begin_drain(v.inst_id)
+                    drained[gpu] = drained.get(gpu, 0) + 1
+                    drain_budget -= 1
+                else:
+                    deferred.append(v.inst_id)
+        if deferred:
+            def retry_drains(e: ClusterEngine,
+                             ids: tuple[int, ...] = tuple(deferred)) -> None:
+                for iid in ids:
+                    inst = e.instances.get(iid)
+                    if inst is None or inst.draining:
+                        continue
+                    live_now = sum(1 for i in e.instances.values()
+                                   if not i.draining)
+                    if live_now > self.min_instances:
+                        e.begin_drain(iid)
+
+            eng.schedule(now + self.launch_delay_s + 1e-3, retry_drains)
+        self.timeline.record_decision(
+            now, kind, add=dict(diff.add), remove=dict(diff.remove),
+            launched=launched, reused_draining=reused, drained=drained,
+            deferred_drains=len(deferred), **detail)
+
+    # -- event handlers ------------------------------------------------------
+    def _on_window(self, eng: ClusterEngine, t0: float, t1: float,
+                   state: dict, control: bool = True) -> None:
+        asc = self.autoscaler
+        reqs = state["requests"]
+        arrivals = state["arrivals"]
+        lo = int(np.searchsorted(arrivals, t0, side="right"))
+        hi = int(np.searchsorted(arrivals, t1, side="right"))
+        n_arr = hi - lo
+        dt = max(t1 - t0, 1e-9)
+        if control:
+            if n_arr:
+                window = reqs[lo:hi]
+                wl = workload_from_samples([r.input_len for r in window],
+                                           [r.output_len for r in window],
+                                           total_rate=n_arr / dt)
+                rates = wl.rates
+            else:
+                rates = np.zeros_like(asc.observed)
+            asc.observe_rates(rates)
+            wall0 = time.perf_counter()
+            diff = asc.maybe_rescale()
+            wall = time.perf_counter() - wall0
+            if diff is not None and not diff.is_noop:
+                self._apply_diff(
+                    eng, diff, t1, "rescale",
+                    drift=asc.history[-1]["drift"],
+                    solve_time_s=asc.history[-1]["solve_time_s"],
+                    wall_time_s=wall, new_cost=asc.history[-1]["new_cost"])
+        # completions/drops since the previous window close
+        comp = eng.completed
+        drop = eng.dropped
+        c0, d0 = state["comp_ptr"], state["drop_ptr"]
+        new_comp = comp[c0:]
+        slo = self.melange.profile.slo_tpot_s
+        slo_ok = sum(1 for r in new_comp
+                     if r.decoded <= 1 or r.tpot <= slo + 1e-9)
+        self.timeline.windows.append(WindowRecord(
+            t0=t0, t1=t1, arrived=n_arr, completed=len(new_comp),
+            dropped=len(drop) - d0, slo_ok=slo_ok,
+            observed_rate=n_arr / dt,
+            fleet=eng.fleet_counts(),
+            draining={g: len(eng.draining_ids(g))
+                      for g in eng.fleet_counts() if eng.draining_ids(g)},
+            cost_rate=eng.cost_rate()))
+        state["comp_ptr"] = len(comp)
+        state["drop_ptr"] = len(drop)
+
+    def _on_fleet_event(self, eng: ClusterEngine, ev: FleetEvent) -> None:
+        asc = self.autoscaler
+        now = ev.t
+        if ev.kind == "restock":
+            asc.lift_stockout(ev.gpu)
+            self.timeline.record_decision(now, "restock", gpu=ev.gpu)
+            return
+        if ev.kind == "stockout":
+            live = eng.fleet_counts().get(ev.gpu, 0)
+            asc.caps[ev.gpu] = live
+            self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
+                                          cap=live)
+            return
+        # preemption: kill up to n live instances of the type
+        victims = _select_victims(eng, ev.gpu, ev.n)
+        if not victims:
+            if ev.stockout:           # the market event still happened:
+                asc.caps[ev.gpu] = 0  # the type is unavailable until restock
+            self.timeline.record_decision(now, "preemption-miss", gpu=ev.gpu,
+                                          stockout=ev.stockout)
+            return
+        # only non-draining kills reduce the solver's target: a draining
+        # instance had already left the target fleet
+        n_target_lost = sum(1 for v in victims if not v.draining)
+        orphans: list[SimRequest] = []
+        for v in victims:
+            orphans += eng.remove_instance(v.inst_id)
+        if n_target_lost == 0:
+            if ev.stockout:
+                asc.caps[ev.gpu] = asc.current.counts.get(ev.gpu, 0)
+            if eng.instances:
+                eng.resubmit(orphans, now)
+            else:
+                for r in orphans:
+                    eng.drop(r)
+            self.timeline.record_decision(
+                now, "preemption-drained-only", gpu=ev.gpu,
+                lost=len(victims), stockout=ev.stockout)
+            return
+        wall0 = time.perf_counter()
+        try:
+            diff = asc.on_instance_failure(ev.gpu, n_target_lost,
+                                           stockout=ev.stockout)
+        except RuntimeError as e:
+            if eng.instances:
+                eng.resubmit(orphans, now)
+            else:                       # nothing left and no replacement
+                for r in orphans:
+                    eng.drop(r)
+            self.timeline.record_decision(
+                now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
+                dropped=0 if eng.instances else len(orphans), error=str(e))
+            return
+        wall = time.perf_counter() - wall0
+        self._apply_diff(
+            eng, diff, now, "failure", gpu=ev.gpu, lost=len(victims),
+            resubmitted=len(orphans), stockout=ev.stockout,
+            solve_time_s=asc.history[-1]["solve_time_s"], wall_time_s=wall)
+        if eng.instances or diff.add:
+            # during a full-fleet gap the engine holds arrivals pending and
+            # requeues them when the replacement launches arrive
+            eng.resubmit(orphans, now)
+        else:
+            for r in orphans:
+                eng.drop(r)
+
+    # -- main entry ----------------------------------------------------------
+    def run(self, seed: Optional[int] = None) -> OrchestratorResult:
+        eng = _build_engine(self.melange, self.autoscaler.current.counts,
+                            seed=self.seed,
+                            straggler_factor=self.straggler_factor,
+                            prefill_chunk=self.prefill_chunk,
+                            engine_params=self.engine_params)
+        reqs = _requests_from_trace(self.trace, seed)
+        for r in reqs:
+            eng.submit(r)
+        state = {"requests": reqs,
+                 "arrivals": np.array([r.arrival for r in reqs]),
+                 "comp_ptr": 0, "drop_ptr": 0}
+        for t0, t1 in self.trace.windows(self.window_s):
+            eng.schedule(t1, lambda e, a=t0, b=t1: self._on_window(e, a, b,
+                                                                   state))
+        for ev in self.trace.events:
+            eng.schedule(ev.t, lambda e, v=ev: self._on_fleet_event(e, v))
+        eng.run()
+        eng.drop_stranded()
+        # tail flush: record (not control) completions past the last window
+        if state["comp_ptr"] < len(eng.completed) \
+                or state["drop_ptr"] < len(eng.dropped):
+            self._on_window(eng, self.trace.duration, eng.now, state,
+                            control=False)
+        cons = eng.conservation()
+        assert cons["in_flight"] == 0, f"requests stranded: {cons}"
+        return OrchestratorResult(
+            requests=reqs,
+            timeline=self.timeline,
+            duration_s=eng.now,
+            cost=eng.cost(),
+            slo_tpot_s=self.melange.profile.slo_tpot_s,
+            n_completed=len(eng.completed),
+            n_dropped=len(eng.dropped),
+            final_fleet=eng.fleet_counts(),
+            autoscaler_history=list(self.autoscaler.history),
+        )
+
+
+def run_static(melange: Melange, counts: dict[str, int],
+               trace: WorkloadTrace, *,
+               seed: int = 0, realize_seed: Optional[int] = None,
+               straggler_factor: float = 0.0,
+               prefill_chunk: int = 4096,
+               engine_params: EngineModelParams = DEFAULT_ENGINE,
+               apply_preemptions: bool = False) -> OrchestratorResult:
+    """Baseline: a fixed allocation rides out the whole trace (no
+    controller).  With ``apply_preemptions`` the trace's preemption events
+    still kill instances — and nothing replaces them.  ``realize_seed``
+    mirrors ``ClusterOrchestrator.run(seed=...)`` (default: the trace's own
+    seed), so elastic-vs-static comparisons share one request stream."""
+    eng = _build_engine(melange, counts, seed=seed,
+                        straggler_factor=straggler_factor,
+                        prefill_chunk=prefill_chunk,
+                        engine_params=engine_params)
+    reqs = _requests_from_trace(trace, realize_seed)
+    for r in reqs:
+        eng.submit(r)
+    timeline = Timeline()
+    if apply_preemptions:
+        def kill(e: ClusterEngine, ev: FleetEvent) -> None:
+            for v in _select_victims(e, ev.gpu, ev.n):
+                orphans = e.remove_instance(v.inst_id)
+                if e.instances:       # nothing replaces capacity here
+                    e.resubmit(orphans, ev.t)
+                else:
+                    for r in orphans:
+                        e.drop(r)
+                timeline.record_decision(ev.t, "preemption-unhandled",
+                                         gpu=ev.gpu)
+
+        for ev in trace.events:
+            if ev.kind == "preemption":
+                eng.schedule(ev.t, lambda e, v=ev: kill(e, v))
+    eng.run()
+    eng.drop_stranded()
+    slo = melange.profile.slo_tpot_s
+    slo_ok = sum(1 for r in eng.completed
+                 if r.decoded <= 1 or r.tpot <= slo + 1e-9)
+    timeline.windows.append(WindowRecord(
+        t0=0.0, t1=eng.now, arrived=len(reqs),
+        completed=len(eng.completed), dropped=len(eng.dropped),
+        slo_ok=slo_ok, observed_rate=len(reqs) / max(eng.now, 1e-9),
+        fleet=eng.fleet_counts(), draining={}, cost_rate=eng.cost_rate()))
+    return OrchestratorResult(
+        requests=reqs, timeline=timeline, duration_s=eng.now,
+        cost=eng.cost(), slo_tpot_s=slo, n_completed=len(eng.completed),
+        n_dropped=len(eng.dropped), final_fleet=eng.fleet_counts(),
+        autoscaler_history=[])

@@ -1,0 +1,105 @@
+"""Timeline recording for trace-driven orchestration runs.
+
+One ``WindowRecord`` per telemetry window plus a decision log; the
+``Timeline`` aggregates them into the numbers the elastic-vs-static
+benchmark reports (cost integral, SLO attainment, fleet churn).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional
+
+
+@dataclasses.dataclass
+class WindowRecord:
+    t0: float
+    t1: float
+    arrived: int
+    completed: int
+    dropped: int
+    slo_ok: int                         # completed within TPOT SLO
+    observed_rate: float                # req/s seen in the window
+    fleet: dict[str, int]               # live instances (incl. draining)
+    draining: dict[str, int]
+    cost_rate: float                    # fleet $/h at window close
+    events: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def slo_attainment(self) -> float:
+        return self.slo_ok / self.completed if self.completed else 1.0
+
+
+@dataclasses.dataclass
+class Decision:
+    """One controller action (re-solve, failure response, launch, drain)."""
+
+    t: float
+    kind: str                           # "rescale" | "failure" | ...
+    detail: dict
+
+    def to_dict(self) -> dict:
+        return {"t": self.t, "kind": self.kind, **self.detail}
+
+
+@dataclasses.dataclass
+class Timeline:
+    windows: list[WindowRecord] = dataclasses.field(default_factory=list)
+    decisions: list[Decision] = dataclasses.field(default_factory=list)
+
+    def record_decision(self, t: float, kind: str, **detail) -> None:
+        self.decisions.append(Decision(t, kind, detail))
+
+    # -- aggregates ----------------------------------------------------------
+    def n_decisions(self, kind: str) -> int:
+        return sum(1 for d in self.decisions if d.kind == kind)
+
+    @property
+    def n_scale_ups(self) -> int:
+        return sum(1 for d in self.decisions
+                   if d.kind in ("rescale", "failure") and d.detail.get("add"))
+
+    @property
+    def n_scale_downs(self) -> int:
+        return sum(1 for d in self.decisions
+                   if d.kind in ("rescale", "failure")
+                   and d.detail.get("remove"))
+
+    @property
+    def n_preemption_resolves(self) -> int:
+        return self.n_decisions("failure")
+
+    @property
+    def solver_latencies(self) -> list[float]:
+        return [d.detail["solve_time_s"] for d in self.decisions
+                if "solve_time_s" in d.detail]
+
+    def fleet_over_time(self) -> list[tuple[float, dict[str, int]]]:
+        return [(w.t1, dict(w.fleet)) for w in self.windows]
+
+    def summary(self) -> dict:
+        comp = sum(w.completed for w in self.windows)
+        ok = sum(w.slo_ok for w in self.windows)
+        lats = self.solver_latencies
+        return {
+            "windows": len(self.windows),
+            "completed": comp,
+            "dropped": sum(w.dropped for w in self.windows),
+            "slo_attainment": ok / comp if comp else 1.0,
+            "scale_ups": self.n_scale_ups,
+            "scale_downs": self.n_scale_downs,
+            "preemption_resolves": self.n_preemption_resolves,
+            "mean_solver_latency_s": sum(lats) / len(lats) if lats else 0.0,
+            "max_solver_latency_s": max(lats) if lats else 0.0,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "windows": [dataclasses.asdict(w) for w in self.windows],
+            "decisions": [d.to_dict() for d in self.decisions],
+            "summary": self.summary(),
+        }, indent=1, default=str)
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json())

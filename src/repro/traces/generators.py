@@ -1,0 +1,121 @@
+"""Synthetic trace generators: diurnal curves, bursts, mix drift, spot
+preemption storms.  All seeded and reproducible; every generator returns a
+``WorkloadTrace`` built from piecewise-constant segments, so generated and
+JSON-loaded traces are interchangeable everywhere downstream.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .trace import FleetEvent, TraceSegment, WorkloadTrace
+
+
+def synth_trace(duration_s: float, segment_s: float,
+                rate_fn: Callable[[float], float],
+                mix_fn: Callable[[float], dict[str, float]],
+                *, name: str = "synth", seed: int = 0) -> WorkloadTrace:
+    """Sample ``rate_fn``/``mix_fn`` at segment midpoints into a trace."""
+    segs = []
+    t = 0.0
+    while t < duration_s - 1e-9:
+        d = min(segment_s, duration_s - t)
+        mid = t + d / 2
+        segs.append(TraceSegment(t, d, max(0.0, float(rate_fn(mid))),
+                                 dict(mix_fn(mid))))
+        t += d
+    return WorkloadTrace(name, segs, seed=seed)
+
+
+def diurnal_trace(base_rate: float, peak_rate: float, *,
+                  duration_s: float = 24 * 3600.0,
+                  segment_s: float = 3600.0,
+                  peak_frac: float = 14 / 24,
+                  dataset: str = "mixed",
+                  mix: Optional[dict[str, float]] = None,
+                  name: str = "diurnal", seed: int = 0) -> WorkloadTrace:
+    """Sinusoidal day curve: trough ``base_rate``, crest ``peak_rate`` at
+    ``peak_frac`` of the trace (default 2pm of a 24h day).  ``segment_s``
+    sets the piecewise resolution; pass a compressed ``duration_s`` to run
+    a "24h" shape in minutes of simulated time."""
+    m = mix or {dataset: 1.0}
+
+    def rate(t: float) -> float:
+        phase = 2 * math.pi * (t / duration_s - peak_frac)
+        return base_rate + (peak_rate - base_rate) * 0.5 * (1 + math.cos(phase))
+
+    return synth_trace(duration_s, segment_s, rate, lambda _t: m,
+                       name=name, seed=seed)
+
+
+def mix_drift_trace(rate: float, start_mix: dict[str, float],
+                    end_mix: dict[str, float], *,
+                    duration_s: float, segment_s: float,
+                    name: str = "mix-drift", seed: int = 0) -> WorkloadTrace:
+    """Constant rate, dataset mix interpolating linearly start -> end
+    (e.g. arena -> mixed as long-document traffic ramps up)."""
+    keys = sorted(set(start_mix) | set(end_mix))
+
+    def mix(t: float) -> dict[str, float]:
+        a = min(1.0, max(0.0, t / duration_s))
+        m = {k: (1 - a) * start_mix.get(k, 0.0) + a * end_mix.get(k, 0.0)
+             for k in keys}
+        return {k: v for k, v in m.items() if v > 0}
+
+    return synth_trace(duration_s, segment_s, lambda _t: rate, mix,
+                       name=name, seed=seed)
+
+
+def inject_bursts(trace: WorkloadTrace, *, n_bursts: int,
+                  magnitude: float = 3.0, burst_s: float = 120.0,
+                  seed: int = 0) -> WorkloadTrace:
+    """Multiply the rate by ``magnitude`` inside ``n_bursts`` randomly-placed
+    windows.  Segments overlapping a burst are split at the burst edges, so
+    the rest of the schedule is untouched."""
+    rng = np.random.default_rng(seed)
+    starts = np.sort(rng.uniform(0, max(1e-9, trace.duration - burst_s),
+                                 size=n_bursts))
+    windows = [(float(s), float(s + burst_s)) for s in starts]
+
+    def burst_factor(a: float, b: float) -> float:
+        mid = (a + b) / 2
+        return magnitude if any(w0 <= mid < w1 for w0, w1 in windows) else 1.0
+
+    cuts: list[float] = []
+    for w0, w1 in windows:
+        cuts += [w0, w1]
+    segs = []
+    for s in trace.segments:
+        edges = sorted({s.t_start, s.t_end,
+                        *[c for c in cuts if s.t_start < c < s.t_end]})
+        for a, b in zip(edges[:-1], edges[1:]):
+            segs.append(TraceSegment(a, b - a, s.rate * burst_factor(a, b),
+                                     dict(s.mix)))
+    return WorkloadTrace(f"{trace.name}+bursts", segs, list(trace.events),
+                         trace.seed)
+
+
+def preemption_events(gpus: Sequence[str], *, duration_s: float,
+                      events_per_hour: float = 0.5,
+                      stockout_prob: float = 0.3,
+                      restock_after_s: Optional[float] = None,
+                      seed: int = 0) -> list[FleetEvent]:
+    """Spot-market stand-in: Poisson preemption arrivals over the trace,
+    each killing one instance of a uniformly-chosen type; with probability
+    ``stockout_prob`` the type also stocks out (optionally restocking after
+    ``restock_after_s``)."""
+    rng = np.random.default_rng(seed)
+    out: list[FleetEvent] = []
+    n = int(rng.poisson(events_per_hour * duration_s / 3600.0))
+    times = np.sort(rng.uniform(0, duration_s, size=n))
+    for t in times:
+        gpu = str(rng.choice(list(gpus)))
+        stock = bool(rng.random() < stockout_prob)
+        out.append(FleetEvent(float(t), "preemption", gpu, 1, stockout=stock))
+        if stock and restock_after_s is not None:
+            t_r = float(t + restock_after_s)
+            if t_r < duration_s:
+                out.append(FleetEvent(t_r, "restock", gpu))
+    return out

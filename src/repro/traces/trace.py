@@ -1,0 +1,231 @@
+"""Time-varying workload traces as first-class objects.
+
+A ``WorkloadTrace`` is a piecewise-constant schedule of (request rate,
+dataset mix) over simulated time, plus a stream of fleet events (spot
+preemptions, stockouts, restocks).  Traces are seeded and fully
+reproducible: ``realize()`` turns the schedule into concrete request
+arrivals and sizes, deterministically per seed.  Traces round-trip through
+JSON so recorded scenarios can be replayed and shared.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.workload import DATASETS, Workload, workload_from_samples
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSegment:
+    """Constant-rate interval: ``rate`` req/s with a dataset mix."""
+
+    t_start: float
+    duration: float
+    rate: float
+    mix: dict[str, float]              # dataset name -> weight (sums to 1)
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.duration
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEvent:
+    """Capacity event injected into the orchestrator at time ``t``.
+
+    kind: "preemption" (instances killed; with ``stockout`` the type also
+    becomes unavailable for replacement), "stockout" (cap the type at its
+    current count without killing anything), "restock" (lift the cap).
+    """
+
+    t: float
+    kind: str
+    gpu: str
+    n: int = 1
+    stockout: bool = False
+
+
+@dataclasses.dataclass
+class RealizedTrace:
+    """Concrete draw from a trace: per-request arrivals and sizes."""
+
+    arrivals: np.ndarray               # (n,) seconds, sorted
+    input_lens: np.ndarray             # (n,) int
+    output_lens: np.ndarray            # (n,) int
+
+    @property
+    def n(self) -> int:
+        return len(self.arrivals)
+
+
+def _validate_mix(mix: dict[str, float]) -> dict[str, float]:
+    unknown = set(mix) - set(DATASETS)
+    if unknown:
+        raise ValueError(f"unknown datasets in mix: {sorted(unknown)}")
+    tot = sum(mix.values())
+    if tot <= 0:
+        raise ValueError("mix weights must sum to a positive value")
+    return {k: v / tot for k, v in mix.items() if v > 0}
+
+
+@dataclasses.dataclass
+class WorkloadTrace:
+    name: str
+    segments: list[TraceSegment]
+    events: list[FleetEvent] = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.segments = sorted(self.segments, key=lambda s: s.t_start)
+        self.events = sorted(self.events, key=lambda e: e.t)
+
+    # -- schedule queries ----------------------------------------------------
+    @property
+    def duration(self) -> float:
+        return self.segments[-1].t_end if self.segments else 0.0
+
+    def segment_at(self, t: float) -> Optional[TraceSegment]:
+        for s in self.segments:
+            if s.t_start <= t < s.t_end:
+                return s
+        return self.segments[-1] if self.segments and t >= self.duration \
+            else None
+
+    def rate_at(self, t: float) -> float:
+        s = self.segment_at(t)
+        return s.rate if s else 0.0
+
+    def mix_at(self, t: float) -> dict[str, float]:
+        s = self.segment_at(t)
+        return dict(s.mix) if s else {}
+
+    @property
+    def peak_rate(self) -> float:
+        return max((s.rate for s in self.segments), default=0.0)
+
+    @property
+    def mean_rate(self) -> float:
+        d = self.duration
+        if d <= 0:
+            return 0.0
+        return sum(s.rate * s.duration for s in self.segments) / d
+
+    def windows(self, window_s: float) -> Iterator[tuple[float, float]]:
+        t = 0.0
+        while t < self.duration - 1e-9:
+            yield t, min(t + window_s, self.duration)
+            t += window_s
+
+    @property
+    def peak_time(self) -> float:
+        return max(self.segments, key=lambda s: s.rate).t_start \
+            if self.segments else 0.0
+
+    def workload_at(self, t: float, *, n_samples: int = 20_000,
+                    seed: Optional[int] = None) -> Workload:
+        """Histogram ``Workload`` for the schedule at time ``t`` (rate +
+        mix), for provisioning: the ILP consumes this directly."""
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        mix = _validate_mix(self.mix_at(t) or {"mixed": 1.0})
+        ins, outs = [], []
+        for ds, w in sorted(mix.items()):
+            k = max(1, int(round(w * n_samples)))
+            i, o = DATASETS[ds](rng, k)
+            ins.append(i)
+            outs.append(o)
+        return workload_from_samples(np.concatenate(ins),
+                                     np.concatenate(outs),
+                                     self.rate_at(t),
+                                     name=f"{self.name}@t={t:g}")
+
+    # -- transforms ----------------------------------------------------------
+    def scaled(self, factor: float) -> "WorkloadTrace":
+        """Scale all rates by ``factor`` (events and timing unchanged)."""
+        segs = [dataclasses.replace(s, rate=s.rate * factor)
+                for s in self.segments]
+        return WorkloadTrace(f"{self.name}x{factor:g}", segs,
+                             list(self.events), self.seed)
+
+    def with_events(self, events: list[FleetEvent]) -> "WorkloadTrace":
+        return WorkloadTrace(self.name, list(self.segments),
+                             list(self.events) + list(events), self.seed)
+
+    # -- realization ---------------------------------------------------------
+    def realize(self, seed: Optional[int] = None) -> RealizedTrace:
+        """Draw concrete requests: Poisson arrivals within each segment at
+        the segment's rate; sizes sampled from the segment's dataset mix.
+        Deterministic given the seed."""
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        arr_parts: list[np.ndarray] = []
+        in_parts: list[np.ndarray] = []
+        out_parts: list[np.ndarray] = []
+        for s in self.segments:
+            if s.rate <= 0 or s.duration <= 0:
+                continue
+            mix = _validate_mix(s.mix)
+            # Poisson process restricted to the segment
+            n_exp = s.rate * s.duration
+            n = int(rng.poisson(n_exp))
+            if n == 0:
+                continue
+            at = np.sort(rng.uniform(s.t_start, s.t_end, size=n))
+            names = list(mix)
+            pick = rng.choice(len(names), size=n, p=[mix[k] for k in names])
+            ins = np.zeros(n, dtype=int)
+            outs = np.zeros(n, dtype=int)
+            for di, ds in enumerate(names):
+                m = pick == di
+                k = int(m.sum())
+                if k == 0:
+                    continue
+                i, o = DATASETS[ds](rng, k)
+                ins[m] = i
+                outs[m] = o
+            arr_parts.append(at)
+            in_parts.append(ins)
+            out_parts.append(outs)
+        if not arr_parts:
+            z = np.zeros(0)
+            return RealizedTrace(z, z.astype(int), z.astype(int))
+        arrivals = np.concatenate(arr_parts)
+        order = np.argsort(arrivals, kind="stable")
+        return RealizedTrace(arrivals[order],
+                             np.concatenate(in_parts)[order],
+                             np.concatenate(out_parts)[order])
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "seed": self.seed,
+            "segments": [{
+                "t_start": s.t_start, "duration": s.duration,
+                "rate": s.rate, "mix": s.mix} for s in self.segments],
+            "events": [{
+                "t": e.t, "kind": e.kind, "gpu": e.gpu, "n": e.n,
+                "stockout": e.stockout} for e in self.events],
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "WorkloadTrace":
+        d = json.loads(text)
+        return cls(
+            name=d["name"],
+            segments=[TraceSegment(s["t_start"], s["duration"], s["rate"],
+                                   dict(s["mix"])) for s in d["segments"]],
+            events=[FleetEvent(e["t"], e["kind"], e["gpu"], e.get("n", 1),
+                               e.get("stockout", False))
+                    for e in d.get("events", [])],
+            seed=d.get("seed", 0),
+        )
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "WorkloadTrace":
+        return cls.from_json(Path(path).read_text())

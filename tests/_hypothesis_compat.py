@@ -1,0 +1,121 @@
+"""Make ``import hypothesis`` safe when the package is absent.
+
+Imported for its side effect from ``conftest.py`` *before* test modules are
+collected.  When hypothesis is installed this is a no-op; when it is not, a
+minimal stand-in module is registered in ``sys.modules`` whose decorators
+turn each property test into a clean ``pytest.skip`` instead of a
+collection-time ImportError that aborts the whole suite.
+
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import unittest
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import pytest
+
+    _REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+    class _Strategy:
+        """Chainable no-op stand-in for any strategy object."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+        def __repr__(self):
+            return "<hypothesis-stub strategy>"
+
+    class _StrategiesModule(types.ModuleType):
+        def __getattr__(self, name):
+            return _Strategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Deliberately *not* functools.wraps: the wrapper must expose a
+            # zero-arg signature so pytest doesn't try to resolve the
+            # strategy-bound parameters as fixtures.
+            def skipper():
+                pytest.skip(_REASON)
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+
+        return deco
+
+    class settings:
+        """Accepts any kwargs; usable as decorator or plain object."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*a, **k):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **k):
+            pass
+
+    def _passthrough_decorator_factory(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class Bundle(_Strategy):
+        def __init__(self, *a, **k):
+            pass
+
+    @unittest.skip(_REASON)
+    class _SkippedStatefulCase(unittest.TestCase):
+        def test_stateful(self):  # pragma: no cover - always skipped
+            pass
+
+    class RuleBasedStateMachine:
+        """State machines define rules but their TestCase just skips."""
+
+        TestCase = _SkippedStatefulCase
+
+        def __init__(self, *a, **k):
+            pass
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+    _hyp.example = _passthrough_decorator_factory
+    _hyp.HealthCheck = _Strategy()
+    _hyp.strategies = _StrategiesModule("hypothesis.strategies")
+
+    _stateful = types.ModuleType("hypothesis.stateful")
+    _stateful.RuleBasedStateMachine = RuleBasedStateMachine
+    _stateful.Bundle = Bundle
+    _stateful.rule = _passthrough_decorator_factory
+    _stateful.precondition = _passthrough_decorator_factory
+    _stateful.invariant = _passthrough_decorator_factory
+    _stateful.initialize = _passthrough_decorator_factory
+    _stateful.run_state_machine_as_test = lambda *a, **k: None
+
+    _hyp.stateful = _stateful
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies
+    sys.modules["hypothesis.stateful"] = _stateful

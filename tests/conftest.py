@@ -5,7 +5,9 @@ from pathlib import Path
 # tests run on the default single CPU device; the 512-device placeholder
 # mesh belongs exclusively to launch/dryrun.py (see its header).
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
+import _hypothesis_compat  # noqa: F401  (installs a stub if hypothesis absent)
 import numpy as np
 import pytest
 

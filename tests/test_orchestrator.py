@@ -1,0 +1,225 @@
+"""Autoscaler-in-the-loop orchestration: conservation, drains, preemption,
+stockout caps, and elastic-vs-static cost on an off-peak trace."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterEngine, EngineModel, InstanceRef,
+                        LoadBalancer, Melange, ModelPerf, PAPER_GPUS,
+                        SimRequest)
+from repro.orchestrator import ClusterOrchestrator, run_static
+from repro.traces import (FleetEvent, TraceSegment, WorkloadTrace,
+                          diurnal_trace)
+
+
+@pytest.fixture(scope="module")
+def mel():
+    return Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+
+
+def _orch(mel, trace, **kw):
+    kw.setdefault("window_s", 100.0)
+    kw.setdefault("launch_delay_s", 20.0)
+    kw.setdefault("solver_budget_s", 0.5)
+    kw.setdefault("seed", 1)
+    return ClusterOrchestrator(mel, trace, **kw)
+
+
+# -- engine-level semantics --------------------------------------------------
+def test_lb_never_routes_to_draining(mel):
+    lb = LoadBalancer(mel.profile, [InstanceRef(0, "A100"),
+                                    InstanceRef(1, "A100")], seed=0)
+    lb.mark_draining(0)
+    picks = {lb.route(100).inst_id for _ in range(100)}
+    assert picks == {1}
+    lb.undrain(0)
+    picks = {lb.route(100).inst_id for _ in range(200)}
+    assert picks == {0, 1}
+
+
+def test_lb_depth_aware_routing(mel):
+    depths = {0: 50.0, 1: 0.0}
+    lb = LoadBalancer(mel.profile, [InstanceRef(0, "A100"),
+                                    InstanceRef(1, "A100")], seed=0,
+                      depth_probe=lambda i: depths[i])
+    picks = np.array([lb.route(100).inst_id for _ in range(300)])
+    # equal throughput weight, but 0 is backlogged -> shed to 1
+    assert (picks == 1).mean() > 0.9
+
+
+def test_engine_queue_is_deque_and_drain_retires(mel):
+    import collections
+    em = EngineModel(ModelPerf.llama2_7b())
+    eng = ClusterEngine(mel.profile, em, seed=0)
+    iid = eng.add_instance("A100")
+    assert isinstance(eng.instances[iid].queue, collections.deque)
+    eng.submit(SimRequest(0, 0.0, 100, 20))
+    eng.run(until=0.01)           # route the arrival; request now in flight
+    eng.begin_drain(iid)          # busy: retires only after finishing
+    assert iid in eng.instances
+    eng.run()
+    assert iid not in eng.instances
+    assert len(eng.completed) == 1
+    assert eng.retired[0].retired_at is not None
+    assert eng.cost() > 0
+    # idle drain retires immediately
+    j = eng.add_instance("L4")
+    eng.begin_drain(j)
+    assert j not in eng.instances
+
+
+def test_engine_preemption_returns_orphans(mel):
+    em = EngineModel(ModelPerf.llama2_7b())
+    eng = ClusterEngine(mel.profile, em, seed=0)
+    iid = eng.add_instance("A100")
+    reqs = [SimRequest(i, 0.0, 200, 50) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(until=0.5)            # mid-flight
+    orphans = eng.remove_instance(iid)
+    assert orphans and iid not in eng.instances
+    j = eng.add_instance("A100")
+    eng.resubmit(orphans, eng.now)
+    eng.run()
+    assert len(eng.completed) == 5
+    assert all(r.preemptions >= 1 for r in orphans)
+    assert eng.conservation()["in_flight"] == 0
+    assert eng.completed[-1].inst_id == j
+
+
+# -- orchestrator-level ------------------------------------------------------
+@pytest.fixture(scope="module")
+def elastic_run(mel):
+    trace = diurnal_trace(1.0, 6.0, duration_s=1200, segment_s=100,
+                          dataset="mixed", peak_frac=0.5, seed=3)
+    trace = trace.with_events(
+        [FleetEvent(700.0, "preemption", "A100", 1, stockout=True),
+         FleetEvent(1000.0, "restock", "A100")])
+    orch = _orch(mel, trace)
+    return orch, orch.run()
+
+
+def test_conservation_across_scale_events(elastic_run):
+    _, res = elastic_run
+    assert res.conserved
+    assert res.n_dropped == 0
+    assert res.n_completed == len(res.requests)
+
+
+def test_timeline_records_scaling_and_preemption(elastic_run):
+    _, res = elastic_run
+    tl = res.timeline
+    assert len(tl.windows) >= 12
+    assert tl.n_scale_ups >= 1
+    assert tl.n_scale_downs >= 1
+    assert tl.n_preemption_resolves == 1
+    assert all(lat > 0 for lat in tl.solver_latencies)
+    assert all(w.cost_rate > 0 for w in tl.windows[:-1])
+    # windows tile the trace
+    assert tl.windows[0].t0 == 0.0
+    for a, b in zip(tl.windows[:-1], tl.windows[1:]):
+        assert b.t0 == pytest.approx(a.t1)
+
+
+def test_preemption_stockout_wiring(elastic_run):
+    orch, res = elastic_run
+    asc = orch.autoscaler
+    fail = [h for h in asc.history if h["event"] == "failure"]
+    assert len(fail) == 1 and fail[0]["stockout"]
+    assert "A100" not in asc.caps        # restock lifted the cap
+    d = [d for d in res.timeline.decisions if d.kind == "failure"][0]
+    assert d.detail["lost"] == 1 and d.detail["stockout"]
+    assert d.detail["solve_time_s"] > 0
+
+
+def test_stockout_event_caps_resolves(mel):
+    # low steady rate, then a ramp that forces a re-solve while the
+    # cheapest-at-scale type is stocked out: every post-stockout allocation
+    # must respect the recorded cap (B_j <= cap_j inside the ILP)
+    segs = [TraceSegment(0.0, 300.0, 1.0, {"arena": 1.0}),
+            TraceSegment(300.0, 300.0, 8.0, {"arena": 1.0})]
+    trace = WorkloadTrace("stockout", segs, seed=6).with_events(
+        [FleetEvent(150.0, "stockout", "A100")])
+    orch = _orch(mel, trace, drift_threshold=0.10)
+    res = orch.run()
+    caps = [d for d in res.timeline.decisions if d.kind == "stockout"]
+    assert len(caps) == 1
+    cap = caps[0].detail["cap"]
+    rescales = [h for h in orch.autoscaler.history if h["event"] == "rescale"]
+    assert rescales, "the ramp must have triggered at least one re-solve"
+    for h in rescales:
+        assert h["new"].get("A100", 0) <= cap
+    assert res.conserved
+
+
+def test_orchestrator_slo_attainment(elastic_run):
+    _, res = elastic_run
+    assert res.slo_attainment >= 0.95
+    assert res.cost > 0
+    assert res.duration_s >= 1200.0
+
+
+def test_elastic_cheaper_than_static_peak_on_offpeak_trace(mel):
+    # one short peak, long off-peak tail: elastic should release capacity
+    segs = [TraceSegment(0.0, 200.0, 6.0, {"arena": 1.0}),
+            TraceSegment(200.0, 1000.0, 0.8, {"arena": 1.0})]
+    trace = WorkloadTrace("offpeak", segs, seed=2)
+    orch = _orch(mel, trace, drift_threshold=0.10)
+    res = orch.run()
+    peak_alloc = mel.allocate(trace.workload_at(trace.peak_time, seed=2),
+                              over_provision=0.10, time_budget_s=0.5)
+    static = run_static(mel, peak_alloc.counts, trace)
+    assert res.conserved and static.conserved
+    assert res.cost < static.cost
+    assert res.slo_attainment >= 0.95
+    assert res.timeline.n_scale_downs >= 1
+
+
+def test_zero_rate_dead_zone_and_min_floor(mel):
+    # trace opens with no traffic: provision for the first active segment;
+    # the min-instances floor keeps the fleet routable through dead zones
+    segs = [TraceSegment(0.0, 200.0, 0.0, {"arena": 1.0}),
+            TraceSegment(200.0, 200.0, 2.0, {"arena": 1.0}),
+            TraceSegment(400.0, 200.0, 0.0, {"arena": 1.0})]
+    trace = WorkloadTrace("deadzone", segs, seed=8)
+    orch = _orch(mel, trace, drift_threshold=0.10)
+    assert orch.autoscaler.current.total_instances >= 1
+    res = orch.run()
+    assert res.conserved and res.n_dropped == 0
+    for w in res.timeline.windows:
+        assert sum(w.fleet.values()) >= 1
+
+
+def test_whole_fleet_preemption_recovers(mel):
+    segs = [TraceSegment(0.0, 400.0, 2.0, {"arena": 1.0})]
+    trace = WorkloadTrace("wipeout", segs, seed=9).with_events(
+        [FleetEvent(100.0, "preemption", g, 8) for g in PAPER_GPUS])
+    orch = _orch(mel, trace)
+    res = orch.run()
+    assert res.conserved
+    assert res.n_completed + res.n_dropped == len(res.requests)
+
+
+def test_preemption_victim_order_prefers_nondraining(mel):
+    # a draining instance already left the solver target, so spot reclaims
+    # must hit non-draining (newest-first) capacity before drainers
+    from repro.orchestrator.orchestrator import _select_victims
+    eng = ClusterEngine(mel.profile, EngineModel(ModelPerf.llama2_7b()),
+                        seed=0)
+    a = eng.add_instance("A100")
+    b = eng.add_instance("A100")
+    c = eng.add_instance("A100")
+    # make c a live drainer without letting idle-drain retire it
+    eng.instances[c].draining = True
+    eng.lb.mark_draining(c)
+    assert [v.inst_id for v in _select_victims(eng, "A100", 3)] == [b, a, c]
+
+
+def test_run_static_applies_preemptions(mel):
+    segs = [TraceSegment(0.0, 400.0, 2.0, {"arena": 1.0})]
+    trace = WorkloadTrace("steady", segs, seed=4).with_events(
+        [FleetEvent(100.0, "preemption", "A100", 1)])
+    static = run_static(mel, {"A100": 2}, trace, apply_preemptions=True)
+    assert static.conserved
+    assert static.final_fleet.get("A100", 0) == 1
+    assert static.timeline.n_decisions("preemption-unhandled") == 1
+    assert any(r.preemptions for r in static.requests)

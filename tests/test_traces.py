@@ -1,0 +1,128 @@
+"""Trace subsystem: schedule queries, generators, determinism, JSON."""
+import numpy as np
+import pytest
+
+from repro.traces import (FleetEvent, TraceSegment, WorkloadTrace,
+                          diurnal_trace, inject_bursts, mix_drift_trace,
+                          preemption_events)
+
+
+def test_schedule_queries():
+    tr = WorkloadTrace("t", [
+        TraceSegment(0.0, 100.0, 2.0, {"arena": 1.0}),
+        TraceSegment(100.0, 100.0, 6.0, {"mixed": 1.0}),
+    ])
+    assert tr.duration == 200.0
+    assert tr.rate_at(50) == 2.0
+    assert tr.rate_at(150) == 6.0
+    assert tr.mix_at(150) == {"mixed": 1.0}
+    assert tr.peak_rate == 6.0
+    assert abs(tr.mean_rate - 4.0) < 1e-9
+    assert list(tr.windows(80)) == [(0.0, 80.0), (80.0, 160.0),
+                                    (160.0, 200.0)]
+    assert tr.peak_time == 100.0
+
+
+def test_diurnal_shape():
+    tr = diurnal_trace(1.0, 9.0, duration_s=2400, segment_s=100,
+                       peak_frac=0.5)
+    # crest at mid-trace, trough at the edges
+    assert tr.rate_at(1200) > 8.0
+    assert tr.rate_at(0) < 2.0
+    assert tr.rate_at(2399) < 2.0
+    assert tr.peak_rate <= 9.0 + 1e-9
+
+
+def test_realize_deterministic_per_seed():
+    tr = diurnal_trace(1.0, 6.0, duration_s=1200, segment_s=100,
+                       dataset="mixed", seed=7)
+    a = tr.realize()
+    b = tr.realize()
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.input_lens, b.input_lens)
+    np.testing.assert_array_equal(a.output_lens, b.output_lens)
+    c = tr.realize(seed=99)
+    assert len(c.arrivals) != len(a.arrivals) or \
+        not np.array_equal(c.arrivals, a.arrivals)
+
+
+def test_realize_rate_and_ordering():
+    tr = diurnal_trace(2.0, 2.0, duration_s=2000, segment_s=200, seed=0)
+    rz = tr.realize()
+    assert (np.diff(rz.arrivals) >= 0).all()
+    assert (rz.arrivals >= 0).all() and (rz.arrivals <= 2000).all()
+    # constant 2 req/s over 2000s -> ~4000 arrivals
+    assert abs(rz.n - 4000) < 4 * np.sqrt(4000)
+
+
+def test_burst_injection_raises_rate_only_inside_burst():
+    base = diurnal_trace(2.0, 2.0, duration_s=1000, segment_s=100, seed=0)
+    burst = inject_bursts(base, n_bursts=1, magnitude=4.0, burst_s=150.0,
+                          seed=3)
+    assert burst.duration == base.duration
+    rates = [burst.rate_at(t) for t in np.arange(5, 1000, 10.0)]
+    assert max(rates) == pytest.approx(8.0)
+    assert min(rates) == pytest.approx(2.0)
+    # burst mass: exactly one 150s window is scaled
+    mean_lift = burst.mean_rate - base.mean_rate
+    assert mean_lift == pytest.approx(2.0 * 3.0 * 150.0 / 1000.0, rel=1e-6)
+
+
+def test_mix_drift_endpoints():
+    tr = mix_drift_trace(3.0, {"arena": 1.0}, {"arena": 0.2, "pubmed": 0.8},
+                         duration_s=1000, segment_s=100)
+    m0 = tr.mix_at(0)
+    m1 = tr.mix_at(999)
+    assert m0["arena"] > 0.9
+    assert m1["pubmed"] > 0.7
+    # inputs drift longer as pubmed share rises
+    early = tr.workload_at(0, n_samples=4000, seed=1)
+    late = tr.workload_at(999, n_samples=4000, seed=1)
+    def mean_input(wl):
+        tot = wl.rates.sum()
+        return sum(b.rep_input * r for b, r in zip(wl.buckets, wl.rates)) / tot
+    assert mean_input(late) > 2 * mean_input(early)
+
+
+def test_preemption_events_deterministic_and_bounded():
+    evs = preemption_events(["L4", "A100"], duration_s=7200,
+                            events_per_hour=2.0, stockout_prob=0.5,
+                            restock_after_s=600, seed=5)
+    evs2 = preemption_events(["L4", "A100"], duration_s=7200,
+                             events_per_hour=2.0, stockout_prob=0.5,
+                             restock_after_s=600, seed=5)
+    assert [(e.t, e.kind, e.gpu) for e in evs] == \
+        [(e.t, e.kind, e.gpu) for e in evs2]
+    assert all(0 <= e.t <= 7200 for e in evs)
+    kinds = {e.kind for e in evs}
+    assert kinds <= {"preemption", "restock"}
+    # every restock follows a stockout preemption of the same type
+    for e in evs:
+        if e.kind == "restock":
+            assert any(p.kind == "preemption" and p.stockout
+                       and p.gpu == e.gpu and p.t < e.t for p in evs)
+
+
+def test_json_roundtrip(tmp_path):
+    tr = diurnal_trace(1.0, 5.0, duration_s=600, segment_s=100, seed=11)
+    tr = tr.with_events([FleetEvent(300.0, "preemption", "A100", 2,
+                                    stockout=True),
+                         FleetEvent(500.0, "restock", "A100")])
+    p = tmp_path / "trace.json"
+    tr.save(p)
+    back = WorkloadTrace.load(p)
+    assert back.name == tr.name
+    assert back.seed == tr.seed
+    assert back.segments == tr.segments
+    assert back.events == tr.events
+    # realization identical after the round trip
+    np.testing.assert_array_equal(tr.realize().arrivals,
+                                  back.realize().arrivals)
+
+
+def test_scaled_and_unknown_dataset():
+    tr = diurnal_trace(1.0, 5.0, duration_s=600, segment_s=100)
+    assert tr.scaled(2.0).peak_rate == pytest.approx(2 * tr.peak_rate)
+    bad = WorkloadTrace("b", [TraceSegment(0, 10, 1.0, {"nope": 1.0})])
+    with pytest.raises(ValueError):
+        bad.realize()
