@@ -1,0 +1,118 @@
+"""TP-degree-aware allocation vs fixed-instance Mélange (ISSUE 2 tentpole).
+
+Expands the paper's catalog into (type, tp ∈ {1,2,4}) variants and re-runs
+the cost comparison.  Derived facts:
+
+  * in long-context / loose-SLO regimes (pubmed-style), sharded small-GPU
+    groups (A10Gx2/x4, L4x4) undercut big-GPU instances on $/hr — the
+    (GPU type × parallelism) product space of arXiv:2502.00722;
+  * TP-aware cost is never above fixed-instance cost (tp=1 variants are a
+    subset of the expanded catalog);
+  * a brute-force cross-check on small instances confirms the solver never
+    exceeds a shared chip cap Σ_tp tp·B_{g,tp} ≤ cap_g.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
+from repro.core.ilp import (ILPProblem, counts_within_caps, solve,
+                            solve_brute_force)
+
+from .common import emit, row, timed
+
+SETTINGS = (                    # (dataset, rate req/s, TPOT SLO s)
+    ("pubmed", 4.0, 0.20),
+    ("pubmed", 8.0, 0.20),
+    ("pubmed", 8.0, 0.12),
+    ("mixed", 8.0, 0.20),
+    ("arena", 8.0, 0.12),
+)
+DEGREES = (1, 2, 4)
+
+
+def compute():
+    model = ModelPerf.llama2_7b()
+    out = {}
+    for ds, rate, slo in SETTINGS:
+        wl = make_workload(ds, rate)
+        fixed = Melange(PAPER_GPUS, model, slo).allocate(
+            wl, time_budget_s=1.5)
+        tp = Melange(PAPER_GPUS, model, slo, tp_degrees=DEGREES).allocate(
+            wl, time_budget_s=4.0)
+        key = f"{ds}_r{rate:g}_slo{int(slo * 1000)}ms"
+        entry = {"fixed_cost": None if fixed is None else fixed.cost_per_hour,
+                 "fixed_alloc": None if fixed is None else fixed.counts,
+                 "tp_cost": None if tp is None else tp.cost_per_hour,
+                 "tp_alloc": None if tp is None else tp.counts,
+                 "tp_chips": None if tp is None else tp.chips_by_base()}
+        if fixed is not None and tp is not None:
+            entry["saving_pct"] = round(
+                100 * (1 - tp.cost_per_hour / fixed.cost_per_hour), 2)
+            entry["uses_tp"] = any(
+                "x" in g and tp.profile.gpus[g].tp > 1 for g in tp.counts)
+        out[key] = entry
+    out["cap_crosscheck"] = _brute_force_crosscheck()
+    return out
+
+
+def _brute_force_crosscheck(n_cases: int = 25) -> dict:
+    """Small random instances with a shared chip cap across TP variants of
+    one base type: exactness vs brute force + cap never exceeded."""
+    rng = np.random.default_rng(7)
+    agree, cap_ok = 0, 0
+    for _ in range(n_cases):
+        N = int(rng.integers(2, 6))
+        loads = rng.uniform(0.15, 0.9, size=(N, 3))
+        prob = ILPProblem(
+            loads, np.array([1.0, 2.05, 8.0]),
+            ["g0", "g0x2", "big"], np.zeros(N, dtype=int),
+            chip_weight=np.array([1.0, 2.0, 1.0]),
+            chip_group=np.array([0, 0, -1]),
+            group_caps=np.array([float(rng.integers(1, 5))]))
+        bf = solve_brute_force(prob)
+        bb = solve(prob, time_budget_s=5.0)
+        if (bf is None) == (bb is None) and (
+                bf is None or abs(bf.cost - bb.cost) < 1e-6):
+            agree += 1
+        if bb is not None and counts_within_caps(
+                np.asarray(bb.counts, dtype=float), prob):
+            cap_ok += 1
+        elif bb is None:
+            cap_ok += 1
+    return {"cases": n_cases, "agree": agree, "cap_respected": cap_ok}
+
+
+def main():
+    tables, us = timed(compute)
+    emit("bench_tp_aware", tables)
+    rows = []
+    strict_wins = [k for k, v in tables.items()
+                   if isinstance(v, dict) and v.get("saving_pct") is not None
+                   and v["saving_pct"] > 0.1 and v.get("uses_tp")]
+    never_worse = all(
+        v["tp_cost"] <= v["fixed_cost"] + 1e-9
+        for k, v in tables.items()
+        if isinstance(v, dict) and v.get("fixed_cost") and v.get("tp_cost"))
+    def _fmt(cost):
+        return "infeasible" if cost is None else f"${cost:.2f}/h"
+
+    for key, v in tables.items():
+        if key == "cap_crosscheck":
+            continue
+        rows.append(row(
+            f"tp_aware_{key}", us / len(SETTINGS),
+            f"fixed={_fmt(v['fixed_cost'])} tp={_fmt(v['tp_cost'])} "
+            f"saving={v.get('saving_pct', 0):.1f}% uses_tp={v.get('uses_tp')}"))
+    cc = tables["cap_crosscheck"]
+    rows.append(row(
+        "tp_aware_summary", us,
+        f"strict_wins={len(strict_wins)} never_worse={never_worse} "
+        f"bruteforce_agree={cc['agree']}/{cc['cases']} "
+        f"caps_respected={cc['cap_respected']}/{cc['cases']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(map(str, r)))

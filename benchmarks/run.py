@@ -15,6 +15,7 @@ MODULES = [
     "benchmarks.table2_solver_time",
     "benchmarks.fig12_slo_attainment",
     "benchmarks.bench_elastic_trace",
+    "benchmarks.bench_tp_aware",
     "benchmarks.roofline",
 ]
 

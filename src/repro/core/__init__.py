@@ -1,11 +1,14 @@
 """Mélange core: cost-efficient accelerator allocation for LLM serving."""
-from .accelerators import Accelerator, PAPER_GPUS, PAPER_GPUS_70B, TPU_FLEET, get_catalog
+from .accelerators import (Accelerator, PAPER_GPUS, PAPER_GPUS_70B, TPU_FLEET,
+                           chips_by_base, expand_tp_variants, get_catalog,
+                           tp_efficiency_curve, tp_variant)
 from .allocator import Allocation, Melange
 from .autoscaler import AllocationDiff, Autoscaler, allocation_diff
 from .balancer import InstanceRef, LoadBalancer
 from .engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams, ModelPerf
-from .ilp import ILPProblem, ILPSolution, solve, solve_brute_force
-from .profiler import Profile, profile_catalog
+from .ilp import (ILPProblem, ILPSolution, counts_within_caps, solve,
+                  solve_brute_force)
+from .profiler import Profile, profile_catalog, profile_from_dryrun
 from .simulator import ClusterEngine, InstanceEngine, SimRequest, SimResult, simulate
 from .workload import (Bucket, Workload, bucket_grid, make_workload,
                        sample_requests, workload_from_samples)

@@ -3,23 +3,39 @@ plus a TPU-fleet extension (the beyond-paper, TPU-native deployment target).
 
 Multi-chip TPU slice entries aggregate chip specs with a tensor-parallel
 efficiency factor (collective overhead across ICI).
+
+TP-degree expansion (beyond-paper, arXiv:2502.00722 / ThunderServe-style):
+``expand_tp_variants`` turns each base accelerator into a family of
+(type, tp) variants — ``A10Gx2`` is two A10G chips running one
+tensor-parallel engine instance.  A variant aggregates HBM capacity,
+bandwidth, and FLOPs across its chips, scaled by a *per-degree* efficiency
+curve (kernel imbalance + shard padding grow with the shard count), and
+carries the interconnect bandwidth so the engine model can charge the
+per-layer all-reduce traffic explicitly.  Availability is accounted in
+*chips* of the base type: one ``A10Gx4`` instance draws 4 chips from the
+same pool as four ``A10G`` instances (see the grouped chip-capacity
+constraint in ``ilp.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Iterable, Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class Accelerator:
     name: str
-    mem_gb: float              # usable HBM
-    bw_gbs: float              # HBM bandwidth, GB/s
-    flops_tf: float            # peak half-precision TFLOP/s
-    price_hr: float            # on-demand $/h
-    chips: int = 1
+    mem_gb: float              # usable HBM (aggregate across chips)
+    bw_gbs: float              # HBM bandwidth, GB/s (aggregate)
+    flops_tf: float            # peak half-precision TFLOP/s (aggregate)
+    price_hr: float            # on-demand $/h per instance
+    chips: int = 1             # chips of the base type per instance
     tp_efficiency: float = 1.0  # effective fraction of aggregate peak
     max_request_tokens: Optional[int] = None  # paper: L4/A10G capped at 12k
+    base_type: str = ""        # chip pool this instance draws from ("" = name)
+    tp: int = 1                # tensor-parallel degree of the engine instance
+    link_gbs: float = 0.0      # per-chip interconnect bandwidth (TP collectives)
 
     @property
     def eff_flops(self) -> float:
@@ -33,26 +49,110 @@ class Accelerator:
     def mem_bytes(self) -> float:
         return self.mem_gb * 1e9
 
+    @property
+    def base_name(self) -> str:
+        """Chip-pool key: TP variants of one base type share availability."""
+        return self.base_type or self.name
+
+
+def tp_efficiency_curve(tp: int) -> float:
+    """Parallel efficiency of a tp-way tensor-parallel engine, *excluding*
+    the all-reduce traffic (charged explicitly from ``link_gbs`` by the
+    engine model).  Covers shard imbalance, padding, and partially-overlapped
+    collectives: each doubling of the shard count loses a few percent, with
+    a floor — the same shape measured for intra-node TP in vLLM/TensorRT-LLM
+    scaling studies (and matching the catalog's hand-set 0.9 for x2 nodes).
+    """
+    if tp <= 1:
+        return 1.0
+    return max(0.6, 1.0 - 0.06 * math.log2(tp) - 0.04 * (tp - 1) / tp)
+
+
+def tp_variant(base: Accelerator, tp: int) -> Accelerator:
+    """The (base, tp) engine instance: ``tp`` chips, aggregated roofline."""
+    if tp < 1:
+        raise ValueError(f"tp degree must be >= 1, got {tp}")
+    if tp == 1:
+        # keep the catalog name so existing profiles/allocations line up
+        return dataclasses.replace(base, base_type=base.base_name, tp=1)
+    if base.link_gbs <= 0:
+        raise ValueError(
+            f"{base.name}: tp={tp} variant needs link_gbs (interconnect "
+            "bandwidth for TP collectives) on the base accelerator — "
+            "without it the engine model would charge comm at a bogus rate")
+    return Accelerator(
+        name=f"{base.name}x{tp}",
+        mem_gb=base.mem_gb * tp,
+        bw_gbs=base.bw_gbs * tp,
+        flops_tf=base.flops_tf * tp,
+        price_hr=base.price_hr * tp,
+        chips=base.chips * tp,
+        tp_efficiency=base.tp_efficiency * tp_efficiency_curve(tp),
+        # the per-GPU request cap is KV-block pressure, which shards with TP
+        max_request_tokens=(base.max_request_tokens * tp
+                            if base.max_request_tokens else None),
+        base_type=base.base_name,
+        tp=tp,
+        link_gbs=base.link_gbs,
+    )
+
+
+def chips_by_base(counts: dict[str, int],
+                  gpus: dict[str, "Accelerator"]) -> dict[str, int]:
+    """Aggregate per-variant instance counts into chips drawn from each
+    base-type pool (Σ_tp tp·B_{g,tp}) — the single accounting used by
+    allocations, the cluster engine, and the autoscaler's stockout caps.
+    Names absent from ``gpus`` count as 1-chip instances of their own pool.
+    """
+    out: dict[str, int] = {}
+    for g, n in counts.items():
+        acc = gpus.get(g)
+        base = acc.base_name if acc is not None else g
+        chips = acc.chips if acc is not None else 1
+        out[base] = out.get(base, 0) + chips * n
+    return out
+
+
+def expand_tp_variants(
+    catalog: dict[str, "Accelerator"],
+    degrees: Iterable[int] = (1, 2, 4, 8),
+) -> dict[str, "Accelerator"]:
+    """Expand every base accelerator into its (type, tp) variant family."""
+    out: dict[str, Accelerator] = {}
+    for acc in catalog.values():
+        for d in sorted(set(degrees)):
+            v = tp_variant(acc, d)
+            out[v.name] = v
+    return out
+
 
 def _tpu(name, chips, chip_flops_tf, chip_bw, chip_mem, price_per_chip):
     eff = 1.0 if chips == 1 else max(0.75, 1.0 - 0.04 * (chips.bit_length()))
+    # slices of one generation share a chip pool (v5e-1/-4/-8 compete for
+    # the same chips); their ICI overhead is already folded into eff, so
+    # tp stays 1 and no extra collective traffic is charged.
     return Accelerator(
         name=name, chips=chips,
         mem_gb=chip_mem * chips, bw_gbs=chip_bw * chips,
         flops_tf=chip_flops_tf * chips,
-        price_hr=price_per_chip * chips, tp_efficiency=eff)
+        price_hr=price_per_chip * chips, tp_efficiency=eff,
+        base_type=name.split("-")[0])
 
 
 # --- the paper's GPU set (Table 1) --------------------------------------
+# link_gbs: per-chip interconnect for TP collectives — PCIe 4.0 x16 for the
+# workstation parts, NVLink for A100/H100.
 PAPER_GPUS = {
     "L4": Accelerator("L4", mem_gb=24, bw_gbs=300, flops_tf=121,
-                      price_hr=0.70, max_request_tokens=12_000),
+                      price_hr=0.70, max_request_tokens=12_000,
+                      link_gbs=32),
     "A10G": Accelerator("A10G", mem_gb=24, bw_gbs=600, flops_tf=125,
-                        price_hr=1.01, max_request_tokens=12_000),
+                        price_hr=1.01, max_request_tokens=12_000,
+                        link_gbs=32),
     "A100": Accelerator("A100", mem_gb=80, bw_gbs=1935, flops_tf=312,
-                        price_hr=3.67),
+                        price_hr=3.67, link_gbs=600),
     "H100": Accelerator("H100", mem_gb=80, bw_gbs=3350, flops_tf=989,
-                        price_hr=7.516),
+                        price_hr=7.516, link_gbs=900),
 }
 
 # Multi-GPU nodes for the Llama2-70b experiment (Fig. 8)

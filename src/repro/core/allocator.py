@@ -1,12 +1,19 @@
-"""Mélange end-to-end (Fig. 1): inputs -> profile -> ILP -> allocation."""
+"""Mélange end-to-end (Fig. 1): inputs -> profile -> ILP -> allocation.
+
+TP-degree-aware mode (``tp_degrees=...``): the catalog is expanded into
+(type, tp) variants before profiling, the solver picks per-variant instance
+counts, and availability can be bounded in *chips of the base type* shared
+across variants (``chip_caps``).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional
+import time
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
-from .accelerators import Accelerator
+from .accelerators import Accelerator, chips_by_base, expand_tp_variants
 from .engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
 from .ilp import ILPProblem, ILPSolution, solve
 from .loadmatrix import build_problem
@@ -16,7 +23,7 @@ from .workload import Workload
 
 @dataclasses.dataclass
 class Allocation:
-    counts: dict[str, int]              # GPU type -> instances
+    counts: dict[str, int]              # GPU variant name -> instances
     cost_per_hour: float
     solution: ILPSolution
     profile: Profile
@@ -27,6 +34,19 @@ class Allocation:
         return sum(self.counts.values())
 
     solution_gpu_names: list[str] = dataclasses.field(default_factory=list)
+
+    def counts_by_tp(self) -> dict[tuple[str, int], int]:
+        """Instance counts keyed by (base type, tp degree)."""
+        out: dict[tuple[str, int], int] = {}
+        for g, n in self.counts.items():
+            acc = self.profile.gpus[g]
+            key = (acc.base_name, acc.tp)
+            out[key] = out.get(key, 0) + n
+        return out
+
+    def chips_by_base(self) -> dict[str, int]:
+        """Chips drawn from each base-type pool (Σ_tp tp·B_{g,tp})."""
+        return chips_by_base(self.counts, self.profile.gpus)
 
     def bucket_assignment(self, slice_factor: int = 8):
         """bucket index -> {gpu: fraction of bucket's slices} (for the LB)."""
@@ -52,9 +72,13 @@ class Melange:
                  engine_params: EngineModelParams = DEFAULT_ENGINE,
                  profile: Optional[Profile] = None,
                  slice_factor: int = 8,
-                 buckets=None):
+                 buckets=None,
+                 tp_degrees: Optional[Sequence[int]] = None):
         from .workload import bucket_grid
-        self.gpus = dict(gpus)
+        gpus = dict(gpus)
+        if tp_degrees is not None:
+            gpus = expand_tp_variants(gpus, tp_degrees)
+        self.gpus = gpus
         self.model = model
         self.slo = slo_tpot_s
         self.slice_factor = slice_factor
@@ -64,17 +88,44 @@ class Melange:
 
     def allocate(self, workload: Workload, *,
                  caps: dict[str, int] | None = None,
+                 chip_caps: dict[str, int] | None = None,
                  gpu_subset: list[str] | None = None,
                  over_provision: float = 0.0,
                  time_budget_s: float = 5.0) -> Optional[Allocation]:
         """Derive the minimal-cost allocation (§5.4). ``over_provision``
-        inflates bucket rates (§6.3's burst-absorption knob)."""
+        inflates bucket rates (§6.3's burst-absorption knob); ``caps``
+        bounds instances of a named variant, ``chip_caps`` bounds chips of
+        a base type shared across its TP variants."""
         wl = workload if over_provision <= 0 else Workload(
             workload.buckets, workload.rates * (1 + over_provision),
             name=workload.name + f"+op{over_provision}")
         prob = build_problem(wl, self.profile, self.slice_factor,
-                             caps=caps, gpu_subset=gpu_subset)
-        sol = solve(prob, time_budget_s=time_budget_s)
+                             caps=caps, gpu_subset=gpu_subset,
+                             chip_caps=chip_caps)
+        # hierarchical warm start for TP-expanded catalogs: the tp=1
+        # sub-catalog solution is a feasible point of the full problem and
+        # enters the candidate pool, so the returned cost never exceeds the
+        # pre-solve's — the expanded search can only improve on it even
+        # when it hits its time budget.  (Both solves are any-time, so this
+        # bounds against *this* pre-solve, not a separately-run fixed solve
+        # that happened to get more wall clock.)
+        warm = None
+        main_budget = time_budget_s
+        # prob.gpu_names are drawn from the profile's catalog (which may
+        # differ from self.gpus when a precomputed profile was supplied)
+        tp1 = [g for g in prob.gpu_names if self.profile.gpus[g].tp == 1]
+        if len(tp1) not in (0, len(prob.gpu_names)):
+            t0 = time.time()
+            prob1 = build_problem(wl, self.profile, self.slice_factor,
+                                  caps=caps, gpu_subset=tp1,
+                                  chip_caps=chip_caps)
+            sol1 = solve(prob1, time_budget_s=min(1.0, time_budget_s / 3))
+            # the pre-solve spends part of the caller's budget, not extra
+            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+            if sol1 is not None:
+                col = [prob.gpu_names.index(g) for g in prob1.gpu_names]
+                warm = np.array([col[j] for j in sol1.assignment])
+        sol = solve(prob, time_budget_s=main_budget, warm_assign=warm)
         if sol is None:
             return None
         counts = sol.by_gpu(prob.gpu_names)

@@ -11,9 +11,11 @@ serving system.  This module closes that loop:
     instances to drain).
   * over-provisioning: rates handed to the solver are inflated by
     ``headroom`` (the paper's own suggestion in §6.3 for burst absorption).
-  * availability caps: cloud stockouts enter the ILP as per-type caps
-    (B_j ≤ cap_j); on instance failure the controller re-solves with the
-    lost capacity excluded — allocation-level fault tolerance.
+  * availability caps: cloud stockouts enter the ILP as *chip* caps on the
+    base type (Σ_tp tp·B_{g,tp} ≤ cap_g — shared across TP variants of the
+    type; for an unexpanded catalog this degenerates to B_j ≤ cap_j); on
+    instance failure the controller re-solves with the lost capacity
+    excluded — allocation-level fault tolerance.
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from typing import Optional
 
 import numpy as np
 
+from .accelerators import chips_by_base
 from .allocator import Allocation, Melange
 from .workload import Workload
 
@@ -58,10 +61,23 @@ class Autoscaler:
         self.solver_budget_s = solver_budget_s
         self.observed = initial.rates.copy()
         self.buckets = initial.buckets
-        self.caps: dict[str, int] = {}
+        self.caps: dict[str, int] = {}        # per-variant instance caps
+        self.chip_caps: dict[str, int] = {}   # per-base-type chip pools
         self.current: Optional[Allocation] = melange.allocate(
             initial, over_provision=headroom, time_budget_s=solver_budget_s)
         self.history: list[dict] = []
+
+    # -- chip accounting -----------------------------------------------------
+    # variant metadata comes from the profile's catalog: allocations are
+    # expressed in its names (melange.gpus may differ when a precomputed
+    # profile was supplied)
+    def _base_of(self, gpu: str) -> str:
+        acc = self.melange.profile.gpus.get(gpu)
+        return acc.base_name if acc is not None else gpu
+
+    def _chips_of(self, counts: dict[str, int], base: str) -> int:
+        """Chips of ``base`` consumed by an allocation across TP variants."""
+        return chips_by_base(counts, self.melange.profile.gpus).get(base, 0)
 
     # -- telemetry -----------------------------------------------------------
     def observe_rates(self, rates: np.ndarray) -> None:
@@ -79,7 +95,8 @@ class Autoscaler:
         wl = Workload(self.buckets, self.observed.copy(), name="observed")
         new = self.melange.allocate(
             wl, over_provision=self.headroom,
-            caps=self.caps or None, time_budget_s=self.solver_budget_s)
+            caps=self.caps or None, chip_caps=self.chip_caps or None,
+            time_budget_s=self.solver_budget_s)
         if new is None:
             return None
         diff = allocation_diff(self.current.counts, new.counts)
@@ -94,16 +111,26 @@ class Autoscaler:
         return diff
 
     def on_instance_failure(self, gpu: str, n: int = 1,
-                            *, stockout: bool = False) -> AllocationDiff:
+                            *, stockout: bool = False,
+                            losses: Optional[dict[str, int]] = None
+                            ) -> AllocationDiff:
         """Allocation-level fault handling: capacity lost; optionally the
-        type is unavailable for replacement (cloud stockout)."""
+        base type's chip pool is unavailable for replacement (cloud
+        stockout).  ``losses`` overrides ``{gpu: n}`` when one base-type
+        preemption killed instances of several TP variants."""
+        losses = dict(losses) if losses else {gpu: n}
         counts = dict(self.current.counts)
-        counts[gpu] = max(0, counts.get(gpu, 0) - n)
+        for g, k in losses.items():
+            counts[g] = max(0, counts.get(g, 0) - k)
         if stockout:
-            self.caps[gpu] = counts[gpu]
+            # cap the *chip pool*: surviving chips of the base type are all
+            # that any mix of its TP variants may use until restock
+            base = self._base_of(gpu)
+            self.chip_caps[base] = self._chips_of(counts, base)
         wl = Workload(self.buckets, self.observed.copy(), name="post-failure")
         new = self.melange.allocate(
             wl, over_provision=self.headroom, caps=self.caps or None,
+            chip_caps=self.chip_caps or None,
             time_budget_s=self.solver_budget_s)
         if new is None:
             raise RuntimeError(
@@ -111,14 +138,22 @@ class Autoscaler:
                 "workload under SLO — page a human")
         diff = allocation_diff(counts, new.counts)
         self.history.append({
-            "event": "failure", "gpu": gpu, "n": n, "stockout": stockout,
+            "event": "failure", "gpu": gpu, "n": sum(losses.values()),
+            "losses": losses, "stockout": stockout,
             "new": dict(new.counts), "new_cost": new.cost_per_hour,
             "solve_time_s": new.solution.solve_time_s,
         })
         self.current = new
         return diff
 
+    def set_chip_stockout(self, base: str, chips: int) -> None:
+        """Record a market stockout of a base type: chips currently held are
+        all that remain available (shared across its TP variants)."""
+        self.chip_caps[self._base_of(base)] = int(chips)
+
     def lift_stockout(self, gpu: str) -> None:
-        """Capacity restocked: the per-type cap is removed; the next re-solve
-        may use the type again."""
+        """Capacity restocked: per-variant and chip-pool caps are removed;
+        the next re-solve may use the type again."""
         self.caps.pop(gpu, None)
+        self.chip_caps.pop(self._base_of(gpu), None)
+        self.chip_caps.pop(gpu, None)

@@ -89,6 +89,7 @@ class EngineModelParams:
     per_seq_overhead_s: float = 30e-6  # §4.2's per-request latency overhead
     activation_reserve: float = 0.08  # fraction of HBM reserved
     kv_avg_occupancy: float = 0.5    # avg decoded fraction (i + o/2)
+    tp_collective_latency_s: float = 4e-6  # launch+sync floor per all-reduce
 
 
 DEFAULT_ENGINE = EngineModelParams()
@@ -101,9 +102,12 @@ class EngineModel:
                  bytes_per_step_base: Optional[float] = None):
         self.m = model
         self.p = params
-        # overridable by XLA-derived profiles:
-        self._flops_per_token = flops_per_token or 2.0 * model.active_param_bytes / 2
-        self._bytes_base = bytes_per_step_base or model.param_bytes
+        # overridable by XLA-derived profiles; explicit 0.0 is a valid
+        # override (e.g. a weights-resident ablation), so test against None
+        self._flops_per_token = (flops_per_token if flops_per_token is not None
+                                 else 2.0 * model.active_param_bytes / 2)
+        self._bytes_base = (bytes_per_step_base if bytes_per_step_base is not None
+                            else model.param_bytes)
 
     # -- capacity ----------------------------------------------------------
     def fits(self, acc: Accelerator, max_tokens: int) -> bool:
@@ -115,26 +119,57 @@ class EngineModel:
 
     def max_batch(self, acc: Accelerator, i: int, o: int) -> int:
         avail = acc.mem_bytes * (1 - self.p.activation_reserve) - self.m.param_bytes
+        if avail <= 0:
+            return 0
+        # Even a cache-free architecture holds one token's activations per
+        # co-resident sequence (residual stream through every layer), so the
+        # per-request footprint has a physical floor — this replaces the old
+        # arbitrary 4096 cap for state-free models.
+        act_floor = 2.0 * self.m.d_model * self.m.n_layers * 2
         per_req = (self.m.state_bytes
                    + (i + self.p.kv_avg_occupancy * o) * self.m.kv_bytes_per_token)
-        if avail <= 0 or per_req <= 0:
-            return 0 if avail <= 0 else 4096
+        per_req = max(per_req, act_floor)
         return max(0, int(avail / per_req))
 
     # -- timing ------------------------------------------------------------
+    def _tp_comm_bytes_per_token(self, acc: Accelerator) -> float:
+        """Per-chip all-reduce traffic per token under tp-way tensor
+        parallelism: two ring all-reduces per layer (post-attention and
+        post-MLP), each moving 2·(tp-1)/tp of a d_model activation row."""
+        if acc.tp <= 1:
+            return 0.0
+        ring = 2.0 * (acc.tp - 1) / acc.tp
+        return 2.0 * self.m.n_layers * ring * self.m.d_model * 2
+
+    def _tp_step_latency(self, acc: Accelerator) -> float:
+        """Non-overlappable collective launch/sync floor per engine step."""
+        if acc.tp <= 1:
+            return 0.0
+        return (2.0 * self.m.n_layers * self.p.tp_collective_latency_s
+                * math.log2(acc.tp))
+
     def decode_step_time(self, acc: Accelerator, b: int, ctx: float) -> float:
         """One engine step decoding b tokens at average context ctx."""
         kv_read = b * ctx * self.m.kv_bytes_per_token + b * self.m.state_bytes
         mem_t = (self._bytes_base + kv_read) / (acc.eff_bw * self.p.bw_util)
         flop_t = self._flops_per_token * b / (acc.eff_flops * self.p.mfu)
-        return (max(mem_t, flop_t) + self.p.step_overhead_s
+        comm_t = 0.0
+        if acc.tp > 1:
+            link = max(acc.link_gbs, 1e-3) * 1e9
+            comm_t = (b * self._tp_comm_bytes_per_token(acc) / link
+                      + self._tp_step_latency(acc))
+        return (max(mem_t, flop_t) + comm_t + self.p.step_overhead_s
                 + b * self.p.per_seq_overhead_s)
 
     def prefill_rate(self, acc: Accelerator, i: int) -> float:
         """Prefill tokens/s (compute-bound, incl. quadratic attention)."""
         attn = 2.0 * self.m.n_layers * self.m.d_model * i   # per-token avg
         fpt = self._flops_per_token + attn
-        return acc.eff_flops * self.p.mfu / fpt
+        t_per_tok = fpt / (acc.eff_flops * self.p.mfu)
+        if acc.tp > 1:       # bandwidth term only: latency amortizes over
+            link = max(acc.link_gbs, 1e-3) * 1e9    # thousands of tokens
+            t_per_tok += self._tp_comm_bytes_per_token(acc) / link
+        return 1.0 / t_per_tok
 
     def rate_and_tpot(self, acc: Accelerator, b: int, i: int, o: int):
         """(throughput req/s, avg TPOT) at steady concurrency b.

@@ -4,6 +4,15 @@
     s.t. Σ_j A_ij = 1            (every slice assigned once)
          Σ_i A_ij · L_ij ≤ B_j   (capacity)
          A ∈ {0,1},  B ∈ Z≥0     (+ optional availability caps B_j ≤ cap_j)
+         Σ_{j∈group g} w_j · B_j ≤ cap_g   (grouped chip capacity)
+
+The grouped constraint is the TP-degree extension: columns are
+(type, tp-degree) variants, w_j is the chips one instance of variant j
+consumes, and availability bounds *chips of the base type*, shared across
+all of its TP variants (an ``A10Gx4`` draws 4 chips from the same pool as
+four ``A10G``s).  It is enforced at every layer: greedy warm start, local
+search, branch-and-bound (monotone along a DFS path, so a violated prefix
+prunes soundly), and the brute-force reference.
 
 No off-the-shelf ILP solver is installed in this environment, so we exploit
 the problem's structure (an optimal B is always B_j = ceil(load_j)):
@@ -44,6 +53,37 @@ class ILPProblem:
     gpu_names: list[str]
     bucket_of_slice: np.ndarray     # (N,) bucket group id (symmetry breaking)
     caps: Optional[np.ndarray] = None   # (M,) max instances (availability)
+    # grouped chip capacity Σ_{j∈g} w_j·B_j ≤ cap_g (TP variants share the
+    # base type's chip pool); chip_group[j] = -1 -> j draws from no pool
+    chip_weight: Optional[np.ndarray] = None  # (M,) chips per instance
+    chip_group: Optional[np.ndarray] = None   # (M,) pool id or -1
+    group_caps: Optional[np.ndarray] = None   # (n_pools,) chips available
+
+    def group_matrix(self) -> Optional[np.ndarray]:
+        """(n_pools, M) weights: usage = group_matrix() @ counts."""
+        if self.group_caps is None:
+            return None
+        n_pools = len(self.group_caps)
+        M = self.loads.shape[1]
+        gm = np.zeros((n_pools, M))
+        for j in range(M):
+            g = int(self.chip_group[j])
+            if g >= 0:
+                gm[g, j] = self.chip_weight[j]
+        return gm
+
+
+def counts_within_caps(counts: np.ndarray, prob: ILPProblem,
+                       gmat: Optional[np.ndarray] = None) -> bool:
+    """Both cap families: per-column B_j ≤ cap_j and grouped chip caps."""
+    if prob.caps is not None and np.any(counts > prob.caps + _EPS):
+        return False
+    if prob.group_caps is not None:
+        if gmat is None:
+            gmat = prob.group_matrix()
+        if np.any(gmat @ counts > prob.group_caps + _EPS):
+            return False
+    return True
 
 
 @dataclasses.dataclass
@@ -66,18 +106,22 @@ def _counts_cost(loads_sum: np.ndarray, costs: np.ndarray) -> float:
 def _greedy(prob: ILPProblem) -> Optional[np.ndarray]:
     """Warm start: assign to argmin marginal-cost, then local moves."""
     N, M = prob.loads.shape
+    gmat = prob.group_matrix()
     assign = np.full(N, -1, dtype=int)
     load = np.zeros(M)
     order = np.argsort(-np.nanmax(
         np.where(np.isfinite(prob.loads), prob.loads, np.nan), axis=1))
     for i in order:
         best_j, best_inc = -1, INFEASIBLE
+        counts = np.ceil(load - _EPS)
         for j in range(M):
             lij = prob.loads[i, j]
             if not np.isfinite(lij):
                 continue
             new_load = load[j] + lij
-            if prob.caps is not None and math.ceil(new_load - _EPS) > prob.caps[j]:
+            cand = counts.copy()
+            cand[j] = math.ceil(new_load - _EPS)
+            if not counts_within_caps(cand, prob, gmat):
                 continue
             inc = (math.ceil(new_load - _EPS) - math.ceil(load[j] - _EPS)
                    ) * prob.costs[j] + prob.costs[j] * lij * 1e-6
@@ -101,8 +145,8 @@ def _greedy(prob: ILPProblem) -> Optional[np.ndarray]:
                 new_load = load.copy()
                 new_load[cur] -= prob.loads[i, cur]
                 new_load[j] += prob.loads[i, j]
-                if prob.caps is not None and math.ceil(
-                        new_load[j] - _EPS) > prob.caps[j]:
+                if not counts_within_caps(np.ceil(new_load - _EPS), prob,
+                                          gmat):
                     continue
                 if _counts_cost(new_load, prob.costs) < _counts_cost(
                         load, prob.costs) - _EPS:
@@ -128,7 +172,9 @@ def _compositions_cached(m: int, k: int):
     return list(_compositions(m, k))
 
 
-def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]:
+def solve(prob: ILPProblem, time_budget_s: float = 5.0,
+          max_types_per_group: int = 8,
+          warm_assign: Optional[np.ndarray] = None) -> Optional[ILPSolution]:
     """Exact branch-and-bound at bucket-group granularity.
 
     Slices within a bucket are identical, so the search assigns *counts* per
@@ -136,9 +182,17 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
     permutations of individual slices.  Separable-LP suffix bound + strong
     warm starts (greedy+LS, LP rounding, single-type) give an any-time
     solution; ``optimal`` reports whether the search completed.
+
+    With TP-expanded catalogs M can reach 16+; compositions of a
+    multiplicity-8 group over 16 types are ~500k nodes, so each group's
+    branching set is restricted to its ``max_types_per_group`` cheapest
+    (by fractional unit cost) feasible types.  When the restriction is
+    active the search is a (high-quality) heuristic and ``optimal`` is
+    reported False; small instances — all exactness tests — are unaffected.
     """
     t0 = time.time()
     N, M = prob.loads.shape
+    gmat = prob.group_matrix()
     if N == 0:
         return ILPSolution(np.zeros(0, int), np.zeros(M, int), 0.0, True, 0.0)
 
@@ -146,8 +200,11 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
     if not finite.any(axis=1).all():
         return None                                    # some slice fits nowhere
 
-    # ---- warm starts: greedy+local-search, LP rounding, single-type
+    # ---- warm starts: caller-provided (e.g. the tp=1 sub-catalog optimum),
+    # greedy+local-search, LP rounding, single-type
     candidates: list[np.ndarray] = []
+    if warm_assign is not None:
+        candidates.append(np.asarray(warm_assign, dtype=int))
     warm = _greedy(prob)
     if warm is not None:
         candidates.append(warm)
@@ -158,7 +215,9 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
     for j in range(M):
         if finite[:, j].all():
             total = prob.loads[:, j].sum()
-            if prob.caps is None or math.ceil(total - _EPS) <= prob.caps[j]:
+            single = np.zeros(M)
+            single[j] = math.ceil(total - _EPS)
+            if counts_within_caps(single, prob, gmat):
                 candidates.append(np.full(N, j, dtype=int))
 
     best_cost, best_assign = INFEASIBLE, None
@@ -168,13 +227,13 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
         if not np.isfinite(load_c).all():
             continue
         counts_c = np.ceil(load_c - _EPS)
-        if prob.caps is not None and np.any(counts_c > prob.caps):
+        if not counts_within_caps(counts_c, prob, gmat):
             continue
         c = _counts_cost(load_c, prob.costs)
         if c < best_cost:
             best_cost, best_assign = c, cand.copy()
-    if best_assign is None:
-        return None
+    # (no feasible warm start is not proof of infeasibility once grouped
+    # caps are present — the branch-and-bound below still searches)
 
     # ---- group interchangeable slices: same bucket id + identical rows
     groups: list[dict] = []
@@ -207,6 +266,26 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
     min_unit = cost_g.min(axis=1)[gorder] * mult_o
     suffix_lb = np.concatenate([np.cumsum(min_unit[::-1])[::-1], [0.0]])
 
+    # per-group branching sets, restricted to the cheapest unit-cost types
+    # when the catalog is wide (TP expansion); restriction => heuristic.
+    # Compositions and their fractional costs depend only on the group, not
+    # the search path, so they are enumerated and cost-sorted ONCE here.
+    restricted = False
+    comp_cache: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for gi in range(G):
+        feas = [j for j in range(M) if gfinite[gorder[gi]][j]]
+        if len(feas) > max_types_per_group:
+            feas = sorted(feas,
+                          key=lambda j: cost_g[gorder[gi]][j]
+                          )[:max_types_per_group]
+            restricted = True
+        comps = np.array(_compositions_cached(int(mult_o[gi]), len(feas)),
+                         dtype=np.int64).reshape(-1, len(feas))
+        unit = cost_g[gorder[gi]][feas]
+        inc = comps @ unit
+        order = np.argsort(inc, kind="stable")
+        comp_cache.append((comps[order], inc[order], np.asarray(feas)))
+
     nodes = 0
     timeout = False
     best_counts_per_group = None
@@ -217,7 +296,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
         if timeout:
             return
         nodes += 1
-        if nodes % 512 == 0 and time.time() - t0 > time_budget_s:
+        if nodes % 64 == 0 and time.time() - t0 > time_budget_s:
             timeout = True
             return
         if gi == G:
@@ -226,39 +305,44 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
                 best_cost = cost
                 best_counts_per_group = [c for c in cur_counts]
             return
-        feas = [j for j in range(M) if gfinite[gorder[gi]][j]]
-        m = int(mult_o[gi])
-        comps = _compositions_cached(m, len(feas))
-        # visit cheapest-fractional-cost compositions first
-        unit = np.array([cost_g[gorder[gi]][j] for j in feas])
-        comps = sorted(comps, key=lambda c: float(np.dot(c, unit)))
-        for comp in comps:
+        # pre-sorted by fractional cost (see comp_cache construction)
+        comps, incs, feas = comp_cache[gi]
+        row_feas = rows_o[gi][feas]
+        # comps sorted by inc => everything at/after the cutoff is pruned
+        # by the separable-LP suffix bound (incumbent may improve below,
+        # which only shrinks the cutoff further — rechecked per branch)
+        n_ok = int(np.searchsorted(incs,
+                                   best_cost - 1e-7 - frac - suffix_lb[gi + 1]))
+        if n_ok == 0:
+            return
+        # vectorized feasibility + committed-ceiling bound over all
+        # candidate compositions at once: only the feas columns change
+        load_feas = load[feas]
+        ceil_feas = np.ceil(load_feas + comps[:n_ok] * row_feas - _EPS)
+        base_counts = np.ceil(load - _EPS)
+        fixed_cost = float(np.dot(prob.costs, base_counts)
+                           - np.dot(prob.costs[feas], base_counts[feas]))
+        # counts only grow along a DFS path, so a violation here (per-type
+        # or grouped chips) can never heal deeper: prune those branches.
+        ok = np.ones(n_ok, dtype=bool)
+        if prob.caps is not None:
+            ok &= (ceil_feas <= prob.caps[feas] + _EPS).all(axis=1)
+        if gmat is not None:
+            base_usage = gmat @ base_counts - gmat[:, feas] @ base_counts[feas]
+            usage = base_usage[:, None] + gmat[:, feas] @ ceil_feas.T
+            ok &= (usage <= prob.group_caps[:, None] + _EPS).all(axis=0)
+        # committed-ceiling lower bound per composition
+        lb_ceil = fixed_cost + ceil_feas @ prob.costs[feas]
+        for ci in np.nonzero(ok)[0]:
+            inc = float(incs[ci])
+            if frac + inc + suffix_lb[gi + 1] >= best_cost - 1e-7:
+                break                      # incumbent improved: prune tail
+            if lb_ceil[ci] >= best_cost - 1e-7:
+                continue
             add = np.zeros(M)
-            ok = True
-            inc = 0.0
-            for n_j, j in zip(comp, feas):
-                if n_j == 0:
-                    continue
-                add[j] = n_j * rows_o[gi][j]
-                inc += n_j * cost_g[gorder[gi]][j]
-                if prob.caps is not None and math.ceil(
-                        load[j] + add[j] - _EPS) > prob.caps[j]:
-                    ok = False
-                    break
-            if not ok:
-                continue
-            lb_frac = frac + inc + suffix_lb[gi + 1]
-            if lb_frac >= best_cost - 1e-7:
-                # comps sorted by inc => all later comps also pruned
-                break
-            # committed-ceiling bound: loads only grow, so
-            # B_j >= ceil(current load_j) already — a valid lower bound.
-            lb_ceil = _counts_cost(load + add, prob.costs)
-            if lb_ceil >= best_cost - 1e-7:
-                continue
+            add[feas] = comps[ci] * row_feas
             full = np.zeros(M, dtype=int)
-            for n_j, j in zip(comp, feas):
-                full[j] = n_j
+            full[feas] = comps[ci]
             cur_counts[gi] = tuple(full)
             dfs(gi + 1, load + add, frac + inc)
             cur_counts[gi] = None
@@ -277,18 +361,30 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0) -> Optional[ILPSolution]
                     best_assign[g["idx"][pos]] = j
                     pos += 1
 
+    if best_assign is None:        # nothing feasible found (caps too tight)
+        # the cheapest-types restriction may have excluded the only
+        # cap-feasible columns: retry unrestricted before declaring
+        # infeasibility (bounded by the leftover budget)
+        remaining = time_budget_s - (time.time() - t0)
+        if restricted and remaining > 0.05:
+            return solve(prob, time_budget_s=remaining,
+                         max_types_per_group=M)
+        return None
     counts = np.zeros(M, dtype=int)
     for j in range(M):
         lj = prob.loads[np.arange(N)[best_assign == j], j].sum()
         counts[j] = int(math.ceil(lj - _EPS))
     return ILPSolution(best_assign, counts, float(np.sum(counts * prob.costs)),
-                       optimal=not timeout, solve_time_s=time.time() - t0,
+                       optimal=not timeout and not restricted,
+                       solve_time_s=time.time() - t0,
                        nodes=nodes)
 
 
 def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
-    """Exhaustive reference for tests (tiny N only)."""
+    """Exhaustive reference for tests (tiny N only).  Enforces the same
+    constraint set as ``solve``: per-type caps *and* grouped chip caps."""
     N, M = prob.loads.shape
+    gmat = prob.group_matrix()
     best = None
     t0 = time.time()
     for combo in itertools.product(range(M), repeat=N):
@@ -302,7 +398,7 @@ def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
         if not ok:
             continue
         counts = np.ceil(load - _EPS)
-        if prob.caps is not None and np.any(counts > prob.caps):
+        if not counts_within_caps(counts, prob, gmat):
             continue
         cost = float(np.sum(counts * prob.costs))
         if best is None or cost < best.cost - 1e-12:

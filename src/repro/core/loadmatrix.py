@@ -1,4 +1,12 @@
-"""Load matrix construction (§5.4.2): L[i,j] = r_i / MaxTput(G_j, s_i, SLO)."""
+"""Load matrix construction (§5.4.2): L[i,j] = r_i / MaxTput(G_j, s_i, SLO).
+
+Columns may be TP-degree variants of a base GPU type (``A10Gx2``).  Two cap
+families exist:
+
+  * ``caps`` — per-*instance* caps on a named column (B_j ≤ cap_j);
+  * ``chip_caps`` — per-*chip* caps on a base type, shared across all TP
+    variants that draw from its pool (Σ_tp tp·B_{g,tp} ≤ cap_g).
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -11,7 +19,8 @@ from .workload import Workload
 def build_problem(workload: Workload, profile: Profile,
                   slice_factor: int = 8,
                   caps: dict[str, int] | None = None,
-                  gpu_subset: list[str] | None = None) -> ILPProblem:
+                  gpu_subset: list[str] | None = None,
+                  chip_caps: dict[str, int] | None = None) -> ILPProblem:
     gpu_names = sorted(gpu_subset or profile.gpus)
     slices = workload.slices(slice_factor)
     N, M = len(slices), len(gpu_names)
@@ -27,4 +36,23 @@ def build_problem(workload: Workload, profile: Profile,
     caps_arr = None
     if caps is not None:
         caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
-    return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr)
+    chip_weight = chip_group = group_caps = None
+    if chip_caps:
+        # normalize keys: a cap naming a catalog entry ('A10Gx2', 'v5e-4')
+        # applies to that entry's base pool; duplicate keys keep the
+        # tightest cap
+        norm: dict[str, float] = {}
+        for key, cap in chip_caps.items():
+            acc = profile.gpus.get(key)
+            base = acc.base_name if acc is not None else key
+            norm[base] = min(norm.get(base, np.inf), float(cap))
+        pools = sorted(norm)
+        pool_idx = {p: k for k, p in enumerate(pools)}
+        chip_weight = np.array([float(profile.gpus[g].chips)
+                                for g in gpu_names])
+        chip_group = np.array([pool_idx.get(profile.gpus[g].base_name, -1)
+                               for g in gpu_names])
+        group_caps = np.array([norm[p] for p in pools])
+    return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr,
+                      chip_weight=chip_weight, chip_group=chip_group,
+                      group_caps=group_caps)

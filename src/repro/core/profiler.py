@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 from pathlib import Path
 from typing import Mapping, Optional
 
@@ -78,17 +79,53 @@ def profile_from_dryrun(
     slo_tpot_s: float,
     engine_params: EngineModelParams = DEFAULT_ENGINE,
 ) -> Profile:
-    """XLA-derived profile: per-token decode FLOPs/bytes from the compiled
-    serve_step of the dry-run (decode_32k cell), scaled per accelerator."""
+    """XLA-derived profile: per-token decode FLOPs *and* per-step bytes from
+    the compiled serve_step of the dry-run (decode cell), scaled per
+    accelerator."""
     model = ModelPerf.from_config(cfg)
-    nb = dryrun_record["global_batch"]
-    flops_per_token = dryrun_record["flops"] * dryrun_record.get(
-        "devices", 256) / max(1, nb)
-    # bytes per step base: weights actually read per step
     return profile_catalog(
         gpus, buckets, model, slo_tpot_s, engine_params,
-        flops_per_token=flops_per_token)
+        flops_per_token=decode_flops_per_token_from_record(dryrun_record),
+        bytes_per_step_base=decode_bytes_per_step_base_from_record(
+            dryrun_record, model))
 
 
-def decode_flops_per_token_from_record(rec: dict, n_devices: int = 256):
-    return rec["flops"] * n_devices / max(1, rec["global_batch"])
+def record_devices(rec: dict) -> int:
+    """Device count of the dry-run: explicit field, else the mesh shape
+    (``pod_16x16`` -> 256). cost_analysis numbers are per-device modules,
+    so totals must be scaled by this — no silent default."""
+    if "devices" in rec:
+        return int(rec["devices"])
+    dims = re.findall(r"\d+", rec.get("mesh", ""))
+    if dims:
+        return int(np.prod([int(d) for d in dims]))
+    raise ValueError(
+        "dry-run record carries neither 'devices' nor a parsable 'mesh'; "
+        "cannot scale per-device cost_analysis numbers")
+
+
+def decode_flops_per_token_from_record(rec: dict,
+                                       n_devices: Optional[int] = None) -> float:
+    d = record_devices(rec) if n_devices is None else n_devices
+    return rec["flops"] * d / max(1, rec["global_batch"])
+
+
+def decode_bytes_per_step_base_from_record(
+        rec: dict, model: ModelPerf,
+        n_devices: Optional[int] = None) -> Optional[float]:
+    """Batch-independent bytes per decode step (weights + constants), from
+    the compiled totals minus the modeled per-sequence KV/state traffic at
+    the cell's context length.  Returns None (analytic fallback) when the
+    record has no byte counts (cost_analysis_error runs)."""
+    total_per_dev = rec.get("bytes_tc", rec.get("bytes_accessed"))
+    if total_per_dev is None:
+        return None
+    d = record_devices(rec) if n_devices is None else n_devices
+    total = float(total_per_dev) * d
+    nb = max(1, rec["global_batch"])
+    per_seq = (rec.get("seq_len", 0) * model.kv_bytes_per_token
+               + model.state_bytes)
+    base = total - nb * per_seq
+    # the step must at least stream the active weights once; never exceed
+    # what the compiler measured in total
+    return float(min(max(base, model.active_param_bytes), total))

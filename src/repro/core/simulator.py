@@ -27,7 +27,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .accelerators import Accelerator
+from .accelerators import Accelerator, chips_by_base
 from .balancer import InstanceRef, LoadBalancer
 from .engine_model import EngineModel, ModelPerf, EngineModelParams, DEFAULT_ENGINE
 from .profiler import Profile
@@ -83,6 +83,16 @@ class InstanceEngine:
         self.launched_at = launched_at
         self.retired_at: Optional[float] = None
         self.draining = False
+
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel degree of this engine instance."""
+        return self.gpu.tp
+
+    @property
+    def chips(self) -> int:
+        """Chips of the base type this instance draws from the pool."""
+        return self.gpu.chips
 
     def kv_tokens(self) -> float:
         return (sum(r.input_len + r.decoded for r in self.active)
@@ -265,6 +275,11 @@ class ClusterEngine:
                 continue
             out[inst.gpu_name] = out.get(inst.gpu_name, 0) + 1
         return out
+
+    def chips_by_base(self, include_draining: bool = True) -> dict[str, int]:
+        """Chips held per base-type pool (TP variants aggregated)."""
+        return chips_by_base(self.fleet_counts(include_draining),
+                             self.profile.gpus)
 
     def cost_rate(self) -> float:
         """Current fleet $/h (draining instances still bill)."""

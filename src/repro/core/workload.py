@@ -32,12 +32,18 @@ class Bucket:
 
     @property
     def rep_input(self) -> int:
-        """Representative (conservative: upper-mid) request size."""
-        return int((self.i_lo + self.i_hi) / 2)
+        """Representative (conservative: upper-mid) request size.
+
+        The 75th-percentile point of the range, not the midpoint: profiling
+        MaxTput at an under-sized representative inflates the table and
+        breaks SLO attainment for the bucket's larger-than-average requests
+        (§5.3 picks the representative conservatively for the same reason).
+        """
+        return int((self.i_lo + 3 * self.i_hi) / 4)
 
     @property
     def rep_output(self) -> int:
-        return int((self.o_lo + self.o_hi) / 2)
+        return int((self.o_lo + 3 * self.o_hi) / 4)
 
     @property
     def max_tokens(self) -> int:

@@ -94,11 +94,25 @@ def _build_engine(melange: Melange, counts: dict[str, int], *,
     return eng
 
 
+def _base_of(eng: ClusterEngine, gpu_name: str) -> str:
+    acc = eng.profile.gpus.get(gpu_name)
+    return acc.base_name if acc is not None else gpu_name
+
+
 def _select_victims(eng: ClusterEngine, gpu: str, n: int):
     """Spot reclaims hit newest-first; already-draining instances last (they
-    are leaving anyway and their loss must not touch the solver target)."""
-    victims = [i for i in eng.instances.values() if i.gpu_name == gpu]
+    are leaving anyway and their loss must not touch the solver target).
+    ``gpu`` names a base type (or any catalog entry drawing on the pool):
+    a reclaim of A10G chips hits A10Gx2/A10Gx4 instances too."""
+    base = _base_of(eng, gpu)
+    victims = [i for i in eng.instances.values()
+               if i.gpu_name == gpu or _base_of(eng, i.gpu_name) == base]
     return sorted(victims, key=lambda i: (i.draining, -i.inst_id))[:n]
+
+
+def _live_chips(eng: ClusterEngine, base: str) -> int:
+    """Chips of ``base`` held by live (non-retired) instances."""
+    return eng.chips_by_base().get(base, 0)
 
 
 class ClusterOrchestrator:
@@ -255,28 +269,39 @@ class ClusterOrchestrator:
             self.timeline.record_decision(now, "restock", gpu=ev.gpu)
             return
         if ev.kind == "stockout":
-            live = eng.fleet_counts().get(ev.gpu, 0)
-            asc.caps[ev.gpu] = live
+            # cap the base type's *chip pool*: chips held right now (across
+            # all TP variants) are all the market will supply until restock.
+            # Normalize first: the event may name a catalog entry ('v5e-4')
+            # whose pool key is its base_name ('v5e').
+            live = _live_chips(eng, _base_of(eng, ev.gpu))
+            asc.set_chip_stockout(ev.gpu, live)
             self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
                                           cap=live)
             return
-        # preemption: kill up to n live instances of the type
+        # preemption: kill up to n live instances drawing on the type's pool
         victims = _select_victims(eng, ev.gpu, ev.n)
         if not victims:
-            if ev.stockout:           # the market event still happened:
-                asc.caps[ev.gpu] = 0  # the type is unavailable until restock
+            if ev.stockout:                 # the market event still happened:
+                asc.set_chip_stockout(ev.gpu, 0)  # pool empty until restock
             self.timeline.record_decision(now, "preemption-miss", gpu=ev.gpu,
                                           stockout=ev.stockout)
             return
         # only non-draining kills reduce the solver's target: a draining
         # instance had already left the target fleet
-        n_target_lost = sum(1 for v in victims if not v.draining)
+        target_losses: dict[str, int] = {}
+        for v in victims:
+            if not v.draining:
+                target_losses[v.gpu_name] = target_losses.get(v.gpu_name,
+                                                              0) + 1
+        n_target_lost = sum(target_losses.values())
         orphans: list[SimRequest] = []
         for v in victims:
             orphans += eng.remove_instance(v.inst_id)
         if n_target_lost == 0:
             if ev.stockout:
-                asc.caps[ev.gpu] = asc.current.counts.get(ev.gpu, 0)
+                asc.set_chip_stockout(
+                    ev.gpu, asc.current.chips_by_base().get(
+                        _base_of(eng, ev.gpu), 0))
             if eng.instances:
                 eng.resubmit(orphans, now)
             else:
@@ -289,7 +314,8 @@ class ClusterOrchestrator:
         wall0 = time.perf_counter()
         try:
             diff = asc.on_instance_failure(ev.gpu, n_target_lost,
-                                           stockout=ev.stockout)
+                                           stockout=ev.stockout,
+                                           losses=target_losses)
         except RuntimeError as e:
             if eng.instances:
                 eng.resubmit(orphans, now)

@@ -14,6 +14,8 @@ from repro.training import optimizer as OPT
 from repro.training.data import DataConfig, SyntheticDataset
 from repro.training.train_loop import TrainConfig, train
 
+pytestmark = pytest.mark.slow  # trains/checkpoints real JAX models
+
 
 def _tree(key):
     ks = jax.random.split(key, 3)

@@ -65,6 +65,67 @@ def test_llama70b_fig8():
         em.tokens_per_dollar(h, 250, 250, 0.12)
 
 
+def test_explicit_zero_overrides_not_discarded():
+    """Falsy-or bug: flops_per_token=0.0 / bytes_per_step_base=0.0 are
+    legitimate overrides and must not fall back to the analytic terms."""
+    m = ModelPerf.llama2_7b()
+    em0 = EngineModel(m, flops_per_token=0.0, bytes_per_step_base=0.0)
+    em = EngineModel(m)
+    a100 = PAPER_GPUS["A100"]
+    # zero weight traffic + zero flops -> only KV reads + overheads remain
+    assert em0.decode_step_time(a100, 8, 1000) < em.decode_step_time(
+        a100, 8, 1000)
+    assert em0._flops_per_token == 0.0 and em0._bytes_base == 0.0
+
+
+def test_max_batch_no_magic_sentinel():
+    """A cache-free model (kv=0, state=0) gets a memory-derived concurrency
+    cap from the per-sequence activation floor, not a hard-coded 4096."""
+    m = ModelPerf("cachefree", 2e9, 2e9, 0.0, 32, 4096)
+    em = EngineModel(m)
+    b = em.max_batch(PAPER_GPUS["A100"], 500, 250)
+    avail = PAPER_GPUS["A100"].mem_bytes * (1 - em.p.activation_reserve) - 2e9
+    act_floor = 2.0 * 4096 * 32 * 2
+    assert b == int(avail / act_floor)
+    assert b != 4096 and b > 0
+
+
+def test_bucket_representative_is_upper_mid():
+    from repro.core.workload import Bucket
+    b = Bucket(100, 200, 40, 80)
+    assert b.rep_input == (100 + 3 * 200) // 4 == 175   # not the midpoint 150
+    assert b.rep_output == (40 + 3 * 80) // 4 == 70
+    assert b.i_lo <= b.rep_input <= b.i_hi
+    assert b.rep_input > (b.i_lo + b.i_hi) / 2          # conservative side
+
+
+def test_dryrun_record_parsing_and_bytes_base():
+    from repro.core.profiler import (decode_bytes_per_step_base_from_record,
+                                     decode_flops_per_token_from_record,
+                                     record_devices)
+    import pytest as _pytest
+    m = ModelPerf.llama2_7b()
+    rec = {"mesh": "pod_16x16", "global_batch": 512, "seq_len": 1000,
+           "flops": 1e9, "bytes_accessed": 1e9}
+    assert record_devices(rec) == 256
+    assert record_devices({"mesh": "multipod_2x16x16"}) == 512
+    assert record_devices({"devices": 8, "mesh": "pod_16x16"}) == 8
+    with _pytest.raises(ValueError):
+        record_devices({})
+    fpt = decode_flops_per_token_from_record(rec)
+    assert fpt == _pytest.approx(1e9 * 256 / 512)
+    # bytes base = compiled total minus the modeled KV read, clamped to
+    # [active weights, total]
+    total = 1e9 * 256
+    expect = total - 512 * 1000 * m.kv_bytes_per_token
+    got = decode_bytes_per_step_base_from_record(rec, m)
+    assert got == _pytest.approx(max(expect, m.active_param_bytes))
+    assert m.active_param_bytes <= got <= total
+    # records without byte counts fall back to the analytic term
+    assert decode_bytes_per_step_base_from_record(
+        {"mesh": "pod_16x16", "global_batch": 4, "flops": 1.0}, m) is None
+
+
 def test_model_perf_from_config():
     from repro.configs import get_config
     mp = ModelPerf.from_config(get_config("qwen2-1.5b"))

@@ -10,6 +10,8 @@ from repro.configs import get_config, list_archs
 from repro.configs.shapes import SHAPES, applicable
 from repro.models import transformer as T
 
+pytestmark = pytest.mark.slow  # JAX compile-heavy (minutes on CPU)
+
 ARCHS = list_archs()
 
 

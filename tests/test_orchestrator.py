@@ -10,6 +10,8 @@ from repro.orchestrator import ClusterOrchestrator, run_static
 from repro.traces import (FleetEvent, TraceSegment, WorkloadTrace,
                           diurnal_trace)
 
+pytestmark = pytest.mark.slow  # trace-driven cluster simulations
+
 
 @pytest.fixture(scope="module")
 def mel():

@@ -9,6 +9,8 @@ from repro.core import Melange, ModelPerf, PAPER_GPUS
 from repro.models import transformer as T
 from repro.serving import EngineConfig, Request, ServingCluster, ServingEngine
 
+pytestmark = pytest.mark.slow  # discrete-event simulator heavy
+
 
 @pytest.fixture(scope="module")
 def setup():

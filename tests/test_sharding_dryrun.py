@@ -13,6 +13,8 @@ from repro.distributed.sharding import (DEFAULT_RULES, ShardingRules,
                                         logical_to_spec)
 from repro.launch.mesh import make_local_mesh
 
+pytestmark = pytest.mark.slow  # lowers/compiles sharded cells
+
 
 def test_divisibility_fallback():
     mesh = make_local_mesh()   # (1,1): everything divides trivially

@@ -8,6 +8,8 @@ import pytest
 from repro.core import (Melange, ModelPerf, PAPER_GPUS, make_workload,
                         simulate)
 
+pytestmark = pytest.mark.slow  # end-to-end allocation sweeps
+
 
 @pytest.fixture(scope="module")
 def mel_by_slo():

@@ -1,0 +1,334 @@
+"""TP-degree-aware allocation: (type, tp) variant expansion, the grouped
+chip-capacity constraint Σ_tp tp·B_{g,tp} ≤ cap_g, and the end-to-end wiring
+through Melange / Autoscaler (ISSUE 2 tentpole)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Melange, ModelPerf, PAPER_GPUS, expand_tp_variants,
+                        make_workload, tp_efficiency_curve, tp_variant)
+from repro.core.engine_model import EngineModel
+from repro.core.ilp import (ILPProblem, counts_within_caps, solve,
+                            solve_brute_force)
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# variant expansion
+# ---------------------------------------------------------------------------
+def test_expand_tp_variants_names_and_aggregation():
+    cat = expand_tp_variants(PAPER_GPUS, (1, 2, 4))
+    assert set(cat) == {f"{g}{s}" for g in PAPER_GPUS
+                        for s in ("", "x2", "x4")}
+    base, v4 = cat["A10G"], cat["A10Gx4"]
+    assert v4.mem_gb == 4 * base.mem_gb
+    assert v4.price_hr == pytest.approx(4 * base.price_hr)
+    assert v4.chips == 4 and v4.tp == 4
+    assert v4.base_name == "A10G" == base.base_name
+    assert v4.max_request_tokens == 4 * base.max_request_tokens
+    # tp=1 keeps the catalog name (profiles/allocations line up)
+    assert base.tp == 1 and base.name == "A10G"
+
+
+def test_tp_efficiency_curve_is_decreasing_not_flat():
+    effs = [tp_efficiency_curve(d) for d in (1, 2, 4, 8)]
+    assert effs[0] == 1.0
+    for a, b in zip(effs, effs[1:]):
+        assert b < a                       # per-degree, monotone decreasing
+    assert effs[-1] >= 0.6                 # floor
+
+
+def test_tp_variant_requires_interconnect_spec():
+    """tp>1 without link_gbs would charge comm at a bogus rate: refuse."""
+    import dataclasses
+    no_link = dataclasses.replace(PAPER_GPUS["A100"], link_gbs=0.0)
+    with pytest.raises(ValueError, match="link_gbs"):
+        tp_variant(no_link, 2)
+    assert tp_variant(no_link, 1).tp == 1      # tp=1 needs no interconnect
+
+
+def test_chip_caps_variant_key_normalized(mel_tp):
+    """A chip cap naming a variant ('A10Gx2') binds the whole A10G pool."""
+    wl = make_workload("pubmed", 8.0)
+    via_variant = mel_tp.allocate(wl, chip_caps={"A10Gx2": 1},
+                                  time_budget_s=2.0)
+    assert via_variant is not None
+    assert via_variant.chips_by_base().get("A10G", 0) <= 1
+
+
+def test_tp_roofline_is_sublinear():
+    """Aggregate peak scales with tp, *effective* peak scales sublinearly."""
+    base = PAPER_GPUS["A10G"]
+    v2 = tp_variant(base, 2)
+    assert v2.flops_tf == 2 * base.flops_tf
+    assert v2.eff_flops < 2 * base.eff_flops
+    assert v2.eff_bw < 2 * base.eff_bw
+
+
+# ---------------------------------------------------------------------------
+# engine model: comm overhead + unlocked buckets
+# ---------------------------------------------------------------------------
+def test_tp_unlocks_infeasible_buckets():
+    """The point of TP: requests that don't fit one chip fit the group."""
+    em = EngineModel(ModelPerf.llama2_7b())
+    base = PAPER_GPUS["A10G"]
+    v2 = tp_variant(base, 2)
+    slo = 0.12
+    assert em.max_throughput(base, 16000, 1900, slo) == 0.0
+    assert em.max_throughput(v2, 16000, 1900, slo) > 0.0
+
+
+def test_tp_comm_overhead_charged():
+    """A tp=2 engine is strictly worse than a mythical free-comm 2x chip."""
+    import dataclasses
+    em = EngineModel(ModelPerf.llama2_7b())
+    v2 = tp_variant(PAPER_GPUS["L4"], 2)        # PCIe: comm clearly visible
+    ideal = dataclasses.replace(v2, tp=1)       # same roofline, no collectives
+    t_real = em.decode_step_time(v2, 64, 2000)
+    t_ideal = em.decode_step_time(ideal, 64, 2000)
+    assert t_real > t_ideal
+    assert em.prefill_rate(v2, 2000) < em.prefill_rate(ideal, 2000)
+
+
+def test_tp_throughput_sublinear_in_degree():
+    em = EngineModel(ModelPerf.llama2_7b())
+    base = PAPER_GPUS["A100"]
+    r1 = em.max_throughput(base, 500, 250, 0.12)
+    r2 = em.max_throughput(tp_variant(base, 2), 500, 250, 0.12)
+    assert r1 < r2 < 2 * r1
+
+
+# ---------------------------------------------------------------------------
+# grouped chip caps in the ILP (satellite: brute-force + property tests)
+# ---------------------------------------------------------------------------
+def _tp_problem(caps_chips, loads=None):
+    """Two base types; g0 has tp variants {x1, x2} sharing a chip pool."""
+    # columns: g0x1 (1 chip), g0x2 (2 chips), g1 (uncapped)
+    if loads is None:
+        loads = np.array([[0.6, 0.35, 0.5],
+                          [0.6, 0.35, 0.5],
+                          [0.6, 0.35, 0.5],
+                          [0.6, 0.35, 0.5]])
+    costs = np.array([1.0, 2.0, 10.0])
+    n = loads.shape[0]
+    return ILPProblem(
+        loads, costs, ["g0", "g0x2", "g1"], np.zeros(n, dtype=int),
+        chip_weight=np.array([1.0, 2.0, 1.0]),
+        chip_group=np.array([0, 0, -1]),
+        group_caps=np.array([float(caps_chips)]))
+
+
+def test_grouped_cap_binds_across_variants():
+    """Cheap pool capped at 2 chips: any mix of x1/x2 respects Σ tp·B ≤ 2."""
+    prob = _tp_problem(2)
+    sol = solve(prob, time_budget_s=5)
+    bf = solve_brute_force(prob)
+    assert sol is not None and bf is not None
+    assert abs(sol.cost - bf.cost) < 1e-9
+    for s in (sol, bf):
+        assert s.counts[0] + 2 * s.counts[1] <= 2 + _EPS
+    # with the pool exhausted the expensive type must absorb the rest
+    assert sol.counts[2] >= 1
+
+
+def test_grouped_cap_zero_disables_all_variants():
+    prob = _tp_problem(0)
+    sol = solve(prob, time_budget_s=5)
+    assert sol is not None
+    assert sol.counts[0] == 0 and sol.counts[1] == 0
+
+
+def test_grouped_cap_infeasible_returns_none():
+    # only the pooled type is feasible for the slices, and the pool is empty
+    loads = np.array([[0.6, 0.35, np.inf]] * 3)
+    prob = _tp_problem(0, loads=loads)
+    assert solve(prob, time_budget_s=5) is None
+    assert solve_brute_force(prob) is None
+
+
+def _rand_grouped_problem(rng, n_max=6):
+    N = int(rng.integers(2, n_max + 1))
+    M = 4                                   # g0, g0x2, g1, g1x2
+    loads = rng.uniform(0.1, 0.9, size=(N, M))
+    mask = rng.random((N, M)) < 0.1
+    loads = np.where(mask, np.inf, loads)
+    loads[:, 2] = np.where(np.isfinite(loads[:, 2]), loads[:, 2], 0.5)
+    costs = np.array([1.0, 2.1, 3.0, 6.5]) * rng.uniform(0.8, 1.2, size=M)
+    caps = rng.integers(1, 7, size=2).astype(float)
+    return ILPProblem(
+        loads, costs, ["g0", "g0x2", "g1", "g1x2"], np.zeros(N, dtype=int),
+        chip_weight=np.array([1.0, 2.0, 1.0, 2.0]),
+        chip_group=np.array([0, 0, 1, 1]),
+        group_caps=caps)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_grouped_caps_exact_and_respected(seed):
+    """solve == brute force under shared chip caps; caps never exceeded."""
+    rng = np.random.default_rng(seed)
+    prob = _rand_grouped_problem(rng)
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=10)
+    assert (bf is None) == (bb is None)
+    if bf is None:
+        return
+    assert bb.optimal
+    assert abs(bf.cost - bb.cost) < 1e-6
+    gmat = prob.group_matrix()
+    for s in (bf, bb):
+        assert counts_within_caps(np.asarray(s.counts, dtype=float), prob,
+                                  gmat)
+        usage = gmat @ s.counts
+        assert np.all(usage <= prob.group_caps + _EPS)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_grouped_plus_instance_caps(seed):
+    """Both cap families active at once stay consistent with brute force."""
+    rng = np.random.default_rng(seed)
+    prob = _rand_grouped_problem(rng, n_max=5)
+    prob.caps = rng.integers(1, 5, size=4).astype(float)
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=10)
+    assert (bf is None) == (bb is None)
+    if bf is not None:
+        assert abs(bf.cost - bb.cost) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Melange end-to-end
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mel_tp():
+    return Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.2,
+                   tp_degrees=(1, 2, 4))
+
+
+def test_tp_aware_never_worse_than_fixed(mel_tp):
+    """tp=1 variants are a subset of the expanded catalog, so the TP-aware
+    allocation can always match the fixed-instance one.  Both solves are
+    any-time (timer-boxed), so allow a sliver of tolerance: under CPU
+    contention the independently-run fixed solve may see a few more
+    branch-and-bound nodes than the TP run's internal tp=1 pre-solve."""
+    wl = make_workload("pubmed", 8.0)
+    fixed = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.2).allocate(
+        wl, time_budget_s=1.0)
+    tp = mel_tp.allocate(wl, time_budget_s=3.0)
+    assert tp is not None and fixed is not None
+    assert tp.cost_per_hour <= fixed.cost_per_hour * 1.02
+
+
+def test_tp_aware_strictly_cheaper_regime(mel_tp):
+    """Acceptance criterion: a workload/SLO regime where sharded small-GPU
+    groups beat big-GPU instances on $/hr (long-context + loose TPOT)."""
+    wl = make_workload("pubmed", 8.0)
+    fixed = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.2).allocate(
+        wl, time_budget_s=1.0)
+    tp = mel_tp.allocate(wl, time_budget_s=3.0)
+    assert tp.cost_per_hour < fixed.cost_per_hour - 0.5
+    assert any(mel_tp.gpus[g].tp > 1 for g in tp.counts)
+
+
+def test_melange_chip_caps_respected(mel_tp):
+    wl = make_workload("pubmed", 8.0)
+    caps = {"A100": 3, "H100": 2}
+    a = mel_tp.allocate(wl, chip_caps=caps, time_budget_s=3.0)
+    assert a is not None
+    used = a.chips_by_base()
+    for base, cap in caps.items():
+        assert used.get(base, 0) <= cap
+    # the load squeezed out of the capped pools went to TP'd small GPUs
+    assert any(mel_tp.gpus[g].tp > 1 for g in a.counts)
+
+
+def test_counts_by_tp_keys(mel_tp):
+    wl = make_workload("mixed", 6.0)
+    a = mel_tp.allocate(wl, time_budget_s=2.0)
+    by_tp = a.counts_by_tp()
+    assert sum(by_tp.values()) == a.total_instances
+    for (base, tp), n in by_tp.items():
+        assert base in PAPER_GPUS and tp in (1, 2, 4) and n > 0
+    chips = a.chips_by_base()
+    assert chips == {b: sum(tp * n for (bb, tp), n in by_tp.items()
+                            if bb == b) for b in {k[0] for k in by_tp}}
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: stockouts cap the chip pool, shared across variants
+# ---------------------------------------------------------------------------
+def test_autoscaler_stockout_caps_chip_pool(mel_tp):
+    from repro.core import Autoscaler
+    wl = make_workload("pubmed", 6.0)
+    asc = Autoscaler(mel_tp, wl, headroom=0.0, solver_budget_s=2.0)
+    assert asc.current is not None
+    asc.set_chip_stockout("A100", 2)
+    asc.observe_rates(make_workload("pubmed", 12.0).rates)
+    asc.observe_rates(make_workload("pubmed", 12.0).rates)
+    asc.observe_rates(make_workload("pubmed", 12.0).rates)
+    diff = asc.maybe_rescale(force=True)
+    assert diff is not None
+    assert asc.current.chips_by_base().get("A100", 0) <= 2
+    asc.lift_stockout("A100")
+    assert "A100" not in asc.chip_caps
+
+
+@pytest.mark.slow
+def test_orchestrator_tp_fleet_stockout_respects_chip_pool(mel_tp):
+    """End-to-end: a TP-variant fleet rides a trace; a base-type stockout
+    caps the chip pool and later re-solves never exceed it."""
+    from repro.orchestrator import ClusterOrchestrator
+    from repro.traces import FleetEvent, TraceSegment, WorkloadTrace
+    segs = [TraceSegment(0.0, 300.0, 2.0, {"pubmed": 1.0}),
+            TraceSegment(300.0, 300.0, 6.0, {"pubmed": 1.0})]
+    trace = WorkloadTrace("tp-stockout", segs, seed=5).with_events(
+        [FleetEvent(150.0, "stockout", "A100")])
+    orch = ClusterOrchestrator(mel_tp, trace, window_s=100.0,
+                               launch_delay_s=20.0, solver_budget_s=1.0,
+                               drift_threshold=0.10, seed=1)
+    res = orch.run()
+    assert res.conserved
+    caps = [d for d in res.timeline.decisions if d.kind == "stockout"]
+    assert len(caps) == 1
+    cap = caps[0].detail["cap"]
+    assert orch.autoscaler.chip_caps.get("A100") == cap
+    for h in orch.autoscaler.history:
+        if h["event"] == "rescale":
+            chips = sum(mel_tp.gpus[g].chips * n
+                        for g, n in h["new"].items()
+                        if mel_tp.gpus[g].base_name == "A100")
+            assert chips <= cap
+
+
+@pytest.mark.slow
+def test_orchestrator_preemption_hits_tp_variants(mel_tp):
+    """A preemption of base type chips can kill a tp>1 instance; the
+    controller books the loss per variant and recovers."""
+    from repro.core import ClusterEngine, EngineModel
+    from repro.orchestrator.orchestrator import _select_victims
+    eng = ClusterEngine(mel_tp.profile,
+                        EngineModel(ModelPerf.llama2_7b()), seed=0)
+    eng.add_instance("A10G")
+    eng.add_instance("A10Gx2")
+    victims = _select_victims(eng, "A10G", 2)
+    assert {v.gpu_name for v in victims} == {"A10G", "A10Gx2"}
+    assert eng.chips_by_base() == {"A10G": 3}
+
+
+def test_autoscaler_failure_with_variant_losses(mel_tp):
+    from repro.core import Autoscaler
+    wl = make_workload("pubmed", 8.0)
+    asc = Autoscaler(mel_tp, wl, headroom=0.0, solver_budget_s=2.0)
+    counts = dict(asc.current.counts)
+    victim = max(counts, key=counts.get)
+    base = mel_tp.gpus[victim].base_name
+    chips_before = asc.current.chips_by_base().get(base, 0)
+    asc.on_instance_failure(base, 1, stockout=True,
+                            losses={victim: 1})
+    lost = mel_tp.gpus[victim].chips
+    assert asc.chip_caps[base] <= chips_before - lost + _EPS
+    assert asc.current.chips_by_base().get(base, 0) <= asc.chip_caps[base]
