@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.fig12_slo_attainment",
     "benchmarks.bench_elastic_trace",
     "benchmarks.bench_tp_aware",
+    "benchmarks.bench_multi_model",
     "benchmarks.roofline",
 ]
 

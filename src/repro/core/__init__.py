@@ -2,13 +2,17 @@
 from .accelerators import (Accelerator, PAPER_GPUS, PAPER_GPUS_70B, TPU_FLEET,
                            chips_by_base, expand_tp_variants, get_catalog,
                            tp_efficiency_curve, tp_variant)
-from .allocator import Allocation, Melange
-from .autoscaler import AllocationDiff, Autoscaler, allocation_diff
-from .balancer import InstanceRef, LoadBalancer
+from .allocator import Allocation, FleetAllocation, Melange, MelangeFleet
+from .autoscaler import (AllocationDiff, Autoscaler, FleetAutoscaler,
+                         allocation_diff)
+from .balancer import FleetBalancer, InstanceRef, LoadBalancer
 from .engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams, ModelPerf
 from .ilp import (ILPProblem, ILPSolution, counts_within_caps, solve,
                   solve_brute_force)
+from .loadmatrix import FleetProblem, build_fleet_problem, build_problem
 from .profiler import Profile, profile_catalog, profile_from_dryrun
-from .simulator import ClusterEngine, InstanceEngine, SimRequest, SimResult, simulate
-from .workload import (Bucket, Workload, bucket_grid, make_workload,
+from .simulator import (ClusterEngine, FleetSimResult, InstanceEngine,
+                        SimRequest, SimResult, simulate, simulate_fleet)
+from .workload import (Bucket, ModelSpec, Workload, bucket_grid,
+                       bucket_indices, edge_bucket, make_workload,
                        sample_requests, workload_from_samples)

@@ -16,9 +16,9 @@ import numpy as np
 from .accelerators import Accelerator, chips_by_base, expand_tp_variants
 from .engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
 from .ilp import ILPProblem, ILPSolution, solve
-from .loadmatrix import build_problem
+from .loadmatrix import build_fleet_problem, build_problem
 from .profiler import Profile, profile_catalog
-from .workload import Workload
+from .workload import ModelSpec, Workload
 
 
 @dataclasses.dataclass
@@ -143,3 +143,284 @@ class Melange:
         for g in sorted(self.gpus):
             out[g] = self.single_type_baseline(workload, g, **kw)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-model fleets: several models, per-model SLOs, one shared pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetAllocation:
+    """Joint allocation of a multi-model fleet.
+
+    ``per_model`` holds one ordinary :class:`Allocation` view per model
+    (its own counts, cost share, solution slice, profile, and workload),
+    so everything downstream that consumes an ``Allocation`` — simulators,
+    autoscalers, benchmarks — works per model unchanged.  ``solution`` is
+    the joint stacked solve when the allocation came from one solver run;
+    partial re-solves (the fleet autoscaler's drift path) merge per-model
+    views and leave it ``None``.
+    """
+
+    per_model: dict[str, Allocation]
+    solution: Optional[ILPSolution] = None
+
+    @property
+    def models(self) -> list[str]:
+        return list(self.per_model)
+
+    @property
+    def cost_per_hour(self) -> float:
+        return sum(a.cost_per_hour for a in self.per_model.values())
+
+    @property
+    def total_instances(self) -> int:
+        return sum(a.total_instances for a in self.per_model.values())
+
+    def counts(self) -> dict[tuple[str, str], int]:
+        """(model, gpu variant) -> instance count."""
+        return {(m, g): n for m, a in self.per_model.items()
+                for g, n in a.counts.items() if n > 0}
+
+    def gpu_totals(self) -> dict[str, int]:
+        """Instances per GPU variant summed across models (pool usage)."""
+        out: dict[str, int] = {}
+        for a in self.per_model.values():
+            for g, n in a.counts.items():
+                out[g] = out.get(g, 0) + n
+        return out
+
+    def chips_by_base(self) -> dict[str, int]:
+        """Chips drawn per base-type pool, summed across models."""
+        out: dict[str, int] = {}
+        for a in self.per_model.values():
+            for b, c in a.chips_by_base().items():
+                out[b] = out.get(b, 0) + c
+        return out
+
+    def summary(self) -> dict:
+        """Fleet-level cost summary for logs and benchmarks."""
+        return {
+            "cost_per_hour": self.cost_per_hour,
+            "total_instances": self.total_instances,
+            "gpu_totals": self.gpu_totals(),
+            "chips_by_base": self.chips_by_base(),
+            "per_model": {
+                m: {"cost_per_hour": a.cost_per_hour,
+                    "counts": dict(a.counts),
+                    "slo_tpot_s": a.profile.slo_tpot_s}
+                for m, a in self.per_model.items()},
+        }
+
+
+class MelangeFleet:
+    """Mélange for a multi-model fleet sharing one accelerator pool.
+
+    Each :class:`ModelSpec` is profiled separately (MaxTput tables depend
+    on the model and its SLO) and the fleet ILP packs all models' (model,
+    bucket) slices onto (model, GPU) columns under shared pool caps — a
+    GPU type can serve several models, but every instance serves one model
+    and the pool is never over-committed.
+    """
+
+    def __init__(self, gpus: Mapping[str, Accelerator],
+                 specs: Sequence[ModelSpec], *,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 slice_factor: int = 8,
+                 buckets=None,
+                 tp_degrees: Optional[Sequence[int]] = None,
+                 profiles: Optional[Mapping[str, Profile]] = None):
+        if not specs:
+            raise ValueError("fleet needs at least one ModelSpec")
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate model names in fleet: {names}")
+        self.specs: dict[str, ModelSpec] = {s.name: s for s in specs}
+        self.members: dict[str, Melange] = {}
+        for s in specs:
+            self.members[s.name] = Melange(
+                gpus, s.perf, s.slo_tpot_s,
+                engine_params=s.engine_params or engine_params,
+                profile=(profiles or {}).get(s.name),
+                slice_factor=slice_factor, buckets=buckets,
+                tp_degrees=tp_degrees)
+        self.slice_factor = slice_factor
+        # all members expand the same catalog identically
+        self.gpus = next(iter(self.members.values())).gpus
+
+    @property
+    def models(self) -> list[str]:
+        return list(self.members)
+
+    def _workloads(self, workloads: Optional[Mapping[str, Workload]],
+                   models: Optional[Sequence[str]]) -> dict[str, Workload]:
+        sel = list(models) if models is not None else self.models
+        unknown = [m for m in sel if m not in self.members]
+        if unknown:
+            raise KeyError(f"unknown fleet models: {unknown}")
+        out = {}
+        for m in sel:
+            if workloads is not None and m in workloads:
+                out[m] = workloads[m]
+            else:
+                out[m] = self.specs[m].workload_at(0.0)
+        return out
+
+    def _per_model_view(self, fp, sol: ILPSolution, m: str,
+                        wl: Workload) -> Allocation:
+        """Slice the joint solution into model ``m``'s Allocation."""
+        k = fp.models.index(m)
+        G = fp.n_gpus
+        lo, hi = fp.slice_ranges[m]
+        assign = np.asarray(sol.assignment[lo:hi], dtype=int) - k * G
+        loads = fp.prob.loads[lo:hi]
+        counts = np.zeros(G, dtype=int)
+        for j in range(G):
+            lj = loads[np.arange(hi - lo)[assign == j], k * G + j].sum()
+            counts[j] = int(np.ceil(lj - 1e-9))
+        member = self.members[m]
+        costs = np.array([member.profile.gpus[g].price_hr
+                          for g in fp.gpu_names])
+        sol_m = ILPSolution(assign, counts, float(np.sum(counts * costs)),
+                            sol.optimal, sol.solve_time_s, nodes=sol.nodes)
+        return Allocation({g: int(c) for g, c in zip(fp.gpu_names, counts)
+                           if c > 0},
+                          sol_m.cost, sol_m, member.profile, wl,
+                          solution_gpu_names=list(fp.gpu_names))
+
+    def allocate(self, workloads: Optional[Mapping[str, Workload]] = None, *,
+                 models: Optional[Sequence[str]] = None,
+                 caps: Optional[Mapping[str, int]] = None,
+                 chip_caps: Optional[Mapping[str, int]] = None,
+                 gpu_subset: Optional[list[str]] = None,
+                 over_provision: float = 0.0,
+                 time_budget_s: float = 5.0,
+                 warm: bool = True,
+                 warm_siloed: Optional[Mapping[str, Allocation]] = None
+                 ) -> Optional[FleetAllocation]:
+        """Jointly allocate the (selected) fleet against the shared pool.
+
+        The sequential-siloed solution (when feasible) seeds the joint
+        branch-and-bound as a warm start, so the shared-pool cost never
+        exceeds what per-model silos would pay even when the solver hits
+        its time budget.  Callers comparing against a siloed baseline they
+        already solved (e.g. ``best_siloed`` with a bigger budget) should
+        pass it as ``warm_siloed``: the joint solve then dominates *that
+        exact* solution by construction, not just its own quick re-derive.
+        ``warm_siloed`` allocations must come from the same workloads /
+        slice factor / GPU subset as this call."""
+        wls = self._workloads(workloads, models)
+        if over_provision > 0:
+            wls = {m: Workload(w.buckets, w.rates * (1 + over_provision),
+                               name=w.name + f"+op{over_provision}")
+                   for m, w in wls.items()}
+        fp = build_fleet_problem(
+            {m: (self.members[m].profile, w) for m, w in wls.items()},
+            self.slice_factor, caps=caps, gpu_subset=gpu_subset,
+            chip_caps=chip_caps)
+        warm_assign = None
+        main_budget = time_budget_s
+        siloed: Optional[Mapping[str, Allocation]] = warm_siloed
+        if siloed is None and warm and len(wls) > 1:
+            # best sequential-siloed order as the incumbent: on stacked
+            # problems the joint branch-and-bound is any-time, so the
+            # warm start is the floor of what allocate() returns
+            t0 = time.time()
+            siloed = self.best_siloed(
+                wls, models=list(wls), caps=caps, chip_caps=chip_caps,
+                gpu_subset=gpu_subset,
+                time_budget_s=min(1.0, time_budget_s / 3))
+            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+        if siloed is not None:
+            if set(siloed) != set(fp.models) or any(
+                    len(siloed[m].solution.assignment)
+                    != fp.slice_ranges[m][1] - fp.slice_ranges[m][0]
+                    or list(siloed[m].solution_gpu_names) != fp.gpu_names
+                    for m in fp.models):
+                raise ValueError(
+                    "warm_siloed does not match this fleet problem "
+                    "(models, slice counts, or GPU catalog differ)")
+            warm_assign = np.concatenate([
+                np.asarray(siloed[m].solution.assignment, dtype=int)
+                + fp.models.index(m) * fp.n_gpus
+                for m in fp.models])
+        sol = solve(fp.prob, time_budget_s=main_budget,
+                    warm_assign=warm_assign)
+        if sol is None:
+            return None
+        per_model = {m: self._per_model_view(fp, sol, m, wls[m])
+                     for m in fp.models}
+        return FleetAllocation(per_model, solution=sol)
+
+    def allocate_siloed(self,
+                        workloads: Optional[Mapping[str, Workload]] = None, *,
+                        models: Optional[Sequence[str]] = None,
+                        order: Optional[Sequence[str]] = None,
+                        caps: Optional[Mapping[str, int]] = None,
+                        chip_caps: Optional[Mapping[str, int]] = None,
+                        gpu_subset: Optional[list[str]] = None,
+                        over_provision: float = 0.0,
+                        time_budget_s: float = 5.0
+                        ) -> Optional[dict[str, Allocation]]:
+        """The no-coordination baseline: each model is allocated alone, in
+        ``order``, consuming pool capacity as it goes (later silos see only
+        what the earlier ones left).  Returns None when some silo is
+        infeasible under the depleted caps."""
+        wls = self._workloads(workloads, models)
+        seq = list(order) if order is not None else list(wls)
+        budget = max(0.1, time_budget_s / max(1, len(seq)))
+        rem_caps = dict(caps) if caps else {}
+        rem_chips = ({k: float(v) for k, v in chip_caps.items()}
+                     if chip_caps else {})
+        out: dict[str, Allocation] = {}
+        for m in seq:
+            member = self.members[m]
+            alloc = member.allocate(
+                wls[m], caps=rem_caps or None, chip_caps=rem_chips or None,
+                gpu_subset=gpu_subset, over_provision=over_provision,
+                time_budget_s=budget)
+            if alloc is None:
+                return None
+            out[m] = alloc
+            for g, n in alloc.counts.items():
+                if g in rem_caps:
+                    rem_caps[g] = max(0, rem_caps[g] - n)
+            if rem_chips:
+                norm_used = alloc.chips_by_base()
+                for key in list(rem_chips):
+                    acc = member.profile.gpus.get(key)
+                    base = acc.base_name if acc is not None else key
+                    used = norm_used.get(base, 0)
+                    rem_chips[key] = max(0.0, rem_chips[key] - used)
+        return out
+
+    def best_siloed(self, workloads: Optional[Mapping[str, Workload]] = None,
+                    **kw) -> Optional[dict[str, Allocation]]:
+        """Cheapest sequential-siloed outcome over all model orders (the
+        strongest uncoordinated baseline a fleet operator could reach by
+        picking the luckiest deployment order).  Beyond 3 models the n!
+        order space is sampled with rate-sorted heuristics.
+
+        ``time_budget_s`` is the budget for the *whole* order sweep (it is
+        divided across orders), so callers — ``allocate``'s warm-start
+        phase in particular — can bound wall time regardless of n!."""
+        import itertools as _it
+        wls = self._workloads(workloads, kw.pop("models", None))
+        if len(wls) <= 3:
+            orders = [list(o) for o in _it.permutations(wls)]
+        else:
+            by_rate = sorted(wls, key=lambda m: wls[m].total_rate)
+            orders = [list(wls), list(reversed(list(wls))),
+                      by_rate, list(reversed(by_rate))]
+        kw["time_budget_s"] = max(
+            0.05, kw.get("time_budget_s", 5.0) / len(orders))
+        best: Optional[dict[str, Allocation]] = None
+        for order in orders:
+            got = self.allocate_siloed(wls, models=list(wls),
+                                       order=list(order), **kw)
+            if got is None:
+                continue
+            cost = sum(a.cost_per_hour for a in got.values())
+            if best is None or cost < sum(a.cost_per_hour
+                                          for a in best.values()) - 1e-12:
+                best = got
+        return best

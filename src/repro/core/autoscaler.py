@@ -20,12 +20,12 @@ serving system.  This module closes that loop:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
 from .accelerators import chips_by_base
-from .allocator import Allocation, Melange
+from .allocator import Allocation, FleetAllocation, Melange, MelangeFleet
 from .workload import Workload
 
 
@@ -50,7 +50,37 @@ def allocation_diff(old: dict[str, int], new: dict[str, int]) -> AllocationDiff:
     return AllocationDiff(add, rem)
 
 
-class Autoscaler:
+class _ChipPoolCaps:
+    """Shared stockout-cap bookkeeping for both autoscalers: chip caps are
+    keyed by base-type pool, resolved through the controller's catalog
+    (``_catalog``), so one rule governs single-model and fleet control."""
+
+    caps: dict[str, int]
+    chip_caps: dict[str, int]
+
+    @property
+    def _catalog(self):
+        raise NotImplementedError
+
+    def _base_of(self, gpu: str) -> str:
+        acc = self._catalog.get(gpu)
+        return acc.base_name if acc is not None else gpu
+
+    def set_chip_stockout(self, base: str, chips: int) -> None:
+        """Record a market stockout of a base type: chips currently held
+        are all that remain available (shared across its TP variants —
+        and, for fleets, across models)."""
+        self.chip_caps[self._base_of(base)] = int(chips)
+
+    def lift_stockout(self, gpu: str) -> None:
+        """Capacity restocked: per-variant and chip-pool caps are removed;
+        the next re-solve may use the type again."""
+        self.caps.pop(gpu, None)
+        self.chip_caps.pop(self._base_of(gpu), None)
+        self.chip_caps.pop(gpu, None)
+
+
+class Autoscaler(_ChipPoolCaps):
     def __init__(self, melange: Melange, initial: Workload, *,
                  headroom: float = 0.10, drift_threshold: float = 0.15,
                  ewma: float = 0.3, solver_budget_s: float = 5.0):
@@ -71,9 +101,9 @@ class Autoscaler:
     # variant metadata comes from the profile's catalog: allocations are
     # expressed in its names (melange.gpus may differ when a precomputed
     # profile was supplied)
-    def _base_of(self, gpu: str) -> str:
-        acc = self.melange.profile.gpus.get(gpu)
-        return acc.base_name if acc is not None else gpu
+    @property
+    def _catalog(self):
+        return self.melange.profile.gpus
 
     def _chips_of(self, counts: dict[str, int], base: str) -> int:
         """Chips of ``base`` consumed by an allocation across TP variants."""
@@ -146,14 +176,172 @@ class Autoscaler:
         self.current = new
         return diff
 
-    def set_chip_stockout(self, base: str, chips: int) -> None:
-        """Record a market stockout of a base type: chips currently held are
-        all that remain available (shared across its TP variants)."""
-        self.chip_caps[self._base_of(base)] = int(chips)
 
-    def lift_stockout(self, gpu: str) -> None:
-        """Capacity restocked: per-variant and chip-pool caps are removed;
-        the next re-solve may use the type again."""
-        self.caps.pop(gpu, None)
-        self.chip_caps.pop(self._base_of(gpu), None)
-        self.chip_caps.pop(gpu, None)
+class FleetAutoscaler(_ChipPoolCaps):
+    """Elastic control loop for a multi-model fleet on one shared pool.
+
+    Drift is tracked *per model* (each model has its own EWMA of observed
+    bucket rates vs. its provisioned workload).  A re-solve touches only
+    the drifted models: the stable models' allocations are held fixed and
+    their pool holdings are subtracted from the shared caps, so the solver
+    packs the drifted models into the *remaining* pool.  Stable models are
+    therefore never churned by another model's traffic swing — their
+    instances stay exactly where they were (no-op stability), while the
+    drifted models still compete for whatever capacity is genuinely free.
+    """
+
+    def __init__(self, fleet: MelangeFleet,
+                 initial: Optional[Mapping[str, Workload]] = None, *,
+                 headroom: float = 0.10, drift_threshold: float = 0.15,
+                 ewma: float = 0.3, solver_budget_s: float = 5.0):
+        self.fleet = fleet
+        self.headroom = headroom
+        self.drift_threshold = drift_threshold
+        self.ewma = ewma
+        self.solver_budget_s = solver_budget_s
+        wls = fleet._workloads(initial, None)
+        self.observed: dict[str, np.ndarray] = {
+            m: w.rates.copy() for m, w in wls.items()}
+        self.buckets = {m: w.buckets for m, w in wls.items()}
+        self.caps: dict[str, int] = {}        # pool-level instance caps
+        self.chip_caps: dict[str, int] = {}   # pool-level chip caps
+        self.current: Optional[FleetAllocation] = fleet.allocate(
+            wls, over_provision=headroom, time_budget_s=solver_budget_s)
+        self.history: list[dict] = []
+
+    # -- pool accounting -----------------------------------------------------
+    @property
+    def _catalog(self):
+        return self.fleet.gpus
+
+    def _remaining_pool(self, stable: Sequence[str]
+                        ) -> tuple[Optional[dict], Optional[dict]]:
+        """Caps minus what the held-fixed models already occupy."""
+        held_inst: dict[str, int] = {}
+        held_chips: dict[str, int] = {}
+        for m in stable:
+            a = self.current.per_model[m]
+            for g, n in a.counts.items():
+                held_inst[g] = held_inst.get(g, 0) + n
+            for b, c in a.chips_by_base().items():
+                held_chips[b] = held_chips.get(b, 0) + c
+        caps = {g: max(0, int(c) - held_inst.get(g, 0))
+                for g, c in self.caps.items()} or None
+        chips = {k: max(0, int(c) - held_chips.get(self._base_of(k), 0))
+                 for k, c in self.chip_caps.items()} or None
+        return caps, chips
+
+    # -- telemetry -----------------------------------------------------------
+    def observe_rates(self, model: str, rates: np.ndarray) -> None:
+        self.observed[model] = ((1 - self.ewma) * self.observed[model]
+                                + self.ewma * rates)
+
+    def drift(self, model: str) -> float:
+        prov = (self.current.per_model[model].workload.rates
+                / (1 + self.headroom))
+        denom = max(prov.sum(), 1e-9)
+        return float(np.abs(self.observed[model] - prov).sum() / denom)
+
+    def drifted_models(self) -> list[str]:
+        return [m for m in self.fleet.models
+                if self.drift(m) >= self.drift_threshold]
+
+    # -- control -------------------------------------------------------------
+    def maybe_rescale(self, *, force: bool = False
+                      ) -> Optional[dict[str, AllocationDiff]]:
+        """Partial re-solve: drifted models only, against the remaining
+        pool.  Returns per-model diffs (stable models are absent — their
+        allocations are untouched by construction)."""
+        drifted = self.fleet.models if force else self.drifted_models()
+        if not drifted:
+            return None
+        stable = [m for m in self.fleet.models if m not in drifted]
+        caps, chip_caps = self._remaining_pool(stable)
+        wls = {m: Workload(self.buckets[m], self.observed[m].copy(),
+                           name=f"observed:{m}") for m in drifted}
+        new_sub = self.fleet.allocate(
+            wls, models=drifted, caps=caps, chip_caps=chip_caps,
+            over_provision=self.headroom, time_budget_s=self.solver_budget_s)
+        if new_sub is None:
+            return None
+        per_model = dict(self.current.per_model)
+        diffs: dict[str, AllocationDiff] = {}
+        old_counts = {m: dict(self.current.per_model[m].counts)
+                      for m in drifted}
+        for m in drifted:
+            per_model[m] = new_sub.per_model[m]
+            diffs[m] = allocation_diff(old_counts[m],
+                                       new_sub.per_model[m].counts)
+        merged = FleetAllocation(per_model)
+        self.history.append({
+            "event": "rescale", "models": list(drifted),
+            "drift": {m: self.drift(m) for m in drifted},
+            "old": old_counts,
+            "new": {m: dict(per_model[m].counts) for m in drifted},
+            "old_cost": self.current.cost_per_hour,
+            "new_cost": merged.cost_per_hour,
+            "solve_time_s": new_sub.per_model[drifted[0]
+                                              ].solution.solve_time_s,
+        })
+        self.current = merged
+        return diffs
+
+    def on_instance_failure(
+            self, model: str, gpu: str, n: int = 1, *,
+            stockout: bool = False,
+            losses: Optional[Mapping[str, Mapping[str, int]]] = None
+    ) -> dict[str, AllocationDiff]:
+        """Capacity lost from the shared pool.  ``losses`` maps model ->
+        {variant: instances killed} when one pool-level preemption hit
+        several models at once; only the affected models are re-solved,
+        against the pool net of what the unaffected models hold."""
+        losses = ({m: dict(g) for m, g in losses.items()} if losses
+                  else {model: {gpu: n}})
+        bad = set(losses) - set(self.fleet.models)
+        if bad:
+            raise KeyError(f"losses for unknown fleet models: {sorted(bad)}")
+        affected = [m for m in self.fleet.models if m in losses]
+        survivors: dict[str, dict[str, int]] = {}
+        for m in affected:
+            counts = dict(self.current.per_model[m].counts)
+            for g, k in losses[m].items():
+                counts[g] = max(0, counts.get(g, 0) - k)
+            survivors[m] = {g: c for g, c in counts.items() if c > 0}
+        if stockout:
+            # surviving chips of the base type — across *all* models —
+            # are all the market will supply until restock
+            base = self._base_of(gpu)
+            held = 0
+            for m in self.fleet.models:
+                counts = (survivors[m] if m in survivors
+                          else self.current.per_model[m].counts)
+                held += chips_by_base(counts, self.fleet.gpus).get(base, 0)
+            self.chip_caps[base] = held
+        stable = [m for m in self.fleet.models if m not in affected]
+        caps, chip_caps = self._remaining_pool(stable)
+        wls = {m: Workload(self.buckets[m], self.observed[m].copy(),
+                           name=f"post-failure:{m}") for m in affected}
+        new_sub = self.fleet.allocate(
+            wls, models=affected, caps=caps, chip_caps=chip_caps,
+            over_provision=self.headroom, time_budget_s=self.solver_budget_s)
+        if new_sub is None:
+            raise RuntimeError(
+                "infeasible after failure: no capacity able to serve the "
+                f"fleet's affected models {affected} under SLO — page a human")
+        per_model = dict(self.current.per_model)
+        diffs: dict[str, AllocationDiff] = {}
+        for m in affected:
+            per_model[m] = new_sub.per_model[m]
+            diffs[m] = allocation_diff(survivors[m],
+                                       new_sub.per_model[m].counts)
+        merged = FleetAllocation(per_model)
+        self.history.append({
+            "event": "failure", "models": affected, "losses": losses,
+            "stockout": stockout,
+            "new": {m: dict(per_model[m].counts) for m in affected},
+            "new_cost": merged.cost_per_hour,
+            "solve_time_s": new_sub.per_model[affected[0]
+                                              ].solution.solve_time_s,
+        })
+        self.current = merged
+        return diffs

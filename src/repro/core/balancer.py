@@ -27,7 +27,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from .profiler import Profile
-from .workload import INPUT_EDGES, OUTPUT_EDGES
+from .workload import INPUT_EDGES, OUTPUT_EDGES, edge_bucket
 
 
 @dataclasses.dataclass
@@ -57,8 +57,8 @@ class LoadBalancer:
 
     # -- output length estimation ------------------------------------------
     def _input_bucket(self, input_len: int) -> int:
-        return int(np.clip(np.searchsorted(self._i_edges, input_len, "right")
-                           - 1, 0, len(self._i_edges) - 2))
+        # half-open [lo, hi) semantics shared with workload histograms
+        return int(edge_bucket(input_len, self._i_edges))
 
     def estimate_output(self, input_len: int) -> float:
         bi = self._input_bucket(input_len)
@@ -80,8 +80,7 @@ class LoadBalancer:
     # -- routing -------------------------------------------------------------
     def bucket_index(self, input_len: int, output_len_est: float) -> int:
         bi = self._input_bucket(input_len)
-        bo = int(np.clip(np.searchsorted(self._o_edges, output_len_est,
-                                         "right") - 1, 0, self._no - 1))
+        bo = int(edge_bucket(output_len_est, self._o_edges))
         return bi * self._no + bo
 
     def route(self, input_len: int) -> InstanceRef:
@@ -131,3 +130,69 @@ class LoadBalancer:
 
     def is_draining(self, inst_id: int) -> bool:
         return inst_id in self.draining
+
+
+class FleetBalancer:
+    """Model-first routing for multi-model fleets.
+
+    A request names its model; the fleet balancer dispatches it to that
+    model's own ``LoadBalancer`` (each holding only the instances serving
+    that model, with its own output-length estimator and the model's own
+    SLO for straggler weighting).  Routing therefore never mixes models:
+    an instance serves exactly one model's weights at a time.
+    """
+
+    def __init__(self, *, seed: int = 0, straggler_factor: float = 0.0,
+                 depth_probe: Optional[Callable[[int], float]] = None):
+        self.seed = seed
+        self.straggler_factor = straggler_factor
+        self.depth_probe = depth_probe
+        self.lbs: dict[str, LoadBalancer] = {}
+
+    def register_model(self, model: str, profile: Profile) -> LoadBalancer:
+        """Create (or return) the per-model balancer.  Seeds are derived
+        from the fleet seed + registration order so runs stay deterministic
+        regardless of model-name hashing."""
+        if model not in self.lbs:
+            self.lbs[model] = LoadBalancer(
+                profile, [], seed=self.seed + len(self.lbs),
+                straggler_factor=self.straggler_factor,
+                depth_probe=self.depth_probe)
+        return self.lbs[model]
+
+    def lb(self, model: str = "") -> LoadBalancer:
+        return self.lbs[model]
+
+    @property
+    def models(self) -> list[str]:
+        return list(self.lbs)
+
+    def has_instances(self, model: str) -> bool:
+        lb = self.lbs.get(model)
+        return bool(lb and lb.instances)
+
+    # -- model-first routing -------------------------------------------------
+    def route(self, model: str, input_len: int) -> InstanceRef:
+        lb = self.lbs.get(model)
+        if lb is None:
+            raise KeyError(f"no balancer registered for model '{model}'")
+        return lb.route(input_len)
+
+    def observe(self, model: str, input_len: int, output_len: int,
+                inst_id: Optional[int] = None,
+                tpot: Optional[float] = None) -> None:
+        self.lbs[model].observe(input_len, output_len, inst_id=inst_id,
+                                tpot=tpot)
+
+    # -- fleet mutation ------------------------------------------------------
+    def add_instance(self, model: str, inst: InstanceRef) -> None:
+        self.lbs[model].add_instance(inst)
+
+    def remove_instance(self, model: str, inst_id: int) -> None:
+        self.lbs[model].remove_instance(inst_id)
+
+    def mark_draining(self, model: str, inst_id: int) -> None:
+        self.lbs[model].mark_draining(inst_id)
+
+    def undrain(self, model: str, inst_id: int) -> None:
+        self.lbs[model].undrain(inst_id)

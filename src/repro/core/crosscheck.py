@@ -1,0 +1,74 @@
+"""Randomized cross-check harness for the stacked (multi-model) solver.
+
+One source of truth for the small fleet instances that both the property
+tests (``tests/test_multi_model.py``) and the benchmark gate
+(``benchmarks/bench_multi_model.py``) verify against brute force — so the
+verified formulation can never drift between the two.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .ilp import ILPProblem, solve, solve_brute_force
+
+_EPS = 1e-9
+
+
+def small_fleet_problem(rng: np.random.Generator) -> ILPProblem:
+    """<=3 models x <=3 GPU types, 1-2 slices per model, shared per-GPU
+    pool rows spanning every model's columns."""
+    n_models = int(rng.integers(2, 4))
+    n_gpus = int(rng.integers(2, 4))
+    M = n_models * n_gpus
+    rows, bucket_of = [], []
+    for k in range(n_models):
+        for s in range(int(rng.integers(1, 3))):
+            r = np.full(M, np.inf)
+            r[k * n_gpus:(k + 1) * n_gpus] = rng.uniform(0.1, 0.9,
+                                                         size=n_gpus)
+            rows.append(r)
+            bucket_of.append(k * 4 + s)
+    gpu_costs = rng.uniform(0.5, 8.0, size=n_gpus)
+    group_rows = np.zeros((n_gpus, M))
+    for j in range(n_gpus):
+        group_rows[j, j::n_gpus] = 1.0        # pool j spans every model
+    return ILPProblem(
+        np.stack(rows), np.tile(gpu_costs, n_models),
+        [f"m{k}:g{j}" for k in range(n_models) for j in range(n_gpus)],
+        np.asarray(bucket_of), group_rows=group_rows,
+        group_row_caps=rng.integers(1, 4, size=n_gpus).astype(float))
+
+
+def check_shared_caps_case(seed: int, time_budget_s: float = 10.0) -> None:
+    """One seeded case: branch-and-bound must agree with brute force on
+    feasibility and optimal cost, and shared caps must hold across
+    models.  Raises AssertionError on any violation."""
+    rng = np.random.default_rng(seed)
+    prob = small_fleet_problem(rng)
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=time_budget_s)
+    assert (bf is None) == (bb is None), \
+        f"seed {seed}: feasibility disagreement (bf={bf}, bb={bb})"
+    if bf is None:
+        return
+    assert bb.optimal, f"seed {seed}: small case not solved to optimality"
+    assert abs(bf.cost - bb.cost) < 1e-6, \
+        f"seed {seed}: cost mismatch bf={bf.cost} bb={bb.cost}"
+    gmat = prob.group_matrix()
+    for s in (bf, bb):
+        assert np.all(gmat @ s.counts <= prob.grouped_caps + _EPS), \
+            f"seed {seed}: shared pool cap exceeded"
+
+
+def run_crosschecks(n_cases: int, seed: int) -> dict:
+    """Benchmark gate: how many seeded cases pass ``check_shared_caps_case``."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, 10 ** 9, size=n_cases)
+    passed = 0
+    for s in seeds:
+        try:
+            check_shared_caps_case(int(s))
+            passed += 1
+        except AssertionError:
+            pass
+    return {"checked": n_cases, "passed": passed}

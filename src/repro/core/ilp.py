@@ -5,14 +5,19 @@
          Σ_i A_ij · L_ij ≤ B_j   (capacity)
          A ∈ {0,1},  B ∈ Z≥0     (+ optional availability caps B_j ≤ cap_j)
          Σ_{j∈group g} w_j · B_j ≤ cap_g   (grouped chip capacity)
+         Σ_j W_kj · B_j ≤ cap_k            (general shared-resource rows)
 
 The grouped constraint is the TP-degree extension: columns are
 (type, tp-degree) variants, w_j is the chips one instance of variant j
 consumes, and availability bounds *chips of the base type*, shared across
 all of its TP variants (an ``A10Gx4`` draws 4 chips from the same pool as
-four ``A10G``s).  It is enforced at every layer: greedy warm start, local
-search, branch-and-bound (monotone along a DFS path, so a violated prefix
-prunes soundly), and the brute-force reference.
+four ``A10G``s).  The general rows (``group_rows``) are the multi-model
+extension: fleet problems carry one column per (model, GPU variant) pair,
+and a physical pool — a variant's instances or a base type's chips — is a
+row spanning every model's columns that draw on it.  All cap families are
+enforced at every layer: greedy warm start, local search, branch-and-bound
+(monotone along a DFS path, so a violated prefix prunes soundly), and the
+brute-force reference.
 
 No off-the-shelf ILP solver is installed in this environment, so we exploit
 the problem's structure (an optimal B is always B_j = ceil(load_j)):
@@ -58,30 +63,59 @@ class ILPProblem:
     chip_weight: Optional[np.ndarray] = None  # (M,) chips per instance
     chip_group: Optional[np.ndarray] = None   # (M,) pool id or -1
     group_caps: Optional[np.ndarray] = None   # (n_pools,) chips available
+    # general shared-resource rows  Σ_j W_kj·B_j ≤ cap_k: the multi-model
+    # extension, where one physical pool (a GPU type's instances or a base
+    # type's chips) is drawn on by columns belonging to *different models*.
+    # A column may appear in any number of rows — unlike chip_group's
+    # one-pool-per-column restriction.
+    group_rows: Optional[np.ndarray] = None      # (K, M) weights
+    group_row_caps: Optional[np.ndarray] = None  # (K,)
 
     def group_matrix(self) -> Optional[np.ndarray]:
-        """(n_pools, M) weights: usage = group_matrix() @ counts."""
-        if self.group_caps is None:
-            return None
-        n_pools = len(self.group_caps)
+        """(n_groups, M) weights: usage = group_matrix() @ counts.
+
+        Stacks the chip-pool rows (chip_weight/chip_group) with the general
+        ``group_rows``; caps line up via :meth:`grouped_caps`."""
         M = self.loads.shape[1]
-        gm = np.zeros((n_pools, M))
-        for j in range(M):
-            g = int(self.chip_group[j])
-            if g >= 0:
-                gm[g, j] = self.chip_weight[j]
-        return gm
+        rows = []
+        if self.group_caps is not None:
+            gm = np.zeros((len(self.group_caps), M))
+            for j in range(M):
+                g = int(self.chip_group[j])
+                if g >= 0:
+                    gm[g, j] = self.chip_weight[j]
+            rows.append(gm)
+        if self.group_rows is not None:
+            rows.append(np.asarray(self.group_rows, dtype=float))
+        if not rows:
+            return None
+        return np.vstack(rows)
+
+    @functools.cached_property
+    def grouped_caps(self) -> Optional[np.ndarray]:
+        """Caps aligned with :meth:`group_matrix` rows.  Cached: this is
+        read in the greedy/local-search innermost loops and the cap
+        fields are fixed for the life of the problem."""
+        parts = []
+        if self.group_caps is not None:
+            parts.append(np.asarray(self.group_caps, dtype=float))
+        if self.group_row_caps is not None:
+            parts.append(np.asarray(self.group_row_caps, dtype=float))
+        if not parts:
+            return None
+        return np.concatenate(parts)
 
 
 def counts_within_caps(counts: np.ndarray, prob: ILPProblem,
                        gmat: Optional[np.ndarray] = None) -> bool:
-    """Both cap families: per-column B_j ≤ cap_j and grouped chip caps."""
+    """All cap families: per-column B_j ≤ cap_j plus grouped shared caps."""
     if prob.caps is not None and np.any(counts > prob.caps + _EPS):
         return False
-    if prob.group_caps is not None:
+    gcaps = prob.grouped_caps
+    if gcaps is not None:
         if gmat is None:
             gmat = prob.group_matrix()
-        if np.any(gmat @ counts > prob.group_caps + _EPS):
+        if np.any(gmat @ counts > gcaps + _EPS):
             return False
     return True
 
@@ -103,7 +137,48 @@ def _counts_cost(loads_sum: np.ndarray, costs: np.ndarray) -> float:
     return float(np.sum(costs * np.ceil(loads_sum - _EPS)))
 
 
-def _greedy(prob: ILPProblem) -> Optional[np.ndarray]:
+def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
+                  gmat: Optional[np.ndarray],
+                  max_sweeps: int = 50,
+                  deadline: Optional[float] = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Single-slice improving moves until a local optimum (in place).
+
+    ``deadline`` (absolute ``time.time()`` value) bounds the polish on
+    large stacked problems so solve() honours its caller's time budget;
+    the interim assignment is always feasible, so stopping early is safe.
+    """
+    N, M = prob.loads.shape
+    improved = True
+    it = 0
+    while improved and it < max_sweeps:
+        improved = False
+        it += 1
+        for i in range(N):
+            if deadline is not None and i % 64 == 0 \
+                    and time.time() > deadline:
+                return assign, load
+            cur = assign[i]
+            for j in range(M):
+                if j == cur or not np.isfinite(prob.loads[i, j]):
+                    continue
+                new_load = load.copy()
+                new_load[cur] -= prob.loads[i, cur]
+                new_load[j] += prob.loads[i, j]
+                if not counts_within_caps(np.ceil(new_load - _EPS), prob,
+                                          gmat):
+                    continue
+                if _counts_cost(new_load, prob.costs) < _counts_cost(
+                        load, prob.costs) - _EPS:
+                    assign[i] = j
+                    load = new_load
+                    improved = True
+                    break
+    return assign, load
+
+
+def _greedy(prob: ILPProblem,
+            deadline: Optional[float] = None) -> Optional[np.ndarray]:
     """Warm start: assign to argmin marginal-cost, then local moves."""
     N, M = prob.loads.shape
     gmat = prob.group_matrix()
@@ -131,29 +206,7 @@ def _greedy(prob: ILPProblem) -> Optional[np.ndarray]:
             return None
         assign[i] = best_j
         load[best_j] += prob.loads[i, best_j]
-    # local search: single-slice moves while improving
-    improved = True
-    it = 0
-    while improved and it < 50:
-        improved = False
-        it += 1
-        for i in range(N):
-            cur = assign[i]
-            for j in range(M):
-                if j == cur or not np.isfinite(prob.loads[i, j]):
-                    continue
-                new_load = load.copy()
-                new_load[cur] -= prob.loads[i, cur]
-                new_load[j] += prob.loads[i, j]
-                if not counts_within_caps(np.ceil(new_load - _EPS), prob,
-                                          gmat):
-                    continue
-                if _counts_cost(new_load, prob.costs) < _counts_cost(
-                        load, prob.costs) - _EPS:
-                    assign[i] = j
-                    load = new_load
-                    improved = True
-                    break
+    assign, _ = _local_search(prob, assign, load, gmat, deadline=deadline)
     return assign
 
 
@@ -193,6 +246,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     t0 = time.time()
     N, M = prob.loads.shape
     gmat = prob.group_matrix()
+    gcaps = prob.grouped_caps
     if N == 0:
         return ILPSolution(np.zeros(0, int), np.zeros(M, int), 0.0, True, 0.0)
 
@@ -204,8 +258,13 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     # greedy+local-search, LP rounding, single-type
     candidates: list[np.ndarray] = []
     if warm_assign is not None:
-        candidates.append(np.asarray(warm_assign, dtype=int))
-    warm = _greedy(prob)
+        wa = np.asarray(warm_assign, dtype=int)
+        # defensive: a stale warm start (solved on another catalog or
+        # slice set) must be ignored, not crash the incumbent polish with
+        # out-of-range column indices
+        if wa.shape == (N,) and len(wa) and ((wa >= 0) & (wa < M)).all():
+            candidates.append(wa)
+    warm = _greedy(prob, deadline=t0 + time_budget_s)
     if warm is not None:
         candidates.append(warm)
     # LP-relaxation rounding: each slice to argmin c_j L_ij
@@ -220,7 +279,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
             if counts_within_caps(single, prob, gmat):
                 candidates.append(np.full(N, j, dtype=int))
 
-    best_cost, best_assign = INFEASIBLE, None
+    best_cost, best_assign, best_load = INFEASIBLE, None, None
     for cand in candidates:
         load_c = np.array([prob.loads[np.arange(N)[cand == j], j].sum()
                            for j in range(M)])
@@ -231,7 +290,15 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
             continue
         c = _counts_cost(load_c, prob.costs)
         if c < best_cost:
-            best_cost, best_assign = c, cand.copy()
+            best_cost, best_assign, best_load = c, cand.copy(), load_c
+    # polish the incumbent with local moves: on large stacked problems
+    # (multi-model fleets) the branch-and-bound below is effectively an
+    # any-time heuristic, so incumbent quality is what the caller gets
+    if best_assign is not None:
+        best_assign, best_load = _local_search(prob, best_assign, best_load,
+                                               gmat,
+                                               deadline=t0 + time_budget_s)
+        best_cost = _counts_cost(best_load, prob.costs)
     # (no feasible warm start is not proof of infeasibility once grouped
     # caps are present — the branch-and-bound below still searches)
 
@@ -330,7 +397,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         if gmat is not None:
             base_usage = gmat @ base_counts - gmat[:, feas] @ base_counts[feas]
             usage = base_usage[:, None] + gmat[:, feas] @ ceil_feas.T
-            ok &= (usage <= prob.group_caps[:, None] + _EPS).all(axis=0)
+            ok &= (usage <= gcaps[:, None] + _EPS).all(axis=0)
         # committed-ceiling lower bound per composition
         lb_ceil = fixed_cost + ceil_feas @ prob.costs[feas]
         for ci in np.nonzero(ok)[0]:
@@ -382,21 +449,24 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
 
 def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
     """Exhaustive reference for tests (tiny N only).  Enforces the same
-    constraint set as ``solve``: per-type caps *and* grouped chip caps."""
+    constraint set as ``solve``: per-type caps *and* grouped chip caps.
+
+    Enumerates only each slice's *feasible* columns — forbidden (inf)
+    assignments could never win, so skipping them changes nothing except
+    the node count.  This keeps fleet problems tractable: a (model, bucket)
+    slice is finite only on its own model's columns, so the product space
+    stays |gpus|^N rather than (n_models·|gpus|)^N."""
     N, M = prob.loads.shape
     gmat = prob.group_matrix()
+    feasible = [np.nonzero(np.isfinite(prob.loads[i]))[0] for i in range(N)]
+    if any(len(f) == 0 for f in feasible):
+        return None
     best = None
     t0 = time.time()
-    for combo in itertools.product(range(M), repeat=N):
+    for combo in itertools.product(*feasible):
         load = np.zeros(M)
-        ok = True
         for i, j in enumerate(combo):
-            if not np.isfinite(prob.loads[i, j]):
-                ok = False
-                break
             load[j] += prob.loads[i, j]
-        if not ok:
-            continue
         counts = np.ceil(load - _EPS)
         if not counts_within_caps(counts, prob, gmat):
             continue

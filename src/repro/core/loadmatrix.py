@@ -6,8 +6,18 @@ families exist:
   * ``caps`` — per-*instance* caps on a named column (B_j ≤ cap_j);
   * ``chip_caps`` — per-*chip* caps on a base type, shared across all TP
     variants that draw from its pool (Σ_tp tp·B_{g,tp} ≤ cap_g).
+
+Multi-model fleets (``build_fleet_problem``) stack several models' load
+matrices into one problem: items are (model, bucket) slices, columns are
+(model, GPU variant) pairs — an instance serves exactly one model — and
+both cap families become *shared-pool* rows spanning every model's columns
+(Σ_m Σ_tp tp·B_{m,g,tp} ≤ cap_g), so the solver can reuse a GPU type for
+several models without ever exceeding the physical pool.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
 
 import numpy as np
 
@@ -38,14 +48,7 @@ def build_problem(workload: Workload, profile: Profile,
         caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
     chip_weight = chip_group = group_caps = None
     if chip_caps:
-        # normalize keys: a cap naming a catalog entry ('A10Gx2', 'v5e-4')
-        # applies to that entry's base pool; duplicate keys keep the
-        # tightest cap
-        norm: dict[str, float] = {}
-        for key, cap in chip_caps.items():
-            acc = profile.gpus.get(key)
-            base = acc.base_name if acc is not None else key
-            norm[base] = min(norm.get(base, np.inf), float(cap))
+        norm = _normalize_chip_caps(chip_caps, profile.gpus)
         pools = sorted(norm)
         pool_idx = {p: k for k, p in enumerate(pools)}
         chip_weight = np.array([float(profile.gpus[g].chips)
@@ -56,3 +59,133 @@ def build_problem(workload: Workload, profile: Profile,
     return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr,
                       chip_weight=chip_weight, chip_group=chip_group,
                       group_caps=group_caps)
+
+
+def _normalize_chip_caps(chip_caps: Mapping[str, float],
+                         gpus: Mapping[str, object]) -> dict[str, float]:
+    """A cap naming any catalog entry ('A10Gx2', 'v5e-4') binds that
+    entry's *base pool*; duplicate keys keep the tightest cap.  Single
+    source of the rule for the single-model and fleet builders alike."""
+    norm: dict[str, float] = {}
+    for key, cap in chip_caps.items():
+        acc = gpus.get(key)
+        base = acc.base_name if acc is not None else key
+        norm[base] = min(norm.get(base, np.inf), float(cap))
+    return norm
+
+
+@dataclasses.dataclass
+class FleetProblem:
+    """A stacked multi-model ILP plus the bookkeeping to read it back.
+
+    Column ``k * n_gpus + j`` is (model k, GPU j); slice rows are grouped
+    per model in ``slice_ranges`` order.  ``prob.gpu_names`` carry
+    ``"model:gpu"`` labels so solver debug output stays readable.
+    """
+
+    prob: ILPProblem
+    models: list[str]                        # model order (column-major)
+    gpu_names: list[str]                     # shared per-model column order
+    slice_ranges: dict[str, tuple[int, int]]  # model -> [lo, hi) slice rows
+
+    @property
+    def n_gpus(self) -> int:
+        return len(self.gpu_names)
+
+    def col(self, model: str, gpu: str) -> int:
+        return (self.models.index(model) * self.n_gpus
+                + self.gpu_names.index(gpu))
+
+    def col_model(self, j: int) -> str:
+        return self.models[j // self.n_gpus]
+
+    def col_gpu(self, j: int) -> str:
+        return self.gpu_names[j % self.n_gpus]
+
+
+def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
+                        slice_factor: int = 8,
+                        caps: Mapping[str, int] | None = None,
+                        gpu_subset: list[str] | None = None,
+                        chip_caps: Mapping[str, int] | None = None
+                        ) -> FleetProblem:
+    """Stack each model's §5.4.2 load matrix into one shared-pool problem.
+
+    ``members`` maps model name -> (its MaxTput profile, its workload); all
+    profiles must cover one common accelerator catalog (they are allowed to
+    differ in SLO and throughput numbers — that is the point).  ``caps``
+    and ``chip_caps`` are *pool-level*: an instance cap on ``A100`` bounds
+    the total A100 instances across every model, a chip cap on a base type
+    bounds Σ models Σ variants chips.
+    """
+    models = list(members)
+    if not models:
+        raise ValueError("fleet needs at least one model")
+    first_profile = members[models[0]][0]
+    gpu_names = sorted(gpu_subset or first_profile.gpus)
+    for m in models:
+        missing = [g for g in gpu_names if g not in members[m][0].gpus]
+        if missing:
+            raise ValueError(
+                f"model '{m}' profile lacks catalog entries {missing}: fleet "
+                "members must share one accelerator catalog")
+    G = len(gpu_names)
+    M = len(models) * G
+
+    slice_rows: list[np.ndarray] = []
+    bucket_of: list[int] = []
+    slice_ranges: dict[str, tuple[int, int]] = {}
+    bucket_offset = 0
+    for k, m in enumerate(models):
+        profile, workload = members[m]
+        lo = len(slice_rows)
+        for bi, rate in workload.slices(slice_factor):
+            row = np.full(M, np.inf)
+            for j, g in enumerate(gpu_names):
+                tput = profile.max_tput[g][bi]
+                if tput > 0:
+                    row[k * G + j] = rate / tput
+            slice_rows.append(row)
+            # per-model bucket-id offset: slices of different models are
+            # never interchangeable even when their load rows coincide
+            bucket_of.append(bucket_offset + bi)
+        slice_ranges[m] = (lo, len(slice_rows))
+        bucket_offset += len(profile.buckets)
+
+    loads = (np.stack(slice_rows) if slice_rows
+             else np.zeros((0, M)))
+    costs = np.tile(
+        np.array([first_profile.gpus[g].price_hr for g in gpu_names]),
+        len(models))
+
+    # pool-level caps -> shared group rows spanning all models' columns
+    rows: list[np.ndarray] = []
+    row_caps: list[float] = []
+    if caps:
+        for g, cap in sorted(caps.items()):
+            if g not in gpu_names:
+                continue
+            w = np.zeros(M)
+            for k in range(len(models)):
+                w[k * G + gpu_names.index(g)] = 1.0
+            rows.append(w)
+            row_caps.append(float(cap))
+    if chip_caps:
+        norm = _normalize_chip_caps(chip_caps, first_profile.gpus)
+        for base, cap in sorted(norm.items()):
+            w = np.zeros(M)
+            for j, g in enumerate(gpu_names):
+                acc = first_profile.gpus[g]
+                if acc.base_name == base:
+                    for k in range(len(models)):
+                        w[k * G + j] = float(acc.chips)
+            if w.any():
+                rows.append(w)
+                row_caps.append(float(cap))
+    prob = ILPProblem(
+        loads, costs,
+        [f"{m}:{g}" for m in models for g in gpu_names],
+        np.asarray(bucket_of, dtype=int),
+        group_rows=np.stack(rows) if rows else None,
+        group_row_caps=np.asarray(row_caps) if rows else None)
+    return FleetProblem(prob, models, gpu_names, slice_ranges)

@@ -28,7 +28,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from .accelerators import Accelerator, chips_by_base
-from .balancer import InstanceRef, LoadBalancer
+from .balancer import FleetBalancer, InstanceRef, LoadBalancer
 from .engine_model import EngineModel, ModelPerf, EngineModelParams, DEFAULT_ENGINE
 from .profiler import Profile
 from .workload import sample_requests
@@ -40,6 +40,7 @@ class SimRequest:
     arrival: float
     input_len: int
     output_len: int
+    model: str = ""                 # fleet model this request targets
     inst_id: int = -1
     first_token_t: float = -1.0
     finish_t: float = -1.0
@@ -71,10 +72,12 @@ class InstanceEngine:
 
     def __init__(self, inst_id: int, gpu: Accelerator, em: EngineModel,
                  max_prefill_tokens_per_step: int = 4096,
-                 gpu_name: str = "", launched_at: float = 0.0):
+                 gpu_name: str = "", launched_at: float = 0.0,
+                 model: str = ""):
         self.inst_id = inst_id
         self.gpu = gpu
         self.gpu_name = gpu_name or gpu.name
+        self.model = model          # fleet model whose weights are loaded
         self.em = em
         self.queue: collections.deque[SimRequest] = collections.deque()
         self.prefilling: list[tuple[SimRequest, int]] = []  # (req, remaining)
@@ -171,6 +174,13 @@ class ClusterEngine:
     step, control callback.  Control callbacks are how the orchestrator's
     telemetry windows, delayed instance launches, and fleet events run
     *inside* the simulation clock.
+
+    Multi-model fleets: further models are added with ``register_model``;
+    instances are launched *for* a model (``add_instance(..., model=m)``),
+    requests carry ``SimRequest.model``, and routing is model-first — each
+    model has its own ``LoadBalancer`` over only its instances (per-model
+    SLO, per-model output-length estimator).  The default single-model API
+    is the ``""`` model and is unchanged.
     """
 
     ARRIVAL, STEP, CONTROL = 0, 1, 2
@@ -185,10 +195,11 @@ class ClusterEngine:
         self.retired: list[InstanceEngine] = []
         # depth_aware=False restores the paper's pure MaxTput-weighted
         # routing (App. A.2) for fidelity experiments
-        self.lb = LoadBalancer(profile, [], seed=seed,
-                               straggler_factor=straggler_factor,
-                               depth_probe=self._backlog_of if depth_aware
-                               else None)
+        self.balancer = FleetBalancer(
+            seed=seed, straggler_factor=straggler_factor,
+            depth_probe=self._backlog_of if depth_aware else None)
+        self.models: dict[str, tuple[Profile, EngineModel]] = {}
+        self.register_model("", profile, em)
         self.completed: list[SimRequest] = []
         self.dropped: list[SimRequest] = []
         self.now = 0.0
@@ -199,7 +210,43 @@ class ClusterEngine:
         self._next_id = 0
         self._pending: list[SimRequest] = []   # arrivals during a fleet gap
 
+    @classmethod
+    def for_fleet(cls, models: "dict[str, tuple[Profile, EngineModel]]",
+                  **kw) -> "ClusterEngine":
+        """Build a multi-model engine from {model: (profile, engine)}.
+
+        Only the named models are registered — the single-model ``""``
+        sentinel is dropped (unless it is one of the names), so
+        ``add_instance(gpu)`` without an explicit model on a fleet engine
+        raises instead of silently creating a billed-but-unreachable
+        instance."""
+        if not models:
+            raise ValueError("fleet engine needs at least one model")
+        first = next(iter(models))
+        eng = cls(models[first][0], models[first][1], **kw)
+        if "" not in models:
+            del eng.models[""]
+            del eng.balancer.lbs[""]
+        for m, (profile, em) in models.items():
+            eng.register_model(m, profile, em)
+        return eng
+
     # -- wiring --------------------------------------------------------------
+    def register_model(self, model: str, profile: Profile,
+                       em: EngineModel) -> None:
+        """Add a model the fleet can serve (idempotent per name)."""
+        if model not in self.models:
+            self.models[model] = (profile, em)
+            self.balancer.register_model(model, profile)
+
+    @property
+    def lb(self) -> LoadBalancer:
+        """Default model's balancer (single-model back-compat); on a
+        fleet engine with no ``""`` model, the first model's balancer."""
+        if "" in self.balancer.lbs:
+            return self.balancer.lb("")
+        return next(iter(self.balancer.lbs.values()))
+
     def _backlog_of(self, inst_id: int) -> float:
         inst = self.instances.get(inst_id)
         return float(inst.backlog()) if inst is not None else 0.0
@@ -210,20 +257,49 @@ class ClusterEngine:
         heapq.heappush(self._ev, (t, kind, self._seq))
 
     # -- fleet mutation ------------------------------------------------------
-    def add_instance(self, gpu_name: str, at: Optional[float] = None) -> int:
+    def add_instance(self, gpu_name: str, at: Optional[float] = None,
+                     model: str = "") -> int:
+        if model not in self.models:
+            raise KeyError(f"model '{model}' not registered with the engine")
         t = self.now if at is None else at
         iid = self._next_id
         self._next_id += 1
-        inst = InstanceEngine(iid, self.profile.gpus[gpu_name], self.em,
+        profile, em = self.models[model]
+        inst = InstanceEngine(iid, profile.gpus[gpu_name], em,
                               self.prefill_chunk, gpu_name=gpu_name,
-                              launched_at=t)
+                              launched_at=t, model=model)
         self.instances[iid] = inst
-        self.lb.add_instance(InstanceRef(iid, gpu_name))
-        if self._pending:            # capacity is back: requeue held arrivals
-            held, self._pending = self._pending, []
-            for r in held:
-                self._push(t, self.ARRIVAL, r)
+        self.balancer.add_instance(model, InstanceRef(iid, gpu_name))
+        if self._pending:   # this model's capacity is back: requeue its holds
+            held = [r for r in self._pending if r.model == model]
+            if held:
+                self._pending = [r for r in self._pending
+                                 if r.model != model]
+                for r in held:
+                    self._push(t, self.ARRIVAL, r)
         return iid
+
+    def retarget_instance(self, inst_id: int, model: str,
+                          reload_delay_s: float = 0.0) -> list[SimRequest]:
+        """Repoint a live instance at another model (weight swap) instead
+        of drain-and-relaunch.  Its in-flight requests are returned to the
+        caller (they belong to the old model); the instance itself comes
+        back ``reload_delay_s`` later as a fresh instance of the same GPU
+        serving ``model``.  Returns the orphaned requests."""
+        inst = self.instances.get(inst_id)
+        if inst is None:
+            return []
+        if model not in self.models:
+            raise KeyError(f"model '{model}' not registered with the engine")
+        gpu_name = inst.gpu_name
+        orphans = self.remove_instance(inst_id)
+        if reload_delay_s <= 0:
+            self.add_instance(gpu_name, model=model)
+        else:
+            self.schedule(self.now + reload_delay_s,
+                          lambda e, g=gpu_name, m=model: e.add_instance(
+                              g, model=m))
+        return orphans
 
     def begin_drain(self, inst_id: int) -> None:
         """No new routes; the instance retires once its in-flight work ends."""
@@ -231,7 +307,7 @@ class ClusterEngine:
         if inst is None:
             return
         inst.draining = True
-        self.lb.mark_draining(inst_id)
+        self.balancer.mark_draining(inst.model, inst_id)
         if inst.load() == 0:
             self._retire(inst_id)
 
@@ -241,18 +317,20 @@ class ClusterEngine:
         if inst is None or not inst.draining:
             return False
         inst.draining = False
-        self.lb.undrain(inst_id)
+        self.balancer.undrain(inst.model, inst_id)
         return True
 
-    def draining_ids(self, gpu_name: Optional[str] = None) -> list[int]:
+    def draining_ids(self, gpu_name: Optional[str] = None,
+                     model: Optional[str] = None) -> list[int]:
         return [i for i, inst in self.instances.items() if inst.draining
-                and (gpu_name is None or inst.gpu_name == gpu_name)]
+                and (gpu_name is None or inst.gpu_name == gpu_name)
+                and (model is None or inst.model == model)]
 
     def _retire(self, inst_id: int) -> None:
         inst = self.instances.pop(inst_id)
         inst.retired_at = self.now
         self.retired.append(inst)
-        self.lb.remove_instance(inst_id)
+        self.balancer.remove_instance(inst.model, inst_id)
         self._stepping.discard(inst_id)
 
     def remove_instance(self, inst_id: int) -> list[SimRequest]:
@@ -268,23 +346,43 @@ class ClusterEngine:
         self._retire(inst_id)
         return orphans
 
-    def fleet_counts(self, include_draining: bool = True) -> dict[str, int]:
+    def fleet_counts(self, include_draining: bool = True,
+                     model: Optional[str] = None) -> dict[str, int]:
         out: dict[str, int] = {}
         for inst in self.instances.values():
             if not include_draining and inst.draining:
                 continue
+            if model is not None and inst.model != model:
+                continue
             out[inst.gpu_name] = out.get(inst.gpu_name, 0) + 1
         return out
 
+    def fleet_counts_by_model(self, include_draining: bool = True
+                              ) -> dict[str, dict[str, int]]:
+        """{model: {gpu: live instances}} — the fleet's per-model view
+        (models with no instances are omitted)."""
+        out: dict[str, dict[str, int]] = {}
+        for inst in self.instances.values():
+            if not include_draining and inst.draining:
+                continue
+            d = out.setdefault(inst.model, {})
+            d[inst.gpu_name] = d.get(inst.gpu_name, 0) + 1
+        return out
+
     def chips_by_base(self, include_draining: bool = True) -> dict[str, int]:
-        """Chips held per base-type pool (TP variants aggregated)."""
-        return chips_by_base(self.fleet_counts(include_draining),
-                             self.profile.gpus)
+        """Chips held per base-type pool (TP variants aggregated, summed
+        across every model's instances — the pool is shared)."""
+        out: dict[str, int] = {}
+        for inst in self.instances.values():
+            if not include_draining and inst.draining:
+                continue
+            base = inst.gpu.base_name
+            out[base] = out.get(base, 0) + inst.chips
+        return out
 
     def cost_rate(self) -> float:
         """Current fleet $/h (draining instances still bill)."""
-        return sum(self.profile.gpus[i.gpu_name].price_hr
-                   for i in self.instances.values())
+        return sum(i.gpu.price_hr for i in self.instances.values())
 
     def cost(self, until: Optional[float] = None) -> float:
         """$ spent: per-instance lifetime integral of the hourly price."""
@@ -292,7 +390,7 @@ class ClusterEngine:
         total = 0.0
         for inst in list(self.instances.values()) + self.retired:
             t1 = inst.retired_at if inst.retired_at is not None else t_end
-            total += (self.profile.gpus[inst.gpu_name].price_hr
+            total += (inst.gpu.price_hr
                       * max(0.0, t1 - inst.launched_at) / 3600.0)
         return total
 
@@ -315,10 +413,13 @@ class ClusterEngine:
         self._push(t, self.CONTROL, fn)
 
     def _route(self, r: SimRequest, now: float) -> None:
-        if not self.instances:       # fleet gap (e.g. mass preemption):
-            self._pending.append(r)  # hold until the next launch
+        # model-first: only instances serving r.model are candidates; a
+        # per-model fleet gap (e.g. mass preemption) holds that model's
+        # arrivals until one of *its* instances launches
+        if not self.balancer.has_instances(r.model):
+            self._pending.append(r)
             return
-        ref = self.lb.route(r.input_len)
+        ref = self.balancer.route(r.model, r.input_len)
         r.inst_id = ref.inst_id
         inst = self.instances[ref.inst_id]
         inst.queue.append(r)
@@ -349,8 +450,8 @@ class ClusterEngine:
             return
         dur, done = inst.step(now)
         for r in done:
-            self.lb.observe(r.input_len, r.output_len, inst_id=iid,
-                            tpot=r.tpot)
+            self.balancer.observe(inst.model, r.input_len, r.output_len,
+                                  inst_id=iid, tpot=r.tpot)
             self.completed.append(r)
         if dur is None:
             self._stepping.discard(iid)
@@ -460,3 +561,104 @@ def simulate(
     eng.run()
     return SimResult(reqs, eng.now, eng.cost(), profile.slo_tpot_s,
                      n_dropped=len(eng.dropped))
+
+
+# ---------------------------------------------------------------------------
+# Multi-model fleet simulation
+# ---------------------------------------------------------------------------
+def slo_attainment_by_model(requests: list[SimRequest],
+                            slo_by_model: "dict[str, float]",
+                            model: Optional[str] = None) -> float:
+    """THE per-model SLO judging rule, shared by every fleet surface
+    (simulator and orchestrator results): each request is measured against
+    *its own model's* TPOT SLO; dropped requests count as misses;
+    single-token responses produce no TPOT sample and are excluded."""
+    ok = n = 0
+    for r in requests:
+        if model is not None and r.model != model:
+            continue
+        if r.dropped:
+            n += 1
+        elif r.decoded > 1:
+            n += 1
+            if r.tpot <= slo_by_model[r.model] + 1e-9:
+                ok += 1
+    return ok / n if n else 1.0
+
+
+@dataclasses.dataclass
+class FleetSimResult:
+    """Simulation of several models sharing one cluster: every request is
+    judged against *its own model's* TPOT SLO."""
+
+    requests: list[SimRequest]
+    duration_s: float
+    cost: float
+    slo_by_model: dict[str, float]
+    n_dropped: int = 0
+
+    def tpots(self, model: Optional[str] = None) -> np.ndarray:
+        return np.array([r.tpot for r in self.requests
+                         if r.decoded > 1 and not r.dropped
+                         and (model is None or r.model == model)])
+
+    def slo_attainment(self, model: Optional[str] = None) -> float:
+        return slo_attainment_by_model(self.requests, self.slo_by_model,
+                                       model)
+
+    def per_model(self) -> dict[str, dict]:
+        return {m: {"slo_tpot_s": slo,
+                    "n": sum(1 for r in self.requests if r.model == m),
+                    "slo_attainment": self.slo_attainment(m)}
+                for m, slo in self.slo_by_model.items()}
+
+
+def simulate_fleet(
+    counts_by_model: "dict[str, dict[str, int]]",
+    members: "dict[str, tuple[Profile, EngineModel]]",
+    datasets: "dict[str, str]",
+    rates: "dict[str, float]",
+    n_requests: int = 2000,
+    *,
+    seed: int = 0,
+    straggler_factor: float = 0.0,
+    prefill_chunk: int = 4096,
+    depth_aware: bool = True,
+) -> FleetSimResult:
+    """Fixed multi-model allocation under Poisson load per model.
+
+    ``counts_by_model`` maps model -> {gpu: instances} (e.g. from
+    ``FleetAllocation.per_model[...].counts``); ``members`` carries each
+    model's profile (its SLO) and engine model; request volume is split
+    across models in proportion to their rates."""
+    rng = np.random.default_rng(seed)
+    eng = ClusterEngine.for_fleet(members, seed=seed,
+                                  straggler_factor=straggler_factor,
+                                  prefill_chunk=prefill_chunk,
+                                  depth_aware=depth_aware)
+    for m, counts in sorted(counts_by_model.items()):
+        for gpu_name, n in sorted(counts.items()):
+            for _ in range(int(n)):
+                eng.add_instance(gpu_name, at=0.0, model=m)
+    total_rate = sum(rates.values())
+    reqs: list[SimRequest] = []
+    rid = 0
+    for k, m in enumerate(sorted(rates)):
+        if rates[m] <= 0:
+            continue
+        n_m = max(1, int(round(n_requests * rates[m] / max(total_rate,
+                                                           1e-9))))
+        ins, outs = sample_requests(datasets[m], n_m, seed=seed + 1 + k)
+        arrivals = np.cumsum(rng.exponential(1.0 / rates[m], size=n_m))
+        for i in range(n_m):
+            reqs.append(SimRequest(rid, float(arrivals[i]), int(ins[i]),
+                                   int(outs[i]), model=m))
+            rid += 1
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    eng.drop_stranded()
+    return FleetSimResult(
+        reqs, eng.now, eng.cost(),
+        {m: members[m][0].slo_tpot_s for m in members},
+        n_dropped=len(eng.dropped))

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -58,6 +58,33 @@ def bucket_grid(input_edges=INPUT_EDGES, output_edges=OUTPUT_EDGES):
     return out
 
 
+def edge_bucket(values, edges) -> np.ndarray:
+    """Half-open bucketing along one axis: value v lands in bucket k iff
+    ``edges[k] <= v < edges[k+1]`` — a value sitting exactly on a shared
+    interior edge belongs to the *upper* bucket only, never both.  The two
+    boundary buckets absorb out-of-range values (v < edges[0] -> bucket 0;
+    v >= edges[-1] -> last bucket), so every value lands in exactly one
+    bucket and histogram mass is conserved.
+
+    This is the single bucketing rule for the whole stack: workload
+    histograms, the load balancer's routing buckets, and per-window
+    telemetry all share it, so a request can never be double-counted into
+    two adjacent buckets by drifting implementations."""
+    e = np.asarray(edges)
+    return np.clip(np.searchsorted(e, values, side="right") - 1,
+                   0, len(e) - 2).astype(int)
+
+
+def bucket_indices(inputs, outputs, input_edges=INPUT_EDGES,
+                   output_edges=OUTPUT_EDGES) -> np.ndarray:
+    """Flat bucket index (input-major, matching ``bucket_grid`` order) for
+    each (input_len, output_len) pair, under ``edge_bucket`` semantics."""
+    no = len(output_edges) - 1
+    bi = edge_bucket(inputs, input_edges)
+    bo = edge_bucket(outputs, output_edges)
+    return bi * no + bo
+
+
 @dataclasses.dataclass
 class Workload:
     """Histogram workload: bucket -> request rate (req/s)."""
@@ -94,23 +121,49 @@ class Workload:
                 if r > 0]
 
 
+@dataclasses.dataclass
+class ModelSpec:
+    """One model of a multi-model fleet: engine-model parameters, its own
+    TPOT SLO, and its traffic (a static ``Workload`` snapshot and/or a
+    time-varying trace for the orchestrator).
+
+    The fleet allocator (``MelangeFleet``) profiles each spec separately —
+    MaxTput tables depend on (model, SLO) — and packs all specs' (model,
+    bucket) slices onto one shared accelerator pool.
+    """
+
+    name: str
+    perf: object                 # ModelPerf (engine-model parameters)
+    slo_tpot_s: float
+    workload: Optional[Workload] = None
+    trace: Optional[object] = None     # repro.traces.WorkloadTrace
+    engine_params: Optional[object] = None  # EngineModelParams override
+
+    def __post_init__(self):
+        if self.slo_tpot_s <= 0:
+            raise ValueError(f"model '{self.name}': slo_tpot_s must be > 0")
+
+    def workload_at(self, t: float, *, seed: Optional[int] = None) -> Workload:
+        """The spec's provisioning workload at trace time ``t`` (falls back
+        to the static snapshot when no trace is attached)."""
+        if self.trace is not None:
+            return self.trace.workload_at(t, seed=seed)
+        if self.workload is None:
+            raise ValueError(
+                f"model '{self.name}' carries neither a workload nor a trace")
+        return self.workload
+
+
 def workload_from_samples(inputs: Sequence[int], outputs: Sequence[int],
                           total_rate: float, name: str = "sampled",
                           input_edges=INPUT_EDGES,
                           output_edges=OUTPUT_EDGES) -> Workload:
     buckets = bucket_grid(input_edges, output_edges)
     counts = np.zeros(len(buckets))
-    idx = {}
-    ni = len(input_edges) - 1
-    no = len(output_edges) - 1
-    for k, b in enumerate(buckets):
-        idx[(b.i_lo, b.o_lo)] = k
-    i_edges = np.asarray(input_edges)
-    o_edges = np.asarray(output_edges)
-    for i, o in zip(inputs, outputs):
-        bi = int(np.clip(np.searchsorted(i_edges, i, "right") - 1, 0, ni - 1))
-        bo = int(np.clip(np.searchsorted(o_edges, o, "right") - 1, 0, no - 1))
-        counts[bi * no + bo] += 1
+    if len(inputs):
+        flat = bucket_indices(np.asarray(inputs), np.asarray(outputs),
+                              input_edges, output_edges)
+        np.add.at(counts, flat, 1.0)
     rates = counts / max(1, len(inputs)) * total_rate
     return Workload(buckets, rates, name=name)
 

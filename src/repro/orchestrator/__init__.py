@@ -1,3 +1,5 @@
 """Trace-driven cluster orchestration: Autoscaler-in-the-loop simulation."""
-from .orchestrator import ClusterOrchestrator, OrchestratorResult, run_static
+from .orchestrator import (ClusterOrchestrator, FleetOrchestrator,
+                           FleetOrchestratorResult, OrchestratorResult,
+                           run_static, run_static_fleet)
 from .timeline import Decision, Timeline, WindowRecord

@@ -26,10 +26,11 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.allocator import Melange
-from repro.core.autoscaler import AllocationDiff, Autoscaler
+from repro.core.allocator import Melange, MelangeFleet
+from repro.core.autoscaler import AllocationDiff, Autoscaler, FleetAutoscaler
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
-from repro.core.simulator import ClusterEngine, SimRequest
+from repro.core.simulator import (ClusterEngine, SimRequest,
+                                  slo_attainment_by_model)
 from repro.core.workload import workload_from_samples
 from repro.traces.trace import FleetEvent, WorkloadTrace
 
@@ -377,6 +378,481 @@ class ClusterOrchestrator:
             final_fleet=eng.fleet_counts(),
             autoscaler_history=list(self.autoscaler.history),
         )
+
+
+# ---------------------------------------------------------------------------
+# Multi-model fleets: one orchestrator, several models, one shared pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FleetOrchestratorResult:
+    """Outcome of a multi-model orchestration run: every request is judged
+    against *its own model's* TPOT SLO."""
+
+    requests: list[SimRequest]
+    timeline: Timeline
+    duration_s: float
+    cost: float
+    slo_by_model: dict[str, float]
+    n_completed: int
+    n_dropped: int
+    final_fleet: dict[str, dict[str, int]]     # model -> {gpu: instances}
+    autoscaler_history: list[dict]
+
+    def slo_attainment(self, model: Optional[str] = None) -> float:
+        """Per-model SLO rule shared with ``FleetSimResult`` (dropped
+        requests count as misses)."""
+        return slo_attainment_by_model(self.requests, self.slo_by_model,
+                                       model)
+
+    @property
+    def conserved(self) -> bool:
+        return self.n_completed + self.n_dropped == len(self.requests)
+
+    @property
+    def cost_per_hour(self) -> float:
+        return self.cost / (self.duration_s / 3600.0) if self.duration_s \
+            else 0.0
+
+
+def _build_fleet_engine(fleet: MelangeFleet,
+                        counts_by_model: dict[str, dict[str, int]], *,
+                        seed: int, straggler_factor: float,
+                        prefill_chunk: int,
+                        engine_params: EngineModelParams) -> ClusterEngine:
+    members = {}
+    for m in fleet.models:
+        spec = fleet.specs[m]
+        members[m] = (fleet.members[m].profile,
+                      EngineModel(spec.perf,
+                                  spec.engine_params or engine_params))
+    eng = ClusterEngine.for_fleet(members, seed=seed,
+                                  straggler_factor=straggler_factor,
+                                  prefill_chunk=prefill_chunk)
+    for m, counts in sorted(counts_by_model.items()):
+        for gpu, n in sorted(counts.items()):
+            for _ in range(int(n)):
+                eng.add_instance(gpu, at=0.0, model=m)
+    return eng
+
+
+def _per_model_stats(fleet: MelangeFleet, eng: ClusterEngine,
+                     new_comp: list[SimRequest], new_drop: list[SimRequest],
+                     arrived: dict[str, int]) -> dict[str, dict]:
+    """Per-model telemetry for one window (or a whole static run)."""
+    out: dict[str, dict] = {}
+    for m in fleet.models:
+        slo = fleet.members[m].profile.slo_tpot_s
+        comp_m = [r for r in new_comp if r.model == m]
+        out[m] = {
+            "arrived": arrived.get(m, 0),
+            "completed": len(comp_m),
+            "dropped": sum(1 for r in new_drop if r.model == m),
+            "slo_ok": sum(1 for r in comp_m
+                          if r.decoded <= 1 or r.tpot <= slo + 1e-9),
+            "fleet": eng.fleet_counts(model=m),
+        }
+    return out
+
+
+def _fleet_requests(traces: dict[str, WorkloadTrace],
+                    seed: Optional[int]) -> list[SimRequest]:
+    """Realize every model's trace into one model-tagged request stream.
+    With an explicit seed, models draw decorrelated streams (seed + index);
+    with None each trace uses its own recorded seed."""
+    reqs: list[SimRequest] = []
+    rid = 0
+    for k, m in enumerate(sorted(traces)):
+        rz = traces[m].realize(None if seed is None else seed + k)
+        for i in range(rz.n):
+            reqs.append(SimRequest(rid, float(rz.arrivals[i]),
+                                   int(rz.input_lens[i]),
+                                   int(rz.output_lens[i]), model=m))
+            rid += 1
+    reqs.sort(key=lambda r: (r.arrival, r.rid))
+    return reqs
+
+
+class FleetOrchestrator:
+    """Drives several models' traces against one elastic shared pool.
+
+    Per-model telemetry windows feed the :class:`FleetAutoscaler`: only
+    drifted models are re-solved (against the pool net of stable models'
+    holdings), so one model's traffic swing never churns another's
+    instances.  Scale-downs of one model can hand their GPUs directly to a
+    model scaling up on the same type (*re-targeting*: a weight reload at
+    ``retarget_delay_s`` instead of a full drain + launch round-trip).
+    Trace fleet events act on the shared pool: a preemption kills chips of
+    a base type regardless of which model was using them.
+    """
+
+    def __init__(self, fleet: MelangeFleet,
+                 traces: Optional[dict[str, WorkloadTrace]] = None, *,
+                 window_s: float = 300.0,
+                 launch_delay_s: float = 60.0,
+                 retarget_delay_s: Optional[float] = None,
+                 headroom: float = 0.10,
+                 drift_threshold: float = 0.15,
+                 ewma: float = 0.3,
+                 solver_budget_s: float = 2.0,
+                 seed: int = 0,
+                 straggler_factor: float = 0.0,
+                 prefill_chunk: int = 4096,
+                 min_instances: int = 1,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE):
+        self.fleet = fleet
+        if traces is None:
+            traces = {}
+            for m in fleet.models:
+                tr = fleet.specs[m].trace
+                if tr is None:
+                    raise ValueError(
+                        f"model '{m}' has no trace: pass traces= or attach "
+                        "one to its ModelSpec")
+                traces[m] = tr
+        unknown = set(traces) - set(fleet.models)
+        if unknown:
+            raise KeyError(f"traces for unknown models: {sorted(unknown)}")
+        missing = set(fleet.models) - set(traces)
+        if missing:
+            # an omitted model would silently be provisioned (and billed)
+            # from its spec workload while generating no traffic — require
+            # a trace per fleet model
+            raise ValueError(
+                f"traces missing for fleet models {sorted(missing)}")
+        self.traces = dict(traces)
+        self.window_s = window_s
+        self.launch_delay_s = launch_delay_s
+        self.retarget_delay_s = retarget_delay_s
+        self.seed = seed
+        self.straggler_factor = straggler_factor
+        self.prefill_chunk = prefill_chunk
+        self.min_instances = min_instances
+        self.engine_params = engine_params
+        initial: dict[str, object] = {}
+        for m, tr in self.traces.items():
+            wl = tr.workload_at(0.0, seed=seed)
+            if wl.total_rate <= 0:
+                t_active = next(
+                    (s.t_start for s in tr.segments if s.rate > 0), None)
+                if t_active is None:
+                    raise ValueError(
+                        f"trace '{tr.name}' of model '{m}' carries no "
+                        "traffic")
+                wl = tr.workload_at(t_active, seed=seed)
+            initial[m] = wl
+        self.autoscaler = FleetAutoscaler(
+            fleet, initial, headroom=headroom,
+            drift_threshold=drift_threshold, ewma=ewma,
+            solver_budget_s=solver_budget_s)
+        if self.autoscaler.current is None:
+            raise ValueError(
+                "initial fleet workloads are infeasible for every GPU type "
+                "under the models' SLOs")
+        self.timeline = Timeline()
+
+    @property
+    def duration(self) -> float:
+        return max(tr.duration for tr in self.traces.values())
+
+    # -- fleet-change application -------------------------------------------
+    def _drain_victims(self, eng: ClusterEngine, model: str, gpu: str,
+                       n: int):
+        return sorted(
+            (i for i in eng.instances.values()
+             if i.model == model and i.gpu_name == gpu and not i.draining),
+            key=lambda i: i.backlog())[:n]
+
+    def _apply_diffs(self, eng: ClusterEngine,
+                     diffs: dict[str, AllocationDiff], now: float,
+                     kind: str, **detail) -> None:
+        add: dict[tuple[str, str], int] = {}
+        remove: dict[tuple[str, str], int] = {}
+        for m, d in diffs.items():
+            for g, n in d.add.items():
+                add[(m, g)] = add.get((m, g), 0) + n
+            for g, n in d.remove.items():
+                remove[(m, g)] = remove.get((m, g), 0) + n
+        # cheapest capacity first: reuse the model's own still-warm
+        # draining instances (instant, nothing orphaned) before any
+        # cross-model retarget kills a live donor
+        reused: dict[str, int] = {}
+        for (m, g), n in sorted(add.items()):
+            for iid in eng.draining_ids(g, m):
+                if add[(m, g)] == 0:
+                    break
+                if eng.cancel_drain(iid):
+                    reused[g] = reused.get(g, 0) + 1
+                    add[(m, g)] -= 1
+        # re-targeting: pair a scale-down of (m_rm, g) with a scale-up of
+        # (m_add, g) on the same GPU type — a weight reload, not a drain +
+        # cold launch; orphaned in-flight work returns to m_rm's fleet
+        retargeted: dict[str, int] = {}
+        if self.retarget_delay_s is not None:
+            for (m_add, g) in sorted(add):
+                for (m_rm, g2) in sorted(remove):
+                    if g2 != g or m_rm == m_add:
+                        continue
+                    while (add.get((m_add, g), 0) > 0
+                           and remove.get((m_rm, g), 0) > 0):
+                        # same floor the drain path enforces: a retarget
+                        # removes the donor *instantly*, so it must never
+                        # take the donor model's last live instances
+                        live_rm = sum(
+                            1 for i in eng.instances.values()
+                            if i.model == m_rm and not i.draining)
+                        if live_rm <= self.min_instances:
+                            break
+                        victims = self._drain_victims(eng, m_rm, g, 1)
+                        if not victims:
+                            break
+                        orphans = eng.retarget_instance(
+                            victims[0].inst_id, m_add,
+                            reload_delay_s=self.retarget_delay_s)
+                        eng.resubmit(orphans, now)
+                        retargeted[g] = retargeted.get(g, 0) + 1
+                        add[(m_add, g)] -= 1
+                        remove[(m_rm, g)] -= 1
+        launched: dict[str, int] = {}
+        for (m, g), n in sorted(add.items()):
+            for _ in range(n):
+                eng.schedule(now + self.launch_delay_s,
+                             lambda e, gg=g, mm=m: e.add_instance(
+                                 gg, model=mm))
+                launched[g] = launched.get(g, 0) + 1
+        drained: dict[str, int] = {}
+        deferred: list[int] = []
+        live_by_model = {
+            m: sum(1 for i in eng.instances.values()
+                   if i.model == m and not i.draining)
+            for m in self.fleet.models}
+        for (m, g), n in sorted(remove.items()):
+            if n <= 0:
+                continue
+            for v in self._drain_victims(eng, m, g, n):
+                if live_by_model[m] > self.min_instances:
+                    eng.begin_drain(v.inst_id)
+                    drained[g] = drained.get(g, 0) + 1
+                    live_by_model[m] -= 1
+                else:
+                    deferred.append(v.inst_id)
+        if deferred:
+            def retry_drains(e: ClusterEngine,
+                             ids: tuple[int, ...] = tuple(deferred)) -> None:
+                for iid in ids:
+                    inst = e.instances.get(iid)
+                    if inst is None or inst.draining:
+                        continue
+                    live_now = sum(1 for i in e.instances.values()
+                                   if i.model == inst.model
+                                   and not i.draining)
+                    if live_now > self.min_instances:
+                        e.begin_drain(iid)
+
+            eng.schedule(now + self.launch_delay_s + 1e-3, retry_drains)
+        self.timeline.record_decision(
+            now, kind,
+            add={f"{m}:{g}": n for (m, g), n in sorted(add.items()) if n},
+            remove={f"{m}:{g}": n
+                    for (m, g), n in sorted(remove.items()) if n},
+            launched=launched, reused_draining=reused, drained=drained,
+            retargeted=retargeted, deferred_drains=len(deferred), **detail)
+
+    # -- event handlers ------------------------------------------------------
+    def _on_window(self, eng: ClusterEngine, t0: float, t1: float,
+                   state: dict, control: bool = True) -> None:
+        asc = self.autoscaler
+        dt = max(t1 - t0, 1e-9)
+        arrived_by_model: dict[str, int] = {}
+        if control:
+            for m, (reqs_m, arrivals_m) in state["by_model"].items():
+                lo = int(np.searchsorted(arrivals_m, t0, side="right"))
+                hi = int(np.searchsorted(arrivals_m, t1, side="right"))
+                arrived_by_model[m] = hi - lo
+                if hi > lo:
+                    window = reqs_m[lo:hi]
+                    wl = workload_from_samples(
+                        [r.input_len for r in window],
+                        [r.output_len for r in window],
+                        total_rate=(hi - lo) / dt)
+                    asc.observe_rates(m, wl.rates)
+                else:
+                    asc.observe_rates(m, np.zeros_like(asc.observed[m]))
+            wall0 = time.perf_counter()
+            diffs = asc.maybe_rescale()
+            wall = time.perf_counter() - wall0
+            if diffs and any(not d.is_noop for d in diffs.values()):
+                h = asc.history[-1]
+                self._apply_diffs(
+                    eng, diffs, t1, "rescale", models=h["models"],
+                    drift={m: round(v, 4) for m, v in h["drift"].items()},
+                    solve_time_s=h["solve_time_s"], wall_time_s=wall,
+                    new_cost=h["new_cost"])
+        comp = eng.completed
+        drop = eng.dropped
+        c0, d0 = state["comp_ptr"], state["drop_ptr"]
+        new_comp = comp[c0:]
+        new_drop = drop[d0:]
+        per_model = _per_model_stats(self.fleet, eng, new_comp, new_drop,
+                                     arrived_by_model)
+        n_arr = sum(arrived_by_model.values())
+        self.timeline.windows.append(WindowRecord(
+            t0=t0, t1=t1, arrived=n_arr, completed=len(new_comp),
+            dropped=len(new_drop),
+            slo_ok=sum(d["slo_ok"] for d in per_model.values()),
+            observed_rate=n_arr / dt,
+            fleet=eng.fleet_counts(),
+            draining={g: len(eng.draining_ids(g))
+                      for g in eng.fleet_counts() if eng.draining_ids(g)},
+            cost_rate=eng.cost_rate(),
+            per_model=per_model))
+        state["comp_ptr"] = len(comp)
+        state["drop_ptr"] = len(drop)
+
+    def _on_fleet_event(self, eng: ClusterEngine, ev: FleetEvent) -> None:
+        asc = self.autoscaler
+        now = ev.t
+        if ev.kind == "restock":
+            asc.lift_stockout(ev.gpu)
+            self.timeline.record_decision(now, "restock", gpu=ev.gpu)
+            return
+        if ev.kind == "stockout":
+            live = _live_chips(eng, _base_of(eng, ev.gpu))
+            asc.set_chip_stockout(ev.gpu, live)
+            self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
+                                          cap=live)
+            return
+        # preemption of the shared pool: victims may belong to any model
+        victims = _select_victims(eng, ev.gpu, ev.n)
+        if not victims:
+            if ev.stockout:
+                asc.set_chip_stockout(ev.gpu, 0)
+            self.timeline.record_decision(now, "preemption-miss", gpu=ev.gpu,
+                                          stockout=ev.stockout)
+            return
+        losses: dict[str, dict[str, int]] = {}
+        for v in victims:
+            if not v.draining:
+                lm = losses.setdefault(v.model, {})
+                lm[v.gpu_name] = lm.get(v.gpu_name, 0) + 1
+        orphans: list[SimRequest] = []
+        for v in victims:
+            orphans += eng.remove_instance(v.inst_id)
+        if not losses:
+            if ev.stockout:
+                asc.set_chip_stockout(
+                    ev.gpu, eng.chips_by_base().get(_base_of(eng, ev.gpu),
+                                                    0))
+            eng.resubmit(orphans, now)
+            self.timeline.record_decision(
+                now, "preemption-drained-only", gpu=ev.gpu,
+                lost=len(victims), stockout=ev.stockout)
+            return
+        wall0 = time.perf_counter()
+        try:
+            diffs = asc.on_instance_failure(
+                next(iter(losses)), ev.gpu, stockout=ev.stockout,
+                losses=losses)
+        except RuntimeError as e:
+            eng.resubmit(orphans, now)
+            self.timeline.record_decision(
+                now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
+                error=str(e))
+            return
+        wall = time.perf_counter() - wall0
+        self._apply_diffs(
+            eng, diffs, now, "failure", gpu=ev.gpu, lost=len(victims),
+            resubmitted=len(orphans), stockout=ev.stockout,
+            solve_time_s=asc.history[-1]["solve_time_s"], wall_time_s=wall)
+        eng.resubmit(orphans, now)
+
+    # -- main entry ----------------------------------------------------------
+    def run(self, seed: Optional[int] = None) -> FleetOrchestratorResult:
+        counts0 = {m: dict(a.counts)
+                   for m, a in self.autoscaler.current.per_model.items()}
+        eng = _build_fleet_engine(self.fleet, counts0, seed=self.seed,
+                                  straggler_factor=self.straggler_factor,
+                                  prefill_chunk=self.prefill_chunk,
+                                  engine_params=self.engine_params)
+        reqs = _fleet_requests(self.traces, seed)
+        for r in reqs:
+            eng.submit(r)
+        by_model = {}
+        for m in self.traces:
+            reqs_m = [r for r in reqs if r.model == m]
+            by_model[m] = (reqs_m, np.array([r.arrival for r in reqs_m]))
+        state = {"by_model": by_model, "comp_ptr": 0, "drop_ptr": 0}
+        t = 0.0
+        duration = self.duration
+        while t < duration - 1e-9:
+            t1 = min(t + self.window_s, duration)
+            eng.schedule(t1, lambda e, a=t, b=t1: self._on_window(e, a, b,
+                                                                  state))
+            t = t1
+        for tr in self.traces.values():
+            for ev in tr.events:
+                eng.schedule(ev.t, lambda e, v=ev: self._on_fleet_event(e,
+                                                                        v))
+        eng.run()
+        eng.drop_stranded()
+        if state["comp_ptr"] < len(eng.completed) \
+                or state["drop_ptr"] < len(eng.dropped):
+            self._on_window(eng, duration, eng.now, state, control=False)
+        cons = eng.conservation()
+        assert cons["in_flight"] == 0, f"requests stranded: {cons}"
+        return FleetOrchestratorResult(
+            requests=reqs,
+            timeline=self.timeline,
+            duration_s=eng.now,
+            cost=eng.cost(),
+            slo_by_model={m: self.fleet.members[m].profile.slo_tpot_s
+                          for m in self.fleet.models},
+            n_completed=len(eng.completed),
+            n_dropped=len(eng.dropped),
+            final_fleet=eng.fleet_counts_by_model(),
+            autoscaler_history=list(self.autoscaler.history),
+        )
+
+
+def run_static_fleet(fleet: MelangeFleet,
+                     counts_by_model: dict[str, dict[str, int]],
+                     traces: dict[str, WorkloadTrace], *,
+                     seed: int = 0, realize_seed: Optional[int] = None,
+                     straggler_factor: float = 0.0,
+                     prefill_chunk: int = 4096,
+                     engine_params: EngineModelParams = DEFAULT_ENGINE
+                     ) -> FleetOrchestratorResult:
+    """Baseline: fixed per-model allocations ride out the traces with no
+    controller (the multi-model analogue of ``run_static``)."""
+    eng = _build_fleet_engine(fleet, counts_by_model, seed=seed,
+                              straggler_factor=straggler_factor,
+                              prefill_chunk=prefill_chunk,
+                              engine_params=engine_params)
+    reqs = _fleet_requests(traces, realize_seed)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    eng.drop_stranded()
+    timeline = Timeline()
+    arrived = {}
+    for r in reqs:
+        arrived[r.model] = arrived.get(r.model, 0) + 1
+    per_model = _per_model_stats(fleet, eng, eng.completed, eng.dropped,
+                                 arrived)
+    timeline.windows.append(WindowRecord(
+        t0=0.0, t1=eng.now, arrived=len(reqs),
+        completed=len(eng.completed), dropped=len(eng.dropped),
+        slo_ok=sum(d["slo_ok"] for d in per_model.values()),
+        observed_rate=len(reqs) / max(eng.now, 1e-9),
+        fleet=eng.fleet_counts(), draining={}, cost_rate=eng.cost_rate(),
+        per_model=per_model))
+    return FleetOrchestratorResult(
+        requests=reqs, timeline=timeline, duration_s=eng.now,
+        cost=eng.cost(),
+        slo_by_model={m: fleet.members[m].profile.slo_tpot_s
+                      for m in fleet.models},
+        n_completed=len(eng.completed), n_dropped=len(eng.dropped),
+        final_fleet=eng.fleet_counts_by_model(),
+        autoscaler_history=[])
 
 
 def run_static(melange: Melange, counts: dict[str, int],

@@ -25,10 +25,19 @@ class WindowRecord:
     draining: dict[str, int]
     cost_rate: float                    # fleet $/h at window close
     events: list[dict] = dataclasses.field(default_factory=list)
+    # multi-model fleets: per-model telemetry for the window — each model
+    # is judged against its *own* SLO ({model: {arrived, completed,
+    # dropped, slo_ok, fleet}}); empty for single-model runs
+    per_model: dict[str, dict] = dataclasses.field(default_factory=dict)
 
     @property
     def slo_attainment(self) -> float:
         return self.slo_ok / self.completed if self.completed else 1.0
+
+    def model_attainment(self, model: str) -> float:
+        d = self.per_model.get(model, {})
+        comp = d.get("completed", 0)
+        return d.get("slo_ok", 0) / comp if comp else 1.0
 
 
 @dataclasses.dataclass
@@ -78,11 +87,25 @@ class Timeline:
     def fleet_over_time(self) -> list[tuple[float, dict[str, int]]]:
         return [(w.t1, dict(w.fleet)) for w in self.windows]
 
+    def per_model_summary(self) -> dict[str, dict]:
+        """Aggregate per-model window telemetry (multi-model runs)."""
+        agg: dict[str, dict] = {}
+        for w in self.windows:
+            for m, d in w.per_model.items():
+                a = agg.setdefault(m, {"arrived": 0, "completed": 0,
+                                       "dropped": 0, "slo_ok": 0})
+                for k in a:
+                    a[k] += d.get(k, 0)
+        for m, a in agg.items():
+            a["slo_attainment"] = (a["slo_ok"] / a["completed"]
+                                   if a["completed"] else 1.0)
+        return agg
+
     def summary(self) -> dict:
         comp = sum(w.completed for w in self.windows)
         ok = sum(w.slo_ok for w in self.windows)
         lats = self.solver_latencies
-        return {
+        out = {
             "windows": len(self.windows),
             "completed": comp,
             "dropped": sum(w.dropped for w in self.windows),
@@ -93,6 +116,10 @@ class Timeline:
             "mean_solver_latency_s": sum(lats) / len(lats) if lats else 0.0,
             "max_solver_latency_s": max(lats) if lats else 0.0,
         }
+        per_model = self.per_model_summary()
+        if per_model:
+            out["per_model"] = per_model
+        return out
 
     def to_json(self) -> str:
         return json.dumps({

@@ -1,0 +1,156 @@
+"""Golden regression tests for the solver stack (ISSUE 3 satellite).
+
+A fixed catalog of seeded problems — single-model, TP-expanded with
+grouped chip caps, and a multi-model fleet — is solved by each layer of
+the stack (greedy + local search, branch-and-bound) and the achieved
+costs are pinned against ``tests/golden/solver_goldens.json``.  Future
+solver refactors that silently *worsen* any layer fail here immediately;
+genuine improvements (lower cost) pass and should be re-recorded.
+
+Regenerate the goldens after an intentional solver change with:
+
+    PYTHONPATH=src python tests/test_golden_regression.py --record
+"""
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Melange, MelangeFleet, ModelPerf, ModelSpec,
+                        PAPER_GPUS, build_fleet_problem, build_problem,
+                        make_workload, solve)
+from repro.core.ilp import _EPS, _greedy
+
+GOLDEN_PATH = Path(__file__).resolve().parent / "golden" / \
+    "solver_goldens.json"
+
+# achieved costs may only drift *up* by this factor before failing;
+# improvements always pass (and deserve a re-record)
+UP_TOL = 1.01
+
+# The branch-and-bound is any-time, so recorded costs must not depend on
+# machine speed.  Measured at recording time: every case reaches its
+# recorded cost within ~450 B&B nodes (<0.2 s here) and is then stable
+# from 0.2 s through 12 s budgets, so 6 s gives ~40x headroom for slow CI
+# runners.  If a future case needs budget-dependent search to hit its
+# golden, shrink the case instead of raising this.
+SOLVE_BUDGET_S = 6.0
+
+
+def _llama2_13b():
+    p = 13e9 * 2
+    return ModelPerf("llama2-13b", p, p, 2 * 40 * 8 * 128 * 2, 40, 5120)
+
+
+def build_cases() -> dict:
+    """name -> ILPProblem, built deterministically (seeded workloads,
+    analytic profiles)."""
+    cases = {}
+    m7 = ModelPerf.llama2_7b()
+
+    mel_012 = Melange(PAPER_GPUS, m7, 0.12)
+    cases["paper-arena-slo012-r8"] = build_problem(
+        make_workload("arena", 8.0), mel_012.profile)
+    cases["paper-mixed-slo012-r8"] = build_problem(
+        make_workload("mixed", 8.0), mel_012.profile)
+
+    mel_02 = Melange(PAPER_GPUS, m7, 0.2)
+    cases["paper-pubmed-slo02-r6"] = build_problem(
+        make_workload("pubmed", 6.0), mel_02.profile)
+
+    mel_tp = Melange(PAPER_GPUS, m7, 0.2, tp_degrees=(1, 2))
+    cases["tp12-pubmed-slo02-r8-capA10G4"] = build_problem(
+        make_workload("pubmed", 8.0), mel_tp.profile,
+        chip_caps={"A10G": 4})
+
+    fleet = MelangeFleet(PAPER_GPUS, [
+        ModelSpec("chat", m7, 0.12, workload=make_workload("arena", 8.0)),
+        ModelSpec("docs", _llama2_13b(), 0.2,
+                  workload=make_workload("pubmed", 4.0)),
+    ])
+    fp = build_fleet_problem(
+        {m: (fleet.members[m].profile, fleet.specs[m].workload)
+         for m in fleet.models},
+        chip_caps={"A100": 3})
+    cases["fleet-chat+docs-capA100-3"] = fp.prob
+    return cases
+
+
+def measure(prob) -> dict:
+    finite = np.isfinite(prob.loads)
+    lp_bound = float(np.where(finite, prob.loads * prob.costs,
+                              np.inf).min(axis=1).sum())
+    out = {"lp_bound": lp_bound}
+    g = _greedy(prob)
+    if g is not None:
+        load = np.array([prob.loads[np.arange(len(g))[g == j], j].sum()
+                         for j in range(prob.loads.shape[1])])
+        out["greedy_cost"] = float(
+            np.sum(prob.costs * np.ceil(load - _EPS)))
+    sol = solve(prob, time_budget_s=SOLVE_BUDGET_S)
+    assert sol is not None, "golden case became infeasible"
+    out["solve_cost"] = float(sol.cost)
+    return out
+
+
+@pytest.fixture(scope="module")
+def goldens() -> dict:
+    assert GOLDEN_PATH.exists(), \
+        f"{GOLDEN_PATH} missing — run this file with --record"
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.fixture(scope="module")
+def cases() -> dict:
+    return build_cases()
+
+
+@pytest.mark.parametrize("name", [
+    "paper-arena-slo012-r8",
+    "paper-mixed-slo012-r8",
+    "paper-pubmed-slo02-r6",
+    "tp12-pubmed-slo02-r8-capA10G4",
+    "fleet-chat+docs-capA100-3",
+])
+def test_solver_costs_within_golden_bounds(name, goldens, cases):
+    assert name in goldens, f"no golden for {name} — re-record"
+    rec = goldens[name]
+    got = measure(cases[name])
+    # the separable-LP bound is problem structure, not solver behaviour:
+    # it must reproduce exactly (catches profile / load-matrix drift)
+    assert got["lp_bound"] == pytest.approx(rec["lp_bound"], rel=1e-9), \
+        "load matrix changed: the problem itself drifted, not the solver"
+    for layer in ("greedy_cost", "solve_cost"):
+        assert layer in got, f"{layer} became infeasible on {name}"
+        assert got[layer] <= rec[layer] * UP_TOL + 1e-9, \
+            f"{layer} regressed on {name}: {got[layer]:.4f} vs " \
+            f"recorded {rec[layer]:.4f}"
+        assert got[layer] >= rec["lp_bound"] - 1e-6, \
+            f"{layer} beat the LP bound on {name}: cost accounting bug"
+    # B&B never loses to its own greedy warm start
+    assert got["solve_cost"] <= got["greedy_cost"] + 1e-9
+
+
+def test_goldens_cover_all_cases(goldens, cases):
+    assert set(goldens) == set(cases), \
+        "golden file out of sync with the case catalog — re-record"
+
+
+def _record() -> None:
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    out = {name: measure(prob) for name, prob in build_cases().items()}
+    GOLDEN_PATH.write_text(json.dumps(out, indent=1, sort_keys=True) + "\n")
+    print(f"recorded {len(out)} goldens -> {GOLDEN_PATH}")
+    for k, v in sorted(out.items()):
+        print(f"  {k}: " + ", ".join(f"{kk}={vv:.4f}"
+                                     for kk, vv in sorted(v.items())))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--record" in sys.argv:
+        _record()
+    else:
+        print(__doc__)

@@ -72,6 +72,19 @@ def test_respects_caps():
     assert sol.counts[0] <= 1
 
 
+def test_stale_warm_assign_ignored_not_crashing():
+    """A warm start with out-of-range columns (solved on some other
+    catalog) is dropped from the candidate pool, not index-error'd."""
+    loads = np.array([[0.5, 0.5]])
+    prob = ILPProblem(loads, np.array([1.0, 2.0]), ["a", "b"],
+                      np.zeros(1, int))
+    sol = solve(prob, warm_assign=np.array([5]))
+    assert sol is not None
+    assert sol.cost == pytest.approx(1.0)
+    wrong_shape = solve(prob, warm_assign=np.array([0, 1, 0]))
+    assert wrong_shape is not None
+
+
 def test_infeasible_slice_returns_none():
     loads = np.array([[np.inf, np.inf]])
     prob = ILPProblem(loads, np.array([1.0, 2.0]), ["a", "b"],

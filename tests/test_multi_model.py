@@ -1,0 +1,560 @@
+"""Multi-model fleets (ISSUE 3 tentpole): the stacked (model, bucket) x
+(model, GPU) ILP with shared pool caps, per-model Allocation views, the
+fleet autoscaler's no-churn partial re-solves, and model-first routing.
+
+Each hypothesis property has a plain deterministic core (``_check_*``) so
+the logic is exercised even where hypothesis is not installed (the stub in
+``_hypothesis_compat`` skips the ``@given`` wrappers); the ``@given``
+versions run >=100 examples in the slow lane.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterEngine, EngineModel, FleetAutoscaler,
+                        FleetBalancer, InstanceRef, Melange, MelangeFleet,
+                        ModelPerf, ModelSpec, PAPER_GPUS, SimRequest,
+                        build_fleet_problem, build_problem, make_workload,
+                        solve, workload_from_samples)
+from repro.core.crosscheck import check_shared_caps_case
+from repro.core.ilp import ILPProblem
+from repro.core.workload import bucket_grid
+
+_EPS = 1e-9
+
+# coarse grid: properties need many (profile + solve) rounds, and the
+# reduction statement is grid-independent
+SMALL_IN_EDGES = (1, 100, 1000, 8000, 32000)
+SMALL_OUT_EDGES = (1, 100, 2000)
+SMALL_BUCKETS = bucket_grid(SMALL_IN_EDGES, SMALL_OUT_EDGES)
+
+
+def llama2_13b():
+    p = 13e9 * 2
+    return ModelPerf("llama2-13b", p, p, 2 * 40 * 8 * 128 * 2, 40, 5120)
+
+
+def _small_workload(rng, dataset, rate):
+    from repro.core.workload import DATASETS
+    i, o = DATASETS[dataset](rng, 400)
+    return workload_from_samples(i, o, rate, name=dataset,
+                                 input_edges=SMALL_IN_EDGES,
+                                 output_edges=SMALL_OUT_EDGES)
+
+
+# ---------------------------------------------------------------------------
+# property (a): shared caps never exceeded; exact vs brute force
+# (instance generator + check shared with benchmarks/bench_multi_model.py
+# via repro.core.crosscheck, so both gates verify one formulation)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_shared_caps_across_models(seed):
+    """Shared chip caps are never exceeded across models; solve == brute
+    force on <=3 models x <=3 GPU types."""
+    check_shared_caps_case(seed)
+
+
+def test_shared_caps_smoke():
+    for seed in range(8):
+        check_shared_caps_case(seed)
+
+
+# ---------------------------------------------------------------------------
+# property (b): single-model fleet reduces exactly to the current solver
+# ---------------------------------------------------------------------------
+def _check_single_model_reduction(seed):
+    rng = np.random.default_rng(seed)
+    dataset = ["arena", "pubmed", "mixed"][int(rng.integers(0, 3))]
+    rate = float(rng.uniform(1.0, 8.0))
+    slo = float(rng.uniform(0.08, 0.3))
+    wl = _small_workload(rng, dataset, rate)
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), slo,
+                  buckets=SMALL_BUCKETS)
+    prob = build_problem(wl, mel.profile, slice_factor=2)
+    fp = build_fleet_problem({"only": (mel.profile, wl)}, slice_factor=2)
+    # exact structural reduction: same matrices, caps, and groups
+    assert np.array_equal(np.isfinite(prob.loads), np.isfinite(fp.prob.loads))
+    finite = np.isfinite(prob.loads)
+    assert np.allclose(prob.loads[finite], fp.prob.loads[finite])
+    assert np.allclose(prob.costs, fp.prob.costs)
+    assert np.array_equal(prob.bucket_of_slice, fp.prob.bucket_of_slice)
+    assert fp.gpu_names == prob.gpu_names
+    # identical problems -> the solver's answer is the current answer
+    single = solve(prob, time_budget_s=5.0)
+    joint = solve(fp.prob, time_budget_s=5.0)
+    assert (single is None) == (joint is None)
+    if single is not None and single.optimal and joint.optimal:
+        assert abs(single.cost - joint.cost) < 1e-9
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_single_model_reduction(seed):
+    """A one-model fleet is *exactly* the single-model problem."""
+    _check_single_model_reduction(seed)
+
+
+def test_single_model_reduction_smoke():
+    for seed in range(4):
+        _check_single_model_reduction(seed)
+
+
+def test_single_model_fleet_matches_melange_end_to_end():
+    wl = make_workload("arena", 6.0)
+    spec = ModelSpec("only", ModelPerf.llama2_7b(), 0.12, workload=wl)
+    fleet = MelangeFleet(PAPER_GPUS, [spec])
+    fa = fleet.allocate(time_budget_s=3.0)
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+    a = mel.allocate(wl, time_budget_s=3.0)
+    assert fa is not None and a is not None
+    assert abs(fa.cost_per_hour - a.cost_per_hour) < 1e-9
+    assert fa.per_model["only"].counts == a.counts
+
+
+# ---------------------------------------------------------------------------
+# property (c): shared-pool cost <= sum of siloed per-model costs
+# ---------------------------------------------------------------------------
+def _check_siloed_upper_bound(seed):
+    rng = np.random.default_rng(seed)
+    n_models = int(rng.integers(2, 4))
+    n_gpus = int(rng.integers(2, 4))
+    M = n_models * n_gpus
+    gpu_costs = rng.uniform(0.5, 8.0, size=n_gpus)
+    rows, bucket_of, silo_cost = [], [], 0.0
+    lo = 0
+    for k in range(n_models):
+        n_k = int(rng.integers(1, 3))
+        loads_k = rng.uniform(0.1, 0.9, size=(n_k, n_gpus))
+        silo = solve(ILPProblem(loads_k, gpu_costs,
+                                [f"g{j}" for j in range(n_gpus)],
+                                np.arange(n_k)), time_budget_s=5.0)
+        assert silo is not None and silo.optimal
+        silo_cost += silo.cost
+        for s in range(n_k):
+            r = np.full(M, np.inf)
+            r[k * n_gpus:(k + 1) * n_gpus] = loads_k[s]
+            rows.append(r)
+            bucket_of.append(k * 4 + s)
+        lo += n_k
+    joint = solve(ILPProblem(np.stack(rows), np.tile(gpu_costs, n_models),
+                             [f"m{k}:g{j}" for k in range(n_models)
+                              for j in range(n_gpus)],
+                             np.asarray(bucket_of)), time_budget_s=10.0)
+    assert joint is not None
+    assert joint.cost <= silo_cost + 1e-6
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_shared_cost_at_most_siloed_sum(seed):
+    """Uncapped shared-pool optimum never exceeds the siloed sum (the
+    union of silo solutions is feasible for the joint problem)."""
+    _check_siloed_upper_bound(seed)
+
+
+def test_siloed_upper_bound_smoke():
+    for seed in range(6):
+        _check_siloed_upper_bound(seed)
+
+
+def test_fleet_allocate_never_worse_than_siloed_e2e():
+    """With real profiles + caps, the joint solve is warm-started by the
+    best sequential silo, so it can never return something worse."""
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 10.0)),
+        ModelSpec("docs", llama2_13b(), 0.2,
+                  workload=make_workload("pubmed", 5.0)),
+    ]
+    fleet = MelangeFleet(PAPER_GPUS, specs)
+    caps = {"A100": 3}
+    sil = fleet.best_siloed(chip_caps=caps, time_budget_s=2.0)
+    assert sil is not None
+    fa = fleet.allocate(chip_caps=caps, time_budget_s=4.0,
+                        warm_siloed=sil)
+    assert fa is not None
+    assert fa.cost_per_hour <= sum(
+        a.cost_per_hour for a in sil.values()) + 1e-6
+    assert fa.chips_by_base().get("A100", 0) <= 3
+    # a mismatched warm solution is rejected, not silently mis-mapped:
+    # wrong model set, and wrong GPU catalog (different gpu_subset)
+    with pytest.raises(ValueError, match="warm_siloed"):
+        fleet.allocate(chip_caps=caps, time_budget_s=1.0,
+                       warm_siloed={"chat": sil["chat"]})
+    with pytest.raises(ValueError, match="warm_siloed"):
+        fleet.allocate(chip_caps=caps, time_budget_s=1.0,
+                       gpu_subset=["A100", "H100"], warm_siloed=sil)
+
+
+# ---------------------------------------------------------------------------
+# fleet problem / allocation views
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def two_model_fleet():
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 8.0)),
+        ModelSpec("docs", llama2_13b(), 0.2,
+                  workload=make_workload("pubmed", 4.0)),
+    ]
+    return MelangeFleet(PAPER_GPUS, specs)
+
+
+def test_fleet_problem_structure(two_model_fleet):
+    fleet = two_model_fleet
+    wls = {m: fleet.specs[m].workload for m in fleet.models}
+    fp = build_fleet_problem(
+        {m: (fleet.members[m].profile, wls[m]) for m in fleet.models},
+        slice_factor=2, caps={"A100": 4}, chip_caps={"H100": 3})
+    G = fp.n_gpus
+    assert fp.prob.loads.shape[1] == len(fp.models) * G
+    # cross-model columns are forbidden
+    for m in fp.models:
+        k = fp.models.index(m)
+        lo, hi = fp.slice_ranges[m]
+        other = np.ones(len(fp.models) * G, dtype=bool)
+        other[k * G:(k + 1) * G] = False
+        assert not np.isfinite(fp.prob.loads[lo:hi][:, other]).any()
+    # pool rows span every model's columns of the named GPU
+    gm = fp.prob.group_matrix()
+    assert gm.shape[0] == 2                       # one caps + one chip row
+    j_a100 = fp.gpu_names.index("A100")
+    assert all(gm[0, k * G + j_a100] == 1.0 for k in range(len(fp.models)))
+    assert fp.col_model(G) == fp.models[1] and fp.col_gpu(G) == \
+        fp.gpu_names[0]
+
+
+def test_fleet_allocation_per_model_views(two_model_fleet):
+    fa = two_model_fleet.allocate(time_budget_s=3.0)
+    assert fa is not None
+    assert set(fa.per_model) == {"chat", "docs"}
+    assert abs(sum(a.cost_per_hour for a in fa.per_model.values())
+               - fa.cost_per_hour) < 1e-9
+    total = fa.gpu_totals()
+    for (m, g), n in fa.counts().items():
+        assert fa.per_model[m].counts[g] == n
+        assert total[g] >= n
+    for m, a in fa.per_model.items():
+        # per-model view is a real Allocation: its solution's loads match
+        # its counts, and bucket_assignment is well-formed
+        ba = a.bucket_assignment(two_model_fleet.slice_factor)
+        for bi, d in ba.items():
+            assert abs(sum(d.values()) - 1.0) < 1e-9
+        assert a.profile.slo_tpot_s == \
+            two_model_fleet.specs[m].slo_tpot_s
+        assert a.total_instances == sum(a.counts.values())
+    # summary carries the fleet-level cost breakdown
+    s = fa.summary()
+    assert s["cost_per_hour"] == pytest.approx(fa.cost_per_hour)
+    assert set(s["per_model"]) == {"chat", "docs"}
+
+
+def test_fleet_shared_chip_caps_respected_e2e(two_model_fleet):
+    caps = {"A100": 2, "H100": 4}
+    fa = two_model_fleet.allocate(chip_caps=caps, time_budget_s=4.0)
+    assert fa is not None
+    used = fa.chips_by_base()
+    for base, cap in caps.items():
+        assert used.get(base, 0) <= cap
+    # per-model usages *sum* into the shared pool accounting
+    for base in caps:
+        assert used.get(base, 0) == sum(
+            a.chips_by_base().get(base, 0)
+            for a in fa.per_model.values())
+
+
+def test_model_spec_validation():
+    with pytest.raises(ValueError, match="slo"):
+        ModelSpec("bad", ModelPerf.llama2_7b(), 0.0)
+    spec = ModelSpec("ok", ModelPerf.llama2_7b(), 0.1)
+    with pytest.raises(ValueError, match="neither"):
+        spec.workload_at(0.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        MelangeFleet(PAPER_GPUS, [
+            ModelSpec("a", ModelPerf.llama2_7b(), 0.1,
+                      workload=make_workload("arena", 1.0)),
+            ModelSpec("a", ModelPerf.llama2_7b(), 0.2,
+                      workload=make_workload("arena", 1.0))])
+
+
+# ---------------------------------------------------------------------------
+# model-first routing + engine
+# ---------------------------------------------------------------------------
+def test_fleet_balancer_routes_model_first(two_model_fleet):
+    fleet = two_model_fleet
+    fb = FleetBalancer(seed=0)
+    for m in fleet.models:
+        fb.register_model(m, fleet.members[m].profile)
+    fb.add_instance("chat", InstanceRef(0, "A100"))
+    fb.add_instance("docs", InstanceRef(1, "A100"))
+    assert {fb.route("chat", 200).inst_id for _ in range(50)} == {0}
+    assert {fb.route("docs", 3000).inst_id for _ in range(50)} == {1}
+    with pytest.raises(KeyError):
+        fb.route("nope", 100)
+
+
+def test_cluster_engine_multi_model_routing(two_model_fleet):
+    fleet = two_model_fleet
+    members = {m: (fleet.members[m].profile,
+                   EngineModel(fleet.specs[m].perf))
+               for m in fleet.models}
+    eng = ClusterEngine.for_fleet(members, seed=0)
+    a = eng.add_instance("A100", model="chat")
+    b = eng.add_instance("A100", model="docs")
+    reqs = [SimRequest(0, 0.0, 200, 30, model="chat"),
+            SimRequest(1, 0.0, 3000, 100, model="docs"),
+            SimRequest(2, 0.1, 150, 20, model="chat")]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert len(eng.completed) == 3
+    by_model = {r.rid: r.inst_id for r in eng.completed}
+    assert by_model[0] == a and by_model[2] == a and by_model[1] == b
+    assert eng.fleet_counts_by_model() == {"chat": {"A100": 1},
+                                           "docs": {"A100": 1}}
+    # shared pool accounting spans models
+    assert eng.chips_by_base() == {"A100": 2}
+
+
+def test_cluster_engine_per_model_fleet_gap(two_model_fleet):
+    """A model with no live instances holds *its* arrivals pending while
+    the other model keeps serving."""
+    fleet = two_model_fleet
+    members = {m: (fleet.members[m].profile,
+                   EngineModel(fleet.specs[m].perf))
+               for m in fleet.models}
+    eng = ClusterEngine.for_fleet(members, seed=0)
+    eng.add_instance("A100", model="chat")
+    eng.submit(SimRequest(0, 0.0, 200, 10, model="chat"))
+    eng.submit(SimRequest(1, 0.0, 2000, 10, model="docs"))
+    eng.run()
+    assert len(eng.completed) == 1 and eng.completed[0].model == "chat"
+    assert eng.conservation()["in_flight"] == 1    # docs held pending
+    eng.add_instance("A100", model="docs")
+    eng.run()
+    assert len(eng.completed) == 2
+    assert eng.conservation()["in_flight"] == 0
+
+
+def test_retarget_instance_swaps_model(two_model_fleet):
+    fleet = two_model_fleet
+    members = {m: (fleet.members[m].profile,
+                   EngineModel(fleet.specs[m].perf))
+               for m in fleet.models}
+    eng = ClusterEngine.for_fleet(members, seed=0)
+    iid = eng.add_instance("A100", model="chat")
+    eng.submit(SimRequest(0, 0.0, 500, 200, model="chat"))
+    eng.run(until=0.2)                 # request now in flight
+    orphans = eng.retarget_instance(iid, "docs")
+    assert [r.rid for r in orphans] == [0]
+    assert eng.fleet_counts_by_model() == {"docs": {"A100": 1}}
+    # orphan belongs to chat: with no chat instance it must wait, not be
+    # served by the docs engine
+    eng.resubmit(orphans, eng.now)
+    eng.run()
+    assert eng.conservation()["in_flight"] == 1
+    eng.add_instance("A100", model="chat")
+    eng.run()
+    assert len(eng.completed) == 1 and eng.completed[0].model == "chat"
+
+
+# ---------------------------------------------------------------------------
+# fleet autoscaler: per-model drift, no-churn partial re-solves
+# ---------------------------------------------------------------------------
+def test_fleet_autoscaler_partial_resolve_no_churn(two_model_fleet):
+    fleet = two_model_fleet
+    asc = FleetAutoscaler(fleet, headroom=0.1, drift_threshold=0.2,
+                          solver_budget_s=2.0)
+    assert asc.current is not None
+    docs_before = dict(asc.current.per_model["docs"].counts)
+    docs_alloc_obj = asc.current.per_model["docs"]
+    for _ in range(4):
+        asc.observe_rates("chat", make_workload("arena", 24.0).rates)
+    assert asc.drift("chat") > 0.2 > asc.drift("docs")
+    diffs = asc.maybe_rescale()
+    assert diffs is not None and set(diffs) == {"chat"}
+    assert not diffs["chat"].is_noop
+    # the stable model's allocation object is *identical* — not re-solved
+    assert asc.current.per_model["docs"] is docs_alloc_obj
+    assert dict(asc.current.per_model["docs"].counts) == docs_before
+    assert asc.history[-1]["models"] == ["chat"]
+
+
+def test_fleet_autoscaler_failure_only_resolves_affected(two_model_fleet):
+    fleet = two_model_fleet
+    asc = FleetAutoscaler(fleet, headroom=0.0, solver_budget_s=2.0)
+    chat_alloc_obj = asc.current.per_model["chat"]
+    counts = dict(asc.current.per_model["docs"].counts)
+    victim = max(counts, key=counts.get)
+    diffs = asc.on_instance_failure("docs", victim, 1, stockout=True)
+    assert set(diffs) == {"docs"}
+    assert asc.current.per_model["chat"] is chat_alloc_obj
+    base = fleet.gpus[victim].base_name
+    assert base in asc.chip_caps
+    # shared pool: total chips across models respect the stockout cap
+    assert asc.current.chips_by_base().get(base, 0) <= asc.chip_caps[base]
+
+
+def test_fleet_autoscaler_rejects_unknown_loss_model(two_model_fleet):
+    asc = FleetAutoscaler(two_model_fleet, headroom=0.0,
+                          solver_budget_s=1.0)
+    with pytest.raises(KeyError, match="unknown fleet models"):
+        asc.on_instance_failure("typo-model", "A100")
+
+
+def test_fleet_engine_has_no_phantom_default_model(two_model_fleet):
+    """for_fleet registers only the named models: add_instance without an
+    explicit model must raise, not create a billed-but-unreachable
+    instance."""
+    fleet = two_model_fleet
+    members = {m: (fleet.members[m].profile,
+                   EngineModel(fleet.specs[m].perf))
+               for m in fleet.models}
+    eng = ClusterEngine.for_fleet(members, seed=0)
+    assert set(eng.models) == set(fleet.models)
+    with pytest.raises(KeyError):
+        eng.add_instance("A100")
+    # the back-compat lb property still resolves (first model's balancer)
+    assert eng.lb is eng.balancer.lb(fleet.models[0])
+
+
+def test_fleet_autoscaler_stockout_counts_all_models(two_model_fleet):
+    fleet = two_model_fleet
+    asc = FleetAutoscaler(fleet, headroom=0.0, solver_budget_s=2.0)
+    asc.set_chip_stockout("A100", 1)
+    diffs = asc.maybe_rescale(force=True)
+    assert diffs is not None
+    assert asc.current.chips_by_base().get("A100", 0) <= 1
+    asc.lift_stockout("A100")
+    assert "A100" not in asc.chip_caps
+
+
+# ---------------------------------------------------------------------------
+# fleet orchestrator (slow: trace-driven cluster simulations)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fleet_with_traces():
+    from repro.traces import TraceSegment, WorkloadTrace
+    chat_tr = WorkloadTrace("chat", [
+        TraceSegment(0.0, 300.0, 2.0, {"arena": 1.0}),
+        TraceSegment(300.0, 300.0, 8.0, {"arena": 1.0})], seed=3)
+    docs_tr = WorkloadTrace("docs", [
+        TraceSegment(0.0, 600.0, 2.0, {"pubmed": 1.0})], seed=4)
+    specs = [ModelSpec("chat", ModelPerf.llama2_7b(), 0.12, trace=chat_tr),
+             ModelSpec("docs", llama2_13b(), 0.2, trace=docs_tr)]
+    return MelangeFleet(PAPER_GPUS, specs)
+
+
+@pytest.mark.slow
+def test_fleet_orchestrator_one_model_drifts_other_not_churned(
+        fleet_with_traces):
+    """Satellite: a two-model trace where only chat ramps — docs keeps its
+    instances (no-op re-solve stability for the stable model)."""
+    from repro.orchestrator import FleetOrchestrator
+    orch = FleetOrchestrator(fleet_with_traces, window_s=100.0,
+                             launch_delay_s=20.0, solver_budget_s=1.0,
+                             drift_threshold=0.10, seed=1)
+    docs_before = dict(
+        orch.autoscaler.current.per_model["docs"].counts)
+    res = orch.run()
+    assert res.conserved and res.n_dropped == 0
+    # every re-solve touched only the drifted model
+    rescales = [h for h in res.autoscaler_history
+                if h["event"] == "rescale"]
+    assert rescales, "the chat ramp must trigger at least one re-solve"
+    for h in rescales:
+        assert h["models"] == ["chat"]
+    assert dict(
+        orch.autoscaler.current.per_model["docs"].counts) == docs_before
+    # docs instances were never drained/launched in the sim either
+    assert res.final_fleet.get("docs") == docs_before
+    for d in res.timeline.decisions:
+        if d.kind == "rescale":
+            assert all(key.startswith("chat:")
+                       for key in list(d.detail.get("add", {}))
+                       + list(d.detail.get("remove", {})))
+    # per-model SLO attainment is tracked and met
+    assert res.slo_attainment("chat") >= 0.95
+    assert res.slo_attainment("docs") >= 0.95
+    pm = res.timeline.summary()["per_model"]
+    assert set(pm) == {"chat", "docs"}
+    assert pm["docs"]["completed"] > 0
+
+
+@pytest.mark.slow
+def test_fleet_orchestrator_pool_preemption_spans_models(fleet_with_traces):
+    """A pool-level preemption kills instances of whichever models hold
+    the chips; only affected models are re-solved, and the run conserves
+    requests."""
+    from repro.orchestrator import FleetOrchestrator
+    from repro.traces import FleetEvent, TraceSegment, WorkloadTrace
+    chat_tr = WorkloadTrace("chat", [
+        TraceSegment(0.0, 400.0, 3.0, {"arena": 1.0})], seed=5,
+        events=[FleetEvent(150.0, "preemption", "A100", 2)])
+    docs_tr = WorkloadTrace("docs", [
+        TraceSegment(0.0, 400.0, 2.0, {"pubmed": 1.0})], seed=6)
+    orch = FleetOrchestrator(fleet_with_traces,
+                             {"chat": chat_tr, "docs": docs_tr},
+                             window_s=100.0, launch_delay_s=20.0,
+                             solver_budget_s=1.0, seed=2)
+    res = orch.run()
+    assert res.conserved
+    failures = [h for h in res.autoscaler_history
+                if h["event"] == "failure"]
+    if failures:                       # victims held A100 chips
+        for h in failures:
+            assert set(h["models"]) <= {"chat", "docs"}
+    assert res.slo_attainment() >= 0.9
+
+
+@pytest.mark.slow
+def test_fleet_orchestrator_retargeting(fleet_with_traces):
+    """A paired scale-down/scale-up on the same GPU type becomes a
+    re-target (weight reload), not a drain + cold launch."""
+    from repro.core.autoscaler import AllocationDiff
+    from repro.orchestrator import FleetOrchestrator
+    orch = FleetOrchestrator(fleet_with_traces, window_s=100.0,
+                             launch_delay_s=30.0, retarget_delay_s=5.0,
+                             solver_budget_s=1.0, seed=3)
+    from repro.orchestrator.orchestrator import _build_fleet_engine
+    eng = _build_fleet_engine(
+        orch.fleet,
+        {"chat": {"A100": 2}, "docs": {"H100": 1}},
+        seed=0, straggler_factor=0.0, prefill_chunk=4096,
+        engine_params=orch.engine_params)
+    diffs = {"chat": AllocationDiff(add={}, remove={"A100": 1}),
+             "docs": AllocationDiff(add={"A100": 1}, remove={})}
+    orch._apply_diffs(eng, diffs, 10.0, "rescale")
+    d = [d for d in orch.timeline.decisions if d.kind == "rescale"][-1]
+    assert d.detail["retargeted"] == {"A100": 1}
+    assert d.detail["launched"] == {} and d.detail["drained"] == {}
+    eng.run()                           # let the reload land
+    assert eng.fleet_counts_by_model() == {"chat": {"A100": 1},
+                                           "docs": {"A100": 1,
+                                                    "H100": 1}}
+    # min-instances floor: a retarget must never take a model's *last*
+    # live instance (it removes the donor instantly, unlike a drain)
+    diffs2 = {"chat": AllocationDiff(add={}, remove={"A100": 1}),
+              "docs": AllocationDiff(add={"A100": 1}, remove={})}
+    orch._apply_diffs(eng, diffs2, 20.0, "rescale")
+    d2 = [d for d in orch.timeline.decisions if d.kind == "rescale"][-1]
+    assert d2.detail["retargeted"] == {}
+    assert d2.detail["launched"] == {"A100": 1}     # cold launch instead
+    assert d2.detail["deferred_drains"] == 1        # floor blocks drain too
+    assert any(i.model == "chat" for i in eng.instances.values())
+
+
+@pytest.mark.slow
+def test_fleet_orchestrator_requires_trace_per_model(fleet_with_traces):
+    """An omitted model would be provisioned forever while generating no
+    traffic — the orchestrator refuses the partial traces dict."""
+    from repro.orchestrator import FleetOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    tr = WorkloadTrace("only-chat", [
+        TraceSegment(0.0, 100.0, 1.0, {"arena": 1.0})], seed=1)
+    with pytest.raises(ValueError, match="missing"):
+        FleetOrchestrator(fleet_with_traces, {"chat": tr})

@@ -3,7 +3,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.workload import (Workload, bucket_grid, make_workload,
+from repro.core.workload import (INPUT_EDGES, OUTPUT_EDGES, ModelSpec,
+                                 Workload, bucket_grid, bucket_indices,
+                                 edge_bucket, make_workload,
                                  sample_requests, workload_from_samples)
 
 
@@ -50,3 +52,61 @@ def test_property_histogram_conserves_rate(pairs, rate):
     assert abs(wl.total_rate - rate) < 1e-6 * max(1, rate)
     sc = wl.scaled(2 * rate)
     assert abs(sc.total_rate - 2 * rate) < 1e-6 * max(1, rate)
+
+
+# ---------------------------------------------------------------------------
+# bucket-edge semantics (ISSUE 3 satellite): half-open [lo, hi) intervals —
+# a request sitting exactly on a shared edge lands in exactly ONE bucket
+# (the upper), never both, and every consumer uses the same rule
+# ---------------------------------------------------------------------------
+def test_boundary_sample_lands_in_exactly_one_upper_bucket():
+    wl = workload_from_samples([25], [25], total_rate=3.0)
+    nz = wl.nonzero()
+    assert len(nz) == 1                       # one bucket, full rate
+    b, r = nz[0]
+    assert r == pytest.approx(3.0)
+    assert (b.i_lo, b.o_lo) == (25, 25)       # upper bucket on both axes
+
+
+def test_every_shared_edge_counted_once():
+    # one sample exactly on each interior edge of both axes: total mass
+    # must be exactly n (no double count into adjacent buckets)
+    ins = list(INPUT_EDGES[1:-1])
+    outs = [OUTPUT_EDGES[1 + i % (len(OUTPUT_EDGES) - 2)]
+            for i in range(len(ins))]
+    wl = workload_from_samples(ins, outs, total_rate=float(len(ins)))
+    assert wl.rates.sum() == pytest.approx(len(ins))
+    for b, r in wl.nonzero():
+        # upper-bucket rule: each sample's value equals its bucket's lower
+        # edge on the input axis
+        assert b.i_lo in ins
+
+
+def test_edge_bucket_half_open_and_clipping():
+    edges = (1, 25, 100, 250)
+    assert edge_bucket(24, edges) == 0
+    assert edge_bucket(25, edges) == 1         # boundary -> upper bucket
+    assert edge_bucket(26, edges) == 1
+    assert edge_bucket(0, edges) == 0          # below range -> first
+    assert edge_bucket(250, edges) == 2        # top edge -> last bucket
+    assert edge_bucket(9999, edges) == 2       # above range -> last
+    assert list(edge_bucket(np.array([1, 25, 100, 99]), edges)) == \
+        [0, 1, 2, 1]
+
+
+def test_balancer_and_workload_agree_on_every_edge():
+    """The LB's routing buckets and the histogram share one bucketing rule
+    — a boundary request can't be profiled in one bucket and routed by
+    another."""
+    from repro.core.balancer import LoadBalancer
+    lb = LoadBalancer(profile=None, instances=[])
+    for i in list(INPUT_EDGES) + [v + 1 for v in INPUT_EDGES[:-1]]:
+        for o in list(OUTPUT_EDGES) + [v - 1 for v in OUTPUT_EDGES[1:]]:
+            assert lb.bucket_index(i, float(o)) == \
+                int(bucket_indices([i], [o])[0])
+
+
+def test_model_spec_workload_fallbacks():
+    wl = make_workload("arena", 2.0)
+    spec = ModelSpec("m", object(), 0.1, workload=wl)
+    assert spec.workload_at(123.0) is wl       # static snapshot fallback
