@@ -1,0 +1,281 @@
+"""Spot/on-demand price-tier mixing vs all-on-demand Mélange (ISSUE 4).
+
+Real clouds sell the same chip at a 60-70% spot discount in exchange for
+preemption risk.  With the catalog tier-expanded, the ILP prices that risk
+honestly — spot columns' throughput is discounted by preemption_rate x
+replacement delay, and ``min_ondemand_frac`` pins each bucket's
+SLO-critical share onto non-preemptible instances — and buys the rest of
+the capacity at the discount.  Arms:
+
+  * mixed-tier    — Mélange over {on-demand, spot} variants with a 50%
+                    per-bucket on-demand floor;
+  * all-ondemand  — the paper's heterogeneous optimum, on-demand only
+                    (the strongest preemption-immune baseline).
+
+Derived facts:
+
+  * a preemption-rate x discount sweep: the mixed-tier allocation is
+    strictly cheaper $/hr wherever a discount exists, degrading gracefully
+    as the market gets stormier (the availability discount eats the win);
+  * simulated SLO attainment of the mixed allocation stays >=99% *with
+    spot preemptions drawn from each variant's Poisson rate* (the
+    orchestrator re-solves and backfills — on-demand is never reclaimed);
+  * a spot-market *storm* (rates ~100x the quoted ones) still conserves
+    every request at high attainment: preempted work re-routes, lost spot
+    capacity is re-bought (or backfilled on-demand under stockout);
+  * the stacked formulation is verified: brute-force cross-checks on
+    small tiered instances (shared physical + spot sub-pool caps, floor
+    ceilings), and the parity reduction — spot priced at on-demand with
+    preemption_rate=0 solves to *exactly* the unexpanded cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (Melange, ModelPerf, PAPER_GPUS, build_problem,
+                        make_workload, solve, spot_share_by_bucket)
+from repro.core.crosscheck import run_tier_crosschecks
+from repro.core.workload import DATASETS, bucket_grid, workload_from_samples
+from repro.orchestrator import ClusterOrchestrator, run_static
+from repro.traces import TraceSegment, WorkloadTrace
+
+from .common import emit, parse_bench_args, row, timed
+
+SLO_TPOT_S = 0.12
+RATE = 8.0
+MIN_ONDEMAND_FRAC = 0.5
+REPLACEMENT_DELAY_S = 120.0
+SEED = 17
+SWEEP_RATES = (0.05, 0.15, 0.4, 1.0)      # preemptions / instance-hour
+SWEEP_DISCOUNTS = (0.3, 0.6, 0.75)        # spot = (1 - d) x on-demand
+SIM_DURATION_S = 600.0
+# the quoted reclaim rates (~0.15/h) would fire ~0.02 events in a
+# 10-minute sim; the sim arms run an *accelerated* market instead,
+# compressing days of spot exposure into the window.  At 120s replacement
+# delay, availability = 1 - rate/30: 8/h keeps spot well worth buying
+# (avail 0.73), 15/h is a storm where spot only just breaks even.
+ACCEL_RATE_PER_HR = 8.0
+STORM_RATE_PER_HR = 15.0
+
+SMALL_IN_EDGES = (1, 100, 1000, 8000, 32000)
+SMALL_OUT_EDGES = (1, 100, 2000)
+
+
+def _catalog(preemption_rate=None, discount=None):
+    out = {}
+    for k, v in PAPER_GPUS.items():
+        spot = (v.price_hr * (1 - discount) if discount is not None
+                else v.spot_price_hr)
+        rate = v.preemption_rate if preemption_rate is None else \
+            preemption_rate
+        out[k] = dataclasses.replace(v, spot_price_hr=spot,
+                                     preemption_rate=rate)
+    return out
+
+
+def sweep(wl, smoke: bool) -> dict:
+    """Allocation-level preemption-rate x discount grid."""
+    od_mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), SLO_TPOT_S)
+    od = od_mel.allocate(wl, time_budget_s=1.0 if smoke else 3.0)
+    assert od is not None, "all-on-demand arm infeasible"
+    rates = SWEEP_RATES[:1] if smoke else SWEEP_RATES
+    discounts = SWEEP_DISCOUNTS[:1] if smoke else SWEEP_DISCOUNTS
+    grid = {}
+    for r in rates:
+        for d in discounts:
+            mel = Melange(_catalog(r, d), ModelPerf.llama2_7b(),
+                          SLO_TPOT_S, spot_tiers=True)
+            a = mel.allocate(wl, min_ondemand_frac=MIN_ONDEMAND_FRAC,
+                             replacement_delay_s=REPLACEMENT_DELAY_S,
+                             time_budget_s=1.0 if smoke else 2.5)
+            key = f"rate{r:g}_disc{d:g}"
+            grid[key] = {
+                "mixed_cost": None if a is None else a.cost_per_hour,
+                "counts": None if a is None else dict(a.counts),
+                "saving_pct": None if a is None else round(
+                    100 * (1 - a.cost_per_hour / od.cost_per_hour), 2),
+            }
+    return {"ondemand_cost": od.cost_per_hour,
+            "ondemand_counts": dict(od.counts), "grid": grid}
+
+
+def headline(wl, smoke: bool) -> dict:
+    """Default-catalog comparison + floor verification."""
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), SLO_TPOT_S,
+                  spot_tiers=True)
+    mixed = mel.allocate(wl, min_ondemand_frac=MIN_ONDEMAND_FRAC,
+                         replacement_delay_s=REPLACEMENT_DELAY_S,
+                         time_budget_s=1.5 if smoke else 4.0)
+    ondemand = mel.allocate(
+        wl, gpu_subset=[g for g in mel.gpus if not mel.gpus[g].is_spot],
+        time_budget_s=1.5 if smoke else 4.0)
+    assert mixed is not None and ondemand is not None
+    # per-bucket floor holds on the returned assignment
+    prob = build_problem(mixed.workload, mel.profile,
+                         min_ondemand_frac=MIN_ONDEMAND_FRAC,
+                         replacement_delay_s=REPLACEMENT_DELAY_S)
+    floor_ok = all(s <= 1 - MIN_ONDEMAND_FRAC + 1e-9 for s in
+                   spot_share_by_bucket(prob,
+                                        mixed.solution.assignment).values())
+    return {
+        "mixed": {"cost_per_hour": mixed.cost_per_hour,
+                  "counts": dict(mixed.counts),
+                  "cost_by_tier": mixed.cost_by_tier()},
+        "ondemand": {"cost_per_hour": ondemand.cost_per_hour,
+                     "counts": dict(ondemand.counts)},
+        "saving_pct": round(
+            100 * (1 - mixed.cost_per_hour / ondemand.cost_per_hour), 2),
+        "floor_ok": floor_ok,
+        "_allocs": (mel, mixed, ondemand),
+    }
+
+
+def simulate(mel, mixed, ondemand, smoke: bool) -> dict:
+    """Attainment with spot preemptions drawn from the Poisson rates."""
+    dur = 200.0 if smoke else SIM_DURATION_S
+    rate = 2.0 if smoke else RATE
+    tr = WorkloadTrace("steady-mixed", [
+        TraceSegment(0.0, dur, rate, {"mixed": 1.0})], seed=SEED)
+
+    def run_arm(m, preemption_rate=None, stockout_prob=0.0):
+        cat = m.gpus if preemption_rate is None else {
+            k: dataclasses.replace(v, preemption_rate=(
+                v.preemption_rate if not v.is_spot else preemption_rate))
+            for k, v in m.gpus.items()}
+        mel_arm = Melange(cat, ModelPerf.llama2_7b(), SLO_TPOT_S,
+                          profile=None if preemption_rate is not None
+                          else m.profile)
+        orch = ClusterOrchestrator(
+            mel_arm, tr, window_s=100.0, launch_delay_s=20.0,
+            solver_budget_s=0.5, seed=SEED,
+            min_ondemand_frac=MIN_ONDEMAND_FRAC,
+            replacement_delay_s=REPLACEMENT_DELAY_S,
+            spot_sample_s=50.0, spot_stockout_prob=stockout_prob,
+            spot_restock_s=150.0)
+        res = orch.run()
+        preempts = sum(1 for d in res.timeline.decisions
+                       if d.kind in ("failure", "preemption-drained-only"))
+        return {"slo_attainment": res.slo_attainment,
+                "conserved": res.conserved, "dropped": res.n_dropped,
+                "cost": res.cost, "preemption_events": preempts}
+
+    out = {"mixed": run_arm(mel, preemption_rate=ACCEL_RATE_PER_HR,
+                            stockout_prob=0.3)}
+    # the on-demand arm is preemption-immune by construction
+    od_static = run_static(
+        Melange(PAPER_GPUS, ModelPerf.llama2_7b(), SLO_TPOT_S),
+        ondemand.counts, tr, seed=SEED)
+    out["ondemand_static"] = {"slo_attainment": od_static.slo_attainment,
+                              "conserved": od_static.conserved,
+                              "cost": od_static.cost}
+    if not smoke:
+        out["spot_storm"] = run_arm(mel, preemption_rate=STORM_RATE_PER_HR,
+                                    stockout_prob=0.5)
+    return out
+
+
+def parity_reduction() -> dict:
+    """preemption_rate=0 + spot price == on-demand price must solve to
+    exactly the unexpanded cost (small grid so both solves are exact)."""
+    buckets = bucket_grid(SMALL_IN_EDGES, SMALL_OUT_EDGES)
+    rng = np.random.default_rng(SEED)
+    i, o = DATASETS["mixed"](rng, 400)
+    wl = workload_from_samples(i, o, 6.0, input_edges=SMALL_IN_EDGES,
+                               output_edges=SMALL_OUT_EDGES)
+    plain = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), SLO_TPOT_S,
+                    buckets=buckets)
+    parity_cat = {k: dataclasses.replace(v, spot_price_hr=v.price_hr,
+                                         preemption_rate=0.0)
+                  for k, v in PAPER_GPUS.items()}
+    tiered = Melange(parity_cat, ModelPerf.llama2_7b(), SLO_TPOT_S,
+                     buckets=buckets, spot_tiers=True)
+    sp = solve(build_problem(wl, plain.profile, slice_factor=2),
+               time_budget_s=5.0)
+    st = solve(build_problem(wl, tiered.profile, slice_factor=2,
+                             replacement_delay_s=1800.0),
+               time_budget_s=10.0)
+    ok = (sp is not None and st is not None and sp.optimal and st.optimal
+          and abs(sp.cost - st.cost) < 1e-9)
+    return {"ok": bool(ok),
+            "plain_cost": None if sp is None else sp.cost,
+            "tiered_cost": None if st is None else st.cost}
+
+
+def compute(smoke: bool = False):
+    wl = make_workload("mixed", 2.0 if smoke else RATE)
+    out: dict = {"setup": {"slo_tpot_s": SLO_TPOT_S,
+                           "min_ondemand_frac": MIN_ONDEMAND_FRAC,
+                           "replacement_delay_s": REPLACEMENT_DELAY_S,
+                           "smoke": smoke}}
+    out["sweep"] = sweep(wl, smoke)
+    head = headline(wl, smoke)
+    mel, mixed, ondemand = head.pop("_allocs")
+    out["headline"] = head
+    out["simulation"] = simulate(mel, mixed, ondemand, smoke)
+    out["brute_force"] = run_tier_crosschecks(3 if smoke else 20, SEED)
+    out["reduction"] = parity_reduction()
+
+    # acceptance: strict $/hr win at >=99% simulated attainment, the
+    # formulation brute-force-verified and the parity reduction exact
+    bf = out["brute_force"]
+    assert bf["passed"] == bf["checked"], \
+        f"tier brute-force cross-checks failed: {bf}"
+    assert out["reduction"]["ok"], \
+        f"parity reduction violated: {out['reduction']}"
+    assert head["floor_ok"], "per-bucket on-demand floor violated"
+    if smoke:
+        # a smoke-sized workload can fit one instance, where mixed ==
+        # on-demand is the optimum; the strict win is gated full-size only
+        assert head["mixed"]["cost_per_hour"] <= \
+            head["ondemand"]["cost_per_hour"] + 1e-9
+    else:
+        assert head["mixed"]["cost_per_hour"] < \
+            head["ondemand"]["cost_per_hour"] - 1e-6, \
+            "mixed tiers must be strictly cheaper than all-on-demand"
+    sim = out["simulation"]
+    assert sim["mixed"]["conserved"]
+    if not smoke:
+        assert sim["mixed"]["slo_attainment"] >= 0.99, \
+            "the cost win must hold at >=99% simulated attainment"
+        assert sim["mixed"]["dropped"] == 0
+        assert sim["mixed"]["preemption_events"] >= 1, \
+            "the attainment claim must actually ride out spot reclaims"
+        assert sim["ondemand_static"]["slo_attainment"] >= 0.99
+        assert sim["spot_storm"]["conserved"]
+        assert sim["spot_storm"]["slo_attainment"] >= 0.95
+        # every sweep cell with a discount must at least tie on-demand
+        for key, cell in out["sweep"]["grid"].items():
+            if cell["mixed_cost"] is not None:
+                assert cell["mixed_cost"] <= \
+                    out["sweep"]["ondemand_cost"] + 1e-6, key
+    return out
+
+
+def main(smoke: bool = False):
+    out, us = timed(compute, smoke)
+    emit("bench_spot_mix", out)
+    h = out["headline"]
+    sim = out["simulation"]
+    storm = sim.get("spot_storm", {})
+    return [
+        row("spot_mix_headline", us / 3,
+            f"mixed=${h['mixed']['cost_per_hour']:.2f}/h "
+            f"ondemand=${h['ondemand']['cost_per_hour']:.2f}/h "
+            f"saving={h['saving_pct']:.1f}% floor_ok={h['floor_ok']}"),
+        row("spot_mix_simulation", us / 3,
+            f"attain={sim['mixed']['slo_attainment']*100:.2f}% "
+            f"preempts={sim['mixed']['preemption_events']} "
+            f"storm_attain={storm.get('slo_attainment', float('nan'))*100:.1f}%"),
+        row("spot_mix_verification", us / 3,
+            f"brute_force={out['brute_force']['passed']}"
+            f"/{out['brute_force']['checked']} "
+            f"reduction_ok={out['reduction']['ok']}"),
+    ]
+
+
+if __name__ == "__main__":
+    ns = parse_bench_args()
+    for r in main(smoke=ns.smoke):
+        print(",".join(map(str, r)))

@@ -19,7 +19,7 @@ from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
 from repro.core.ilp import (ILPProblem, counts_within_caps, solve,
                             solve_brute_force)
 
-from .common import emit, row, timed
+from .common import emit, parse_bench_args, row, timed
 
 SETTINGS = (                    # (dataset, rate req/s, TPOT SLO s)
     ("pubmed", 4.0, 0.20),
@@ -31,15 +31,16 @@ SETTINGS = (                    # (dataset, rate req/s, TPOT SLO s)
 DEGREES = (1, 2, 4)
 
 
-def compute():
+def compute(smoke: bool = False):
     model = ModelPerf.llama2_7b()
     out = {}
-    for ds, rate, slo in SETTINGS:
+    settings = SETTINGS[:1] if smoke else SETTINGS
+    for ds, rate, slo in settings:
         wl = make_workload(ds, rate)
         fixed = Melange(PAPER_GPUS, model, slo).allocate(
-            wl, time_budget_s=1.5)
+            wl, time_budget_s=0.5 if smoke else 1.5)
         tp = Melange(PAPER_GPUS, model, slo, tp_degrees=DEGREES).allocate(
-            wl, time_budget_s=4.0)
+            wl, time_budget_s=1.0 if smoke else 4.0)
         key = f"{ds}_r{rate:g}_slo{int(slo * 1000)}ms"
         entry = {"fixed_cost": None if fixed is None else fixed.cost_per_hour,
                  "fixed_alloc": None if fixed is None else fixed.counts,
@@ -52,7 +53,7 @@ def compute():
             entry["uses_tp"] = any(
                 "x" in g and tp.profile.gpus[g].tp > 1 for g in tp.counts)
         out[key] = entry
-    out["cap_crosscheck"] = _brute_force_crosscheck()
+    out["cap_crosscheck"] = _brute_force_crosscheck(5 if smoke else 25)
     return out
 
 
@@ -83,8 +84,8 @@ def _brute_force_crosscheck(n_cases: int = 25) -> dict:
     return {"cases": n_cases, "agree": agree, "cap_respected": cap_ok}
 
 
-def main():
-    tables, us = timed(compute)
+def main(smoke: bool = False):
+    tables, us = timed(compute, smoke)
     emit("bench_tp_aware", tables)
     rows = []
     strict_wins = [k for k, v in tables.items()
@@ -114,5 +115,7 @@ def main():
 
 
 if __name__ == "__main__":
-    for r in main():
+    from .common import parse_bench_args
+    ns = parse_bench_args()
+    for r in main(smoke=ns.smoke):
         print(",".join(map(str, r)))

@@ -1,11 +1,29 @@
-"""Shared benchmark utilities: timing + result emission."""
+"""Shared benchmark utilities: timing, result emission, and the CI smoke
+mode (``--smoke``): tiny problem sizes, no JSON writes, scale-dependent
+acceptance gates relaxed — just enough to prove every benchmark script
+still imports, runs, and exercises its code paths."""
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+SMOKE = False
+
+
+def parse_bench_args(argv=None) -> argparse.Namespace:
+    """Standard benchmark CLI; sets the module-global smoke flag that
+    ``emit`` honours (smoke runs never touch results/)."""
+    global SMOKE
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes, no JSON writes (CI lane)")
+    ns = ap.parse_args(argv)
+    SMOKE = bool(ns.smoke)
+    return ns
 
 
 def timed(fn, *args, repeats: int = 1, **kw):
@@ -18,6 +36,8 @@ def timed(fn, *args, repeats: int = 1, **kw):
 
 
 def emit(name: str, payload) -> None:
+    if SMOKE:
+        return
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(
         json.dumps(payload, indent=1, default=str))

@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.bench_elastic_trace",
     "benchmarks.bench_tp_aware",
     "benchmarks.bench_multi_model",
+    "benchmarks.bench_spot_mix",
     "benchmarks.roofline",
 ]
 

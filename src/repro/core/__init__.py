@@ -1,15 +1,17 @@
 """Mélange core: cost-efficient accelerator allocation for LLM serving."""
 from .accelerators import (Accelerator, PAPER_GPUS, PAPER_GPUS_70B, TPU_FLEET,
-                           chips_by_base, expand_tp_variants, get_catalog,
-                           tp_efficiency_curve, tp_variant)
+                           chips_by_base, chips_by_pool, expand_price_tiers,
+                           expand_tp_variants, get_catalog, pool_key,
+                           spot_variant, tp_efficiency_curve, tp_variant)
 from .allocator import Allocation, FleetAllocation, Melange, MelangeFleet
 from .autoscaler import (AllocationDiff, Autoscaler, FleetAutoscaler,
                          allocation_diff)
 from .balancer import FleetBalancer, InstanceRef, LoadBalancer
 from .engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams, ModelPerf
 from .ilp import (ILPProblem, ILPSolution, counts_within_caps, solve,
-                  solve_brute_force)
-from .loadmatrix import FleetProblem, build_fleet_problem, build_problem
+                  solve_brute_force, spot_share_by_bucket)
+from .loadmatrix import (FleetProblem, availability, build_fleet_problem,
+                         build_problem)
 from .profiler import Profile, profile_catalog, profile_from_dryrun
 from .simulator import (ClusterEngine, FleetSimResult, InstanceEngine,
                         SimRequest, SimResult, simulate, simulate_fleet)

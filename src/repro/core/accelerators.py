@@ -15,12 +15,23 @@ per-layer all-reduce traffic explicitly.  Availability is accounted in
 *chips* of the base type: one ``A10Gx4`` instance draws 4 chips from the
 same pool as four ``A10G`` instances (see the grouped chip-capacity
 constraint in ``ilp.py``).
+
+Price-tier expansion (beyond-paper, ShuntServe arXiv:2606.18600-style):
+``expand_price_tiers`` gives every base accelerator that quotes a spot
+rate a preemptible sibling — ``A100:spot`` is the same silicon at the
+spot discount, carrying ``preemption_rate`` (expected reclaims per
+instance-hour).  A spot variant keeps the base type's chip pool
+(``base_name``), so physical availability caps bound on-demand + spot +
+all TP variants together and tp x tier composes, while its *market pool*
+(``market_pool``, ``"A100:spot"``) is a sub-pool of its own: a spot-market
+stockout caps only the preemptible tier, leaving on-demand rentable for
+backfill.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Optional
+from typing import Iterable, Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +47,9 @@ class Accelerator:
     base_type: str = ""        # chip pool this instance draws from ("" = name)
     tp: int = 1                # tensor-parallel degree of the engine instance
     link_gbs: float = 0.0      # per-chip interconnect bandwidth (TP collectives)
+    tier: str = "ondemand"     # price tier of THIS entry: "ondemand" | "spot"
+    spot_price_hr: Optional[float] = None  # quoted spot $/h (on the base entry)
+    preemption_rate: float = 0.0  # expected reclaims per instance-hour as spot
 
     @property
     def eff_flops(self) -> float:
@@ -53,6 +67,19 @@ class Accelerator:
     def base_name(self) -> str:
         """Chip-pool key: TP variants of one base type share availability."""
         return self.base_type or self.name
+
+    @property
+    def is_spot(self) -> bool:
+        return self.tier == "spot"
+
+    @property
+    def market_pool(self) -> str:
+        """Market-pool key: the sub-pool a stockout of this entry's *price
+        tier* caps.  On-demand variants coincide with the physical chip
+        pool (``base_name``); spot variants form a ``"<base>:spot"``
+        sub-pool, so a spot-market stockout never caps on-demand rentals.
+        """
+        return f"{self.base_name}:spot" if self.is_spot else self.base_name
 
 
 def tp_efficiency_curve(tp: int) -> float:
@@ -94,7 +121,61 @@ def tp_variant(base: Accelerator, tp: int) -> Accelerator:
         base_type=base.base_name,
         tp=tp,
         link_gbs=base.link_gbs,
+        tier=base.tier,
+        spot_price_hr=(base.spot_price_hr * tp
+                       if base.spot_price_hr is not None else None),
+        # any one of the tp chips being reclaimed kills the whole engine
+        # instance, so exposure scales with the chip count
+        preemption_rate=base.preemption_rate * tp,
     )
+
+
+def spot_variant(base: Accelerator) -> Accelerator:
+    """The preemptible sibling of ``base``: identical silicon billed at the
+    quoted spot rate, drawing on the *same* physical chip pool but its own
+    ``"<base>:spot"`` market pool."""
+    if base.is_spot:
+        raise ValueError(f"{base.name} is already a spot entry")
+    if base.spot_price_hr is None:
+        raise ValueError(
+            f"{base.name}: spot variant needs spot_price_hr on the base "
+            "accelerator — without a quoted rate there is no spot market")
+    if not (0 < base.spot_price_hr <= base.price_hr):
+        raise ValueError(
+            f"{base.name}: spot_price_hr={base.spot_price_hr} must be in "
+            f"(0, price_hr={base.price_hr}] — spot never costs more than "
+            "on-demand")
+    return dataclasses.replace(
+        base, name=f"{base.name}:spot", price_hr=base.spot_price_hr,
+        tier="spot", base_type=base.base_name)
+
+
+def expand_price_tiers(
+        catalog: dict[str, "Accelerator"]) -> dict[str, "Accelerator"]:
+    """Expand every entry that quotes a spot rate into {on-demand, spot}
+    siblings (entries without ``spot_price_hr`` stay on-demand only).
+    Composes with ``expand_tp_variants`` in either order: ``tp_variant``
+    propagates the tier fields, so ``A100x2:spot`` == ``A100:spot`` x2."""
+    out: dict[str, Accelerator] = {}
+    for acc in catalog.values():
+        if acc.is_spot:               # already tier-expanded: keep as-is
+            out[acc.name] = acc
+            continue
+        out[acc.name] = acc
+        if acc.spot_price_hr is not None:
+            v = spot_variant(acc)
+            out[v.name] = v
+    return out
+
+
+def pool_key(key: str, gpus: Mapping[str, "Accelerator"]) -> str:
+    """Resolve a cap key to the pool it binds: a key naming a spot entry
+    binds that base type's *spot market* sub-pool; any other catalog entry
+    binds its physical chip pool; unknown keys are their own pool.  THE
+    tier-to-pool rule — autoscaler and orchestrator pool lookups delegate
+    here."""
+    acc = gpus.get(key)
+    return acc.market_pool if acc is not None else key
 
 
 def chips_by_base(counts: dict[str, int],
@@ -110,6 +191,22 @@ def chips_by_base(counts: dict[str, int],
         base = acc.base_name if acc is not None else g
         chips = acc.chips if acc is not None else 1
         out[base] = out.get(base, 0) + chips * n
+    return out
+
+
+def chips_by_pool(counts: dict[str, int],
+                  gpus: Mapping[str, "Accelerator"]) -> dict[str, int]:
+    """Chips drawn per *pool*, at both cap granularities at once: every
+    instance counts into its physical base pool (all tiers — the cloud's
+    silicon is finite regardless of how it is billed), and spot instances
+    additionally count into their ``"<base>:spot"`` market sub-pool.
+    Superset of :func:`chips_by_base`; autoscaler cap bookkeeping reads
+    whichever key a stockout recorded."""
+    out = chips_by_base(counts, gpus)
+    for g, n in counts.items():
+        acc = gpus.get(g)
+        if acc is not None and acc.is_spot:
+            out[acc.market_pool] = out.get(acc.market_pool, 0) + acc.chips * n
     return out
 
 
@@ -142,17 +239,24 @@ def _tpu(name, chips, chip_flops_tf, chip_bw, chip_mem, price_per_chip):
 # --- the paper's GPU set (Table 1) --------------------------------------
 # link_gbs: per-chip interconnect for TP collectives — PCIe 4.0 x16 for the
 # workstation parts, NVLink for A100/H100.
+# spot_price_hr / preemption_rate: representative cloud spot quotes (~60-70%
+# below on-demand) and reclaim rates — scarcer parts are reclaimed more
+# often.  Only exercised when the catalog is tier-expanded.
 PAPER_GPUS = {
     "L4": Accelerator("L4", mem_gb=24, bw_gbs=300, flops_tf=121,
                       price_hr=0.70, max_request_tokens=12_000,
-                      link_gbs=32),
+                      link_gbs=32, spot_price_hr=0.28,
+                      preemption_rate=0.05),
     "A10G": Accelerator("A10G", mem_gb=24, bw_gbs=600, flops_tf=125,
                         price_hr=1.01, max_request_tokens=12_000,
-                        link_gbs=32),
+                        link_gbs=32, spot_price_hr=0.40,
+                        preemption_rate=0.08),
     "A100": Accelerator("A100", mem_gb=80, bw_gbs=1935, flops_tf=312,
-                        price_hr=3.67, link_gbs=600),
+                        price_hr=3.67, link_gbs=600, spot_price_hr=1.47,
+                        preemption_rate=0.15),
     "H100": Accelerator("H100", mem_gb=80, bw_gbs=3350, flops_tf=989,
-                        price_hr=7.516, link_gbs=900),
+                        price_hr=7.516, link_gbs=900, spot_price_hr=3.01,
+                        preemption_rate=0.25),
 }
 
 # Multi-GPU nodes for the Llama2-70b experiment (Fig. 8)

@@ -4,6 +4,14 @@ TP-degree-aware mode (``tp_degrees=...``): the catalog is expanded into
 (type, tp) variants before profiling, the solver picks per-variant instance
 counts, and availability can be bounded in *chips of the base type* shared
 across variants (``chip_caps``).
+
+Price-tier-aware mode (``spot_tiers=True``): the catalog additionally
+gains a preemptible spot sibling per base type (same silicon, spot price,
+``preemption_rate``).  ``allocate(min_ondemand_frac=...,
+replacement_delay_s=...)`` then prices preemption risk in: spot columns'
+throughput is discounted by the expected replacement downtime, and each
+bucket keeps at least the floored share of its slices on non-preemptible
+instances.
 """
 from __future__ import annotations
 
@@ -13,7 +21,8 @@ from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
-from .accelerators import Accelerator, chips_by_base, expand_tp_variants
+from .accelerators import (Accelerator, chips_by_base, chips_by_pool,
+                           expand_price_tiers, expand_tp_variants, pool_key)
 from .engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
 from .ilp import ILPProblem, ILPSolution, solve
 from .loadmatrix import build_fleet_problem, build_problem
@@ -48,6 +57,27 @@ class Allocation:
         """Chips drawn from each base-type pool (Σ_tp tp·B_{g,tp})."""
         return chips_by_base(self.counts, self.profile.gpus)
 
+    def chips_by_pool(self) -> dict[str, int]:
+        """Chips per pool at both granularities: physical base pools (all
+        tiers) plus ``"<base>:spot"`` market sub-pools."""
+        return chips_by_pool(self.counts, self.profile.gpus)
+
+    def counts_by_tier(self) -> dict[str, dict[str, int]]:
+        """Instance counts split by price tier: tier -> {variant: n}."""
+        out: dict[str, dict[str, int]] = {}
+        for g, n in self.counts.items():
+            tier = self.profile.gpus[g].tier
+            out.setdefault(tier, {})[g] = n
+        return out
+
+    def cost_by_tier(self) -> dict[str, float]:
+        """$/h split by price tier (spot instances bill at spot price)."""
+        out: dict[str, float] = {}
+        for g, n in self.counts.items():
+            acc = self.profile.gpus[g]
+            out[acc.tier] = out.get(acc.tier, 0.0) + acc.price_hr * n
+        return out
+
     def bucket_assignment(self, slice_factor: int = 8):
         """bucket index -> {gpu: fraction of bucket's slices} (for the LB)."""
         slices = self.workload.slices(slice_factor)
@@ -73,11 +103,14 @@ class Melange:
                  profile: Optional[Profile] = None,
                  slice_factor: int = 8,
                  buckets=None,
-                 tp_degrees: Optional[Sequence[int]] = None):
+                 tp_degrees: Optional[Sequence[int]] = None,
+                 spot_tiers: bool = False):
         from .workload import bucket_grid
         gpus = dict(gpus)
         if tp_degrees is not None:
             gpus = expand_tp_variants(gpus, tp_degrees)
+        if spot_tiers:
+            gpus = expand_price_tiers(gpus)
         self.gpus = gpus
         self.model = model
         self.slo = slo_tpot_s
@@ -91,17 +124,24 @@ class Melange:
                  chip_caps: dict[str, int] | None = None,
                  gpu_subset: list[str] | None = None,
                  over_provision: float = 0.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0) -> Optional[Allocation]:
         """Derive the minimal-cost allocation (§5.4). ``over_provision``
         inflates bucket rates (§6.3's burst-absorption knob); ``caps``
         bounds instances of a named variant, ``chip_caps`` bounds chips of
-        a base type shared across its TP variants."""
+        a base type shared across its TP variants (a ``"<base>:spot"`` key
+        bounds only the spot sub-pool).  ``min_ondemand_frac`` /
+        ``replacement_delay_s`` are the availability floor for price-tier
+        catalogs (no-ops without spot variants)."""
         wl = workload if over_provision <= 0 else Workload(
             workload.buckets, workload.rates * (1 + over_provision),
             name=workload.name + f"+op{over_provision}")
         prob = build_problem(wl, self.profile, self.slice_factor,
                              caps=caps, gpu_subset=gpu_subset,
-                             chip_caps=chip_caps)
+                             chip_caps=chip_caps,
+                             min_ondemand_frac=min_ondemand_frac,
+                             replacement_delay_s=replacement_delay_s)
         # hierarchical warm start for TP-expanded catalogs: the tp=1
         # sub-catalog solution is a feasible point of the full problem and
         # enters the candidate pool, so the returned cost never exceeds the
@@ -118,7 +158,9 @@ class Melange:
             t0 = time.time()
             prob1 = build_problem(wl, self.profile, self.slice_factor,
                                   caps=caps, gpu_subset=tp1,
-                                  chip_caps=chip_caps)
+                                  chip_caps=chip_caps,
+                                  min_ondemand_frac=min_ondemand_frac,
+                                  replacement_delay_s=replacement_delay_s)
             sol1 = solve(prob1, time_budget_s=min(1.0, time_budget_s / 3))
             # the pre-solve spends part of the caller's budget, not extra
             main_budget = max(0.1, time_budget_s - (time.time() - t0))
@@ -197,6 +239,22 @@ class FleetAllocation:
                 out[b] = out.get(b, 0) + c
         return out
 
+    def chips_by_pool(self) -> dict[str, int]:
+        """Chips per pool (physical + spot sub-pools), across models."""
+        out: dict[str, int] = {}
+        for a in self.per_model.values():
+            for p, c in a.chips_by_pool().items():
+                out[p] = out.get(p, 0) + c
+        return out
+
+    def cost_by_tier(self) -> dict[str, float]:
+        """Fleet $/h split by price tier, summed across models."""
+        out: dict[str, float] = {}
+        for a in self.per_model.values():
+            for t, c in a.cost_by_tier().items():
+                out[t] = out.get(t, 0.0) + c
+        return out
+
     def summary(self) -> dict:
         """Fleet-level cost summary for logs and benchmarks."""
         return {
@@ -228,6 +286,7 @@ class MelangeFleet:
                  slice_factor: int = 8,
                  buckets=None,
                  tp_degrees: Optional[Sequence[int]] = None,
+                 spot_tiers: bool = False,
                  profiles: Optional[Mapping[str, Profile]] = None):
         if not specs:
             raise ValueError("fleet needs at least one ModelSpec")
@@ -242,7 +301,7 @@ class MelangeFleet:
                 engine_params=s.engine_params or engine_params,
                 profile=(profiles or {}).get(s.name),
                 slice_factor=slice_factor, buckets=buckets,
-                tp_degrees=tp_degrees)
+                tp_degrees=tp_degrees, spot_tiers=spot_tiers)
         self.slice_factor = slice_factor
         # all members expand the same catalog identically
         self.gpus = next(iter(self.members.values())).gpus
@@ -293,6 +352,8 @@ class MelangeFleet:
                  chip_caps: Optional[Mapping[str, int]] = None,
                  gpu_subset: Optional[list[str]] = None,
                  over_provision: float = 0.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
                  warm: bool = True,
                  warm_siloed: Optional[Mapping[str, Allocation]] = None
@@ -316,7 +377,8 @@ class MelangeFleet:
         fp = build_fleet_problem(
             {m: (self.members[m].profile, w) for m, w in wls.items()},
             self.slice_factor, caps=caps, gpu_subset=gpu_subset,
-            chip_caps=chip_caps)
+            chip_caps=chip_caps, min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s)
         warm_assign = None
         main_budget = time_budget_s
         siloed: Optional[Mapping[str, Allocation]] = warm_siloed
@@ -328,6 +390,8 @@ class MelangeFleet:
             siloed = self.best_siloed(
                 wls, models=list(wls), caps=caps, chip_caps=chip_caps,
                 gpu_subset=gpu_subset,
+                min_ondemand_frac=min_ondemand_frac,
+                replacement_delay_s=replacement_delay_s,
                 time_budget_s=min(1.0, time_budget_s / 3))
             main_budget = max(0.1, time_budget_s - (time.time() - t0))
         if siloed is not None:
@@ -359,6 +423,8 @@ class MelangeFleet:
                         chip_caps: Optional[Mapping[str, int]] = None,
                         gpu_subset: Optional[list[str]] = None,
                         over_provision: float = 0.0,
+                        min_ondemand_frac: float = 0.0,
+                        replacement_delay_s: float = 0.0,
                         time_budget_s: float = 5.0
                         ) -> Optional[dict[str, Allocation]]:
         """The no-coordination baseline: each model is allocated alone, in
@@ -377,6 +443,8 @@ class MelangeFleet:
             alloc = member.allocate(
                 wls[m], caps=rem_caps or None, chip_caps=rem_chips or None,
                 gpu_subset=gpu_subset, over_provision=over_provision,
+                min_ondemand_frac=min_ondemand_frac,
+                replacement_delay_s=replacement_delay_s,
                 time_budget_s=budget)
             if alloc is None:
                 return None
@@ -385,11 +453,10 @@ class MelangeFleet:
                 if g in rem_caps:
                     rem_caps[g] = max(0, rem_caps[g] - n)
             if rem_chips:
-                norm_used = alloc.chips_by_base()
+                used_by_pool = alloc.chips_by_pool()
                 for key in list(rem_chips):
-                    acc = member.profile.gpus.get(key)
-                    base = acc.base_name if acc is not None else key
-                    used = norm_used.get(base, 0)
+                    pool = pool_key(key, member.profile.gpus)
+                    used = used_by_pool.get(pool, 0)
                     rem_chips[key] = max(0.0, rem_chips[key] - used)
         return out
 

@@ -16,6 +16,12 @@ serving system.  This module closes that loop:
     type; for an unexpanded catalog this degenerates to B_j ≤ cap_j); on
     instance failure the controller re-solves with the lost capacity
     excluded — allocation-level fault tolerance.
+  * price tiers: with a tier-expanded catalog, a *spot-market* stockout
+    caps only the ``"<base>:spot"`` sub-pool — the re-solve backfills the
+    lost capacity from the still-rentable on-demand tier.  The controller
+    carries the availability-floor knobs (``min_ondemand_frac``,
+    ``replacement_delay_s``) into every re-solve, so preemption risk stays
+    priced in across rescales and failures.
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
-from .accelerators import chips_by_base
+from .accelerators import chips_by_pool, pool_key
 from .allocator import Allocation, FleetAllocation, Melange, MelangeFleet
 from .workload import Workload
 
@@ -52,8 +58,11 @@ def allocation_diff(old: dict[str, int], new: dict[str, int]) -> AllocationDiff:
 
 class _ChipPoolCaps:
     """Shared stockout-cap bookkeeping for both autoscalers: chip caps are
-    keyed by base-type pool, resolved through the controller's catalog
-    (``_catalog``), so one rule governs single-model and fleet control."""
+    keyed by *pool*, resolved through the controller's catalog
+    (``_catalog``), so one rule governs single-model and fleet control.
+    A cap key naming an on-demand/TP variant binds the physical base pool
+    (all tiers); one naming a spot variant binds only the ``"<base>:spot"``
+    market sub-pool — a spot stockout never blocks on-demand backfill."""
 
     caps: dict[str, int]
     chip_caps: dict[str, int]
@@ -66,35 +75,56 @@ class _ChipPoolCaps:
         acc = self._catalog.get(gpu)
         return acc.base_name if acc is not None else gpu
 
-    def set_chip_stockout(self, base: str, chips: int) -> None:
-        """Record a market stockout of a base type: chips currently held
-        are all that remain available (shared across its TP variants —
-        and, for fleets, across models)."""
-        self.chip_caps[self._base_of(base)] = int(chips)
+    def _pool_of(self, gpu: str) -> str:
+        """Market pool a stockout of ``gpu`` caps (tier-aware)."""
+        return pool_key(gpu, self._catalog)
+
+    def set_chip_stockout(self, gpu: str, chips: int) -> None:
+        """Record a market stockout: chips currently held in ``gpu``'s
+        pool are all that remain available (shared across its TP variants
+        — and, for fleets, across models).  For a spot variant, only the
+        spot sub-pool is capped."""
+        self.chip_caps[self._pool_of(gpu)] = int(chips)
 
     def lift_stockout(self, gpu: str) -> None:
-        """Capacity restocked: per-variant and chip-pool caps are removed;
-        the next re-solve may use the type again."""
+        """Capacity restocked: per-variant and pool caps are removed; the
+        next re-solve may use the type again.  Restocks lift only *their
+        own* pool's cap: a spot restock leaves a separately-recorded
+        physical stockout of the base type in force, and a base restock
+        leaves an independently-recorded spot-market stockout in force —
+        each cap is released by its own restock event."""
         self.caps.pop(gpu, None)
-        self.chip_caps.pop(self._base_of(gpu), None)
+        self.chip_caps.pop(self._pool_of(gpu), None)
         self.chip_caps.pop(gpu, None)
 
 
 class Autoscaler(_ChipPoolCaps):
     def __init__(self, melange: Melange, initial: Workload, *,
                  headroom: float = 0.10, drift_threshold: float = 0.15,
-                 ewma: float = 0.3, solver_budget_s: float = 5.0):
+                 ewma: float = 0.3, solver_budget_s: float = 5.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0):
         self.melange = melange
         self.headroom = headroom
         self.drift_threshold = drift_threshold
         self.ewma = ewma
         self.solver_budget_s = solver_budget_s
+        self.min_ondemand_frac = min_ondemand_frac
+        self.replacement_delay_s = replacement_delay_s
         self.observed = initial.rates.copy()
+        # ``initial`` is a provisioning *estimate*, not telemetry: the
+        # first observed window replaces it outright instead of being
+        # EWMA-blended, so a wrong estimate can't suppress (or fake)
+        # drift for ~1/ewma windows (cold-start fix)
+        self._observed_primed = False
         self.buckets = initial.buckets
         self.caps: dict[str, int] = {}        # per-variant instance caps
-        self.chip_caps: dict[str, int] = {}   # per-base-type chip pools
+        self.chip_caps: dict[str, int] = {}   # per-pool chip caps
         self.current: Optional[Allocation] = melange.allocate(
-            initial, over_provision=headroom, time_budget_s=solver_budget_s)
+            initial, over_provision=headroom,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s,
+            time_budget_s=solver_budget_s)
         self.history: list[dict] = []
 
     # -- chip accounting -----------------------------------------------------
@@ -105,12 +135,17 @@ class Autoscaler(_ChipPoolCaps):
     def _catalog(self):
         return self.melange.profile.gpus
 
-    def _chips_of(self, counts: dict[str, int], base: str) -> int:
-        """Chips of ``base`` consumed by an allocation across TP variants."""
-        return chips_by_base(counts, self.melange.profile.gpus).get(base, 0)
+    def _chips_of(self, counts: dict[str, int], pool: str) -> int:
+        """Chips of ``pool`` consumed by an allocation (tier-aware: a
+        ``"<base>:spot"`` pool counts only spot variants)."""
+        return chips_by_pool(counts, self.melange.profile.gpus).get(pool, 0)
 
     # -- telemetry -----------------------------------------------------------
     def observe_rates(self, rates: np.ndarray) -> None:
+        if not self._observed_primed:
+            self.observed = np.asarray(rates, dtype=float).copy()
+            self._observed_primed = True
+            return
         self.observed = (1 - self.ewma) * self.observed + self.ewma * rates
 
     def drift(self) -> float:
@@ -126,6 +161,8 @@ class Autoscaler(_ChipPoolCaps):
         new = self.melange.allocate(
             wl, over_provision=self.headroom,
             caps=self.caps or None, chip_caps=self.chip_caps or None,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
             time_budget_s=self.solver_budget_s)
         if new is None:
             return None
@@ -153,14 +190,17 @@ class Autoscaler(_ChipPoolCaps):
         for g, k in losses.items():
             counts[g] = max(0, counts.get(g, 0) - k)
         if stockout:
-            # cap the *chip pool*: surviving chips of the base type are all
-            # that any mix of its TP variants may use until restock
-            base = self._base_of(gpu)
-            self.chip_caps[base] = self._chips_of(counts, base)
+            # cap the *pool*: surviving chips are all that any mix of its
+            # variants may use until restock.  A spot variant caps only
+            # the spot sub-pool — the re-solve backfills from on-demand.
+            pool = self._pool_of(gpu)
+            self.chip_caps[pool] = self._chips_of(counts, pool)
         wl = Workload(self.buckets, self.observed.copy(), name="post-failure")
         new = self.melange.allocate(
             wl, over_provision=self.headroom, caps=self.caps or None,
             chip_caps=self.chip_caps or None,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
             time_budget_s=self.solver_budget_s)
         if new is None:
             raise RuntimeError(
@@ -193,20 +233,30 @@ class FleetAutoscaler(_ChipPoolCaps):
     def __init__(self, fleet: MelangeFleet,
                  initial: Optional[Mapping[str, Workload]] = None, *,
                  headroom: float = 0.10, drift_threshold: float = 0.15,
-                 ewma: float = 0.3, solver_budget_s: float = 5.0):
+                 ewma: float = 0.3, solver_budget_s: float = 5.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0):
         self.fleet = fleet
         self.headroom = headroom
         self.drift_threshold = drift_threshold
         self.ewma = ewma
         self.solver_budget_s = solver_budget_s
+        self.min_ondemand_frac = min_ondemand_frac
+        self.replacement_delay_s = replacement_delay_s
         wls = fleet._workloads(initial, None)
         self.observed: dict[str, np.ndarray] = {
             m: w.rates.copy() for m, w in wls.items()}
+        # cold-start fix (shared with Autoscaler): each model's first
+        # observed window replaces the provisioning estimate outright
+        self._observed_primed: set[str] = set()
         self.buckets = {m: w.buckets for m, w in wls.items()}
         self.caps: dict[str, int] = {}        # pool-level instance caps
         self.chip_caps: dict[str, int] = {}   # pool-level chip caps
         self.current: Optional[FleetAllocation] = fleet.allocate(
-            wls, over_provision=headroom, time_budget_s=solver_budget_s)
+            wls, over_provision=headroom,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s,
+            time_budget_s=solver_budget_s)
         self.history: list[dict] = []
 
     # -- pool accounting -----------------------------------------------------
@@ -223,16 +273,20 @@ class FleetAutoscaler(_ChipPoolCaps):
             a = self.current.per_model[m]
             for g, n in a.counts.items():
                 held_inst[g] = held_inst.get(g, 0) + n
-            for b, c in a.chips_by_base().items():
-                held_chips[b] = held_chips.get(b, 0) + c
+            for p, c in a.chips_by_pool().items():
+                held_chips[p] = held_chips.get(p, 0) + c
         caps = {g: max(0, int(c) - held_inst.get(g, 0))
                 for g, c in self.caps.items()} or None
-        chips = {k: max(0, int(c) - held_chips.get(self._base_of(k), 0))
+        chips = {k: max(0, int(c) - held_chips.get(self._pool_of(k), 0))
                  for k, c in self.chip_caps.items()} or None
         return caps, chips
 
     # -- telemetry -----------------------------------------------------------
     def observe_rates(self, model: str, rates: np.ndarray) -> None:
+        if model not in self._observed_primed:
+            self.observed[model] = np.asarray(rates, dtype=float).copy()
+            self._observed_primed.add(model)
+            return
         self.observed[model] = ((1 - self.ewma) * self.observed[model]
                                 + self.ewma * rates)
 
@@ -261,7 +315,10 @@ class FleetAutoscaler(_ChipPoolCaps):
                            name=f"observed:{m}") for m in drifted}
         new_sub = self.fleet.allocate(
             wls, models=drifted, caps=caps, chip_caps=chip_caps,
-            over_provision=self.headroom, time_budget_s=self.solver_budget_s)
+            over_provision=self.headroom,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
+            time_budget_s=self.solver_budget_s)
         if new_sub is None:
             return None
         per_model = dict(self.current.per_model)
@@ -308,22 +365,26 @@ class FleetAutoscaler(_ChipPoolCaps):
                 counts[g] = max(0, counts.get(g, 0) - k)
             survivors[m] = {g: c for g, c in counts.items() if c > 0}
         if stockout:
-            # surviving chips of the base type — across *all* models —
-            # are all the market will supply until restock
-            base = self._base_of(gpu)
+            # surviving chips of the pool — across *all* models — are all
+            # the market will supply until restock.  A spot variant caps
+            # only the spot sub-pool: on-demand backfill stays open.
+            pool = self._pool_of(gpu)
             held = 0
             for m in self.fleet.models:
                 counts = (survivors[m] if m in survivors
                           else self.current.per_model[m].counts)
-                held += chips_by_base(counts, self.fleet.gpus).get(base, 0)
-            self.chip_caps[base] = held
+                held += chips_by_pool(counts, self.fleet.gpus).get(pool, 0)
+            self.chip_caps[pool] = held
         stable = [m for m in self.fleet.models if m not in affected]
         caps, chip_caps = self._remaining_pool(stable)
         wls = {m: Workload(self.buckets[m], self.observed[m].copy(),
                            name=f"post-failure:{m}") for m in affected}
         new_sub = self.fleet.allocate(
             wls, models=affected, caps=caps, chip_caps=chip_caps,
-            over_provision=self.headroom, time_budget_s=self.solver_budget_s)
+            over_provision=self.headroom,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
+            time_budget_s=self.solver_budget_s)
         if new_sub is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve the "

@@ -1,15 +1,19 @@
-"""Randomized cross-check harness for the stacked (multi-model) solver.
+"""Randomized cross-check harness for the stacked (multi-model) solver
+and the price-tiered (spot/on-demand) solver.
 
-One source of truth for the small fleet instances that both the property
-tests (``tests/test_multi_model.py``) and the benchmark gate
-(``benchmarks/bench_multi_model.py``) verify against brute force — so the
+One source of truth for the small instances that both the property tests
+(``tests/test_multi_model.py``, ``tests/test_spot_tiers.py``) and the
+benchmark gates (``benchmarks/bench_multi_model.py``,
+``benchmarks/bench_spot_mix.py``) verify against brute force — so the
 verified formulation can never drift between the two.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
-from .ilp import ILPProblem, solve, solve_brute_force
+from .ilp import ILPProblem, solve, solve_brute_force, spot_share_by_bucket
 
 _EPS = 1e-9
 
@@ -68,6 +72,109 @@ def run_crosschecks(n_cases: int, seed: int) -> dict:
     for s in seeds:
         try:
             check_shared_caps_case(int(s))
+            passed += 1
+        except AssertionError:
+            pass
+    return {"checked": n_cases, "passed": passed}
+
+
+# ---------------------------------------------------------------------------
+# price tiers: spot/on-demand columns, shared physical pools, spot
+# sub-pools, and the per-bucket on-demand floor
+# ---------------------------------------------------------------------------
+def small_tier_problem(rng: np.random.Generator
+                       ) -> tuple[ILPProblem, dict[int, int]]:
+    """2-3 base GPUs, each as an (on-demand, spot) column pair: the spot
+    column is discounted but availability-inflated, both draw on the
+    base's physical chip pool, the spot column additionally sits in a
+    spot-market sub-pool row, and per bucket the floored share of slices
+    has spot columns masked inf (the structural on-demand floor).
+
+    Returns (problem, max_spot_by_bucket): the per-bucket ceiling on
+    spot-assigned slices implied by the masking, for floor verification.
+    """
+    n_gpus = int(rng.integers(2, 4))
+    M = 2 * n_gpus                      # columns: [od_j, spot_j] per gpu
+    od_cost = rng.uniform(1.0, 8.0, size=n_gpus)
+    spot_cost = od_cost * rng.uniform(0.3, 0.7, size=n_gpus)
+    avail = rng.uniform(0.7, 1.0, size=n_gpus)
+    frac = float(rng.choice([0.0, 0.34, 0.5, 1.0]))
+    rows, bucket_of = [], []
+    max_spot: dict[int, int] = {}
+    for b in range(int(rng.integers(1, 3))):
+        n_slices = int(rng.integers(2, 4))
+        pin = int(math.ceil(frac * n_slices - 1e-9))
+        max_spot[b] = n_slices - pin
+        base_load = rng.uniform(0.15, 0.9, size=n_gpus)
+        for s in range(n_slices):
+            r = np.full(M, np.inf)
+            r[0::2] = base_load
+            if s >= pin:                # unpinned: spot feasible, inflated
+                r[1::2] = base_load / avail
+            rows.append(r)
+            bucket_of.append(b)
+    group_rows, caps = [], []
+    for j in range(n_gpus):             # physical pool: both tiers
+        w = np.zeros(M)
+        w[2 * j] = w[2 * j + 1] = 1.0
+        group_rows.append(w)
+        caps.append(float(rng.integers(2, 6)))
+    for j in range(n_gpus):             # spot sub-pool: spot column only
+        w = np.zeros(M)
+        w[2 * j + 1] = 1.0
+        group_rows.append(w)
+        caps.append(float(rng.integers(0, 3)))
+    costs = np.empty(M)
+    costs[0::2] = od_cost
+    costs[1::2] = spot_cost
+    names = [n for j in range(n_gpus) for n in (f"g{j}", f"g{j}:spot")]
+    spot_col = np.tile([False, True], n_gpus)
+    prob = ILPProblem(np.stack(rows), costs, names,
+                      np.asarray(bucket_of),
+                      group_rows=np.stack(group_rows),
+                      group_row_caps=np.asarray(caps),
+                      spot_col=spot_col)
+    return prob, max_spot
+
+
+def check_tier_floor_case(seed: int, time_budget_s: float = 10.0) -> None:
+    """One seeded tiered case: branch-and-bound must agree with brute
+    force on feasibility and optimal cost; physical + spot-sub-pool caps
+    must hold; and no bucket may exceed its spot-slice ceiling (the
+    availability floor) in either solver's output."""
+    rng = np.random.default_rng(seed)
+    prob, max_spot = small_tier_problem(rng)
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=time_budget_s)
+    assert (bf is None) == (bb is None), \
+        f"seed {seed}: feasibility disagreement (bf={bf}, bb={bb})"
+    if bf is None:
+        return
+    assert bb.optimal, f"seed {seed}: small tier case not solved exactly"
+    assert abs(bf.cost - bb.cost) < 1e-6, \
+        f"seed {seed}: cost mismatch bf={bf.cost} bb={bb.cost}"
+    gmat = prob.group_matrix()
+    for s in (bf, bb):
+        assert np.all(gmat @ s.counts <= prob.grouped_caps + _EPS), \
+            f"seed {seed}: tier pool cap exceeded"
+        n_by_bucket: dict[int, int] = {}
+        for b in map(int, prob.bucket_of_slice):
+            n_by_bucket[b] = n_by_bucket.get(b, 0) + 1
+        for b, share in spot_share_by_bucket(prob, s.assignment).items():
+            n_spot = round(share * n_by_bucket[b])
+            assert n_spot <= max_spot[b], \
+                f"seed {seed}: bucket {b} put {n_spot} slices on spot " \
+                f"(floor allows {max_spot[b]})"
+
+
+def run_tier_crosschecks(n_cases: int, seed: int) -> dict:
+    """Benchmark gate: how many seeded cases pass ``check_tier_floor_case``."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, 10 ** 9, size=n_cases)
+    passed = 0
+    for s in seeds:
+        try:
+            check_tier_floor_case(int(s))
             passed += 1
         except AssertionError:
             pass

@@ -14,10 +14,21 @@ all of its TP variants (an ``A10Gx4`` draws 4 chips from the same pool as
 four ``A10G``s).  The general rows (``group_rows``) are the multi-model
 extension: fleet problems carry one column per (model, GPU variant) pair,
 and a physical pool — a variant's instances or a base type's chips — is a
-row spanning every model's columns that draw on it.  All cap families are
-enforced at every layer: greedy warm start, local search, branch-and-bound
-(monotone along a DFS path, so a violated prefix prunes soundly), and the
-brute-force reference.
+row spanning every model's columns that draw on it.  Price tiers reuse
+both: a spot column sits in its base type's physical chip-pool row *and*
+in a spot-market sub-pool row, so tp x tier x model caps all compose.
+All cap families are enforced at every layer: greedy warm start, local
+search, branch-and-bound (monotone along a DFS path, so a violated prefix
+prunes soundly), and the brute-force reference.
+
+The availability floor (``min_ondemand_frac``, see ``loadmatrix.py``) is
+*structural*: the floored share of each bucket's interchangeable slices
+arrives with every spot column masked inf, which is exactly equivalent to
+the counting constraint "at most (1−frac)·n of the bucket's slices on
+spot columns" — so all four solver layers enforce it by construction.
+``spot_col`` records which columns are preemptible so tests and the
+cross-check harness can verify the floor on any layer's output without
+re-deriving tier information from column names.
 
 No off-the-shelf ILP solver is installed in this environment, so we exploit
 the problem's structure (an optimal B is always B_j = ceil(load_j)):
@@ -70,6 +81,11 @@ class ILPProblem:
     # one-pool-per-column restriction.
     group_rows: Optional[np.ndarray] = None      # (K, M) weights
     group_row_caps: Optional[np.ndarray] = None  # (K,)
+    # metadata (not a constraint): which columns are preemptible spot
+    # variants.  The on-demand floor itself is encoded structurally in
+    # ``loads`` (see module docstring); this mask lets verification code
+    # measure per-bucket spot shares of any solution.
+    spot_col: Optional[np.ndarray] = None        # (M,) bool
 
     def group_matrix(self) -> Optional[np.ndarray]:
         """(n_groups, M) weights: usage = group_matrix() @ counts.
@@ -118,6 +134,27 @@ def counts_within_caps(counts: np.ndarray, prob: ILPProblem,
         if np.any(gmat @ counts > gcaps + _EPS):
             return False
     return True
+
+
+def spot_share_by_bucket(prob: ILPProblem,
+                         assignment: np.ndarray) -> dict[int, float]:
+    """Fraction of each bucket group's slices assigned to spot columns
+    (0.0 everywhere when the problem carries no tier metadata).  The
+    availability-floor invariant for a solve with ``min_ondemand_frac=f``
+    is ``share <= 1 - f`` (up to the per-bucket ceiling's rounding) for
+    every bucket — verified by tests on every solver layer's output."""
+    out: dict[int, float] = {}
+    counts: dict[int, list[int]] = {}
+    spot = (prob.spot_col if prob.spot_col is not None
+            else np.zeros(prob.loads.shape[1], dtype=bool))
+    for i, j in enumerate(np.asarray(assignment, dtype=int)):
+        b = int(prob.bucket_of_slice[i])
+        tot_spot = counts.setdefault(b, [0, 0])
+        tot_spot[0] += 1
+        tot_spot[1] += int(bool(spot[j]))
+    for b, (tot, n_spot) in counts.items():
+        out[b] = n_spot / tot
+    return out
 
 
 @dataclasses.dataclass

@@ -1,11 +1,31 @@
 """Load matrix construction (§5.4.2): L[i,j] = r_i / MaxTput(G_j, s_i, SLO).
 
-Columns may be TP-degree variants of a base GPU type (``A10Gx2``).  Two cap
-families exist:
+Columns may be TP-degree variants of a base GPU type (``A10Gx2``) and/or
+price-tier variants (``A100:spot``).  Cap families:
 
   * ``caps`` — per-*instance* caps on a named column (B_j ≤ cap_j);
-  * ``chip_caps`` — per-*chip* caps on a base type, shared across all TP
-    variants that draw from its pool (Σ_tp tp·B_{g,tp} ≤ cap_g).
+  * ``chip_caps`` — per-*chip* caps on a pool.  A key naming a base type
+    (or any of its on-demand/TP variants) caps the *physical* pool shared
+    by every tier and TP degree (Σ tp·B ≤ cap across on-demand and spot
+    alike); a key naming a spot entry (``"A100:spot"``) caps only the spot
+    *market* sub-pool, so on-demand stays rentable for backfill.
+
+Price tiers (spot variants) change the matrix two ways:
+
+  * **availability discount** — a spot column's expected *surviving*
+    throughput is MaxTput x (1 − preemption_rate x replacement_delay):
+    each reclaim loses one instance for the replacement boot window, so on
+    average that fraction of instance-hours serves nothing.  The load a
+    slice puts on a spot column is inflated accordingly.
+  * **on-demand floor** (``min_ondemand_frac``) — per bucket, at least
+    ⌈frac x n_slices⌉ of the bucket's slices have every spot column masked
+    infeasible, pinning that share of the bucket's SLO-critical capacity
+    onto non-preemptible instances.  Because slices of one bucket are
+    interchangeable (identical load rows), masking a fixed subset is
+    *exactly* equivalent to the counting constraint "≤ (1−frac)·n slices
+    on spot columns" — so every solver layer (greedy, local search,
+    branch-and-bound, brute force) enforces the floor by construction,
+    simply by never assigning a slice to an infeasible column.
 
 Multi-model fleets (``build_fleet_problem``) stack several models' load
 matrices into one problem: items are (model, bucket) slices, columns are
@@ -17,60 +37,113 @@ several models without ever exceeding the physical pool.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Mapping
 
 import numpy as np
 
+from .accelerators import Accelerator, pool_key
 from .ilp import ILPProblem
 from .profiler import Profile
 from .workload import Workload
+
+
+def availability(acc: Accelerator, replacement_delay_s: float) -> float:
+    """Expected fraction of a spot instance's hours that actually serve:
+    1 − preemption_rate [1/h] x replacement delay [h], floored at 0 (a
+    pool reclaimed faster than it can be replaced contributes nothing).
+    On-demand instances are never preempted: always 1."""
+    if not acc.is_spot:
+        return 1.0
+    return max(0.0, 1.0 - acc.preemption_rate * replacement_delay_s / 3600.0)
+
+
+def _ondemand_quota(workload: Workload, slice_factor: int,
+                    min_ondemand_frac: float) -> dict[int, int]:
+    """bucket index -> number of its slices pinned to on-demand columns."""
+    if not 0.0 <= min_ondemand_frac <= 1.0:
+        raise ValueError(
+            f"min_ondemand_frac must be in [0, 1], got {min_ondemand_frac}")
+    if min_ondemand_frac <= 0:
+        return {}
+    quota: dict[int, int] = {}
+    for bi, _ in workload.slices(slice_factor):
+        quota[bi] = quota.get(bi, 0) + 1
+    return {bi: int(math.ceil(min_ondemand_frac * n - 1e-9))
+            for bi, n in quota.items()}
 
 
 def build_problem(workload: Workload, profile: Profile,
                   slice_factor: int = 8,
                   caps: dict[str, int] | None = None,
                   gpu_subset: list[str] | None = None,
-                  chip_caps: dict[str, int] | None = None) -> ILPProblem:
+                  chip_caps: dict[str, int] | None = None,
+                  min_ondemand_frac: float = 0.0,
+                  replacement_delay_s: float = 0.0) -> ILPProblem:
     gpu_names = sorted(gpu_subset or profile.gpus)
     slices = workload.slices(slice_factor)
     N, M = len(slices), len(gpu_names)
+    accs = [profile.gpus[g] for g in gpu_names]
+    quota = _ondemand_quota(workload, slice_factor, min_ondemand_frac)
+    seen: dict[int, int] = {}
     loads = np.full((N, M), np.inf)
     bucket_of = np.zeros(N, dtype=int)
     for i, (bi, rate) in enumerate(slices):
         bucket_of[i] = bi
-        for j, g in enumerate(gpu_names):
-            tput = profile.max_tput[g][bi]
+        pinned = seen.get(bi, 0) < quota.get(bi, 0)
+        seen[bi] = seen.get(bi, 0) + 1
+        for j, acc in enumerate(accs):
+            if acc.is_spot and pinned:
+                continue                       # floor: on-demand only
+            tput = (profile.max_tput[gpu_names[j]][bi]
+                    * availability(acc, replacement_delay_s))
             if tput > 0:
                 loads[i, j] = rate / tput
-    costs = np.array([profile.gpus[g].price_hr for g in gpu_names])
+    costs = np.array([acc.price_hr for acc in accs])
     caps_arr = None
     if caps is not None:
         caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
     chip_weight = chip_group = group_caps = None
+    rows: list[np.ndarray] = []
+    row_caps: list[float] = []
     if chip_caps:
         norm = _normalize_chip_caps(chip_caps, profile.gpus)
-        pools = sorted(norm)
-        pool_idx = {p: k for k, p in enumerate(pools)}
-        chip_weight = np.array([float(profile.gpus[g].chips)
-                                for g in gpu_names])
-        chip_group = np.array([pool_idx.get(profile.gpus[g].base_name, -1)
-                               for g in gpu_names])
-        group_caps = np.array([norm[p] for p in pools])
+        # physical base pools: one pool per column (spot variants share the
+        # base type's silicon), expressed via chip_group as before
+        base_pools = sorted(p for p in norm if not p.endswith(":spot"))
+        if base_pools:
+            pool_idx = {p: k for k, p in enumerate(base_pools)}
+            chip_weight = np.array([float(a.chips) for a in accs])
+            chip_group = np.array([pool_idx.get(a.base_name, -1)
+                                   for a in accs])
+            group_caps = np.array([norm[p] for p in base_pools])
+        # spot-market sub-pools overlap the base pools (a spot column sits
+        # in both), so they go through the general group rows
+        for p in sorted(p for p in norm if p.endswith(":spot")):
+            w = np.array([float(a.chips) if a.market_pool == p else 0.0
+                          for a in accs])
+            rows.append(w)
+            row_caps.append(float(norm[p]))
+    spot_col = np.array([a.is_spot for a in accs])
     return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr,
                       chip_weight=chip_weight, chip_group=chip_group,
-                      group_caps=group_caps)
+                      group_caps=group_caps,
+                      group_rows=np.stack(rows) if rows else None,
+                      group_row_caps=np.asarray(row_caps) if rows else None,
+                      spot_col=spot_col if spot_col.any() else None)
 
 
 def _normalize_chip_caps(chip_caps: Mapping[str, float],
                          gpus: Mapping[str, object]) -> dict[str, float]:
-    """A cap naming any catalog entry ('A10Gx2', 'v5e-4') binds that
-    entry's *base pool*; duplicate keys keep the tightest cap.  Single
-    source of the rule for the single-model and fleet builders alike."""
+    """A cap naming any catalog entry binds that entry's *pool*: on-demand
+    / TP variants bind the physical base pool ('A10Gx2' -> 'A10G'), spot
+    variants bind the spot market sub-pool ('A100:spotx2' -> 'A100:spot').
+    Duplicate keys keep the tightest cap.  Single source of the rule for
+    the single-model and fleet builders alike."""
     norm: dict[str, float] = {}
     for key, cap in chip_caps.items():
-        acc = gpus.get(key)
-        base = acc.base_name if acc is not None else key
-        norm[base] = min(norm.get(base, np.inf), float(cap))
+        pool = pool_key(key, gpus)
+        norm[pool] = min(norm.get(pool, np.inf), float(cap))
     return norm
 
 
@@ -107,7 +180,9 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
                         slice_factor: int = 8,
                         caps: Mapping[str, int] | None = None,
                         gpu_subset: list[str] | None = None,
-                        chip_caps: Mapping[str, int] | None = None
+                        chip_caps: Mapping[str, int] | None = None,
+                        min_ondemand_frac: float = 0.0,
+                        replacement_delay_s: float = 0.0
                         ) -> FleetProblem:
     """Stack each model's §5.4.2 load matrix into one shared-pool problem.
 
@@ -116,7 +191,10 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
     differ in SLO and throughput numbers — that is the point).  ``caps``
     and ``chip_caps`` are *pool-level*: an instance cap on ``A100`` bounds
     the total A100 instances across every model, a chip cap on a base type
-    bounds Σ models Σ variants chips.
+    bounds Σ models Σ variants chips (and a cap on ``"A100:spot"`` bounds
+    only the spot sub-pool across models).  ``min_ondemand_frac`` pins the
+    floor per (model, bucket); ``replacement_delay_s`` discounts every
+    model's spot columns identically.
     """
     models = list(members)
     if not models:
@@ -131,6 +209,7 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
                 "members must share one accelerator catalog")
     G = len(gpu_names)
     M = len(models) * G
+    accs = [first_profile.gpus[g] for g in gpu_names]
 
     slice_rows: list[np.ndarray] = []
     bucket_of: list[int] = []
@@ -138,11 +217,19 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
     bucket_offset = 0
     for k, m in enumerate(models):
         profile, workload = members[m]
+        quota = _ondemand_quota(workload, slice_factor, min_ondemand_frac)
+        seen: dict[int, int] = {}
         lo = len(slice_rows)
         for bi, rate in workload.slices(slice_factor):
+            pinned = seen.get(bi, 0) < quota.get(bi, 0)
+            seen[bi] = seen.get(bi, 0) + 1
             row = np.full(M, np.inf)
             for j, g in enumerate(gpu_names):
-                tput = profile.max_tput[g][bi]
+                acc = profile.gpus[g]
+                if acc.is_spot and pinned:
+                    continue
+                tput = (profile.max_tput[g][bi]
+                        * availability(acc, replacement_delay_s))
                 if tput > 0:
                     row[k * G + j] = rate / tput
             slice_rows.append(row)
@@ -154,9 +241,7 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
 
     loads = (np.stack(slice_rows) if slice_rows
              else np.zeros((0, M)))
-    costs = np.tile(
-        np.array([first_profile.gpus[g].price_hr for g in gpu_names]),
-        len(models))
+    costs = np.tile(np.array([a.price_hr for a in accs]), len(models))
 
     # pool-level caps -> shared group rows spanning all models' columns
     rows: list[np.ndarray] = []
@@ -172,20 +257,23 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
             row_caps.append(float(cap))
     if chip_caps:
         norm = _normalize_chip_caps(chip_caps, first_profile.gpus)
-        for base, cap in sorted(norm.items()):
+        for pool, cap in sorted(norm.items()):
             w = np.zeros(M)
-            for j, g in enumerate(gpu_names):
-                acc = first_profile.gpus[g]
-                if acc.base_name == base:
+            for j, acc in enumerate(accs):
+                # a physical pool key spans every tier of the base type; a
+                # ":spot" key spans only the spot columns of that base
+                if pool in (acc.base_name, acc.market_pool):
                     for k in range(len(models)):
                         w[k * G + j] = float(acc.chips)
             if w.any():
                 rows.append(w)
                 row_caps.append(float(cap))
+    spot_col = np.tile(np.array([a.is_spot for a in accs]), len(models))
     prob = ILPProblem(
         loads, costs,
         [f"{m}:{g}" for m in models for g in gpu_names],
         np.asarray(bucket_of, dtype=int),
         group_rows=np.stack(rows) if rows else None,
-        group_row_caps=np.asarray(row_caps) if rows else None)
+        group_row_caps=np.asarray(row_caps) if rows else None,
+        spot_col=spot_col if spot_col.any() else None)
     return FleetProblem(prob, models, gpu_names, slice_ranges)

@@ -27,7 +27,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .accelerators import Accelerator, chips_by_base
+from .accelerators import Accelerator, chips_by_base, chips_by_pool
 from .balancer import FleetBalancer, InstanceRef, LoadBalancer
 from .engine_model import EngineModel, ModelPerf, EngineModelParams, DEFAULT_ENGINE
 from .profiler import Profile
@@ -96,6 +96,11 @@ class InstanceEngine:
     def chips(self) -> int:
         """Chips of the base type this instance draws from the pool."""
         return self.gpu.chips
+
+    @property
+    def is_spot(self) -> bool:
+        """Preemptible price tier (spot reclaims may kill this instance)."""
+        return self.gpu.is_spot
 
     def kv_tokens(self) -> float:
         return (sum(r.input_len + r.decoded for r in self.active)
@@ -380,16 +385,36 @@ class ClusterEngine:
             out[base] = out.get(base, 0) + inst.chips
         return out
 
+    def chips_by_pool(self, include_draining: bool = True) -> dict[str, int]:
+        """Chips held per pool at both granularities: physical base pools
+        plus ``"<base>:spot"`` market sub-pools (spot stockout caps read
+        the latter)."""
+        counts: dict[str, int] = {}
+        for inst in self.instances.values():
+            if not include_draining and inst.draining:
+                continue
+            counts[inst.gpu_name] = counts.get(inst.gpu_name, 0) + 1
+        return chips_by_pool(counts, self.profile.gpus)
+
     def cost_rate(self) -> float:
-        """Current fleet $/h (draining instances still bill)."""
+        """Current fleet $/h (draining instances still bill; spot
+        instances bill at their variant's — i.e. spot — price)."""
         return sum(i.gpu.price_hr for i in self.instances.values())
 
     def cost(self, until: Optional[float] = None) -> float:
-        """$ spent: per-instance lifetime integral of the hourly price."""
+        """$ spent: per-instance lifetime integral of the hourly price.
+
+        Lifetimes are clamped to ``[launched_at, until]`` on *both* ends:
+        an instance retired (drained, preempted, or retargeted) after
+        ``until`` bills only up to ``until``, and one launched after
+        ``until`` bills nothing — otherwise a retarget, which retires the
+        donor and starts a fresh instance, would double-bill the overlap
+        window in any ``cost(until=...)`` query that predates it."""
         t_end = self.now if until is None else until
         total = 0.0
         for inst in list(self.instances.values()) + self.retired:
             t1 = inst.retired_at if inst.retired_at is not None else t_end
+            t1 = min(t1, t_end)
             total += (inst.gpu.price_hr
                       * max(0.0, t1 - inst.launched_at) / 3600.0)
         return total

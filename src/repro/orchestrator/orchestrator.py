@@ -15,6 +15,11 @@ runs *inside* the discrete-event simulation clock.
   * trace ``FleetEvent``s remove capacity mid-run: preempted instances lose
     all in-flight progress (requests are re-routed and re-prefilled), and
     the controller re-solves via ``on_instance_failure`` with stockout caps;
+  * with a price-tiered catalog, spot preemptions are additionally *drawn*
+    from each spot variant's Poisson ``preemption_rate`` inside the sim
+    clock (``_SpotPreemptionSampler``) — on-demand instances are never
+    victims, and a spot-market stockout caps only the spot sub-pool so the
+    re-solve backfills from on-demand;
   * a ``Timeline`` records per-window cost, SLO attainment, fleet
     composition, and solver latency.
 """
@@ -26,6 +31,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.accelerators import pool_key
 from repro.core.allocator import Melange, MelangeFleet
 from repro.core.autoscaler import AllocationDiff, Autoscaler, FleetAutoscaler
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
@@ -100,23 +106,101 @@ def _base_of(eng: ClusterEngine, gpu_name: str) -> str:
     return acc.base_name if acc is not None else gpu_name
 
 
+def _pool_of(eng: ClusterEngine, gpu_name: str) -> str:
+    """Market pool an event naming ``gpu_name`` acts on: the spot
+    sub-pool for a spot variant, the physical base pool otherwise."""
+    return pool_key(gpu_name, eng.profile.gpus)
+
+
 def _select_victims(eng: ClusterEngine, gpu: str, n: int):
     """Spot reclaims hit newest-first; already-draining instances last (they
     are leaving anyway and their loss must not touch the solver target).
     ``gpu`` names a base type (or any catalog entry drawing on the pool):
-    a reclaim of A10G chips hits A10Gx2/A10Gx4 instances too."""
+    a reclaim of A10G chips hits A10Gx2/A10Gx4 instances too.
+
+    Price tiers: an event naming a *spot* variant reclaims only spot
+    instances of that pool — on-demand instances are non-preemptible by
+    contract and must never be victims.  An event naming a base type
+    (legacy traces, where everything was implicitly preemptible) may hit
+    any tier, but consumes the preemptible spot capacity first."""
+    acc = eng.profile.gpus.get(gpu)
     base = _base_of(eng, gpu)
     victims = [i for i in eng.instances.values()
                if i.gpu_name == gpu or _base_of(eng, i.gpu_name) == base]
-    return sorted(victims, key=lambda i: (i.draining, -i.inst_id))[:n]
+    if acc is not None and acc.is_spot:
+        victims = [i for i in victims if i.is_spot]
+    return sorted(victims,
+                  key=lambda i: (i.draining, not i.is_spot, -i.inst_id))[:n]
 
 
-def _live_chips(eng: ClusterEngine, base: str) -> int:
-    """Chips of ``base`` held by live (non-retired) instances."""
-    return eng.chips_by_base().get(base, 0)
+def _live_chips(eng: ClusterEngine, pool: str) -> int:
+    """Chips of ``pool`` held by live (non-retired) instances."""
+    return eng.chips_by_pool().get(pool, 0)
 
 
-class ClusterOrchestrator:
+class _SpotPreemptionSampler:
+    """Shared spot-market machinery for both orchestrators: instead of
+    relying only on scripted trace events, preemptions of *spot* instances
+    are drawn inside the sim clock from each variant's Poisson rate
+    (``preemption_rate`` per instance-hour x live instances).  Each drawn
+    batch is fed through the normal fleet-event path, so victim selection,
+    autoscaler re-solves, and telemetry are identical to scripted events;
+    with probability ``spot_stockout_prob`` the batch also stocks out the
+    variant's spot sub-pool (restocking after ``spot_restock_s``), which
+    makes the controller backfill from the on-demand tier."""
+
+    @staticmethod
+    def _check_spot_config(spot_stockout_prob: float,
+                           spot_restock_s: Optional[float]) -> None:
+        """Sampled stockouts must be paired with a restock delay: with
+        ``spot_restock_s=None`` the first sampled stockout would cap the
+        spot sub-pool *for the rest of the run* — every later re-solve
+        silently backfilling on-demand while still reporting the arm as
+        mixed-tier.  Fail at construction instead."""
+        if spot_stockout_prob > 0 and spot_restock_s is None:
+            raise ValueError(
+                "spot_stockout_prob > 0 requires spot_restock_s: a "
+                "sampled spot-market stockout with no restock would cap "
+                "the spot sub-pool permanently")
+
+    def _sample_spot_preemptions(self, eng: ClusterEngine, t: float,
+                                 dt: float) -> None:
+        live: dict[str, int] = {}
+        for inst in eng.instances.values():
+            if inst.is_spot:
+                live[inst.gpu_name] = live.get(inst.gpu_name, 0) + 1
+        for name in sorted(live):
+            rate = eng.profile.gpus[name].preemption_rate
+            if rate <= 0:
+                continue
+            lam = live[name] * rate * dt / 3600.0
+            k = int(self._spot_rng.poisson(lam))
+            if k <= 0:
+                continue
+            stock = bool(self._spot_rng.random() < self.spot_stockout_prob)
+            self._on_fleet_event(
+                eng, FleetEvent(t, "preemption", name, k, stockout=stock))
+            if stock and self.spot_restock_s is not None:
+                t_r = t + self.spot_restock_s
+                eng.schedule(t_r, lambda e, g=name, tt=t_r:
+                             self._on_fleet_event(
+                                 e, FleetEvent(tt, "restock", g)))
+
+    def _schedule_spot_sampling(self, eng: ClusterEngine,
+                                duration: float) -> None:
+        if not self.spot_preemptions:
+            return
+        if not any(a.is_spot for a in eng.profile.gpus.values()):
+            return                       # no preemptible tier in the catalog
+        dt = self.spot_sample_s
+        t = dt
+        while t <= duration + 1e-9:
+            eng.schedule(t, lambda e, tt=t, d=dt:
+                         self._sample_spot_preemptions(e, tt, d))
+            t += dt
+
+
+class ClusterOrchestrator(_SpotPreemptionSampler):
     """Runs a ``WorkloadTrace`` against an elastic Mélange-allocated fleet."""
 
     def __init__(self, melange: Melange, trace: WorkloadTrace, *,
@@ -130,6 +214,12 @@ class ClusterOrchestrator:
                  straggler_factor: float = 0.0,
                  prefill_chunk: int = 4096,
                  min_instances: int = 1,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: Optional[float] = None,
+                 spot_preemptions: bool = True,
+                 spot_sample_s: Optional[float] = None,
+                 spot_stockout_prob: float = 0.0,
+                 spot_restock_s: Optional[float] = None,
                  engine_params: EngineModelParams = DEFAULT_ENGINE):
         self.melange = melange
         self.trace = trace
@@ -139,6 +229,20 @@ class ClusterOrchestrator:
         self.straggler_factor = straggler_factor
         self.prefill_chunk = prefill_chunk
         self.min_instances = min_instances
+        # spot tiers: preemptions are drawn from each spot variant's
+        # Poisson rate inside the sim clock (scripted trace events still
+        # apply on top); the solver prices the replacement downtime via
+        # the availability discount (replacement_delay_s defaults to the
+        # launch delay — that IS the replacement downtime here)
+        self.min_ondemand_frac = min_ondemand_frac
+        self.replacement_delay_s = (launch_delay_s if replacement_delay_s
+                                    is None else replacement_delay_s)
+        self.spot_preemptions = spot_preemptions
+        self.spot_sample_s = spot_sample_s or window_s
+        self._check_spot_config(spot_stockout_prob, spot_restock_s)
+        self.spot_stockout_prob = spot_stockout_prob
+        self.spot_restock_s = spot_restock_s
+        self._spot_rng = np.random.default_rng(seed + 0x5907)
         self.engine_params = engine_params
         initial = trace.workload_at(0.0, seed=seed)
         if initial.total_rate <= 0:
@@ -152,7 +256,9 @@ class ClusterOrchestrator:
         self.autoscaler = Autoscaler(
             melange, initial, headroom=headroom,
             drift_threshold=drift_threshold, ewma=ewma,
-            solver_budget_s=solver_budget_s)
+            solver_budget_s=solver_budget_s,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s)
         if self.autoscaler.current is None:
             raise ValueError(
                 f"initial workload of trace '{trace.name}' is infeasible "
@@ -270,11 +376,11 @@ class ClusterOrchestrator:
             self.timeline.record_decision(now, "restock", gpu=ev.gpu)
             return
         if ev.kind == "stockout":
-            # cap the base type's *chip pool*: chips held right now (across
-            # all TP variants) are all the market will supply until restock.
-            # Normalize first: the event may name a catalog entry ('v5e-4')
-            # whose pool key is its base_name ('v5e').
-            live = _live_chips(eng, _base_of(eng, ev.gpu))
+            # cap the *pool*: chips held right now are all the market will
+            # supply until restock.  Normalize first: the event may name a
+            # catalog entry ('v5e-4') whose pool key is its base_name
+            # ('v5e') — or a spot variant, capping only its spot sub-pool.
+            live = _live_chips(eng, _pool_of(eng, ev.gpu))
             asc.set_chip_stockout(ev.gpu, live)
             self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
                                           cap=live)
@@ -301,8 +407,8 @@ class ClusterOrchestrator:
         if n_target_lost == 0:
             if ev.stockout:
                 asc.set_chip_stockout(
-                    ev.gpu, asc.current.chips_by_base().get(
-                        _base_of(eng, ev.gpu), 0))
+                    ev.gpu, asc.current.chips_by_pool().get(
+                        _pool_of(eng, ev.gpu), 0))
             if eng.instances:
                 eng.resubmit(orphans, now)
             else:
@@ -358,6 +464,7 @@ class ClusterOrchestrator:
                                                                    state))
         for ev in self.trace.events:
             eng.schedule(ev.t, lambda e, v=ev: self._on_fleet_event(e, v))
+        self._schedule_spot_sampling(eng, self.trace.duration)
         eng.run()
         eng.drop_stranded()
         # tail flush: record (not control) completions past the last window
@@ -472,7 +579,7 @@ def _fleet_requests(traces: dict[str, WorkloadTrace],
     return reqs
 
 
-class FleetOrchestrator:
+class FleetOrchestrator(_SpotPreemptionSampler):
     """Drives several models' traces against one elastic shared pool.
 
     Per-model telemetry windows feed the :class:`FleetAutoscaler`: only
@@ -498,6 +605,12 @@ class FleetOrchestrator:
                  straggler_factor: float = 0.0,
                  prefill_chunk: int = 4096,
                  min_instances: int = 1,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: Optional[float] = None,
+                 spot_preemptions: bool = True,
+                 spot_sample_s: Optional[float] = None,
+                 spot_stockout_prob: float = 0.0,
+                 spot_restock_s: Optional[float] = None,
                  engine_params: EngineModelParams = DEFAULT_ENGINE):
         self.fleet = fleet
         if traces is None:
@@ -527,6 +640,15 @@ class FleetOrchestrator:
         self.straggler_factor = straggler_factor
         self.prefill_chunk = prefill_chunk
         self.min_instances = min_instances
+        self.min_ondemand_frac = min_ondemand_frac
+        self.replacement_delay_s = (launch_delay_s if replacement_delay_s
+                                    is None else replacement_delay_s)
+        self.spot_preemptions = spot_preemptions
+        self.spot_sample_s = spot_sample_s or window_s
+        self._check_spot_config(spot_stockout_prob, spot_restock_s)
+        self.spot_stockout_prob = spot_stockout_prob
+        self.spot_restock_s = spot_restock_s
+        self._spot_rng = np.random.default_rng(seed + 0x5907)
         self.engine_params = engine_params
         initial: dict[str, object] = {}
         for m, tr in self.traces.items():
@@ -543,7 +665,9 @@ class FleetOrchestrator:
         self.autoscaler = FleetAutoscaler(
             fleet, initial, headroom=headroom,
             drift_threshold=drift_threshold, ewma=ewma,
-            solver_budget_s=solver_budget_s)
+            solver_budget_s=solver_budget_s,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s)
         if self.autoscaler.current is None:
             raise ValueError(
                 "initial fleet workloads are infeasible for every GPU type "
@@ -716,7 +840,7 @@ class FleetOrchestrator:
             self.timeline.record_decision(now, "restock", gpu=ev.gpu)
             return
         if ev.kind == "stockout":
-            live = _live_chips(eng, _base_of(eng, ev.gpu))
+            live = _live_chips(eng, _pool_of(eng, ev.gpu))
             asc.set_chip_stockout(ev.gpu, live)
             self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
                                           cap=live)
@@ -740,7 +864,7 @@ class FleetOrchestrator:
         if not losses:
             if ev.stockout:
                 asc.set_chip_stockout(
-                    ev.gpu, eng.chips_by_base().get(_base_of(eng, ev.gpu),
+                    ev.gpu, eng.chips_by_pool().get(_pool_of(eng, ev.gpu),
                                                     0))
             eng.resubmit(orphans, now)
             self.timeline.record_decision(
@@ -792,6 +916,7 @@ class FleetOrchestrator:
             for ev in tr.events:
                 eng.schedule(ev.t, lambda e, v=ev: self._on_fleet_event(e,
                                                                         v))
+        self._schedule_spot_sampling(eng, duration)
         eng.run()
         eng.drop_stranded()
         if state["comp_ptr"] < len(eng.completed) \

@@ -118,4 +118,8 @@ def preemption_events(gpus: Sequence[str], *, duration_s: float,
             t_r = float(t + restock_after_s)
             if t_r < duration_s:
                 out.append(FleetEvent(t_r, "restock", gpu))
+    # restocks are appended next to their stockout, i.e. *after* later
+    # preemptions — sort so the stream is a valid (time-monotone) event
+    # schedule before it ever reaches a WorkloadTrace or an orchestrator
+    out.sort(key=lambda e: e.t)
     return out

@@ -81,7 +81,22 @@ class WorkloadTrace:
 
     def __post_init__(self):
         self.segments = sorted(self.segments, key=lambda s: s.t_start)
-        self.events = sorted(self.events, key=lambda e: e.t)
+        self.events = list(self.events)     # no aliasing of caller lists
+        # events are an execution schedule: require the caller to hand
+        # them over time-sorted instead of silently reordering (a
+        # generator emitting an unsorted stream is a bug worth surfacing
+        # — see preemption_events' restock interleaving)
+        for e in self.events:
+            if not np.isfinite(e.t) or e.t < 0:
+                raise ValueError(
+                    f"trace '{self.name}': event at t={e.t!r} is not a "
+                    "finite non-negative time")
+        for a, b in zip(self.events[:-1], self.events[1:]):
+            if b.t < a.t:
+                raise ValueError(
+                    f"trace '{self.name}': events not time-sorted "
+                    f"({a.kind}@{a.t} precedes {b.kind}@{b.t}); sort the "
+                    "stream before constructing the trace")
 
     # -- schedule queries ----------------------------------------------------
     @property
@@ -151,8 +166,9 @@ class WorkloadTrace:
                              list(self.events), self.seed)
 
     def with_events(self, events: list[FleetEvent]) -> "WorkloadTrace":
-        return WorkloadTrace(self.name, list(self.segments),
-                             list(self.events) + list(events), self.seed)
+        merged = sorted(list(self.events) + list(events), key=lambda e: e.t)
+        return WorkloadTrace(self.name, list(self.segments), merged,
+                             self.seed)
 
     # -- realization ---------------------------------------------------------
     def realize(self, seed: Optional[int] = None) -> RealizedTrace:

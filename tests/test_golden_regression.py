@@ -65,6 +65,12 @@ def build_cases() -> dict:
         make_workload("pubmed", 8.0), mel_tp.profile,
         chip_caps={"A10G": 4})
 
+    mel_spot = Melange(PAPER_GPUS, m7, 0.12, spot_tiers=True)
+    cases["spot-mixed-slo012-r8-floor50"] = build_problem(
+        make_workload("mixed", 8.0), mel_spot.profile,
+        min_ondemand_frac=0.5, replacement_delay_s=120.0,
+        chip_caps={"A100:spot": 2})
+
     fleet = MelangeFleet(PAPER_GPUS, [
         ModelSpec("chat", m7, 0.12, workload=make_workload("arena", 8.0)),
         ModelSpec("docs", _llama2_13b(), 0.2,
@@ -112,6 +118,7 @@ def cases() -> dict:
     "paper-mixed-slo012-r8",
     "paper-pubmed-slo02-r6",
     "tp12-pubmed-slo02-r8-capA10G4",
+    "spot-mixed-slo012-r8-floor50",
     "fleet-chat+docs-capA100-3",
 ])
 def test_solver_costs_within_golden_bounds(name, goldens, cases):

@@ -453,11 +453,17 @@ def fleet_with_traces():
 def test_fleet_orchestrator_one_model_drifts_other_not_churned(
         fleet_with_traces):
     """Satellite: a two-model trace where only chat ramps — docs keeps its
-    instances (no-op re-solve stability for the stable model)."""
+    instances (no-op re-solve stability for the stable model).
+
+    The threshold sits above the per-window sampling-noise floor: since
+    the EWMA cold-start fix, the first window's *measured* rates replace
+    the provisioning estimate outright, so a ~200-request window carries
+    ~0.1-0.3 L1 histogram noise (docs here) while chat's real 4x ramp
+    drives drift past 0.8 — 0.5 cleanly separates the two."""
     from repro.orchestrator import FleetOrchestrator
     orch = FleetOrchestrator(fleet_with_traces, window_s=100.0,
                              launch_delay_s=20.0, solver_budget_s=1.0,
-                             drift_threshold=0.10, seed=1)
+                             drift_threshold=0.5, seed=1)
     docs_before = dict(
         orch.autoscaler.current.per_model["docs"].counts)
     res = orch.run()

@@ -1,0 +1,603 @@
+"""Spot/on-demand price tiers (ISSUE 4 tentpole): (type, tier) catalog
+expansion, availability-floor load matrices, tier-aware pool caps through
+the solver stack, spot-priced billing, and the autoscaler's on-demand
+backfill after a spot-market stockout.  Plus the satellite bugfixes: EWMA
+cold-start priming and ``ClusterEngine.cost(until=...)`` clamping.
+
+Each hypothesis property has a plain deterministic core (``_check_*``) so
+the logic is exercised even where hypothesis is not installed.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Autoscaler, ClusterEngine, EngineModel,
+                        FleetAutoscaler, Melange, MelangeFleet, ModelPerf,
+                        ModelSpec, PAPER_GPUS, SimRequest, build_problem,
+                        chips_by_pool, expand_price_tiers,
+                        expand_tp_variants, make_workload, pool_key, solve,
+                        spot_share_by_bucket, spot_variant)
+from repro.core.crosscheck import check_tier_floor_case, small_tier_problem
+from repro.core.ilp import _EPS, _greedy, solve_brute_force
+from repro.core.loadmatrix import availability
+from repro.core.workload import DATASETS, bucket_grid, workload_from_samples
+
+SMALL_IN_EDGES = (1, 100, 1000, 8000, 32000)
+SMALL_OUT_EDGES = (1, 100, 2000)
+SMALL_BUCKETS = bucket_grid(SMALL_IN_EDGES, SMALL_OUT_EDGES)
+
+
+def _small_workload(rng, dataset, rate):
+    i, o = DATASETS[dataset](rng, 400)
+    return workload_from_samples(i, o, rate, name=dataset,
+                                 input_edges=SMALL_IN_EDGES,
+                                 output_edges=SMALL_OUT_EDGES)
+
+
+def _parity_catalog():
+    """Spot priced exactly at on-demand with zero preemption risk: tier
+    expansion must then be a pure column duplication."""
+    return {k: dataclasses.replace(v, spot_price_hr=v.price_hr,
+                                   preemption_rate=0.0)
+            for k, v in PAPER_GPUS.items()}
+
+
+# ---------------------------------------------------------------------------
+# catalog expansion: (type, tier) variants, pools, tp x tier composition
+# ---------------------------------------------------------------------------
+def test_spot_variant_fields_and_pools():
+    cat = expand_price_tiers(PAPER_GPUS)
+    assert set(cat) == {g for b in PAPER_GPUS for g in (b, f"{b}:spot")}
+    s = cat["A100:spot"]
+    assert s.is_spot and s.tier == "spot"
+    assert s.price_hr == PAPER_GPUS["A100"].spot_price_hr < \
+        PAPER_GPUS["A100"].price_hr
+    # same silicon: chip pool shared with on-demand, market pool separate
+    assert s.base_name == "A100"
+    assert s.market_pool == "A100:spot"
+    assert cat["A100"].market_pool == "A100"
+    assert s.mem_gb == cat["A100"].mem_gb
+    # expansion is idempotent (already-spot entries pass through)
+    again = expand_price_tiers(cat)
+    assert set(again) == set(cat)
+
+
+def test_spot_variant_validation():
+    base = PAPER_GPUS["A100"]
+    with pytest.raises(ValueError, match="spot_price_hr"):
+        spot_variant(dataclasses.replace(base, spot_price_hr=None))
+    with pytest.raises(ValueError, match="never costs more"):
+        spot_variant(dataclasses.replace(base,
+                                         spot_price_hr=base.price_hr * 2))
+    with pytest.raises(ValueError, match="already a spot"):
+        spot_variant(spot_variant(base))
+
+
+def test_tp_tier_composition_shares_chip_pool():
+    cat = expand_price_tiers(expand_tp_variants(PAPER_GPUS, (1, 2)))
+    x = cat["A100x2:spot"]
+    assert x.is_spot and x.chips == 2 and x.tp == 2
+    assert x.base_name == "A100" and x.market_pool == "A100:spot"
+    assert x.price_hr == pytest.approx(
+        2 * PAPER_GPUS["A100"].spot_price_hr)
+    # reclaim exposure scales with the chip count
+    assert x.preemption_rate == pytest.approx(
+        2 * PAPER_GPUS["A100"].preemption_rate)
+    # the other composition order lands in the same pools
+    cat2 = expand_tp_variants(expand_price_tiers(PAPER_GPUS), (1, 2))
+    y = cat2["A100:spotx2"]
+    assert (y.base_name, y.market_pool, y.chips, y.price_hr) == \
+        ("A100", "A100:spot", 2, x.price_hr)
+    # pool accounting spans tp x tier at both granularities
+    pools = chips_by_pool({"A100x2:spot": 1, "A100": 2, "A100:spot": 1},
+                          cat)
+    assert pools == {"A100": 5, "A100:spot": 3}
+    assert pool_key("A100x2:spot", cat) == "A100:spot"
+    assert pool_key("A100x2", cat) == "A100"
+    assert pool_key("unknown", cat) == "unknown"
+
+
+# ---------------------------------------------------------------------------
+# load matrix: availability discount + structural on-demand floor
+# ---------------------------------------------------------------------------
+def test_availability_discount_inflates_spot_loads():
+    cat = expand_price_tiers(PAPER_GPUS)
+    assert availability(cat["A100"], 600.0) == 1.0
+    av = availability(cat["A100:spot"], 600.0)
+    assert av == pytest.approx(1 - 0.15 * 600 / 3600)
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12,
+                  buckets=SMALL_BUCKETS, spot_tiers=True)
+    wl = _small_workload(np.random.default_rng(0), "arena", 4.0)
+    prob = build_problem(wl, mel.profile, slice_factor=2,
+                         replacement_delay_s=600.0)
+    j_od = prob.gpu_names.index("A100")
+    j_sp = prob.gpu_names.index("A100:spot")
+    finite = np.isfinite(prob.loads[:, j_od]) \
+        & np.isfinite(prob.loads[:, j_sp])
+    assert finite.any()
+    np.testing.assert_allclose(prob.loads[finite, j_sp],
+                               prob.loads[finite, j_od] / av)
+    assert prob.spot_col is not None
+    assert prob.spot_col[j_sp] and not prob.spot_col[j_od]
+
+
+def test_min_ondemand_floor_masks_per_bucket():
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12,
+                  buckets=SMALL_BUCKETS, spot_tiers=True)
+    wl = _small_workload(np.random.default_rng(1), "arena", 4.0)
+    prob = build_problem(wl, mel.profile, slice_factor=4,
+                         min_ondemand_frac=0.5)
+    spot_cols = np.nonzero(prob.spot_col)[0]
+    by_bucket: dict[int, list[int]] = {}
+    for i, b in enumerate(prob.bucket_of_slice):
+        by_bucket.setdefault(int(b), []).append(i)
+    for b, idx in by_bucket.items():
+        masked = sum(1 for i in idx
+                     if not np.isfinite(prob.loads[i, spot_cols]).any())
+        assert masked == math.ceil(0.5 * len(idx) - 1e-9)
+    with pytest.raises(ValueError, match="min_ondemand_frac"):
+        build_problem(wl, mel.profile, min_ondemand_frac=1.5)
+
+
+def test_floor_enforced_on_every_solver_layer():
+    """Greedy, local-search-polished B&B, and brute force all keep each
+    bucket's spot share at or under its ceiling (structural enforcement:
+    pinned slices have no feasible spot column)."""
+    rng = np.random.default_rng(7)
+    prob, max_spot = small_tier_problem(rng)
+    n_by_bucket: dict[int, int] = {}
+    for b in map(int, prob.bucket_of_slice):
+        n_by_bucket[b] = n_by_bucket.get(b, 0) + 1
+
+    def check(assign):
+        for b, share in spot_share_by_bucket(prob, assign).items():
+            assert round(share * n_by_bucket[b]) <= max_spot[b]
+
+    g = _greedy(prob)
+    if g is not None:
+        check(g)
+    bb = solve(prob, time_budget_s=5.0)
+    bf = solve_brute_force(prob)
+    assert (bb is None) == (bf is None)
+    if bb is not None:
+        check(bb.assignment)
+        check(bf.assignment)
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_tier_floor_and_pool_caps(seed):
+    """solve == brute force on tiered instances; physical + spot sub-pool
+    caps hold; no bucket exceeds its spot-slice ceiling."""
+    check_tier_floor_case(seed)
+
+
+def test_tier_floor_smoke():
+    for seed in range(8):
+        check_tier_floor_case(seed)
+
+
+# ---------------------------------------------------------------------------
+# reduction property: parity tiers collapse to the unexpanded solution
+# ---------------------------------------------------------------------------
+def _check_tier_reduction(seed):
+    rng = np.random.default_rng(seed)
+    dataset = ["arena", "pubmed", "mixed"][int(rng.integers(0, 3))]
+    rate = float(rng.uniform(1.0, 8.0))
+    slo = float(rng.uniform(0.08, 0.3))
+    wl = _small_workload(rng, dataset, rate)
+    plain = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), slo,
+                    buckets=SMALL_BUCKETS)
+    tiered = Melange(_parity_catalog(), ModelPerf.llama2_7b(), slo,
+                     buckets=SMALL_BUCKETS, spot_tiers=True)
+    prob_p = build_problem(wl, plain.profile, slice_factor=2)
+    # replacement delay is irrelevant at preemption_rate=0 — exactly the
+    # reduction statement
+    prob_t = build_problem(wl, tiered.profile, slice_factor=2,
+                           replacement_delay_s=1800.0)
+    # structural: each spot column duplicates its on-demand sibling
+    for g in prob_p.gpu_names:
+        j_od = prob_t.gpu_names.index(g)
+        j_sp = prob_t.gpu_names.index(f"{g}:spot")
+        np.testing.assert_array_equal(prob_t.loads[:, j_sp],
+                                      prob_t.loads[:, j_od])
+        np.testing.assert_array_equal(
+            prob_t.loads[:, j_od],
+            prob_p.loads[:, prob_p.gpu_names.index(g)])
+        assert prob_t.costs[j_sp] == prob_t.costs[j_od]
+    sp = solve(prob_p, time_budget_s=5.0)
+    st_ = solve(prob_t, time_budget_s=10.0)
+    assert (sp is None) == (st_ is None)
+    if sp is not None and sp.optimal and st_.optimal:
+        assert abs(sp.cost - st_.cost) < 1e-9
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_parity_tiers_reduce_to_unexpanded(seed):
+    """Tier-expanded solves with preemption_rate=0 and spot price ==
+    on-demand price are *exactly* the unexpanded problem."""
+    _check_tier_reduction(seed)
+
+
+def test_tier_reduction_smoke():
+    for seed in range(4):
+        _check_tier_reduction(seed)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end allocation: spot discount priced in, floor respected
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mel_tiers():
+    return Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12,
+                   spot_tiers=True)
+
+
+def test_mixed_tier_allocation_cheaper_than_all_ondemand(mel_tiers):
+    wl = make_workload("mixed", 8.0)
+    mixed = mel_tiers.allocate(wl, min_ondemand_frac=0.5,
+                               replacement_delay_s=120.0,
+                               time_budget_s=3.0)
+    ondemand = mel_tiers.allocate(
+        wl, gpu_subset=[g for g in mel_tiers.gpus
+                        if not mel_tiers.gpus[g].is_spot],
+        time_budget_s=3.0)
+    assert mixed is not None and ondemand is not None
+    assert mixed.cost_per_hour < ondemand.cost_per_hour - 1e-9
+    tiers = mixed.counts_by_tier()
+    assert tiers.get("spot"), "discounted spot capacity must be used"
+    cbt = mixed.cost_by_tier()
+    assert sum(cbt.values()) == pytest.approx(mixed.cost_per_hour)
+    # pool accounting: spot sub-pool is a subset of the physical pool
+    pools = mixed.chips_by_pool()
+    for p, c in pools.items():
+        if p.endswith(":spot"):
+            assert c <= pools[p.split(":")[0]]
+
+
+def test_allocation_respects_floor_per_bucket(mel_tiers):
+    wl = make_workload("mixed", 8.0)
+    frac = 0.5
+    a = mel_tiers.allocate(wl, min_ondemand_frac=frac, time_budget_s=3.0)
+    assert a is not None
+    prob = build_problem(a.workload, mel_tiers.profile,
+                         min_ondemand_frac=frac)
+    shares = spot_share_by_bucket(prob, a.solution.assignment)
+    assert shares, "assignment must cover at least one bucket"
+    for b, share in shares.items():
+        assert share <= 1 - frac + 1e-9
+
+
+def test_full_floor_forbids_spot(mel_tiers):
+    wl = make_workload("arena", 6.0)
+    a = mel_tiers.allocate(wl, min_ondemand_frac=1.0, time_budget_s=2.0)
+    assert a is not None
+    assert not a.counts_by_tier().get("spot")
+
+
+def test_spot_chip_cap_binds_only_spot_tier(mel_tiers):
+    wl = make_workload("mixed", 8.0)
+    free = mel_tiers.allocate(wl, time_budget_s=2.0)
+    assert free is not None
+    capped = mel_tiers.allocate(wl, chip_caps={"A100:spot": 0, "H100:spot": 0,
+                                               "L4:spot": 0, "A10G:spot": 0},
+                                time_budget_s=2.0)
+    assert capped is not None
+    assert not capped.counts_by_tier().get("spot")
+    # the same keys leave the on-demand tier unbounded
+    assert capped.total_instances >= 1
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: cold-start priming + spot stockout -> on-demand backfill
+# ---------------------------------------------------------------------------
+def test_autoscaler_no_phantom_drift_on_first_window():
+    """The provisioning estimate must not be EWMA-blended with the first
+    real window: one observation of the true rates fully replaces it."""
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+    init = make_workload("arena", 2.0)
+    asc = Autoscaler(mel, init, headroom=0.0, ewma=0.3,
+                     solver_budget_s=1.0)
+    # true traffic equals the estimate: zero drift, no phantom
+    asc.observe_rates(init.rates)
+    assert asc.drift() == pytest.approx(0.0, abs=1e-12)
+    # a *wrong* estimate is fully corrected by the first window
+    asc2 = Autoscaler(mel, init, headroom=0.0, ewma=0.3,
+                      solver_budget_s=1.0)
+    true = make_workload("arena", 6.0)
+    asc2.observe_rates(true.rates)
+    np.testing.assert_allclose(asc2.observed, true.rates)
+    assert asc2.drift() == pytest.approx(
+        np.abs(true.rates - init.rates).sum() / init.rates.sum())
+    # subsequent windows blend normally
+    asc2.observe_rates(init.rates)
+    np.testing.assert_allclose(asc2.observed,
+                               0.7 * true.rates + 0.3 * init.rates)
+
+
+def test_fleet_autoscaler_no_phantom_drift_per_model():
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 2.0)),
+        ModelSpec("docs", ModelPerf.llama2_7b(), 0.2,
+                  workload=make_workload("pubmed", 2.0)),
+    ]
+    fleet = MelangeFleet(PAPER_GPUS, specs)
+    asc = FleetAutoscaler(fleet, headroom=0.0, ewma=0.3,
+                          solver_budget_s=2.0)
+    true = make_workload("arena", 7.0)
+    asc.observe_rates("chat", true.rates)
+    np.testing.assert_allclose(asc.observed["chat"], true.rates)
+    # the other model's estimate is untouched (per-model priming)
+    np.testing.assert_allclose(asc.observed["docs"],
+                               fleet.specs["docs"].workload.rates)
+    asc.observe_rates("chat", np.zeros_like(true.rates))
+    np.testing.assert_allclose(asc.observed["chat"], 0.7 * true.rates)
+
+
+def test_autoscaler_spot_stockout_backfills_from_ondemand():
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, spot_tiers=True)
+    wl = make_workload("mixed", 8.0)
+    asc = Autoscaler(mel, wl, headroom=0.0, min_ondemand_frac=0.5,
+                     replacement_delay_s=120.0, solver_budget_s=2.0)
+    spot_used = {g: n for g, n in asc.current.counts.items()
+                 if mel.gpus[g].is_spot}
+    assert spot_used, "the discounted tier must be in the initial mix"
+    gpu = next(iter(spot_used))
+    pool = mel.gpus[gpu].market_pool
+    served_before = asc.current.workload.total_rate
+    diff = asc.on_instance_failure(gpu, spot_used[gpu], stockout=True)
+    # the *spot* pool is capped at its surviving chips; on-demand is not
+    assert pool in asc.chip_caps
+    assert asc.chip_caps[pool] == asc.current.chips_by_pool().get(pool, 0)
+    base = mel.gpus[gpu].base_name
+    assert base not in asc.chip_caps
+    # capacity was replaced (workload still fully served) — by some mix
+    # of on-demand and other spot pools, none of which are capped
+    assert asc.current is not None
+    assert asc.current.workload.total_rate == pytest.approx(served_before)
+    assert diff.add, "lost spot capacity must be backfilled"
+    # restock reopens the spot market
+    asc.lift_stockout(gpu)
+    assert pool not in asc.chip_caps
+
+
+def test_fleet_autoscaler_spot_stockout_spans_models():
+    # single-base-type catalog so every model needs several A100s and the
+    # 50% floor leaves a guaranteed-cheaper spot share in the optimum —
+    # the test must not depend on the any-time solver's luck
+    cat = {"A100": PAPER_GPUS["A100"]}
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("mixed", 8.0)),
+        ModelSpec("assist", ModelPerf.llama2_7b(), 0.15,
+                  workload=make_workload("mixed", 6.0)),
+    ]
+    fleet = MelangeFleet(cat, specs, spot_tiers=True)
+    asc = FleetAutoscaler(fleet, headroom=0.0, min_ondemand_frac=0.5,
+                          solver_budget_s=2.0)
+    spot = [(m, g) for (m, g), n in asc.current.counts().items()
+            if fleet.gpus[g].is_spot]
+    assert spot, "shared fleet must exploit the discounted tier"
+    m, g = spot[0]
+    pool = fleet.gpus[g].market_pool
+    asc.on_instance_failure(m, g, asc.current.per_model[m].counts[g],
+                            stockout=True)
+    assert pool in asc.chip_caps
+    # pool cap spans models: total spot chips of that pool across the
+    # whole fleet respect the recorded survivor count
+    assert asc.current.chips_by_pool().get(pool, 0) <= asc.chip_caps[pool]
+    assert fleet.gpus[g].base_name not in asc.chip_caps
+
+
+# ---------------------------------------------------------------------------
+# engine: spot billing + cost(until=...) clamping (satellite bugfix)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tier_engine():
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, spot_tiers=True)
+    return mel, ClusterEngine(mel.profile, EngineModel(ModelPerf.llama2_7b()),
+                              seed=0)
+
+
+def test_engine_bills_spot_at_spot_price(tier_engine):
+    mel, _ = tier_engine
+    eng = ClusterEngine(mel.profile, EngineModel(ModelPerf.llama2_7b()),
+                        seed=0)
+    eng.add_instance("A100:spot", at=0.0)
+    eng.add_instance("A100", at=0.0)
+    eng.now = 3600.0
+    spot_p = PAPER_GPUS["A100"].spot_price_hr
+    assert eng.cost_rate() == pytest.approx(PAPER_GPUS["A100"].price_hr
+                                            + spot_p)
+    assert eng.cost() == pytest.approx(PAPER_GPUS["A100"].price_hr + spot_p)
+    assert eng.chips_by_pool() == {"A100": 2, "A100:spot": 1}
+
+
+def test_engine_cost_until_clamps_lifetimes(tier_engine):
+    """Cost conservation against hand-computed instance lifetimes: an
+    instance retired (or retargeted away) *after* ``until`` must bill only
+    up to ``until`` — no attribution reset, no double-billed overlap."""
+    mel, _ = tier_engine
+    eng = ClusterEngine(mel.profile, EngineModel(ModelPerf.llama2_7b()),
+                        seed=0)
+    p_a = PAPER_GPUS["A100"].price_hr
+    p_l = PAPER_GPUS["L4"].price_hr
+    a = eng.add_instance("A100", at=0.0)
+    eng.now = 100.0
+    eng.remove_instance(a)               # lifetime [0, 100]
+    b = eng.add_instance("L4")           # lifetime [100, ...)
+    eng.now = 200.0
+    # until before the retirement: clamp, not full-lifetime attribution
+    assert eng.cost(until=50.0) == pytest.approx(p_a * 50 / 3600)
+    # until between retirement and now: both segments, no overlap
+    assert eng.cost(until=150.0) == pytest.approx(
+        p_a * 100 / 3600 + p_l * 50 / 3600)
+    assert eng.cost() == pytest.approx(
+        p_a * 100 / 3600 + p_l * 100 / 3600)
+    # until before an instance ever launched: it bills nothing
+    assert eng.cost(until=99.0) == pytest.approx(p_a * 99 / 3600)
+    # conservation: cost(t1) - cost(t0) equals the live fleet's rate
+    # integral over [t0, t1] while composition is static
+    assert eng.cost(until=180.0) - eng.cost(until=120.0) == pytest.approx(
+        p_l * 60 / 3600)
+    _ = b
+
+
+def test_fleet_engine_retarget_does_not_double_bill():
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 2.0)),
+        ModelSpec("docs", ModelPerf.llama2_7b(), 0.2,
+                  workload=make_workload("pubmed", 2.0)),
+    ]
+    fleet = MelangeFleet(PAPER_GPUS, specs)
+    members = {m: (fleet.members[m].profile,
+                   EngineModel(fleet.specs[m].perf))
+               for m in fleet.models}
+    eng = ClusterEngine.for_fleet(members, seed=0)
+    p_a = PAPER_GPUS["A100"].price_hr
+    iid = eng.add_instance("A100", at=0.0, model="chat")
+    eng.now = 100.0
+    eng.retarget_instance(iid, "docs")   # donor retires, fresh instance
+    eng.now = 300.0
+    # before the retarget, exactly one instance existed
+    assert eng.cost(until=60.0) == pytest.approx(p_a * 60 / 3600)
+    # across it, the GPU bills continuously — never twice
+    assert eng.cost(until=200.0) == pytest.approx(p_a * 200 / 3600)
+    assert eng.cost() == pytest.approx(p_a * 300 / 3600)
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: Poisson spot preemptions, tier-aware victims (slow)
+# ---------------------------------------------------------------------------
+def _hot_spot_catalog(rate_per_hr=60.0):
+    return {k: dataclasses.replace(v, preemption_rate=rate_per_hr)
+            for k, v in PAPER_GPUS.items()}
+
+
+@pytest.mark.slow
+def test_orchestrator_draws_spot_preemptions_from_poisson_rate():
+    from repro.orchestrator import ClusterOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    mel = Melange(_hot_spot_catalog(), ModelPerf.llama2_7b(), 0.12,
+                  spot_tiers=True)
+    tr = WorkloadTrace("steady", [
+        TraceSegment(0.0, 600.0, 4.0, {"arena": 1.0})], seed=2)
+    orch = ClusterOrchestrator(mel, tr, window_s=100.0, launch_delay_s=20.0,
+                               solver_budget_s=0.5, seed=1,
+                               min_ondemand_frac=0.5, spot_sample_s=50.0)
+    assert any(mel.gpus[g].is_spot
+               for g in orch.autoscaler.current.counts), \
+        "floored mix must still use the discounted tier"
+    res = orch.run()
+    assert res.conserved
+    hits = [d for d in res.timeline.decisions
+            if d.kind in ("failure", "preemption-drained-only",
+                          "preemption-miss")]
+    assert hits, "Poisson sampler must fire at these rates"
+    # synthesized reclaims name spot variants and never kill on-demand
+    for d in hits:
+        assert ":spot" in d.detail["gpu"]
+    assert res.slo_attainment >= 0.95
+
+
+@pytest.mark.slow
+def test_orchestrator_spot_events_off_by_flag():
+    from repro.orchestrator import ClusterOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    mel = Melange(_hot_spot_catalog(), ModelPerf.llama2_7b(), 0.12,
+                  spot_tiers=True)
+    tr = WorkloadTrace("steady", [
+        TraceSegment(0.0, 400.0, 3.0, {"arena": 1.0})], seed=2)
+    orch = ClusterOrchestrator(mel, tr, window_s=100.0, launch_delay_s=20.0,
+                               solver_budget_s=0.5, seed=1,
+                               spot_preemptions=False)
+    res = orch.run()
+    assert res.conserved
+    assert not any(d.kind.startswith("preemption") or d.kind == "failure"
+                   for d in res.timeline.decisions)
+
+
+@pytest.mark.slow
+def test_fleet_orchestrator_spot_market_with_stockouts():
+    """Shared-pool fleet under a hot spot market: Poisson reclaims (with
+    stockouts + restocks) only ever hit spot instances, the fleet
+    autoscaler backfills, and every model holds its SLO."""
+    from repro.orchestrator import FleetOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    cat = _hot_spot_catalog(40.0)
+    chat_tr = WorkloadTrace("chat", [
+        TraceSegment(0.0, 400.0, 4.0, {"arena": 1.0})], seed=3)
+    docs_tr = WorkloadTrace("docs", [
+        TraceSegment(0.0, 400.0, 2.0, {"pubmed": 1.0})], seed=4)
+    specs = [ModelSpec("chat", ModelPerf.llama2_7b(), 0.12, trace=chat_tr),
+             ModelSpec("docs", ModelPerf.llama2_7b(), 0.2, trace=docs_tr)]
+    fleet = MelangeFleet(cat, specs, spot_tiers=True)
+    orch = FleetOrchestrator(fleet, window_s=100.0, launch_delay_s=20.0,
+                             solver_budget_s=1.0, seed=2,
+                             min_ondemand_frac=0.5, spot_sample_s=50.0,
+                             spot_stockout_prob=0.5, spot_restock_s=120.0)
+    res = orch.run()
+    assert res.conserved and res.n_dropped == 0
+    hits = [d for d in res.timeline.decisions
+            if d.kind in ("failure", "preemption-drained-only",
+                          "preemption-miss")]
+    assert hits, "the hot market must generate reclaims"
+    for d in hits:
+        assert ":spot" in d.detail["gpu"]
+    assert res.slo_attainment("chat") >= 0.95
+    assert res.slo_attainment("docs") >= 0.95
+
+
+def test_orchestrator_rejects_stockouts_without_restock():
+    """A sampled spot stockout with no restock delay would cap the spot
+    sub-pool for the rest of the run — refuse the config up front."""
+    from repro.orchestrator import ClusterOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, spot_tiers=True)
+    tr = WorkloadTrace("steady", [
+        TraceSegment(0.0, 200.0, 2.0, {"arena": 1.0})], seed=1)
+    with pytest.raises(ValueError, match="spot_restock_s"):
+        ClusterOrchestrator(mel, tr, spot_stockout_prob=0.3)
+    # paired config is accepted
+    ClusterOrchestrator(mel, tr, spot_stockout_prob=0.3,
+                        spot_restock_s=100.0, solver_budget_s=0.5)
+
+
+def test_restocks_lift_only_their_own_pool():
+    """Independently-recorded caps survive the *other* pool's restock:
+    a base restock leaves a spot-market stockout in force and vice
+    versa — each cap is released by its own restock event."""
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, spot_tiers=True)
+    asc = Autoscaler(mel, make_workload("arena", 2.0), headroom=0.0,
+                     solver_budget_s=0.5)
+    asc.set_chip_stockout("A100:spot", 1)   # spot market dry
+    asc.set_chip_stockout("A100", 3)        # and a physical shortage
+    asc.lift_stockout("A100")               # base restock
+    assert asc.chip_caps == {"A100:spot": 1}
+    asc.set_chip_stockout("A100", 3)
+    asc.lift_stockout("A100:spot")          # spot restock
+    assert asc.chip_caps == {"A100": 3}
+
+
+def test_select_victims_tier_rules():
+    from repro.orchestrator.orchestrator import _select_victims
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, spot_tiers=True)
+    eng = ClusterEngine(mel.profile, EngineModel(ModelPerf.llama2_7b()),
+                        seed=0)
+    od = eng.add_instance("A100")
+    sp1 = eng.add_instance("A100:spot")
+    sp2 = eng.add_instance("A100:spot")
+    # a spot-named reclaim may only hit spot instances, newest first
+    v = _select_victims(eng, "A100:spot", 3)
+    assert [i.inst_id for i in v] == [sp2, sp1]
+    # a base-named (legacy) reclaim may hit any tier, spot first
+    v = _select_victims(eng, "A100", 3)
+    assert [i.inst_id for i in v] == [sp2, sp1, od]

@@ -103,6 +103,56 @@ def test_preemption_events_deterministic_and_bounded():
                        and p.gpu == e.gpu and p.t < e.t for p in evs)
 
 
+def test_preemption_events_time_sorted_with_restocks():
+    """Regression: restocks are generated next to their stockout, which
+    lands them *after* later preemptions — the returned stream must be
+    time-sorted so it is a valid event schedule."""
+    evs = preemption_events(["L4", "A100"], duration_s=7200,
+                            events_per_hour=8.0, stockout_prob=0.9,
+                            restock_after_s=900, seed=7)
+    assert any(e.kind == "restock" for e in evs), \
+        "scenario must actually interleave restocks"
+    ts = [e.t for e in evs]
+    assert ts == sorted(ts)
+    # the stream is accepted as a trace (monotonicity validated there)
+    tr = WorkloadTrace("spot", [TraceSegment(0.0, 7200.0, 1.0,
+                                             {"arena": 1.0})],
+                       events=evs)
+    assert [e.t for e in tr.events] == ts
+
+
+def test_workload_trace_rejects_unsorted_or_bad_event_times():
+    segs = [TraceSegment(0.0, 100.0, 1.0, {"arena": 1.0})]
+    with pytest.raises(ValueError, match="not time-sorted"):
+        WorkloadTrace("bad", segs, events=[
+            FleetEvent(50.0, "restock", "A100"),
+            FleetEvent(10.0, "preemption", "A100")])
+    with pytest.raises(ValueError, match="finite non-negative"):
+        WorkloadTrace("bad", segs, events=[FleetEvent(-1.0, "restock", "L4")])
+    # with_events merges sorted even when the new events come earlier
+    tr = WorkloadTrace("ok", segs,
+                       events=[FleetEvent(80.0, "restock", "A100")])
+    merged = tr.with_events([FleetEvent(20.0, "preemption", "A100", 1,
+                                        stockout=True)])
+    assert [e.t for e in merged.events] == [20.0, 80.0]
+
+
+def test_restock_json_roundtrip(tmp_path):
+    """Regression: a generated stream with interleaved restocks survives
+    JSON save/load event-for-event."""
+    evs = preemption_events(["A100:spot", "L4"], duration_s=3600,
+                            events_per_hour=10.0, stockout_prob=0.9,
+                            restock_after_s=600, seed=11)
+    assert any(e.kind == "restock" for e in evs)
+    tr = WorkloadTrace("spot-storm", [
+        TraceSegment(0.0, 3600.0, 2.0, {"arena": 1.0})], events=evs)
+    p = tmp_path / "spot.json"
+    tr.save(p)
+    back = WorkloadTrace.load(p)
+    assert back.events == tr.events
+    assert [e.t for e in back.events] == sorted(e.t for e in back.events)
+
+
 def test_json_roundtrip(tmp_path):
     tr = diurnal_trace(1.0, 5.0, duration_s=600, segment_s=100, seed=11)
     tr = tr.with_events([FleetEvent(300.0, "preemption", "A100", 2,
