@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_tp_aware",
     "benchmarks.bench_multi_model",
     "benchmarks.bench_spot_mix",
+    "benchmarks.bench_regions",
     "benchmarks.roofline",
 ]
 

@@ -1,8 +1,10 @@
 """Mélange core: cost-efficient accelerator allocation for LLM serving."""
 from .accelerators import (Accelerator, PAPER_GPUS, PAPER_GPUS_70B, TPU_FLEET,
                            chips_by_base, chips_by_pool, expand_price_tiers,
-                           expand_tp_variants, get_catalog, pool_key,
-                           spot_variant, tp_efficiency_curve, tp_variant)
+                           expand_tp_variants, get_catalog, is_spot_pool,
+                           pool_key, region_variant, split_region,
+                           spot_variant, tp_efficiency_curve, tp_variant,
+                           with_region)
 from .allocator import Allocation, FleetAllocation, Melange, MelangeFleet
 from .autoscaler import (AllocationDiff, Autoscaler, FleetAutoscaler,
                          allocation_diff)

@@ -26,12 +26,49 @@ all TP variants together and tp x tier composes, while its *market pool*
 (``market_pool``, ``"A100:spot"``) is a sub-pool of its own: a spot-market
 stockout caps only the preemptible tier, leaving on-demand rentable for
 backfill.
+
+Region expansion (beyond-paper, ``repro.regions``): ``region_variant``
+gives any entry a geo sibling — ``A100:spot@eu-west`` is the same SKU in
+another cloud region, at that region's price multiplier and preemption
+rate.  The region is the *outermost* pool level: a region variant's
+physical chip pool is ``"A100@eu-west"`` and its spot market sub-pool
+``"A100:spot@eu-west"``, so a regional stockout caps only that region's
+pool.  Variant names canonically carry the region suffix *last*
+(``name[xN][:spot]@region``); ``tp_variant``/``spot_variant`` insert
+their markers before the ``@region`` suffix, so the expanders compose in
+any order and always emit parseable names — ``split_region`` /
+``is_spot_pool`` are the order-robust helpers every pool-string consumer
+must use instead of raw ``endswith``/``split``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Iterable, Mapping, Optional
+
+
+def split_region(name: str) -> tuple[str, str]:
+    """Order-robust region split: ``"A100x2:spot@eu-west"`` ->
+    ``("A100x2:spot", "eu-west")``; a name with no ``@`` keeps an empty
+    region.  The region marker is always the *last* component of a
+    canonical variant name, so a single right-partition is exact no matter
+    which order the tp/tier/region expanders ran in."""
+    stem, sep, region = name.rpartition("@")
+    return (stem, region) if sep else (name, "")
+
+
+def with_region(stem: str, region: str) -> str:
+    """Attach the canonical ``@region`` suffix (no-op for empty region)."""
+    return f"{stem}@{region}" if region else stem
+
+
+def is_spot_pool(pool: str) -> bool:
+    """Whether a *pool string* names a spot market sub-pool, robust to the
+    region suffix: ``"A100:spot"`` and ``"A100:spot@eu-west"`` are spot
+    pools; ``"A100@eu-west"`` is a physical pool.  Replaces naive
+    ``endswith(":spot")`` checks, which break once a region is composed
+    after the tier marker."""
+    return split_region(pool)[0].endswith(":spot")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +87,7 @@ class Accelerator:
     tier: str = "ondemand"     # price tier of THIS entry: "ondemand" | "spot"
     spot_price_hr: Optional[float] = None  # quoted spot $/h (on the base entry)
     preemption_rate: float = 0.0  # expected reclaims per instance-hour as spot
+    region: str = ""           # cloud region this entry rents in ("" = global)
 
     @property
     def eff_flops(self) -> float:
@@ -78,8 +116,13 @@ class Accelerator:
         tier* caps.  On-demand variants coincide with the physical chip
         pool (``base_name``); spot variants form a ``"<base>:spot"``
         sub-pool, so a spot-market stockout never caps on-demand rentals.
+        The region suffix stays outermost: a regional spot variant's
+        market pool is ``"A100:spot@eu-west"``, never ``"A100@eu-west:spot"``.
         """
-        return f"{self.base_name}:spot" if self.is_spot else self.base_name
+        if not self.is_spot:
+            return self.base_name
+        stem, region = split_region(self.base_name)
+        return with_region(f"{stem}:spot", region)
 
 
 def tp_efficiency_curve(tp: int) -> float:
@@ -107,8 +150,9 @@ def tp_variant(base: Accelerator, tp: int) -> Accelerator:
             f"{base.name}: tp={tp} variant needs link_gbs (interconnect "
             "bandwidth for TP collectives) on the base accelerator — "
             "without it the engine model would charge comm at a bogus rate")
+    stem, region = split_region(base.name)
     return Accelerator(
-        name=f"{base.name}x{tp}",
+        name=with_region(f"{stem}x{tp}", region),
         mem_gb=base.mem_gb * tp,
         bw_gbs=base.bw_gbs * tp,
         flops_tf=base.flops_tf * tp,
@@ -127,6 +171,7 @@ def tp_variant(base: Accelerator, tp: int) -> Accelerator:
         # any one of the tp chips being reclaimed kills the whole engine
         # instance, so exposure scales with the chip count
         preemption_rate=base.preemption_rate * tp,
+        region=base.region,
     )
 
 
@@ -145,9 +190,56 @@ def spot_variant(base: Accelerator) -> Accelerator:
             f"{base.name}: spot_price_hr={base.spot_price_hr} must be in "
             f"(0, price_hr={base.price_hr}] — spot never costs more than "
             "on-demand")
+    stem, region = split_region(base.name)
     return dataclasses.replace(
-        base, name=f"{base.name}:spot", price_hr=base.spot_price_hr,
-        tier="spot", base_type=base.base_name)
+        base, name=with_region(f"{stem}:spot", region),
+        price_hr=base.spot_price_hr, tier="spot", base_type=base.base_name)
+
+
+def region_variant(base: Accelerator, region: str, *,
+                   price_mult: float = 1.0,
+                   spot_price_mult: Optional[float] = None,
+                   preemption_mult: float = 1.0) -> Accelerator:
+    """The same SKU rented in cloud region ``region``: identical silicon,
+    the region's price multiplier(s) and spot reclaim rate.  The region
+    becomes the outermost pool level — the variant draws on the
+    ``"<base>@<region>"`` chip pool (and, if spot, the
+    ``"<base>:spot@<region>"`` market sub-pool), so a regional stockout
+    caps only that region.  Composes with ``tp_variant``/``spot_variant``
+    in any order; the emitted name always carries ``@region`` last."""
+    if base.region:
+        raise ValueError(
+            f"{base.name} is already homed in region '{base.region}'")
+    if not region or "@" in region or ":" in region:
+        raise ValueError(
+            f"invalid region name {region!r}: must be non-empty and free "
+            "of '@'/':' (they delimit variant-name components)")
+    if price_mult <= 0:
+        raise ValueError(f"region '{region}': price_mult must be > 0")
+    sp_mult = price_mult if spot_price_mult is None else spot_price_mult
+    base_stem, _ = split_region(base.base_name)
+    spot = None
+    if base.spot_price_hr is not None:
+        spot = base.spot_price_hr * sp_mult
+        # reject rather than clamp: a silent clamp would make the emitted
+        # price depend on whether the tier or the region expander ran
+        # first.  The on-demand sibling always carries the spot quote, so
+        # catalog-level expansion surfaces this in either order.
+        if not base.is_spot and spot > base.price_hr * price_mult + 1e-12:
+            raise ValueError(
+                f"{base.name}@{region}: regional spot price {spot:.4f} "
+                f"exceeds regional on-demand {base.price_hr * price_mult:.4f}"
+                " — spot never costs more than on-demand; lower "
+                "spot_price_mult")
+    return dataclasses.replace(
+        base,
+        name=with_region(base.name, region),
+        price_hr=(base.price_hr * price_mult if not base.is_spot
+                  else base.price_hr * sp_mult),
+        spot_price_hr=spot,
+        preemption_rate=base.preemption_rate * preemption_mult,
+        base_type=with_region(base_stem, region),
+        region=region)
 
 
 def expand_price_tiers(

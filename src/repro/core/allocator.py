@@ -30,6 +30,30 @@ from .profiler import Profile, profile_catalog
 from .workload import ModelSpec, Workload
 
 
+def group_counts_by(counts: Mapping[str, int],
+                    gpus: Mapping[str, Accelerator],
+                    key) -> dict[str, dict[str, int]]:
+    """Group per-variant instance counts by ``key(acc)`` (tier, region,
+    ...) — THE grouping rule shared by every allocation view (core and
+    regional alike), so the split can never diverge between them."""
+    out: dict[str, dict[str, int]] = {}
+    for g, n in counts.items():
+        out.setdefault(key(gpus[g]), {})[g] = n
+    return out
+
+
+def group_cost_by(counts: Mapping[str, int],
+                  gpus: Mapping[str, Accelerator],
+                  key) -> dict[str, float]:
+    """$/h split by ``key(acc)`` — every variant bills at its own
+    (tier- and region-adjusted) ``price_hr``."""
+    out: dict[str, float] = {}
+    for g, n in counts.items():
+        acc = gpus[g]
+        out[key(acc)] = out.get(key(acc), 0.0) + acc.price_hr * n
+    return out
+
+
 @dataclasses.dataclass
 class Allocation:
     counts: dict[str, int]              # GPU variant name -> instances
@@ -64,19 +88,25 @@ class Allocation:
 
     def counts_by_tier(self) -> dict[str, dict[str, int]]:
         """Instance counts split by price tier: tier -> {variant: n}."""
-        out: dict[str, dict[str, int]] = {}
-        for g, n in self.counts.items():
-            tier = self.profile.gpus[g].tier
-            out.setdefault(tier, {})[g] = n
-        return out
+        return group_counts_by(self.counts, self.profile.gpus,
+                               lambda a: a.tier)
+
+    def counts_by_region(self) -> dict[str, dict[str, int]]:
+        """Instance counts split by region ("" for global entries) — the
+        per-region view for region-expanded catalogs."""
+        return group_counts_by(self.counts, self.profile.gpus,
+                               lambda a: a.region)
+
+    def cost_by_region(self) -> dict[str, float]:
+        """$/h split by region (regional variants bill at their region's
+        multiplied price)."""
+        return group_cost_by(self.counts, self.profile.gpus,
+                             lambda a: a.region)
 
     def cost_by_tier(self) -> dict[str, float]:
         """$/h split by price tier (spot instances bill at spot price)."""
-        out: dict[str, float] = {}
-        for g, n in self.counts.items():
-            acc = self.profile.gpus[g]
-            out[acc.tier] = out.get(acc.tier, 0.0) + acc.price_hr * n
-        return out
+        return group_cost_by(self.counts, self.profile.gpus,
+                             lambda a: a.tier)
 
     def bucket_assignment(self, slice_factor: int = 8):
         """bucket index -> {gpu: fraction of bucket's slices} (for the LB)."""

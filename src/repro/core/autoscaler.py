@@ -57,12 +57,16 @@ def allocation_diff(old: dict[str, int], new: dict[str, int]) -> AllocationDiff:
 
 
 class _ChipPoolCaps:
-    """Shared stockout-cap bookkeeping for both autoscalers: chip caps are
-    keyed by *pool*, resolved through the controller's catalog
-    (``_catalog``), so one rule governs single-model and fleet control.
-    A cap key naming an on-demand/TP variant binds the physical base pool
-    (all tiers); one naming a spot variant binds only the ``"<base>:spot"``
-    market sub-pool — a spot stockout never blocks on-demand backfill."""
+    """Shared stockout-cap bookkeeping for every autoscaler (single-model,
+    fleet, and ``repro.regions.RegionalAutoscaler``): chip caps are keyed
+    by *pool*, resolved through the controller's catalog (``_catalog``),
+    so one rule governs all control loops.  A cap key naming an
+    on-demand/TP variant binds the physical base pool (all tiers); one
+    naming a spot variant binds only the ``"<base>:spot"`` market
+    sub-pool — a spot stockout never blocks on-demand backfill.  With a
+    region-expanded catalog the pools are region-scoped
+    (``"A10G@eu-west"``, ``"A100:spot@us-east"``): a regional stockout
+    caps only that region's pool, leaving every other region rentable."""
 
     caps: dict[str, int]
     chip_caps: dict[str, int]

@@ -27,7 +27,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from .profiler import Profile
-from .workload import INPUT_EDGES, OUTPUT_EDGES, edge_bucket
+from .workload import INPUT_EDGES, OUTPUT_EDGES, edge_bucket, grid_edges
 
 
 @dataclasses.dataclass
@@ -46,14 +46,22 @@ class LoadBalancer:
         self.straggler_factor = straggler_factor
         self.depth_probe = depth_probe
         self.draining: set[int] = set()
-        ni = len(INPUT_EDGES) - 1
+        # bucket edges come from the *profile's* grid (not the module
+        # defaults): MaxTput rows are indexed by that grid, so a profile
+        # built over a custom coarse grid must be routed on it too.
+        # (profile=None is allowed for bucket-math-only uses and keeps
+        # the default grid.)
+        in_edges, out_edges = ((INPUT_EDGES, OUTPUT_EDGES)
+                               if profile is None
+                               else grid_edges(profile.buckets))
+        ni = len(in_edges) - 1
         # output-length estimator state per input bucket
         self._sum = np.zeros(ni)
         self._cnt = np.zeros(ni)
         self._tpot_ewma = {}        # inst_id -> observed tpot
-        self._i_edges = np.asarray(INPUT_EDGES)
-        self._o_edges = np.asarray(OUTPUT_EDGES)
-        self._no = len(OUTPUT_EDGES) - 1
+        self._i_edges = np.asarray(in_edges)
+        self._o_edges = np.asarray(out_edges)
+        self._no = len(out_edges) - 1
 
     # -- output length estimation ------------------------------------------
     def _input_bucket(self, input_len: int) -> int:
@@ -99,10 +107,14 @@ class LoadBalancer:
                 t = self._tpot_ewma[inst.inst_id]
                 w *= (slo / max(t, slo)) ** self.straggler_factor
             weights[k] = w
-        if weights.sum() <= 0:
-            # nothing profiled-feasible: fall back to biggest-memory instance
-            weights = np.array([
-                self.profile.gpus[i.gpu].mem_gb for i in cand])
+        if not np.isfinite(weights).all() or weights.sum() <= 0:
+            # nothing profiled-feasible for this bucket (every candidate's
+            # MaxTput is 0 — e.g. a transient fleet where only oversized
+            # requests' types remain): weighted-random degenerates, so fall
+            # back to uniform over the candidates instead of raising.  The
+            # depth division below still steers away from backlogged
+            # instances.
+            weights = np.ones(len(cand))
         if self.depth_probe is not None:
             depths = np.array([max(0.0, float(self.depth_probe(i.inst_id)))
                                for i in cand])

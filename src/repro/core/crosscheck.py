@@ -1,5 +1,5 @@
-"""Randomized cross-check harness for the stacked (multi-model) solver
-and the price-tiered (spot/on-demand) solver.
+"""Randomized cross-check harness for the stacked (multi-model) solver,
+the price-tiered (spot/on-demand) solver, and the multi-region solver.
 
 One source of truth for the small instances that both the property tests
 (``tests/test_multi_model.py``, ``tests/test_spot_tiers.py``) and the
@@ -64,18 +64,25 @@ def check_shared_caps_case(seed: int, time_budget_s: float = 10.0) -> None:
             f"seed {seed}: shared pool cap exceeded"
 
 
-def run_crosschecks(n_cases: int, seed: int) -> dict:
-    """Benchmark gate: how many seeded cases pass ``check_shared_caps_case``."""
+def _run_crosschecks(check_fn, n_cases: int, seed: int) -> dict:
+    """THE seeded benchmark-gate runner: draw ``n_cases`` case seeds and
+    count how many pass ``check_fn`` (shared by every cross-check family
+    so the gate semantics can never diverge between them)."""
     rng = np.random.default_rng(seed)
     seeds = rng.integers(0, 10 ** 9, size=n_cases)
     passed = 0
     for s in seeds:
         try:
-            check_shared_caps_case(int(s))
+            check_fn(int(s))
             passed += 1
         except AssertionError:
             pass
     return {"checked": n_cases, "passed": passed}
+
+
+def run_crosschecks(n_cases: int, seed: int) -> dict:
+    """Benchmark gate: how many seeded cases pass ``check_shared_caps_case``."""
+    return _run_crosschecks(check_shared_caps_case, n_cases, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -169,13 +176,105 @@ def check_tier_floor_case(seed: int, time_budget_s: float = 10.0) -> None:
 
 def run_tier_crosschecks(n_cases: int, seed: int) -> dict:
     """Benchmark gate: how many seeded cases pass ``check_tier_floor_case``."""
+    return _run_crosschecks(check_tier_floor_case, n_cases, seed)
+
+
+# ---------------------------------------------------------------------------
+# regions: geo-demand rows, per-(gpu, region) pool caps, RTT-masked and
+# RTT-inflated remote columns
+# ---------------------------------------------------------------------------
+def small_region_problem(rng: np.random.Generator
+                         ) -> tuple[ILPProblem, dict]:
+    """2-3 regions x 2 GPU types, 1-2 buckets of demand per home region.
+
+    Column (g, r) serves every home; a remote (home a != r) entry is
+    inflated by the RTT-tightened deadline (load / remote_eff) or masked
+    inf when the round trip burns the whole budget — the structural
+    mechanism ``regions.build_region_problem`` uses.  Each (g, r) pair is
+    a physical pool with its own cap (regional capacity), expressed as
+    group rows so a regional stockout caps only that region's pool.
+
+    Returns (problem, info) with ``info["homes"]`` the per-slice home
+    region index and ``info["col_region"]`` each column's region index,
+    for region-isolation verification.
+    """
+    n_regions = int(rng.integers(2, 4))
+    n_gpus = 2
+    M = n_regions * n_gpus                 # columns region-major: (r, g)
+    gpu_costs = rng.uniform(0.8, 6.0, size=n_gpus)
+    price_mult = rng.uniform(0.8, 1.4, size=n_regions)
+    # remote efficiency in (0, 1]: fraction of local MaxTput that survives
+    # the RTT-tightened deadline; 0 = masked (budget burned through)
+    remote_eff = rng.uniform(0.0, 1.0, size=(n_regions, n_regions))
+    np.fill_diagonal(remote_eff, 1.0)
+    mask_thresh = 0.25                     # below this the column is inf
+    rows, bucket_of, homes = [], [], []
+    bid = 0
+    for a in range(n_regions):
+        for _b in range(int(rng.integers(1, 3))):
+            base_load = rng.uniform(0.15, 0.9, size=n_gpus)
+            n_slices = int(rng.integers(1, 3))
+            for _s in range(n_slices):
+                r = np.full(M, np.inf)
+                for reg in range(n_regions):
+                    eff = remote_eff[a, reg]
+                    if eff >= mask_thresh:
+                        r[reg * n_gpus:(reg + 1) * n_gpus] = base_load / eff
+                rows.append(r)
+                bucket_of.append(bid)
+                homes.append(a)
+            bid += 1
+    group_rows, caps = [], []
+    for reg in range(n_regions):           # per-(gpu, region) pool caps
+        for g in range(n_gpus):
+            w = np.zeros(M)
+            w[reg * n_gpus + g] = 1.0
+            group_rows.append(w)
+            caps.append(float(rng.integers(1, 4)))
+    costs = np.concatenate([gpu_costs * price_mult[reg]
+                            for reg in range(n_regions)])
+    names = [f"g{g}@r{reg}" for reg in range(n_regions)
+             for g in range(n_gpus)]
+    region_col = np.array([f"r{reg}" for reg in range(n_regions)
+                           for _ in range(n_gpus)])
+    prob = ILPProblem(np.stack(rows), costs, names,
+                      np.asarray(bucket_of),
+                      group_rows=np.stack(group_rows),
+                      group_row_caps=np.asarray(caps),
+                      region_col=region_col)
+    info = {"homes": np.asarray(homes),
+            "col_region": np.repeat(np.arange(n_regions), n_gpus),
+            "remote_eff": remote_eff, "mask_thresh": mask_thresh}
+    return prob, info
+
+
+def check_region_case(seed: int, time_budget_s: float = 10.0) -> None:
+    """One seeded region case: branch-and-bound must agree with brute
+    force on feasibility and optimal cost; every per-(gpu, region) pool
+    cap must hold; and no slice may be served from a region the RTT
+    masked infeasible (structural: such assignments are inf)."""
     rng = np.random.default_rng(seed)
-    seeds = rng.integers(0, 10 ** 9, size=n_cases)
-    passed = 0
-    for s in seeds:
-        try:
-            check_tier_floor_case(int(s))
-            passed += 1
-        except AssertionError:
-            pass
-    return {"checked": n_cases, "passed": passed}
+    prob, info = small_region_problem(rng)
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=time_budget_s)
+    assert (bf is None) == (bb is None), \
+        f"seed {seed}: feasibility disagreement (bf={bf}, bb={bb})"
+    if bf is None:
+        return
+    assert bb.optimal, f"seed {seed}: small region case not solved exactly"
+    assert abs(bf.cost - bb.cost) < 1e-6, \
+        f"seed {seed}: cost mismatch bf={bf.cost} bb={bb.cost}"
+    gmat = prob.group_matrix()
+    for s in (bf, bb):
+        assert np.all(gmat @ s.counts <= prob.grouped_caps + _EPS), \
+            f"seed {seed}: region pool cap exceeded"
+        for i, j in enumerate(np.asarray(s.assignment, dtype=int)):
+            a = int(info["homes"][i])
+            reg = int(info["col_region"][j])
+            assert info["remote_eff"][a, reg] >= info["mask_thresh"], \
+                f"seed {seed}: slice homed in r{a} served from masked r{reg}"
+
+
+def run_region_crosschecks(n_cases: int, seed: int) -> dict:
+    """Benchmark gate: how many seeded cases pass ``check_region_case``."""
+    return _run_crosschecks(check_region_case, n_cases, seed)

@@ -86,6 +86,12 @@ class ILPProblem:
     # ``loads`` (see module docstring); this mask lets verification code
     # measure per-bucket spot shares of any solution.
     spot_col: Optional[np.ndarray] = None        # (M,) bool
+    # metadata: serving region of each column ("" = global).  Like
+    # ``spot_col``, the RTT tightening itself is structural (remote
+    # columns whose effective SLO is burned through arrive masked inf);
+    # this labels columns so verification and benchmarks can measure
+    # cross-region serving shares without re-parsing variant names.
+    region_col: Optional[np.ndarray] = None      # (M,) str
 
     def group_matrix(self) -> Optional[np.ndarray]:
         """(n_groups, M) weights: usage = group_matrix() @ counts.

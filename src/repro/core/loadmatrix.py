@@ -42,7 +42,7 @@ from typing import Mapping
 
 import numpy as np
 
-from .accelerators import Accelerator, pool_key
+from .accelerators import Accelerator, is_spot_pool, pool_key
 from .ilp import ILPProblem
 from .profiler import Profile
 from .workload import Workload
@@ -103,34 +103,49 @@ def build_problem(workload: Workload, profile: Profile,
     caps_arr = None
     if caps is not None:
         caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
+    (chip_weight, chip_group, group_caps,
+     rows, row_caps) = pool_cap_constraints(accs, chip_caps, profile.gpus)
+    spot_col = np.array([a.is_spot for a in accs])
+    region_col = np.array([a.region for a in accs])
+    return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr,
+                      chip_weight=chip_weight, chip_group=chip_group,
+                      group_caps=group_caps,
+                      group_rows=np.stack(rows) if rows else None,
+                      group_row_caps=np.asarray(row_caps) if rows else None,
+                      spot_col=spot_col if spot_col.any() else None,
+                      region_col=region_col if (region_col != "").any()
+                      else None)
+
+
+def pool_cap_constraints(accs: list[Accelerator],
+                         chip_caps: Mapping[str, float] | None,
+                         gpus: Mapping[str, Accelerator]):
+    """Pool-level chip caps for a column set -> ILP constraint arrays
+    ``(chip_weight, chip_group, group_caps, rows, row_caps)``.
+
+    Physical pools (one per column: every tier of a base type — and, with
+    regions, of a (base, region) pair — shares the silicon) go through the
+    ``chip_group`` machinery; spot market sub-pools overlap the physical
+    pools (a spot column sits in both), so they become general group rows.
+    Shared by the single-model, fleet, and region problem builders."""
     chip_weight = chip_group = group_caps = None
     rows: list[np.ndarray] = []
     row_caps: list[float] = []
     if chip_caps:
-        norm = _normalize_chip_caps(chip_caps, profile.gpus)
-        # physical base pools: one pool per column (spot variants share the
-        # base type's silicon), expressed via chip_group as before
-        base_pools = sorted(p for p in norm if not p.endswith(":spot"))
+        norm = _normalize_chip_caps(chip_caps, gpus)
+        base_pools = sorted(p for p in norm if not is_spot_pool(p))
         if base_pools:
             pool_idx = {p: k for k, p in enumerate(base_pools)}
             chip_weight = np.array([float(a.chips) for a in accs])
             chip_group = np.array([pool_idx.get(a.base_name, -1)
                                    for a in accs])
             group_caps = np.array([norm[p] for p in base_pools])
-        # spot-market sub-pools overlap the base pools (a spot column sits
-        # in both), so they go through the general group rows
-        for p in sorted(p for p in norm if p.endswith(":spot")):
+        for p in sorted(p for p in norm if is_spot_pool(p)):
             w = np.array([float(a.chips) if a.market_pool == p else 0.0
                           for a in accs])
             rows.append(w)
             row_caps.append(float(norm[p]))
-    spot_col = np.array([a.is_spot for a in accs])
-    return ILPProblem(loads, costs, gpu_names, bucket_of, caps_arr,
-                      chip_weight=chip_weight, chip_group=chip_group,
-                      group_caps=group_caps,
-                      group_rows=np.stack(rows) if rows else None,
-                      group_row_caps=np.asarray(row_caps) if rows else None,
-                      spot_col=spot_col if spot_col.any() else None)
+    return chip_weight, chip_group, group_caps, rows, row_caps
 
 
 def _normalize_chip_caps(chip_caps: Mapping[str, float],
@@ -269,11 +284,13 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
                 rows.append(w)
                 row_caps.append(float(cap))
     spot_col = np.tile(np.array([a.is_spot for a in accs]), len(models))
+    region_col = np.tile(np.array([a.region for a in accs]), len(models))
     prob = ILPProblem(
         loads, costs,
         [f"{m}:{g}" for m in models for g in gpu_names],
         np.asarray(bucket_of, dtype=int),
         group_rows=np.stack(rows) if rows else None,
         group_row_caps=np.asarray(row_caps) if rows else None,
-        spot_col=spot_col if spot_col.any() else None)
+        spot_col=spot_col if spot_col.any() else None,
+        region_col=region_col if (region_col != "").any() else None)
     return FleetProblem(prob, models, gpu_names, slice_ranges)

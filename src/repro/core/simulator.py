@@ -41,6 +41,9 @@ class SimRequest:
     input_len: int
     output_len: int
     model: str = ""                 # fleet model this request targets
+    home_region: str = ""           # region the request originates in
+    served_region: str = ""         # region of the instance that served it
+    rtt_s: float = 0.0              # round trip burned by cross-region routing
     inst_id: int = -1
     first_token_t: float = -1.0
     finish_t: float = -1.0
@@ -56,8 +59,19 @@ class SimRequest:
         return (self.finish_t - self.first_token_t) / max(1, self.decoded - 1)
 
     @property
+    def tpot_charged(self) -> float:
+        """TPOT with the cross-region RTT amortized over the generated
+        tokens — the realized-request mirror of the solver's effective
+        deadline ``slo - rtt / rep_output`` (``regions.rtt_tightened_slo``):
+        a request served remotely must decode fast enough to win back the
+        round trip its tokens spend on the wire."""
+        if self.decoded <= 1 or self.first_token_t < 0:
+            return 0.0
+        return self.tpot + self.rtt_s / max(1, self.decoded)
+
+    @property
     def ttft(self) -> float:
-        return self.first_token_t - self.arrival
+        return self.first_token_t - self.arrival + self.rtt_s
 
     def reset_progress(self) -> None:
         """Lose all generation progress (instance preempted mid-flight)."""

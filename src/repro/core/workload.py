@@ -85,6 +85,20 @@ def bucket_indices(inputs, outputs, input_edges=INPUT_EDGES,
     return bi * no + bo
 
 
+def grid_edges(buckets: "list[Bucket]") -> tuple[tuple, tuple]:
+    """Recover the (input_edges, output_edges) of a ``bucket_grid``-shaped
+    bucket list — so trace realizations and telemetry windows can histogram
+    onto the *same* grid a profile was built over (custom coarse grids
+    included), instead of silently assuming the default 60-bucket grid."""
+    in_edges = sorted({b.i_lo for b in buckets} | {b.i_hi for b in buckets})
+    out_edges = sorted({b.o_lo for b in buckets} | {b.o_hi for b in buckets})
+    if bucket_grid(in_edges, out_edges) != list(buckets):
+        raise ValueError(
+            "bucket list is not a bucket_grid over its own edges — cannot "
+            "derive histogram edges for it")
+    return tuple(in_edges), tuple(out_edges)
+
+
 @dataclasses.dataclass
 class Workload:
     """Histogram workload: bucket -> request rate (req/s)."""

@@ -2,4 +2,6 @@
 from .orchestrator import (ClusterOrchestrator, FleetOrchestrator,
                            FleetOrchestratorResult, OrchestratorResult,
                            run_static, run_static_fleet)
+from .regional import (RegionalClusterEngine, RegionalOrchestrator,
+                       RegionalOrchestratorResult, run_static_regional)
 from .timeline import Decision, Timeline, WindowRecord

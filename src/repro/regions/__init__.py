@@ -1,0 +1,11 @@
+"""Multi-region GPU markets: geo-distributed allocation with per-region
+prices, preemption rates, capacity pools, and cross-region routing RTT
+charged against the latency SLO."""
+from repro.core.accelerators import region_variant
+
+from .allocator import RegionAllocation, RegionalMelange
+from .autoscaler import RegionalAutoscaler
+from .catalog import (Region, RegionCatalog, expand_regions,
+                      single_region_catalog, three_region_catalog)
+from .problem import (RegionProblem, RegionalProfileSet,
+                      build_region_problem, rtt_tightened_slo)

@@ -1,0 +1,236 @@
+"""Mélange across cloud regions: geo-demand -> region-expanded ILP ->
+allocation, with single-region deployments as the built-in baselines.
+
+``RegionalMelange`` is the region analogue of :class:`repro.core.Melange`:
+the catalog is (optionally tp/tier-) expanded, then region-expanded over a
+:class:`RegionCatalog`; demand arrives as ``{home region: Workload}`` and
+the solver places instances wherever serving is cheapest once regional
+prices, finite regional capacity, preemption rates, and the RTT burned out
+of each bucket's latency budget are all priced in.
+
+Every single-region deployment is a column restriction of the full
+problem, so the best single-region solution seeds the joint solve as a
+warm start — the multi-region cost never exceeds the best single region's
+even under a time budget, mirroring the tp=1 and siloed-fleet warm-start
+guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.accelerators import Accelerator, chips_by_pool
+from repro.core.allocator import group_cost_by, group_counts_by
+from repro.core.engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
+from repro.core.ilp import ILPSolution, solve
+from repro.core.profiler import Profile
+from repro.core.workload import Bucket, Workload
+
+from .catalog import RegionCatalog
+from .problem import RegionalProfileSet, RegionProblem, build_region_problem
+
+
+@dataclasses.dataclass
+class RegionAllocation:
+    """A multi-region allocation: per-variant instance counts (full
+    ``name[xN][:spot]@region`` names) plus the solved problem's
+    bookkeeping for verification and simulation."""
+
+    counts: dict[str, int]
+    cost_per_hour: float
+    solution: ILPSolution
+    region_problem: RegionProblem
+    demand: dict[str, Workload]
+    profile: Profile                  # rtt=0 full-catalog view (simulation)
+
+    @property
+    def total_instances(self) -> int:
+        return sum(self.counts.values())
+
+    @property
+    def gpus(self) -> Mapping[str, Accelerator]:
+        return self.profile.gpus
+
+    def counts_by_region(self) -> dict[str, dict[str, int]]:
+        """region -> {variant: instances} (regions with none omitted)."""
+        return group_counts_by(self.counts, self.gpus, lambda a: a.region)
+
+    def cost_by_region(self) -> dict[str, float]:
+        return group_cost_by(self.counts, self.gpus, lambda a: a.region)
+
+    def counts_by_tier(self) -> dict[str, dict[str, int]]:
+        return group_counts_by(self.counts, self.gpus, lambda a: a.tier)
+
+    def chips_by_pool(self) -> dict[str, int]:
+        """Chips per pool at every granularity the caps know: physical
+        ``"<base>@<region>"`` pools plus ``"<base>:spot@<region>"`` market
+        sub-pools."""
+        return chips_by_pool(self.counts, self.gpus)
+
+    def remote_share(self) -> float:
+        """Fraction of demand slices served outside their home region."""
+        return self.region_problem.remote_share(self.solution.assignment)
+
+    def summary(self) -> dict:
+        return {
+            "cost_per_hour": self.cost_per_hour,
+            "total_instances": self.total_instances,
+            "counts_by_region": self.counts_by_region(),
+            "cost_by_region": self.cost_by_region(),
+            "remote_share": self.remote_share(),
+        }
+
+
+class RegionalMelange:
+    """The allocation framework over a multi-region GPU market."""
+
+    def __init__(self, gpus: Mapping[str, Accelerator], model: ModelPerf,
+                 slo_tpot_s: float, region_catalog: RegionCatalog, *,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 slice_factor: int = 8,
+                 buckets: Optional[list[Bucket]] = None,
+                 tp_degrees: Optional[Sequence[int]] = None,
+                 spot_tiers: bool = False):
+        self.profiles = RegionalProfileSet(
+            gpus, model, slo_tpot_s, region_catalog, buckets=buckets,
+            engine_params=engine_params, tp_degrees=tp_degrees,
+            spot_tiers=spot_tiers)
+        self.model = model
+        self.slo = slo_tpot_s
+        self.slice_factor = slice_factor
+
+    @property
+    def rc(self) -> RegionCatalog:
+        return self.profiles.rc
+
+    @property
+    def gpus(self) -> dict[str, Accelerator]:
+        """The full region-expanded catalog."""
+        return self.profiles.gpus_full
+
+    @property
+    def profile(self) -> Profile:
+        """The rtt=0 full-catalog profile (what simulator instances and
+        load balancers consume — local engine capability is home-blind)."""
+        return self.profiles.sim_profile
+
+    def region_of(self, gpu: str) -> str:
+        return self.gpus[gpu].region
+
+    def columns_in(self, region: str) -> list[str]:
+        return sorted(g for g, a in self.gpus.items() if a.region == region)
+
+    def _demand(self, demand: Mapping[str, Workload],
+                over_provision: float) -> dict[str, Workload]:
+        if not isinstance(demand, Mapping) or not demand:
+            raise ValueError(
+                "demand must be a non-empty mapping {home region: Workload}")
+        out = {}
+        for h, w in demand.items():
+            out[h] = w if over_provision <= 0 else Workload(
+                w.buckets, w.rates * (1 + over_provision),
+                name=f"{w.name}+op{over_provision}")
+        return out
+
+    def allocate(self, demand: Mapping[str, Workload], *,
+                 caps: Mapping[str, int] | None = None,
+                 chip_caps: Mapping[str, int] | None = None,
+                 gpu_subset: Optional[list[str]] = None,
+                 over_provision: float = 0.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0,
+                 time_budget_s: float = 5.0,
+                 warm: bool = True,
+                 warm_from: Optional[RegionAllocation] = None
+                 ) -> Optional[RegionAllocation]:
+        """Jointly place the whole geography's demand across every
+        region's columns.  The best single-region deployment (when one is
+        feasible) enters as a warm start, so the multi-region cost never
+        exceeds it even when the any-time solver hits its budget.
+        Callers comparing against a baseline they already solved (e.g.
+        ``best_single_region`` with a bigger budget) should pass it as
+        ``warm_from``: the joint solve then dominates *that exact*
+        solution by construction.  ``warm_from`` must come from the same
+        demand / slice factor / caps as this call."""
+        wls = self._demand(demand, over_provision)
+        rp = build_region_problem(
+            wls, self.profiles, slice_factor=self.slice_factor,
+            caps=caps, chip_caps=chip_caps, gpu_subset=gpu_subset,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s)
+        warm_assign = None
+        main_budget = time_budget_s
+        if warm_from is not None:
+            wa = np.asarray(warm_from.solution.assignment, dtype=int)
+            if len(wa) != rp.prob.loads.shape[0]:
+                raise ValueError(
+                    "warm_from does not match this region problem (slice "
+                    "counts differ: was it solved on the same demand and "
+                    "slice factor?)")
+            col = [rp.gpu_names.index(g)
+                   for g in warm_from.region_problem.gpu_names]
+            warm_assign = np.array([col[j] for j in wa])
+        elif warm and gpu_subset is None and len(self.rc.names) > 1:
+            t0 = time.time()
+            pre_budget = min(1.0, time_budget_s / 3)
+            best_cost = np.inf
+            for region in self.rc.names:
+                sub = self._solve_restricted(
+                    wls, self.columns_in(region), caps=caps,
+                    chip_caps=chip_caps, min_ondemand_frac=min_ondemand_frac,
+                    replacement_delay_s=replacement_delay_s,
+                    time_budget_s=pre_budget / len(self.rc.names))
+                if sub is None or sub[1].cost >= best_cost:
+                    continue
+                best_cost = sub[1].cost
+                col = [rp.gpu_names.index(g) for g in sub[0].gpu_names]
+                warm_assign = np.array([col[j]
+                                        for j in sub[1].assignment])
+            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+        sol = solve(rp.prob, time_budget_s=main_budget,
+                    warm_assign=warm_assign)
+        if sol is None:
+            return None
+        counts = sol.by_gpu(rp.gpu_names)
+        return RegionAllocation(counts, sol.cost, sol, rp, wls,
+                                self.profiles.sim_profile)
+
+    def _solve_restricted(self, wls, subset, *, caps, chip_caps,
+                          min_ondemand_frac, replacement_delay_s,
+                          time_budget_s):
+        rp = build_region_problem(
+            wls, self.profiles, slice_factor=self.slice_factor,
+            caps=caps, chip_caps=chip_caps, gpu_subset=subset,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s)
+        sol = solve(rp.prob, time_budget_s=time_budget_s)
+        return None if sol is None else (rp, sol)
+
+    def single_region_baseline(self, demand: Mapping[str, Workload],
+                               region: str, **kw
+                               ) -> Optional[RegionAllocation]:
+        """The no-geo-distribution baseline: every home's demand served
+        from one region's columns (remote homes pay the RTT tightening)."""
+        if region not in self.rc.regions:
+            raise KeyError(f"unknown region {region!r}")
+        return self.allocate(demand, gpu_subset=self.columns_in(region),
+                             **kw)
+
+    def best_single_region(self, demand: Mapping[str, Workload], **kw
+                           ) -> Optional[tuple[str, RegionAllocation]]:
+        """Cheapest feasible single-region deployment (the strongest
+        geography-blind baseline), or None when no region can serve the
+        whole geography alone."""
+        budget = kw.pop("time_budget_s", 5.0) / max(1, len(self.rc.names))
+        best: Optional[tuple[str, RegionAllocation]] = None
+        for region in self.rc.names:
+            a = self.single_region_baseline(demand, region,
+                                            time_budget_s=budget, **kw)
+            if a is not None and (best is None
+                                  or a.cost_per_hour
+                                  < best[1].cost_per_hour - 1e-12):
+                best = (region, a)
+        return best

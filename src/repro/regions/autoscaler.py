@@ -1,0 +1,176 @@
+"""Elastic control loop for a geo-distributed allocation.
+
+The region analogue of :class:`repro.core.autoscaler.Autoscaler`: observed
+per-bucket rates are tracked *per home region* (each region's diurnal
+curve peaks at its own local time), drift is judged over the whole
+geography, and every re-solve runs against region-scoped pool caps — a
+regional stockout (``"A10G@eu-west"``) or a regional spot-market stockout
+(``"A100:spot@us-east"``) caps only that region's pool, so the re-solve
+backfills from other regions (paying their RTT and prices) or the
+on-demand tier, never silently over-committing the constrained market.
+Region price shifts (``on_price_shift``) re-enter the solver immediately:
+MaxTput tables are price-independent, so only the catalog's cost fields
+are rebuilt.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.core.autoscaler import AllocationDiff, _ChipPoolCaps, allocation_diff
+from repro.core.workload import Workload
+
+from .allocator import RegionAllocation, RegionalMelange
+from .catalog import Region, RegionCatalog
+
+
+class RegionalAutoscaler(_ChipPoolCaps):
+    def __init__(self, melange: RegionalMelange,
+                 initial: Mapping[str, Workload], *,
+                 headroom: float = 0.10, drift_threshold: float = 0.15,
+                 ewma: float = 0.3, solver_budget_s: float = 5.0,
+                 min_ondemand_frac: float = 0.0,
+                 replacement_delay_s: float = 0.0):
+        self.melange = melange
+        self.headroom = headroom
+        self.drift_threshold = drift_threshold
+        self.ewma = ewma
+        self.solver_budget_s = solver_budget_s
+        self.min_ondemand_frac = min_ondemand_frac
+        self.replacement_delay_s = replacement_delay_s
+        initial = dict(initial)
+        if not initial:
+            raise ValueError("initial demand must cover >= 1 home region")
+        self.observed: dict[str, np.ndarray] = {
+            h: w.rates.copy() for h, w in initial.items()}
+        # cold-start rule shared with the core autoscalers: the initial
+        # demand is a provisioning *estimate*; each home's first observed
+        # window replaces it outright instead of being EWMA-blended
+        self._observed_primed: set[str] = set()
+        self.buckets = {h: w.buckets for h, w in initial.items()}
+        self.caps: dict[str, int] = {}        # per-variant instance caps
+        self.chip_caps: dict[str, int] = {}   # per-pool chip caps
+        self.current: Optional[RegionAllocation] = melange.allocate(
+            initial, over_provision=headroom,
+            min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s,
+            time_budget_s=solver_budget_s)
+        self.history: list[dict] = []
+
+    # -- pool accounting -----------------------------------------------------
+    @property
+    def _catalog(self):
+        return self.melange.gpus
+
+    def _chips_of(self, counts: dict[str, int], pool: str) -> int:
+        from repro.core.accelerators import chips_by_pool
+        return chips_by_pool(counts, self.melange.gpus).get(pool, 0)
+
+    # -- telemetry -----------------------------------------------------------
+    def observe_rates(self, home: str, rates: np.ndarray) -> None:
+        if home not in self.observed:
+            raise KeyError(f"unknown home region {home!r}")
+        if home not in self._observed_primed:
+            self.observed[home] = np.asarray(rates, dtype=float).copy()
+            self._observed_primed.add(home)
+            return
+        self.observed[home] = ((1 - self.ewma) * self.observed[home]
+                               + self.ewma * rates)
+
+    def drift(self) -> float:
+        """L1 relative drift over the whole geography's bucket rates."""
+        num = denom = 0.0
+        for h in self.observed:
+            prov = (self.current.demand[h].rates / (1 + self.headroom))
+            num += float(np.abs(self.observed[h] - prov).sum())
+            denom += float(prov.sum())
+        return num / max(denom, 1e-9)
+
+    def _observed_demand(self, name: str) -> dict[str, Workload]:
+        return {h: Workload(self.buckets[h], self.observed[h].copy(),
+                            name=f"{name}:{h}") for h in self.observed}
+
+    # -- control -------------------------------------------------------------
+    def maybe_rescale(self, *, force: bool = False
+                      ) -> Optional[AllocationDiff]:
+        if not force and self.drift() < self.drift_threshold:
+            return None
+        new = self.melange.allocate(
+            self._observed_demand("observed"),
+            over_provision=self.headroom,
+            caps=self.caps or None, chip_caps=self.chip_caps or None,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
+            time_budget_s=self.solver_budget_s)
+        if new is None:
+            return None
+        diff = allocation_diff(self.current.counts, new.counts)
+        self.history.append({
+            "event": "rescale", "drift": self.drift(),
+            "old": dict(self.current.counts), "new": dict(new.counts),
+            "old_cost": self.current.cost_per_hour,
+            "new_cost": new.cost_per_hour,
+            "solve_time_s": new.solution.solve_time_s,
+        })
+        self.current = new
+        return diff
+
+    def on_instance_failure(self, gpu: str, n: int = 1,
+                            *, stockout: bool = False,
+                            losses: Optional[dict[str, int]] = None
+                            ) -> AllocationDiff:
+        """Capacity lost in one region; with ``stockout`` the variant's
+        *regional* pool is capped at its surviving chips — other regions'
+        pools (and, for a spot variant, this region's on-demand tier)
+        stay rentable for backfill."""
+        losses = dict(losses) if losses else {gpu: n}
+        counts = dict(self.current.counts)
+        for g, k in losses.items():
+            counts[g] = max(0, counts.get(g, 0) - k)
+        if stockout:
+            pool = self._pool_of(gpu)
+            self.chip_caps[pool] = self._chips_of(counts, pool)
+        new = self.melange.allocate(
+            self._observed_demand("post-failure"),
+            over_provision=self.headroom, caps=self.caps or None,
+            chip_caps=self.chip_caps or None,
+            min_ondemand_frac=self.min_ondemand_frac,
+            replacement_delay_s=self.replacement_delay_s,
+            time_budget_s=self.solver_budget_s)
+        if new is None:
+            raise RuntimeError(
+                "infeasible after failure: no region's capacity can serve "
+                "the geography under SLO — page a human")
+        diff = allocation_diff(counts, new.counts)
+        self.history.append({
+            "event": "failure", "gpu": gpu, "n": sum(losses.values()),
+            "losses": losses, "stockout": stockout,
+            "new": dict(new.counts), "new_cost": new.cost_per_hour,
+            "solve_time_s": new.solution.solve_time_s,
+        })
+        self.current = new
+        return diff
+
+    def on_price_shift(self, region: str, price_mult: float, *,
+                       spot_price_mult: Optional[float] = None
+                       ) -> Optional[AllocationDiff]:
+        """A region repriced its market: rebuild the catalog's cost fields
+        (throughput tables are price-independent) and re-solve so the
+        allocation chases the new cheapest mix."""
+        rc = self.melange.rc
+        if region not in rc.regions:
+            raise KeyError(f"unknown region {region!r}")
+        old = rc.regions[region]
+        new_region = Region(old.name, price_mult,
+                            spot_price_mult if spot_price_mult is not None
+                            else old.spot_price_mult,
+                            old.preemption_mult, old.capacity)
+        new_rc = RegionCatalog(
+            {**rc.regions, region: new_region}, dict(rc.rtt_s))
+        self.melange.profiles.reprice(new_rc)
+        self.history.append({
+            "event": "price-shift", "region": region,
+            "price_mult": price_mult, "spot_price_mult": spot_price_mult,
+        })
+        return self.maybe_rescale(force=True)

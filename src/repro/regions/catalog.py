@@ -1,0 +1,212 @@
+"""Geo-distributed GPU markets: regions, prices, preemption, and RTT.
+
+Mélange's core claim — the cheapest allocation is a *mix* — extends to
+**where** the GPU lives: the same SKU differs 20-40% in on-demand price
+and several-fold in spot reclaim rate across cloud regions (ThunderServe /
+SkyPilot-style observations).  A :class:`RegionCatalog` describes that
+market: per-region price multipliers over the list prices, spot
+preemption-rate multipliers, finite per-region capacity pools, and the
+inter-region RTT matrix the load matrix charges against each bucket's
+latency SLO.
+
+``expand_regions`` composes with the TP-degree and price-tier expanders
+(in any order): every (type, tp, tier) variant gains an ``@region``
+sibling whose physical chip pool is ``"<base>@<region>"`` and whose spot
+market sub-pool is ``"<base>:spot@<region>"`` — so a regional stockout
+caps only that region's pool, exactly like a spot stockout caps only the
+spot tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Mapping, Optional
+
+from repro.core.accelerators import Accelerator, region_variant
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One cloud region's market terms, relative to the catalog's list
+    prices (multipliers, so one region catalog serves any GPU catalog)."""
+
+    name: str
+    price_mult: float = 1.0          # on-demand $ multiplier vs. list price
+    spot_price_mult: Optional[float] = None   # spot multiplier (default: od)
+    preemption_mult: float = 1.0     # spot reclaim-rate multiplier
+    # finite capacity: base pool -> chips rentable in this region (a key
+    # may name any catalog entry; it resolves to that entry's pool).
+    # None/missing pools are unbounded.
+    capacity: Optional[Mapping[str, int]] = None
+
+    def __post_init__(self):
+        if not self.name or "@" in self.name or ":" in self.name:
+            raise ValueError(
+                f"invalid region name {self.name!r}: must be non-empty and "
+                "free of '@'/':' (variant-name delimiters)")
+        if self.price_mult <= 0:
+            raise ValueError(f"region '{self.name}': price_mult must be > 0")
+        if self.spot_price_mult is not None and self.spot_price_mult <= 0:
+            raise ValueError(
+                f"region '{self.name}': spot_price_mult must be > 0")
+        if self.preemption_mult < 0:
+            raise ValueError(
+                f"region '{self.name}': preemption_mult must be >= 0")
+
+
+@dataclasses.dataclass
+class RegionCatalog:
+    """The multi-region market: regions plus the inter-region RTT matrix.
+
+    ``rtt_s`` maps unordered region pairs (stored as sorted 2-tuples) to
+    one-way-pair round-trip seconds; the diagonal is implicitly 0.  Every
+    distinct pair must be present — a missing entry is a configuration
+    bug, not "free" cross-region traffic.
+    """
+
+    regions: dict[str, Region]
+    rtt_s: dict[tuple[str, str], float] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        if not self.regions:
+            raise ValueError("a RegionCatalog needs at least one region")
+        for name, r in self.regions.items():
+            if name != r.name:
+                raise ValueError(
+                    f"region key {name!r} != Region.name {r.name!r}")
+        norm: dict[tuple[str, str], float] = {}
+        for (a, b), v in self.rtt_s.items():
+            if a == b:
+                if v != 0.0:
+                    raise ValueError(
+                        f"rtt_s[{a!r}, {b!r}] must be 0 (same region)")
+                continue
+            if not (v >= 0.0):
+                raise ValueError(f"rtt_s[{a!r}, {b!r}] = {v!r} is not a "
+                                 "non-negative number")
+            key = (a, b) if a < b else (b, a)
+            if key in norm and norm[key] != v:
+                raise ValueError(
+                    f"conflicting RTT for pair {key}: {norm[key]} vs {v}")
+            norm[key] = float(v)
+        self.rtt_s = norm
+        names = sorted(self.regions)
+        missing = [(a, b) for i, a in enumerate(names)
+                   for b in names[i + 1:] if (a, b) not in self.rtt_s]
+        if missing:
+            raise ValueError(
+                f"rtt_s is missing region pairs {missing}: every pair "
+                "needs an explicit RTT (0.0 is a valid value)")
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def names(self) -> list[str]:
+        return sorted(self.regions)
+
+    def rtt(self, a: str, b: str) -> float:
+        """Round-trip seconds between regions (0 within a region)."""
+        if a == b:
+            if a not in self.regions:
+                raise KeyError(f"unknown region {a!r}")
+            return 0.0
+        if a not in self.regions or b not in self.regions:
+            raise KeyError(f"unknown region pair ({a!r}, {b!r})")
+        return self.rtt_s[(a, b) if a < b else (b, a)]
+
+    def distinct_rtts(self) -> list[float]:
+        """All RTT values a (home, serving) pair can see, incl. the local
+        0.0 — the cache keys for RTT-tightened MaxTput tables."""
+        return sorted({0.0, *self.rtt_s.values()})
+
+    def chip_caps(self, gpus: Mapping[str, Accelerator]) -> dict[str, int]:
+        """Region capacities as pool-level chip caps over a
+        region-expanded catalog: ``{"A10G": 4}`` in region ``eu`` becomes
+        ``{"A10G@eu": 4}`` (resolved through the catalog so a key naming
+        any variant caps its pool)."""
+        from repro.core.accelerators import pool_key, with_region
+        out: dict[str, int] = {}
+        for rname, region in self.regions.items():
+            for key, cap in (region.capacity or {}).items():
+                pool = pool_key(with_region(key, rname), gpus)
+                out[pool] = min(out.get(pool, int(cap)), int(cap))
+        return out
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "regions": [{
+                "name": r.name, "price_mult": r.price_mult,
+                "spot_price_mult": r.spot_price_mult,
+                "preemption_mult": r.preemption_mult,
+                "capacity": dict(r.capacity) if r.capacity else None,
+            } for r in self.regions.values()],
+            "rtt_s": [[a, b, v] for (a, b), v in sorted(self.rtt_s.items())],
+        }, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RegionCatalog":
+        d = json.loads(text)
+        regions = {r["name"]: Region(
+            r["name"], r.get("price_mult", 1.0), r.get("spot_price_mult"),
+            r.get("preemption_mult", 1.0), r.get("capacity"))
+            for r in d["regions"]}
+        rtt = {(a, b): float(v) for a, b, v in d.get("rtt_s", [])}
+        return cls(regions, rtt)
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "RegionCatalog":
+        return cls.from_json(Path(path).read_text())
+
+
+def single_region_catalog(name: str = "local") -> RegionCatalog:
+    """The degenerate one-region market (multiplier 1, no RTT): region
+    expansion over it must reduce exactly to the unexpanded problem — the
+    parity property ``tests/test_regions.py`` pins."""
+    return RegionCatalog({name: Region(name)})
+
+
+def three_region_catalog(
+        capacity: Optional[Mapping[str, Mapping[str, int]]] = None
+) -> RegionCatalog:
+    """A representative 3-region market (us-east cheap & stormy, eu-west
+    mid-priced & calm, ap-south expensive): transatlantic ~85 ms,
+    transpacific ~180 ms, eu<->ap ~240 ms round trips."""
+    capacity = capacity or {}
+    return RegionCatalog(
+        regions={
+            "us-east": Region("us-east", price_mult=1.0,
+                              preemption_mult=1.0,
+                              capacity=capacity.get("us-east")),
+            "eu-west": Region("eu-west", price_mult=1.12,
+                              preemption_mult=0.5,
+                              capacity=capacity.get("eu-west")),
+            "ap-south": Region("ap-south", price_mult=1.25,
+                               preemption_mult=2.0,
+                               capacity=capacity.get("ap-south")),
+        },
+        rtt_s={("eu-west", "us-east"): 0.085,
+               ("ap-south", "us-east"): 0.180,
+               ("ap-south", "eu-west"): 0.240})
+
+
+def expand_regions(catalog: Mapping[str, Accelerator],
+                   rc: RegionCatalog) -> dict[str, Accelerator]:
+    """Give every catalog entry an ``@region`` sibling per region of the
+    market.  Composes with ``expand_tp_variants`` / ``expand_price_tiers``
+    in any order (each constructor inserts its marker before the region
+    suffix); entries already homed in a region are rejected — a catalog is
+    expanded over one market exactly once."""
+    out: dict[str, Accelerator] = {}
+    for acc in catalog.values():
+        for rname in rc.names:
+            r = rc.regions[rname]
+            v = region_variant(acc, rname, price_mult=r.price_mult,
+                               spot_price_mult=r.spot_price_mult,
+                               preemption_mult=r.preemption_mult)
+            out[v.name] = v
+    return out

@@ -1,0 +1,254 @@
+"""Region-aware load matrices: demand with a geography, columns with a
+region, and cross-region RTT charged against the latency SLO.
+
+Demand is a mapping ``home region -> Workload``.  A slice homed in region
+``a`` may be served by a column in region ``r``, but the round trip burns
+``rtt(a, r)`` seconds out of the request's latency budget: with a TPOT
+SLO of ``slo`` and a bucket whose representative output is ``o`` tokens,
+the end-to-end budget is ``slo * o`` seconds, so the *effective* per-token
+deadline for remote service is
+
+    slo_eff(bucket, rtt) = slo - rtt / rep_output(bucket).
+
+MaxTput is re-evaluated at the tightened deadline; a bucket whose budget
+the RTT burns through entirely (``slo_eff <= 0`` or no feasible
+concurrency) arrives with that (slice, column) masked ``inf`` — exactly
+the structural mechanism of the spot availability floor, so greedy, local
+search, branch-and-bound, and brute force all enforce region feasibility
+by construction and stay mutually consistent (``crosscheck.py``).
+
+The stacked problem reuses :func:`repro.core.loadmatrix.build_problem`
+once per home region (each home sees the full column set through its own
+RTT-tightened profile) and attaches the pool caps once: physical pools
+are per (base type, region) — a regional stockout caps only that region —
+plus ``"<base>:spot@<region>"`` market sub-pools, and the region
+catalog's finite capacities enter as ordinary chip caps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.accelerators import (Accelerator, expand_price_tiers,
+                                     expand_tp_variants, split_region)
+from repro.core.engine_model import (DEFAULT_ENGINE, EngineModel,
+                                     EngineModelParams, ModelPerf)
+from repro.core.ilp import ILPProblem
+from repro.core.loadmatrix import build_problem, pool_cap_constraints
+from repro.core.profiler import Profile
+from repro.core.workload import Bucket, Workload, bucket_grid
+
+from .catalog import RegionCatalog, expand_regions
+
+
+def rtt_tightened_slo(slo_tpot_s: float, rtt_s: float,
+                      bucket: Bucket) -> float:
+    """Effective TPOT deadline for serving ``bucket`` across ``rtt_s`` of
+    network: the round trip is amortized over the bucket's representative
+    output length (long generations barely notice it; short interactive
+    buckets lose real budget).  May be <= 0: the RTT alone misses SLO."""
+    return slo_tpot_s - rtt_s / max(1, bucket.rep_output)
+
+
+class RegionalProfileSet:
+    """MaxTput tables for every (home, serving) region pair.
+
+    The silicon is identical across regions — only price, preemption rate,
+    and network distance differ — so tables are cached per *distinct RTT
+    value* over the pre-region catalog and shared by every region pair at
+    that distance.  ``profile_for(home)`` assembles a full-catalog
+    :class:`Profile` whose column ``g@r`` carries the table tightened by
+    ``rtt(home, r)``; ``sim_profile`` is the rtt=0 view the simulator's
+    instances (and the load balancer) use — an engine's local capability
+    does not depend on who asked.
+    """
+
+    def __init__(self, gpus: Mapping[str, Accelerator], model: ModelPerf,
+                 slo_tpot_s: float, rc: RegionCatalog, *,
+                 buckets: Optional[list[Bucket]] = None,
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 tp_degrees: Optional[Sequence[int]] = None,
+                 spot_tiers: bool = False):
+        gpus = dict(gpus)
+        if tp_degrees is not None:
+            gpus = expand_tp_variants(gpus, tp_degrees)
+        if spot_tiers:
+            gpus = expand_price_tiers(gpus)
+        self.gpus0 = gpus                       # pre-region (tp/tier done)
+        self.rc = rc
+        self.model = model
+        self.slo_tpot_s = slo_tpot_s
+        self.buckets = buckets or bucket_grid()
+        self.engine_params = engine_params
+        self.em = EngineModel(model, engine_params)
+        self.gpus_full = expand_regions(self.gpus0, rc)
+        self._tables: dict[float, dict[str, np.ndarray]] = {}
+        self._profiles: dict[str, Profile] = {}
+        self._sim_profile: Optional[Profile] = None
+
+    # -- tables --------------------------------------------------------------
+    def table(self, rtt_s: float) -> dict[str, np.ndarray]:
+        """max_tput[gpus0 name][bucket] at the RTT-tightened deadline."""
+        key = round(float(rtt_s), 9)
+        if key not in self._tables:
+            out: dict[str, np.ndarray] = {}
+            for name, acc in self.gpus0.items():
+                row = np.zeros(len(self.buckets))
+                for k, b in enumerate(self.buckets):
+                    slo_eff = rtt_tightened_slo(self.slo_tpot_s, key, b)
+                    if slo_eff > 0:
+                        row[k] = self.em.max_throughput(
+                            acc, b.rep_input, b.rep_output, slo_eff)
+                out[name] = row
+            self._tables[key] = out
+        return self._tables[key]
+
+    def profile_for(self, home: str) -> Profile:
+        """Full region-expanded profile as seen by demand homed in
+        ``home``: column ``g@r`` is tightened by ``rtt(home, r)``."""
+        if home not in self._profiles:
+            if home not in self.rc.regions:
+                raise KeyError(f"unknown home region {home!r}")
+            tput: dict[str, np.ndarray] = {}
+            for full_name, acc in self.gpus_full.items():
+                stem, _ = split_region(full_name)
+                tput[full_name] = self.table(
+                    self.rc.rtt(home, acc.region))[stem]
+            self._profiles[home] = Profile(
+                dict(self.gpus_full), self.buckets, self.slo_tpot_s, tput,
+                self.model.name)
+        return self._profiles[home]
+
+    @property
+    def sim_profile(self) -> Profile:
+        """The rtt=0 (local-capability) profile over the full catalog —
+        what simulator instances and load balancers consume.  Cached in
+        its own slot (NOT the per-home dict: a region could legitimately
+        be named anything, so no name is safe as a sentinel key)."""
+        if self._sim_profile is None:
+            t0 = self.table(0.0)
+            self._sim_profile = Profile(
+                dict(self.gpus_full), self.buckets, self.slo_tpot_s,
+                {g: t0[split_region(g)[0]] for g in self.gpus_full},
+                self.model.name)
+        return self._sim_profile
+
+    def reprice(self, rc: RegionCatalog) -> None:
+        """Apply a region price shift: rebuild the full catalog's price
+        fields from the new multipliers.  MaxTput tables are untouched —
+        prices never enter the throughput model — but cached per-home
+        profiles are rebuilt so their catalogs carry the new costs."""
+        self.rc = rc
+        self.gpus_full = expand_regions(self.gpus0, rc)
+        self._profiles.clear()
+        self._sim_profile = None
+
+
+@dataclasses.dataclass
+class RegionProblem:
+    """A stacked multi-region ILP plus the bookkeeping to read it back.
+
+    Slice rows are grouped per home region (``slice_ranges`` order over
+    ``homes``); columns are full ``name[xN][:spot]@region`` variant names
+    shared by every home.
+    """
+
+    prob: ILPProblem
+    homes: list[str]
+    gpu_names: list[str]
+    slice_ranges: dict[str, tuple[int, int]]   # home -> [lo, hi) slice rows
+    n_buckets: int
+
+    def home_of_slice(self, i: int) -> str:
+        for h, (lo, hi) in self.slice_ranges.items():
+            if lo <= i < hi:
+                return h
+        raise IndexError(f"slice {i} out of range")
+
+    def remote_share(self, assignment: np.ndarray) -> float:
+        """Fraction of slices served outside their home region."""
+        regions = np.asarray(self.prob.region_col)
+        n = len(assignment)
+        if n == 0:
+            return 0.0
+        remote = 0
+        for h, (lo, hi) in self.slice_ranges.items():
+            for j in np.asarray(assignment[lo:hi], dtype=int):
+                remote += int(regions[j] != h)
+        return remote / n
+
+
+def build_region_problem(demand: Mapping[str, Workload],
+                         profiles: RegionalProfileSet, *,
+                         slice_factor: int = 8,
+                         caps: Mapping[str, int] | None = None,
+                         chip_caps: Mapping[str, int] | None = None,
+                         gpu_subset: Optional[list[str]] = None,
+                         min_ondemand_frac: float = 0.0,
+                         replacement_delay_s: float = 0.0) -> RegionProblem:
+    """Stack every home region's §5.4.2 load matrix (RTT-tightened per
+    serving region) into one shared-pool problem.
+
+    ``caps`` bounds instances of a named full variant; ``chip_caps`` keys
+    resolve to pools through the full catalog (``"A10G@eu-west"`` caps
+    that region's physical A10G pool, ``"A100:spot@us-east"`` only that
+    region's spot sub-pool); the region catalog's finite capacities are
+    merged in automatically (tightest wins).  ``min_ondemand_frac`` pins
+    each (home, bucket)'s floored share off *all* spot columns, every
+    region's alike."""
+    homes = sorted(demand)
+    if not homes:
+        raise ValueError("region problem needs at least one home region")
+    unknown = [h for h in homes if h not in profiles.rc.regions]
+    if unknown:
+        raise KeyError(f"demand homed in unknown regions: {unknown}")
+    parts = []
+    for h in homes:
+        parts.append(build_problem(
+            demand[h], profiles.profile_for(h), slice_factor,
+            gpu_subset=gpu_subset, min_ondemand_frac=min_ondemand_frac,
+            replacement_delay_s=replacement_delay_s))
+    gpu_names = parts[0].gpu_names
+    accs = [profiles.gpus_full[g] for g in gpu_names]
+    nb = len(profiles.buckets)
+    loads_parts, bucket_parts = [], []
+    slice_ranges: dict[str, tuple[int, int]] = {}
+    lo = 0
+    for h, p in zip(homes, parts):
+        loads_parts.append(p.loads)
+        # per-home bucket-id offset: slices of different homes are never
+        # interchangeable even when their load rows coincide
+        bucket_parts.append(np.asarray(p.bucket_of_slice)
+                            + homes.index(h) * nb)
+        slice_ranges[h] = (lo, lo + len(p.bucket_of_slice))
+        lo += len(p.bucket_of_slice)
+    loads = (np.vstack(loads_parts) if loads_parts
+             else np.zeros((0, len(gpu_names))))
+    costs = np.array([a.price_hr for a in accs])
+    caps_arr = None
+    if caps:
+        caps_arr = np.array([float(caps.get(g, np.inf)) for g in gpu_names])
+    merged_chip_caps: dict[str, float] = {
+        k: float(v) for k, v in
+        profiles.rc.chip_caps(profiles.gpus_full).items()}
+    for k, v in (chip_caps or {}).items():
+        merged_chip_caps[k] = min(merged_chip_caps.get(k, np.inf), float(v))
+    (chip_weight, chip_group, group_caps, rows, row_caps
+     ) = pool_cap_constraints(accs, merged_chip_caps or None,
+                              profiles.gpus_full)
+    spot_col = np.array([a.is_spot for a in accs])
+    region_col = np.array([a.region for a in accs])
+    prob = ILPProblem(
+        loads, costs, list(gpu_names),
+        np.concatenate(bucket_parts) if bucket_parts
+        else np.zeros(0, dtype=int),
+        caps_arr,
+        chip_weight=chip_weight, chip_group=chip_group,
+        group_caps=group_caps,
+        group_rows=np.stack(rows) if rows else None,
+        group_row_caps=np.asarray(row_caps) if rows else None,
+        spot_col=spot_col if spot_col.any() else None,
+        region_col=region_col)
+    return RegionProblem(prob, homes, list(gpu_names), slice_ranges, nb)

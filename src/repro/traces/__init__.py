@@ -1,4 +1,5 @@
 """Time-varying workload traces (rate curves, mix drift, fleet events)."""
 from .trace import (FleetEvent, RealizedTrace, TraceSegment, WorkloadTrace)
 from .generators import (diurnal_trace, inject_bursts, mix_drift_trace,
-                         preemption_events, synth_trace)
+                         preemption_events, regional_diurnal_traces,
+                         synth_trace)

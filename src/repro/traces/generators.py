@@ -50,6 +50,37 @@ def diurnal_trace(base_rate: float, peak_rate: float, *,
                        name=name, seed=seed)
 
 
+def regional_diurnal_traces(
+        rates: "dict[str, tuple[float, float]]", *,
+        duration_s: float = 24 * 3600.0,
+        segment_s: float = 3600.0,
+        peak_fracs: Optional[dict[str, float]] = None,
+        dataset: str = "mixed",
+        mix: Optional[dict[str, float]] = None,
+        name: str = "regional", seed: int = 0
+) -> "dict[str, WorkloadTrace]":
+    """Per-region diurnal rate curves: ``rates`` maps home region ->
+    (trough, crest) req/s, and each region's day peaks at its own local
+    time — by default the peaks are spread evenly across the trace
+    (timezone offsets), which is exactly the follow-the-sun shape that
+    makes geo-distributed pooling pay: one region's crest lands in
+    another's trough.  ``peak_fracs`` overrides the per-region peak
+    position (fraction of the trace).  Seeds are decorrelated per region
+    in sorted-name order, so realizations stay reproducible."""
+    homes = sorted(rates)
+    if peak_fracs is None:
+        peak_fracs = {h: (14 / 24 + k / len(homes)) % 1.0
+                      for k, h in enumerate(homes)}
+    out: dict[str, WorkloadTrace] = {}
+    for k, h in enumerate(homes):
+        base, peak = rates[h]
+        out[h] = diurnal_trace(
+            base, peak, duration_s=duration_s, segment_s=segment_s,
+            peak_frac=peak_fracs[h], dataset=dataset, mix=mix,
+            name=f"{name}:{h}", seed=seed + k)
+    return out
+
+
 def mix_drift_trace(rate: float, start_mix: dict[str, float],
                     end_mix: dict[str, float], *,
                     duration_s: float, segment_s: float,

@@ -16,7 +16,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.core.workload import DATASETS, Workload, workload_from_samples
+from repro.core.workload import (DATASETS, INPUT_EDGES, OUTPUT_EDGES,
+                                 Workload, workload_from_samples)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,9 +142,13 @@ class WorkloadTrace:
             if self.segments else 0.0
 
     def workload_at(self, t: float, *, n_samples: int = 20_000,
-                    seed: Optional[int] = None) -> Workload:
+                    seed: Optional[int] = None,
+                    input_edges=INPUT_EDGES,
+                    output_edges=OUTPUT_EDGES) -> Workload:
         """Histogram ``Workload`` for the schedule at time ``t`` (rate +
-        mix), for provisioning: the ILP consumes this directly."""
+        mix), for provisioning: the ILP consumes this directly.  Pass the
+        profile's own edges (``grid_edges``) when provisioning against a
+        non-default bucket grid."""
         rng = np.random.default_rng(self.seed if seed is None else seed)
         mix = _validate_mix(self.mix_at(t) or {"mixed": 1.0})
         ins, outs = [], []
@@ -155,7 +160,9 @@ class WorkloadTrace:
         return workload_from_samples(np.concatenate(ins),
                                      np.concatenate(outs),
                                      self.rate_at(t),
-                                     name=f"{self.name}@t={t:g}")
+                                     name=f"{self.name}@t={t:g}",
+                                     input_edges=input_edges,
+                                     output_edges=output_edges)
 
     # -- transforms ----------------------------------------------------------
     def scaled(self, factor: float) -> "WorkloadTrace":

@@ -39,6 +39,34 @@ def test_routing_follows_throughput_weights(mel):
     assert abs(got - want) < 0.1
 
 
+def test_route_uniform_fallback_when_all_weights_zero(mel):
+    """Every non-draining candidate with zero MaxTput for the bucket (and
+    a synthetic catalog whose memory fallback would also be zero) must
+    degrade to uniform routing over the non-draining instances — never
+    raise (ISSUE 5 satellite)."""
+    import dataclasses
+
+    from repro.core import Profile
+    zero_gpus = {g: dataclasses.replace(acc, mem_gb=0.0)
+                 for g, acc in mel.profile.gpus.items()}
+    zero_prof = Profile(zero_gpus, mel.profile.buckets,
+                        mel.profile.slo_tpot_s,
+                        {g: np.zeros_like(v)
+                         for g, v in mel.profile.max_tput.items()})
+    insts = [InstanceRef(0, "A100"), InstanceRef(1, "L4"),
+             InstanceRef(2, "A10G")]
+    lb = LoadBalancer(zero_prof, insts, seed=0)
+    lb.mark_draining(2)
+    picks = np.array([lb.route(100).inst_id for _ in range(600)])
+    # uniform over the two non-draining instances; the draining one is out
+    assert set(picks) == {0, 1}
+    assert abs(float(np.mean(picks == 0)) - 0.5) < 0.1
+    # whole fleet draining: still serves somewhere rather than raising
+    lb.mark_draining(0)
+    lb.mark_draining(1)
+    assert lb.route(100).inst_id in {0, 1, 2}
+
+
 def test_straggler_shedding(mel):
     insts = [InstanceRef(0, "A100"), InstanceRef(1, "A100")]
     lb = LoadBalancer(mel.profile, insts, seed=0, straggler_factor=2.0)

@@ -22,6 +22,9 @@ from repro.core import (Melange, MelangeFleet, ModelPerf, ModelSpec,
                         PAPER_GPUS, build_fleet_problem, build_problem,
                         make_workload, solve)
 from repro.core.ilp import _EPS, _greedy
+from repro.core.workload import DATASETS, bucket_grid, workload_from_samples
+from repro.regions import (RegionalMelange, build_region_problem,
+                           three_region_catalog)
 
 GOLDEN_PATH = Path(__file__).resolve().parent / "golden" / \
     "solver_goldens.json"
@@ -81,6 +84,27 @@ def build_cases() -> dict:
          for m in fleet.models},
         chip_caps={"A100": 3})
     cases["fleet-chat+docs-capA100-3"] = fp.prob
+
+    # multi-region + spot tiers on a coarse grid (small enough that the
+    # recorded costs are budget-independent)
+    in_edges = (1, 100, 1000, 8000, 32000)
+    out_edges = (1, 100, 2000)
+    rc = three_region_catalog(capacity={"us-east": {"A100": 2, "L4": 2}})
+    rmel = RegionalMelange(PAPER_GPUS, m7, 0.25, rc, spot_tiers=True,
+                           buckets=bucket_grid(in_edges, out_edges))
+
+    def _wl(dataset, rate, seed):
+        rng = np.random.default_rng(seed)
+        i, o = DATASETS[dataset](rng, 600)
+        return workload_from_samples(i, o, rate, input_edges=in_edges,
+                                     output_edges=out_edges)
+
+    cases["regions-3r-spot-slo025"] = build_region_problem(
+        {"us-east": _wl("mixed", 6.0, 11),
+         "eu-west": _wl("arena", 4.0, 12),
+         "ap-south": _wl("pubmed", 2.0, 13)},
+        rmel.profiles, slice_factor=1, min_ondemand_frac=0.5,
+        replacement_delay_s=120.0).prob
     return cases
 
 
@@ -120,6 +144,7 @@ def cases() -> dict:
     "tp12-pubmed-slo02-r8-capA10G4",
     "spot-mixed-slo012-r8-floor50",
     "fleet-chat+docs-capA100-3",
+    "regions-3r-spot-slo025",
 ])
 def test_solver_costs_within_golden_bounds(name, goldens, cases):
     assert name in goldens, f"no golden for {name} — re-record"

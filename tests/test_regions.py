@@ -1,0 +1,538 @@
+"""Multi-region markets (ISSUE 5 tentpole): region-expanded catalogs with
+order-robust variant names, RTT-tightened load matrices, region-scoped
+pool caps through the solver stack, the regional autoscaler's
+cross-region backfill, and the geo-aware orchestrator.
+
+Each hypothesis property has a plain deterministic core so the logic is
+exercised even where hypothesis is not installed.
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Melange, ModelPerf, PAPER_GPUS, build_problem,
+                        chips_by_pool, expand_price_tiers,
+                        expand_tp_variants, is_spot_pool, make_workload,
+                        pool_key, region_variant, solve, split_region,
+                        with_region)
+from repro.core.crosscheck import check_region_case
+from repro.core.workload import (DATASETS, bucket_grid, grid_edges,
+                                 workload_from_samples)
+from repro.regions import (Region, RegionCatalog, RegionalAutoscaler,
+                           RegionalMelange, build_region_problem,
+                           expand_regions, rtt_tightened_slo,
+                           single_region_catalog, three_region_catalog)
+
+SMALL_IN_EDGES = (1, 100, 1000, 8000, 32000)
+SMALL_OUT_EDGES = (1, 100, 2000)
+SMALL_BUCKETS = bucket_grid(SMALL_IN_EDGES, SMALL_OUT_EDGES)
+
+
+def _small_workload(rng, dataset, rate):
+    i, o = DATASETS[dataset](rng, 400)
+    return workload_from_samples(i, o, rate, name=dataset,
+                                 input_edges=SMALL_IN_EDGES,
+                                 output_edges=SMALL_OUT_EDGES)
+
+
+def _two_region_catalog(capacity=None):
+    return RegionCatalog(
+        {"east": Region("east", price_mult=1.0,
+                        capacity=(capacity or {}).get("east")),
+         "west": Region("west", price_mult=1.2, preemption_mult=0.5,
+                        capacity=(capacity or {}).get("west"))},
+        rtt_s={("east", "west"): 0.08})
+
+
+# ---------------------------------------------------------------------------
+# name components: order-robust parsing across every expander order
+# ---------------------------------------------------------------------------
+def test_split_region_and_spot_pool_helpers():
+    assert split_region("A100x2:spot@eu-west") == ("A100x2:spot", "eu-west")
+    assert split_region("A100:spotx2@eu-west") == ("A100:spotx2", "eu-west")
+    assert split_region("A100") == ("A100", "")
+    assert with_region("A100:spot", "eu") == "A100:spot@eu"
+    assert with_region("A100", "") == "A100"
+    assert is_spot_pool("A100:spot")
+    assert is_spot_pool("A100:spot@eu-west")
+    assert not is_spot_pool("A100@eu-west")
+    assert not is_spot_pool("A100")
+
+
+def test_region_variant_fields_and_pools():
+    v = region_variant(PAPER_GPUS["A100"], "eu-west", price_mult=1.2,
+                       preemption_mult=0.5)
+    assert v.name == "A100@eu-west" and v.region == "eu-west"
+    assert v.base_name == "A100@eu-west"
+    assert v.market_pool == "A100@eu-west"        # on-demand: physical pool
+    assert v.price_hr == pytest.approx(1.2 * PAPER_GPUS["A100"].price_hr)
+    assert v.spot_price_hr == pytest.approx(
+        1.2 * PAPER_GPUS["A100"].spot_price_hr)
+    assert v.preemption_rate == pytest.approx(
+        0.5 * PAPER_GPUS["A100"].preemption_rate)
+    with pytest.raises(ValueError, match="already homed"):
+        region_variant(v, "us-east")
+    with pytest.raises(ValueError, match="invalid region name"):
+        region_variant(PAPER_GPUS["A100"], "eu@west")
+    with pytest.raises(ValueError, match="price_mult"):
+        region_variant(PAPER_GPUS["A100"], "eu", price_mult=0.0)
+
+
+@pytest.mark.parametrize("order", list(itertools.permutations(
+    ["tp", "tier", "region"])))
+def test_expander_composition_orders(order):
+    """Every order of the three expanders must land the composed
+    (tp=2, spot, eu) variant in the same pools at the same price — the
+    pool helpers may never depend on which suffix happened to come first
+    (ISSUE 5 satellite)."""
+    rc = _two_region_catalog()
+    cat = {"A100": PAPER_GPUS["A100"]}
+    steps = {
+        "tp": lambda c: expand_tp_variants(c, (1, 2)),
+        "tier": expand_price_tiers,
+        "region": lambda c: expand_regions(c, rc),
+    }
+    for s in order:
+        cat = steps[s](cat)
+    composed = [a for a in cat.values()
+                if a.tp == 2 and a.is_spot and a.region == "west"]
+    assert len(composed) == 1, sorted(cat)
+    x = composed[0]
+    # name order may differ (:spotx2 vs x2:spot) but the region is last
+    assert x.name in ("A100x2:spot@west", "A100:spotx2@west")
+    assert split_region(x.name)[1] == "west"
+    assert x.base_name == "A100@west"
+    assert x.market_pool == "A100:spot@west"
+    assert x.chips == 2
+    assert x.price_hr == pytest.approx(
+        2 * 1.2 * PAPER_GPUS["A100"].spot_price_hr)
+    # reclaim exposure: 2 chips x the region's calmer market
+    assert x.preemption_rate == pytest.approx(
+        2 * 0.5 * PAPER_GPUS["A100"].preemption_rate)
+    # pool resolution goes through the catalog, whatever the name order
+    assert pool_key(x.name, cat) == "A100:spot@west"
+    pools = chips_by_pool({x.name: 1, "A100@west": 1}, cat)
+    assert pools == {"A100@west": 3, "A100:spot@west": 2}
+    # every emitted name must round-trip its region suffix
+    for name, acc in cat.items():
+        assert split_region(name)[1] == acc.region
+
+
+def test_regional_spot_above_ondemand_rejected_in_any_order():
+    """A spot multiplier that would price regional spot above regional
+    on-demand is a configuration error, surfaced whichever order the tier
+    and region expanders run in (no silent clamp: a clamp would make the
+    emitted price order-dependent)."""
+    rc = RegionCatalog(
+        {"bad": Region("bad", price_mult=1.0, spot_price_mult=4.0)})
+    with pytest.raises(ValueError, match="never costs more"):
+        expand_regions(expand_price_tiers({"A100": PAPER_GPUS["A100"]}), rc)
+    with pytest.raises(ValueError, match="never costs more"):
+        expand_price_tiers(expand_regions({"A100": PAPER_GPUS["A100"]}, rc))
+    # a relatively pricier — but still sub-on-demand — regional spot
+    # market is legal and prices identically in both orders
+    rc_ok = RegionCatalog(
+        {"ok": Region("ok", price_mult=1.0, spot_price_mult=2.0)})
+    a = expand_regions(expand_price_tiers(
+        {"A100": PAPER_GPUS["A100"]}), rc_ok)["A100:spot@ok"]
+    b = expand_price_tiers(expand_regions(
+        {"A100": PAPER_GPUS["A100"]}, rc_ok))["A100:spot@ok"]
+    assert a.price_hr == pytest.approx(b.price_hr) == pytest.approx(
+        2.0 * PAPER_GPUS["A100"].spot_price_hr)
+
+
+def test_region_catalog_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="missing region pairs"):
+        RegionCatalog({"a": Region("a"), "b": Region("b")})
+    with pytest.raises(ValueError, match="invalid region name"):
+        RegionCatalog({"a:b": Region("a:b")})
+    with pytest.raises(ValueError, match="at least one region"):
+        RegionCatalog({})
+    rc = three_region_catalog(capacity={"us-east": {"A100": 4}})
+    again = RegionCatalog.from_json(rc.to_json())
+    assert again.names == rc.names
+    assert again.rtt_s == rc.rtt_s
+    assert again.regions["us-east"].capacity == {"A100": 4}
+    assert again.regions["eu-west"].price_mult == rc.regions[
+        "eu-west"].price_mult
+    assert rc.rtt("us-east", "eu-west") == rc.rtt("eu-west", "us-east")
+    assert rc.rtt("us-east", "us-east") == 0.0
+    with pytest.raises(KeyError):
+        rc.rtt("us-east", "mars")
+
+
+def test_region_capacity_becomes_regional_chip_caps():
+    rc = _two_region_catalog(capacity={"east": {"A100": 3, "L4:spot": 1}})
+    gpus = expand_regions(expand_price_tiers(PAPER_GPUS), rc)
+    caps = rc.chip_caps(gpus)
+    # a plain key caps the physical pool; a spot key only the sub-pool
+    assert caps == {"A100@east": 3, "L4:spot@east": 1}
+
+
+# ---------------------------------------------------------------------------
+# RTT tightening: remote columns lose MaxTput, short buckets mask first
+# ---------------------------------------------------------------------------
+def test_rtt_tightened_slo_shape():
+    b_short = SMALL_BUCKETS[0]             # rep_output ~75 tokens
+    slo = 0.1
+    assert rtt_tightened_slo(slo, 0.0, b_short) == slo
+    assert rtt_tightened_slo(slo, 0.08, b_short) < slo
+    # a round trip bigger than the whole budget goes non-positive
+    assert rtt_tightened_slo(slo, slo * b_short.rep_output + 1.0,
+                             b_short) <= 0
+
+
+def test_remote_columns_tightened_or_masked():
+    rc = RegionCatalog(
+        {"near": Region("near"), "far": Region("far")},
+        # enormous RTT: every bucket's budget is burned through
+        rtt_s={("far", "near"): 1e4})
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                         buckets=SMALL_BUCKETS)
+    wl = _small_workload(np.random.default_rng(0), "arena", 3.0)
+    rp = build_region_problem({"near": wl}, rm.profiles, slice_factor=2)
+    near_cols = [j for j, g in enumerate(rp.gpu_names)
+                 if rm.gpus[g].region == "near"]
+    far_cols = [j for j, g in enumerate(rp.gpu_names)
+                if rm.gpus[g].region == "far"]
+    assert np.isfinite(rp.prob.loads[:, near_cols]).any()
+    assert not np.isfinite(rp.prob.loads[:, far_cols]).any()
+    # moderate RTT: remote stays feasible but strictly more expensive in
+    # load terms wherever the tightened deadline cuts throughput
+    rc2 = RegionCatalog(
+        {"near": Region("near"), "far": Region("far")},
+        rtt_s={("far", "near"): 0.5})
+    rm2 = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc2,
+                          buckets=SMALL_BUCKETS)
+    rp2 = build_region_problem({"near": wl}, rm2.profiles, slice_factor=2)
+    ln = rp2.prob.loads[:, [rp2.gpu_names.index("A100@near")]]
+    lf = rp2.prob.loads[:, [rp2.gpu_names.index("A100@far")]]
+    both = np.isfinite(ln[:, 0]) & np.isfinite(lf[:, 0])
+    assert both.any()
+    assert np.all(lf[both, 0] >= ln[both, 0] - 1e-12)
+    assert np.any(lf[both, 0] > ln[both, 0] + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# reduction property: a trivial single-region market is the unexpanded
+# problem, byte for byte
+# ---------------------------------------------------------------------------
+def _check_region_reduction(seed):
+    rng = np.random.default_rng(seed)
+    dataset = ["arena", "pubmed", "mixed"][int(rng.integers(0, 3))]
+    rate = float(rng.uniform(1.0, 8.0))
+    slo = float(rng.uniform(0.08, 0.3))
+    wl = _small_workload(rng, dataset, rate)
+    plain = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), slo,
+                    buckets=SMALL_BUCKETS)
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), slo,
+                         single_region_catalog("solo"),
+                         buckets=SMALL_BUCKETS)
+    prob_p = build_problem(wl, plain.profile, slice_factor=2)
+    rp = build_region_problem({"solo": wl}, rm.profiles, slice_factor=2)
+    # byte-identical matrices: multiplier 1.0 and zero RTT change nothing
+    assert np.array_equal(rp.prob.loads, prob_p.loads)
+    assert np.array_equal(rp.prob.costs, prob_p.costs)
+    assert np.array_equal(rp.prob.bucket_of_slice, prob_p.bucket_of_slice)
+    assert [split_region(g)[0] for g in rp.gpu_names] == prob_p.gpu_names
+    sp = solve(prob_p, time_budget_s=5.0)
+    sr = solve(rp.prob, time_budget_s=5.0)
+    assert (sp is None) == (sr is None)
+    if sp is not None and sp.optimal and sr.optimal:
+        assert abs(sp.cost - sr.cost) < 1e-12
+
+
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_single_region_reduces_to_unexpanded(seed):
+    """A one-region catalog at multiplier 1.0 with zero RTT solves
+    byte-identically to the unexpanded problem (ISSUE 5 satellite)."""
+    _check_region_reduction(seed)
+
+
+def test_region_reduction_smoke():
+    for seed in range(4):
+        _check_region_reduction(seed)
+
+
+# ---------------------------------------------------------------------------
+# brute-force cross-checks with region pool caps
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_property_region_caps_and_masking(seed):
+    """solve == brute force on small region instances; per-(gpu, region)
+    pool caps hold; no slice lands on an RTT-masked remote column."""
+    check_region_case(seed)
+
+
+def test_region_crosscheck_smoke():
+    for seed in range(8):
+        check_region_case(seed)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end allocation: geography priced in, caps region-scoped
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def rm_two():
+    rc = _two_region_catalog(capacity={"east": {"A100": 1, "H100": 1,
+                                                "L4": 2, "A10G": 2}})
+    return RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                           spot_tiers=True, buckets=SMALL_BUCKETS,
+                           slice_factor=4)
+
+
+@pytest.fixture(scope="module")
+def demand_two():
+    return {"east": _small_workload(np.random.default_rng(1), "mixed", 8.0),
+            "west": _small_workload(np.random.default_rng(2), "mixed", 5.0)}
+
+
+def test_multi_region_dominates_single_region(rm_two, demand_two):
+    best = rm_two.best_single_region(demand_two, time_budget_s=4.0)
+    assert best is not None
+    region, base = best
+    multi = rm_two.allocate(demand_two, warm_from=base, time_budget_s=4.0)
+    assert multi is not None
+    # warm-started joint solve can never lose to the best single region
+    assert multi.cost_per_hour <= base.cost_per_hour + 1e-9
+    # regional capacity caps hold at chip granularity
+    pools = multi.chips_by_pool()
+    assert pools.get("A100@east", 0) <= 1
+    assert sum(pools.get(p, 0) for p in ("L4@east",)) <= 2
+    # views are consistent
+    assert sum(multi.cost_by_region().values()) == pytest.approx(
+        multi.cost_per_hour)
+    assert sum(n for d in multi.counts_by_region().values()
+               for n in d.values()) == multi.total_instances
+    assert 0.0 <= multi.remote_share() <= 1.0
+
+
+def test_single_region_baseline_serves_remote_demand(rm_two, demand_two):
+    a = rm_two.single_region_baseline(demand_two, "west", time_budget_s=3.0)
+    assert a is not None
+    # everything must sit in the chosen region...
+    assert set(a.counts_by_region()) == {"west"}
+    # ...and the east-homed demand is necessarily served remotely
+    assert a.remote_share() > 0.0
+
+
+def test_demand_requires_mapping(rm_two):
+    with pytest.raises(ValueError, match="mapping"):
+        rm_two.allocate(make_workload("arena", 2.0))
+    with pytest.raises(KeyError, match="unknown regions"):
+        rm_two.allocate({"atlantis": _small_workload(
+            np.random.default_rng(0), "arena", 2.0)})
+
+
+# ---------------------------------------------------------------------------
+# regional autoscaler: stockouts cap one region's pool, backfill crosses
+# ---------------------------------------------------------------------------
+def test_regional_stockout_caps_only_that_region(rm_two, demand_two):
+    asc = RegionalAutoscaler(rm_two, demand_two, headroom=0.0,
+                             solver_budget_s=2.0)
+    assert asc.current is not None
+    east = {g: n for g, n in asc.current.counts.items()
+            if rm_two.gpus[g].region == "east"}
+    assert east, "the cheap region must be used initially"
+    gpu = next(iter(east))
+    pool = pool_key(gpu, rm_two.gpus)
+    diff = asc.on_instance_failure(gpu, east[gpu], stockout=True)
+    assert pool in asc.chip_caps
+    # the sibling pool in the OTHER region is never capped by this event
+    other = pool_key(with_region(split_region(gpu)[0], "west"),
+                     rm_two.gpus)
+    assert other not in asc.chip_caps
+    # lost capacity was replaced from somewhere still rentable
+    assert diff.add, "stockout must trigger cross-region/tier backfill"
+    assert asc.current.chips_by_pool().get(pool, 0) <= asc.chip_caps[pool]
+    asc.lift_stockout(gpu)
+    assert pool not in asc.chip_caps
+
+
+def test_regional_price_shift_resolves(rm_two, demand_two):
+    asc = RegionalAutoscaler(rm_two, demand_two, headroom=0.0,
+                             solver_budget_s=2.0)
+    cost0 = asc.current.cost_per_hour
+    # make the expensive region suddenly half price: the re-solve must
+    # follow the market down
+    diff = asc.on_price_shift("west", 0.5, spot_price_mult=0.5)
+    try:
+        assert diff is not None
+        assert asc.history[-2]["event"] == "price-shift"
+        assert asc.current.cost_per_hour < cost0 - 1e-9
+        west_price = asc.melange.gpus["A100@west"].price_hr
+        assert west_price == pytest.approx(0.5 * PAPER_GPUS["A100"].price_hr)
+    finally:
+        # module-scoped melange: restore the original market
+        asc.on_price_shift("west", 1.2, spot_price_mult=1.2)
+
+
+def test_regional_autoscaler_priming_and_drift(rm_two, demand_two):
+    asc = RegionalAutoscaler(rm_two, demand_two, headroom=0.0, ewma=0.3,
+                             solver_budget_s=2.0)
+    true = _small_workload(np.random.default_rng(9), "mixed", 12.0)
+    asc.observe_rates("east", true.rates)
+    # first window replaces the estimate outright (cold-start rule)
+    np.testing.assert_allclose(asc.observed["east"], true.rates)
+    # the other region's estimate is untouched
+    np.testing.assert_allclose(asc.observed["west"],
+                               demand_two["west"].rates)
+    assert asc.drift() > 0.0
+    with pytest.raises(KeyError):
+        asc.observe_rates("atlantis", true.rates)
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: home-first routing, RTT-charged SLO judgment (slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_regional_routing_home_first_with_rtt_charge():
+    """With both regions explicitly provisioned (static fleet), routing is
+    home-first; remote service only happens under overflow and carries the
+    RTT in TTFT and the charged TPOT."""
+    from repro.orchestrator import run_static_regional
+    from repro.traces import TraceSegment, WorkloadTrace
+    rc = _two_region_catalog()
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                         buckets=SMALL_BUCKETS, slice_factor=4)
+    traces = {
+        "east": WorkloadTrace("east", [
+            TraceSegment(0.0, 400.0, 3.0, {"mixed": 1.0})], seed=1),
+        "west": WorkloadTrace("west", [
+            TraceSegment(0.0, 400.0, 2.0, {"mixed": 1.0})], seed=2),
+    }
+    counts = {"A100@east": 2, "H100@east": 1,
+              "A100@west": 2, "H100@west": 1}
+    res = run_static_regional(rm, counts, traces, seed=3)
+    assert res.conserved and res.n_dropped == 0
+    served = [r for r in res.requests if not r.dropped]
+    assert all(r.served_region in rc.regions for r in served)
+    # with headroom in both regions, requests stay at home
+    home = sum(1 for r in served if r.served_region == r.home_region)
+    assert home / len(served) > 0.9
+    # any remote-served request carries the RTT in TTFT and charged TPOT
+    for r in served:
+        if r.served_region != r.home_region:
+            assert r.rtt_s == pytest.approx(0.08)
+            assert r.tpot_charged >= r.tpot
+            assert r.ttft >= 0.08
+    assert res.slo_attainment >= 0.9
+    assert res.remote_share <= 0.1
+
+
+@pytest.mark.slow
+def test_regional_orchestrator_elastic_runs_conserved():
+    from repro.orchestrator import RegionalOrchestrator
+    from repro.traces import TraceSegment, WorkloadTrace
+    rc = _two_region_catalog()
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                         buckets=SMALL_BUCKETS, slice_factor=4)
+    traces = {
+        "east": WorkloadTrace("east", [
+            TraceSegment(0.0, 400.0, 4.0, {"mixed": 1.0})], seed=1),
+        "west": WorkloadTrace("west", [
+            TraceSegment(0.0, 400.0, 3.0, {"mixed": 1.0})], seed=2),
+    }
+    orch = RegionalOrchestrator(rm, traces, window_s=100.0,
+                                launch_delay_s=20.0, solver_budget_s=1.0,
+                                seed=3, spot_preemptions=False)
+    res = orch.run()
+    assert res.conserved and res.n_dropped == 0
+    served = [r for r in res.requests if not r.dropped]
+    assert all(r.served_region in rc.regions for r in served)
+    assert res.slo_attainment >= 0.9
+
+
+@pytest.mark.slow
+def test_regional_orchestrator_regional_stockout_event():
+    """A trace stockout naming one region's pool must cap only it: the
+    controller backfills and the run completes conserved."""
+    from repro.orchestrator import RegionalOrchestrator
+    from repro.traces import FleetEvent, TraceSegment, WorkloadTrace
+    rc = _two_region_catalog()
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                         buckets=SMALL_BUCKETS, slice_factor=4)
+    traces = {
+        "east": WorkloadTrace("east", [
+            TraceSegment(0.0, 400.0, 4.0, {"mixed": 1.0})],
+            events=[FleetEvent(150.0, "preemption", "A100@east", 8,
+                               stockout=True),
+                    FleetEvent(300.0, "restock", "A100@east")], seed=1),
+        "west": WorkloadTrace("west", [
+            TraceSegment(0.0, 400.0, 2.0, {"mixed": 1.0})], seed=2),
+    }
+    orch = RegionalOrchestrator(rm, traces, window_s=100.0,
+                                launch_delay_s=20.0, solver_budget_s=1.0,
+                                seed=4, spot_preemptions=False)
+    res = orch.run()
+    assert res.conserved
+    kinds = [d.kind for d in res.timeline.decisions]
+    assert any(k in ("failure", "preemption-drained-only",
+                     "preemption-miss") for k in kinds)
+    # the stockout (if it hit live capacity) recorded an east-scoped cap
+    hist = [h for h in res.autoscaler_history if h["event"] == "failure"]
+    if hist:
+        assert any("east" in g for h in hist for g in h["losses"])
+
+
+def test_region_order_home_first_even_at_zero_rtt():
+    """0.0 is a valid inter-region RTT; the router must still prefer the
+    home region over an alphabetically-earlier zero-RTT sibling."""
+    from repro.core import EngineModel
+    from repro.orchestrator import RegionalClusterEngine
+    rc = RegionCatalog({"aaa": Region("aaa"), "mmm": Region("mmm")},
+                       rtt_s={("aaa", "mmm"): 0.0})
+    rm = RegionalMelange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, rc,
+                         buckets=SMALL_BUCKETS)
+    eng = RegionalClusterEngine(rm.profile,
+                                EngineModel(ModelPerf.llama2_7b()), rc,
+                                seed=0)
+    assert eng._region_order("mmm") == ["mmm", "aaa"]
+    assert eng._region_order("aaa") == ["aaa", "mmm"]
+
+
+# ---------------------------------------------------------------------------
+# core compatibility: a region-expanded catalog through the plain stack
+# ---------------------------------------------------------------------------
+def test_plain_melange_over_region_catalog():
+    """The plain core stack accepts a region-expanded catalog (no RTT
+    knowledge — it simply sees more columns at regional prices) and the
+    Allocation region views group it correctly."""
+    rc = _two_region_catalog()
+    gpus = expand_regions(PAPER_GPUS, rc)
+    mel = Melange(gpus, ModelPerf.llama2_7b(), 0.12, buckets=SMALL_BUCKETS)
+    wl = _small_workload(np.random.default_rng(3), "arena", 4.0)
+    a = mel.allocate(wl, time_budget_s=2.0)
+    assert a is not None
+    by_region = a.counts_by_region()
+    assert set(by_region) <= set(rc.regions)
+    # with identical silicon everywhere, the cheaper region wins
+    assert set(by_region) == {"east"}
+    assert sum(a.cost_by_region().values()) == pytest.approx(
+        a.cost_per_hour)
+    # regional stockout caps only that region's pool through the core
+    # autoscaler's shared bookkeeping
+    from repro.core import Autoscaler
+    asc = Autoscaler(mel, wl, headroom=0.0, solver_budget_s=1.0)
+    gpu = next(iter(asc.current.counts))
+    asc.set_chip_stockout(gpu, 0)
+    assert pool_key(gpu, gpus) in asc.chip_caps
+    assert split_region(pool_key(gpu, gpus))[1] == "east"
+
+
+# ---------------------------------------------------------------------------
+# grid plumbing shared with the orchestrator
+# ---------------------------------------------------------------------------
+def test_grid_edges_roundtrip_and_validation():
+    assert grid_edges(SMALL_BUCKETS) == (SMALL_IN_EDGES, SMALL_OUT_EDGES)
+    from repro.core.workload import INPUT_EDGES, OUTPUT_EDGES
+    assert grid_edges(bucket_grid()) == (INPUT_EDGES, OUTPUT_EDGES)
+    with pytest.raises(ValueError, match="bucket_grid"):
+        grid_edges(SMALL_BUCKETS[:-1])
