@@ -18,10 +18,11 @@ diurnal shape are untouched by the compression.
 from __future__ import annotations
 
 from repro.core import Melange, ModelPerf, PAPER_GPUS
+from repro.obs import MetricsRegistry, SpanTracer, parse_prometheus
 from repro.orchestrator import ClusterOrchestrator, run_static
 from repro.traces import FleetEvent, diurnal_trace, inject_bursts
 
-from .common import emit, parse_bench_args, row, timed
+from .common import emit, emit_metrics, emit_trace, parse_bench_args, row, timed
 
 HOUR_S = 120.0                      # compressed: one "hour" of the day
 BASE_RATE, PEAK_RATE = 1.0, 8.0
@@ -41,6 +42,41 @@ def build_trace(hour_s: float = HOUR_S, peak_rate: float = PEAK_RATE):
         FleetEvent(15 * hour_s, "preemption", "A100", 1, stockout=True),
         FleetEvent(18 * hour_s, "restock", "A100"),
     ])
+
+
+def _check_observability(elastic, registry, tracer) -> None:
+    """The issue's acceptance gates, enforced in-process on every run
+    (smoke included): (a) the Chrome trace validates, (b) the Prometheus
+    exposition round-trips through the parser, (c) every recorded
+    re-solve carries a self-consistent SolveStats whose phase times sum
+    to no more than the recorded solve time."""
+    from repro.obs import validate_chrome_trace
+
+    errs = validate_chrome_trace(tracer.to_chrome())
+    assert not errs, f"chrome trace invalid: {errs[:5]}"
+
+    text = registry.to_prometheus()
+    types, samples = parse_prometheus(text)
+    assert types.get("melange_windows_total") == "counter"
+    by_name = {s.name for s in samples}
+    for want in ("melange_windows_total", "melange_fleet_cost_per_hour",
+                 "melange_solver_latency_seconds_count"):
+        assert want in by_name, f"{want} missing from exposition"
+    n_windows = next(s.value for s in samples
+                     if s.name == "melange_windows_total")
+    assert n_windows == len(elastic.timeline.windows)
+
+    stats = elastic.timeline.solve_stats()
+    assert stats, "elastic run recorded no SolveStats"
+    resolves = [d for d in elastic.timeline.decisions
+                if d.kind in ("rescale", "failure")]
+    assert len(stats) == len(resolves), \
+        "every re-solve decision must carry SolveStats"
+    for st, d in zip(stats, resolves):
+        assert st.consistent(), f"inconsistent SolveStats at t={d.t}"
+        assert st.phase_total_s <= d.detail["solve_time_s"] + 1e-6, \
+            (f"phase times {st.phase_total_s} exceed recorded "
+             f"solve_time_s {d.detail['solve_time_s']}")
 
 
 def compute(smoke: bool = False):
@@ -64,11 +100,13 @@ def compute(smoke: bool = False):
         "slo_attainment": static.slo_attainment,
     }
 
-    # -- arm 2: elastic (autoscaler-in-the-loop)
+    # -- arm 2: elastic (autoscaler-in-the-loop), fully observed
+    registry = MetricsRegistry(enabled=True)
+    tracer = SpanTracer(enabled=True, sample_every=16)
     orch = ClusterOrchestrator(
         mel, trace, window_s=hour_s, launch_delay_s=hour_s / 4,
         headroom=0.10, drift_threshold=0.15, solver_budget_s=1.0,
-        seed=SEED)
+        seed=SEED, metrics=registry, tracer=tracer)
     initial_counts = dict(orch.autoscaler.current.counts)
     elastic = orch.run()
     tl = elastic.timeline.summary()
@@ -80,6 +118,10 @@ def compute(smoke: bool = False):
         "conserved": elastic.conserved,
         "timeline": tl,
     }
+    _check_observability(elastic, registry, tracer)
+    out["elastic"]["metrics_snapshot"] = emit_metrics(
+        "bench_elastic_trace", registry)
+    emit_trace("bench_elastic_trace", tracer)
 
     # -- arm 3: best single GPU type at peak, held all day
     singles = {}

@@ -38,7 +38,7 @@ from repro.core.crosscheck import run_crosschecks
 from repro.core.engine_model import EngineModel
 from repro.core.workload import ModelSpec
 
-from .common import emit, row, timed
+from .common import emit, emit_metrics, record_solver_metrics, row, timed
 
 SEED = 11
 CHIP_CAPS = {"A100": 2}               # the scarce pool (spot stockout)
@@ -127,6 +127,11 @@ def compute(smoke: bool = False):
     assert shared is not None, "shared-pool allocation infeasible"
     out["shared"] = {"cost_per_hour": shared.cost_per_hour,
                      "summary": shared.summary()}
+    from repro.obs import MetricsRegistry
+    registry = MetricsRegistry(enabled=True)
+    record_solver_metrics(registry, shared,
+                          *(seq.values() if seq is not None else ()))
+    emit_metrics("bench_multi_model", registry)
 
     # -- static silos (the headline baseline)
     silo_arms: dict[str, dict] = {}

@@ -46,7 +46,8 @@ from repro.regions import (RegionalMelange, build_region_problem,
                            single_region_catalog, three_region_catalog)
 from repro.traces import TraceSegment, WorkloadTrace
 
-from .common import emit, parse_bench_args, row, timed
+from .common import (emit, emit_metrics, parse_bench_args,
+                     record_solver_metrics, row, timed)
 
 SLO_TPOT_S = 0.12
 MIN_ONDEMAND_FRAC = 0.5
@@ -137,9 +138,12 @@ def simulate(multi, demand, smoke: bool) -> dict:
     """Region-aware simulation: the multi-region allocation rides the
     trace statically (attainment gate), then an elastic run rides an
     accelerated regional spot market (conservation + backfill gate)."""
+    from repro.obs import MetricsRegistry
     dur = 200.0 if smoke else SIM_DURATION_S
     traces = _traces(demand, dur)
     rm_sim = _melange(smoke)
+    registry = MetricsRegistry(enabled=True)
+    record_solver_metrics(registry, multi)
     static = run_static_regional(rm_sim, dict(multi.counts), traces,
                                  seed=SEED)
     out = {"static_multi": {
@@ -156,7 +160,7 @@ def simulate(multi, demand, smoke: bool) -> dict:
             min_ondemand_frac=MIN_ONDEMAND_FRAC,
             replacement_delay_s=REPLACEMENT_DELAY_S,
             spot_sample_s=50.0, spot_stockout_prob=0.3,
-            spot_restock_s=150.0)
+            spot_restock_s=150.0, metrics=registry)
         res = orch.run()
         preempts = sum(1 for d in res.timeline.decisions
                        if d.kind in ("failure", "preemption-drained-only"))
@@ -165,6 +169,7 @@ def simulate(multi, demand, smoke: bool) -> dict:
             "conserved": res.conserved, "dropped": res.n_dropped,
             "remote_request_share": res.remote_share,
             "preemption_events": preempts, "cost": res.cost}
+    emit_metrics("bench_regions", registry)
     return out
 
 

@@ -41,7 +41,7 @@ from repro.core.workload import DATASETS, bucket_grid, workload_from_samples
 from repro.orchestrator import ClusterOrchestrator, run_static
 from repro.traces import TraceSegment, WorkloadTrace
 
-from .common import emit, parse_bench_args, row, timed
+from .common import emit, emit_metrics, parse_bench_args, row, timed
 
 SLO_TPOT_S = 0.12
 RATE = 8.0
@@ -134,10 +134,13 @@ def headline(wl, smoke: bool) -> dict:
 
 def simulate(mel, mixed, ondemand, smoke: bool) -> dict:
     """Attainment with spot preemptions drawn from the Poisson rates."""
+    from repro.obs import MetricsRegistry
     dur = 200.0 if smoke else SIM_DURATION_S
     rate = 2.0 if smoke else RATE
     tr = WorkloadTrace("steady-mixed", [
         TraceSegment(0.0, dur, rate, {"mixed": 1.0})], seed=SEED)
+    # one registry across arms: preemption/stockout counters accumulate
+    registry = MetricsRegistry(enabled=True)
 
     def run_arm(m, preemption_rate=None, stockout_prob=0.0):
         cat = m.gpus if preemption_rate is None else {
@@ -153,7 +156,7 @@ def simulate(mel, mixed, ondemand, smoke: bool) -> dict:
             min_ondemand_frac=MIN_ONDEMAND_FRAC,
             replacement_delay_s=REPLACEMENT_DELAY_S,
             spot_sample_s=50.0, spot_stockout_prob=stockout_prob,
-            spot_restock_s=150.0)
+            spot_restock_s=150.0, metrics=registry)
         res = orch.run()
         preempts = sum(1 for d in res.timeline.decisions
                        if d.kind in ("failure", "preemption-drained-only"))
@@ -173,6 +176,7 @@ def simulate(mel, mixed, ondemand, smoke: bool) -> dict:
     if not smoke:
         out["spot_storm"] = run_arm(mel, preemption_rate=STORM_RATE_PER_HR,
                                     stockout_prob=0.5)
+    emit_metrics("bench_spot_mix", registry)
     return out
 
 

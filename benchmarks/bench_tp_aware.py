@@ -19,7 +19,8 @@ from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
 from repro.core.ilp import (ILPProblem, counts_within_caps, solve,
                             solve_brute_force)
 
-from .common import emit, parse_bench_args, row, timed
+from .common import (emit, emit_metrics, parse_bench_args,
+                     record_solver_metrics, row, timed)
 
 SETTINGS = (                    # (dataset, rate req/s, TPOT SLO s)
     ("pubmed", 4.0, 0.20),
@@ -32,7 +33,9 @@ DEGREES = (1, 2, 4)
 
 
 def compute(smoke: bool = False):
+    from repro.obs import MetricsRegistry
     model = ModelPerf.llama2_7b()
+    registry = MetricsRegistry(enabled=True)
     out = {}
     settings = SETTINGS[:1] if smoke else SETTINGS
     for ds, rate, slo in settings:
@@ -41,6 +44,7 @@ def compute(smoke: bool = False):
             wl, time_budget_s=0.5 if smoke else 1.5)
         tp = Melange(PAPER_GPUS, model, slo, tp_degrees=DEGREES).allocate(
             wl, time_budget_s=1.0 if smoke else 4.0)
+        record_solver_metrics(registry, fixed, tp)
         key = f"{ds}_r{rate:g}_slo{int(slo * 1000)}ms"
         entry = {"fixed_cost": None if fixed is None else fixed.cost_per_hour,
                  "fixed_alloc": None if fixed is None else fixed.counts,
@@ -54,6 +58,7 @@ def compute(smoke: bool = False):
                 "x" in g and tp.profile.gpus[g].tp > 1 for g in tp.counts)
         out[key] = entry
     out["cap_crosscheck"] = _brute_force_crosscheck(5 if smoke else 25)
+    emit_metrics("bench_tp_aware", registry)
     return out
 
 

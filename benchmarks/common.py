@@ -43,5 +43,68 @@ def emit(name: str, payload) -> None:
         json.dumps(payload, indent=1, default=str))
 
 
+def emit_metrics(name: str, registry) -> dict:
+    """Snapshot a :class:`repro.obs.MetricsRegistry` next to the
+    benchmark's results.  The snapshot is schema-validated *every* run —
+    smoke included, that is the CI gate — but only written outside smoke
+    (as ``<name>.metrics.json`` plus the Prometheus text exposition).
+    Returns the snapshot for in-process assertions."""
+    from repro.obs.metrics import validate_snapshot
+    snap = registry.snapshot()
+    errs = validate_snapshot(snap)
+    if errs:
+        raise AssertionError(
+            f"{name}: metrics snapshot failed schema validation: {errs}")
+    if not SMOKE:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        (RESULTS / f"{name}.metrics.json").write_text(
+            json.dumps(snap, indent=1))
+        (RESULTS / f"{name}.prom").write_text(registry.to_prometheus())
+    return snap
+
+
+def emit_trace(name: str, tracer) -> dict:
+    """Validate + (outside smoke) write a tracer's Chrome trace-event
+    JSON as ``<name>.trace.json`` — load it at https://ui.perfetto.dev.
+    Returns the trace object for in-process assertions."""
+    from repro.obs.trace import validate_chrome_trace
+    obj = tracer.to_chrome()
+    errs = validate_chrome_trace(obj)
+    if errs:
+        raise AssertionError(
+            f"{name}: Chrome trace failed schema validation: {errs[:5]}")
+    if not SMOKE:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        (RESULTS / f"{name}.trace.json").write_text(json.dumps(obj))
+    return obj
+
+
+def record_solver_metrics(registry, *solutions) -> None:
+    """Light instrumentation for benches that call the solver directly
+    (no orchestrator in the loop): fold each solution's latency and
+    SolveStats into the registry's solver families.  Accepts
+    ``Allocation``-likes (anything with a ``.solution``) or raw
+    ``ILPSolution``s; ``None`` entries (infeasible arms) are skipped."""
+    lat = registry.histogram(
+        "melange_solver_latency_seconds", "ILP re-solve wall time")
+    nodes = registry.counter(
+        "melange_solver_nodes_total", "branch-and-bound nodes expanded")
+    prunes = registry.counter(
+        "melange_solver_prunes_total", "B&B candidates pruned", ("reason",))
+    for s in solutions:
+        if s is None:
+            continue
+        sol = getattr(s, "solution", s)
+        lat.observe(sol.solve_time_s)
+        st = sol.stats
+        if st is not None:
+            nodes.inc(st.nodes)
+            for reason, n in (("lp_bound", st.pruned_lp_bound),
+                              ("cap", st.pruned_cap),
+                              ("ceiling", st.pruned_ceiling),
+                              ("deadline", st.pruned_deadline)):
+                prunes.labels(reason=reason).inc(n)
+
+
 def row(name: str, us: float, derived: str):
     return (name, us, derived)

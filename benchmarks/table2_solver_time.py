@@ -1,5 +1,11 @@
-"""Table 2: ILP solver execution time across datasets and request rates.
-Paper: 0.14-1.2s with CBC; ours must stay in the same practical range."""
+"""Table 2: ILP solver execution time across datasets and request rates —
+paper: 0.14-1.2s with CBC; ours must stay in the same practical range —
+plus a columns × slices scaling sweep built on the solver's own
+:class:`repro.core.ilp.SolveStats` instrumentation: for each problem
+shape the sweep reports where the wall time actually goes (greedy warm
+start vs. polish vs. branch-and-bound), how many B&B nodes were expanded
+and why candidates were pruned, instead of a single opaque latency.
+"""
 from __future__ import annotations
 
 import time
@@ -8,16 +14,25 @@ from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
 from repro.core.loadmatrix import build_problem
 from repro.core.ilp import solve
 
-from .common import emit, row
+from .common import emit, parse_bench_args, row
 
 RATES = (1, 2, 4, 8, 16, 32)
 DATASETS = ("arena", "pubmed", "mixed")
 
+# scaling sweep: GPU catalog prefixes (columns) x slice factors (rows of
+# the load matrix); smoke trims both to keep the CI lane under a minute
+SWEEP_GPUS = (2, 3, len(PAPER_GPUS))
+SWEEP_SLICES = (4, 8, 16, 32)
+SMOKE_GPUS = (2, len(PAPER_GPUS))
+SMOKE_SLICES = (4, 8)
 
-def main():
+
+def classic_table():
+    """The original Table 2 reproduction (kept verbatim)."""
     model = ModelPerf.llama2_7b()
     out = {}
     rows = []
+    latencies = []
     for slo in (0.12, 0.04):
         mel = Melange(PAPER_GPUS, model, slo)
         for ds in DATASETS:
@@ -28,6 +43,7 @@ def main():
                 t0 = time.perf_counter()
                 sol = solve(prob, time_budget_s=1.0)
                 times[rate] = round(time.perf_counter() - t0, 3)
+                latencies.append(times[rate])
             out[f"{ds}_{int(slo*1000)}ms"] = times
             rows.append(row(
                 f"table2_{ds}_{int(slo*1000)}ms",
@@ -35,10 +51,73 @@ def main():
                 f"max_solve_s={max(times.values()):.3f} "
                 f"paper_max=1.2s within_budget="
                 f"{max(times.values()) <= 1.25}"))
+    out["mean_solve_s"] = sum(latencies) / len(latencies)
+    return out, rows
+
+
+def scaling_sweep(smoke: bool = False):
+    """Solve time vs. problem shape, with the SolveStats phase split."""
+    model = ModelPerf.llama2_7b()
+    mel = Melange(PAPER_GPUS, model, 0.12)
+    gpu_names = sorted(PAPER_GPUS)
+    wl = make_workload("mixed", 8)
+    cells = []
+    rows = []
+    n_gpus = SMOKE_GPUS if smoke else SWEEP_GPUS
+    n_slices = SMOKE_SLICES if smoke else SWEEP_SLICES
+    budget_s = 0.25 if smoke else 2.0
+    for m in n_gpus:
+        subset = gpu_names[:m]
+        for sf in n_slices:
+            prob = build_problem(wl, mel.profile, sf, gpu_subset=subset)
+            sol = solve(prob, time_budget_s=budget_s)
+            st = sol.stats
+            assert st is not None, "solve() must attach SolveStats"
+            assert st.consistent(), \
+                f"SolveStats inconsistent at {m} gpus x sf={sf}"
+            assert st.phase_total_s <= sol.solve_time_s + 1e-6, \
+                "phase times must not exceed the recorded solve time"
+            cells.append({
+                "gpus": m, "slice_factor": sf,
+                "n_slices": st.n_slices, "n_columns": st.n_columns,
+                "solve_s": round(sol.solve_time_s, 4),
+                **{k: round(v, 4) for k, v in
+                   (("greedy_s", st.greedy_s), ("polish_s", st.polish_s),
+                    ("bnb_s", st.bnb_s))},
+                "nodes": st.nodes,
+                "pruned": {"lp_bound": st.pruned_lp_bound,
+                           "cap": st.pruned_cap,
+                           "ceiling": st.pruned_ceiling,
+                           "deadline": st.pruned_deadline},
+                "deadline_hit": st.deadline_hit,
+                "cost_per_hour": round(sol.cost, 3),
+            })
+    for c in cells:
+        tot = max(c["greedy_s"] + c["polish_s"] + c["bnb_s"], 1e-12)
+        rows.append(row(
+            f"table2_scaling_{c['gpus']}g_{c['slice_factor']}sf",
+            c["solve_s"] * 1e6,
+            f"slices={c['n_slices']} cols={c['n_columns']} "
+            f"nodes={c['nodes']} "
+            f"bnb_share={c['bnb_s'] / tot * 100:.0f}% "
+            f"pruned_lp={c['pruned']['lp_bound']}"))
+    return cells, rows
+
+
+def main(smoke: bool = False):
+    rows = []
+    if smoke:
+        out = {}
+    else:
+        out, rows = classic_table()
+    cells, srows = scaling_sweep(smoke)
+    out["scaling_sweep"] = cells
+    rows += srows
     emit("table2_solver_time", out)
     return rows
 
 
 if __name__ == "__main__":
-    for r in main():
+    ns = parse_bench_args()
+    for r in main(smoke=ns.smoke):
         print(",".join(map(str, r)))

@@ -185,7 +185,7 @@ class Melange:
         # differ from self.gpus when a precomputed profile was supplied)
         tp1 = [g for g in prob.gpu_names if self.profile.gpus[g].tp == 1]
         if len(tp1) not in (0, len(prob.gpu_names)):
-            t0 = time.time()
+            t0 = time.perf_counter()
             prob1 = build_problem(wl, self.profile, self.slice_factor,
                                   caps=caps, gpu_subset=tp1,
                                   chip_caps=chip_caps,
@@ -193,7 +193,7 @@ class Melange:
                                   replacement_delay_s=replacement_delay_s)
             sol1 = solve(prob1, time_budget_s=min(1.0, time_budget_s / 3))
             # the pre-solve spends part of the caller's budget, not extra
-            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+            main_budget = max(0.1, time_budget_s - (time.perf_counter() - t0))
             if sol1 is not None:
                 col = [prob.gpu_names.index(g) for g in prob1.gpu_names]
                 warm = np.array([col[j] for j in sol1.assignment])
@@ -370,7 +370,8 @@ class MelangeFleet:
         costs = np.array([member.profile.gpus[g].price_hr
                           for g in fp.gpu_names])
         sol_m = ILPSolution(assign, counts, float(np.sum(counts * costs)),
-                            sol.optimal, sol.solve_time_s, nodes=sol.nodes)
+                            sol.optimal, sol.solve_time_s, nodes=sol.nodes,
+                            stats=sol.stats)
         return Allocation({g: int(c) for g, c in zip(fp.gpu_names, counts)
                            if c > 0},
                           sol_m.cost, sol_m, member.profile, wl,
@@ -416,14 +417,14 @@ class MelangeFleet:
             # best sequential-siloed order as the incumbent: on stacked
             # problems the joint branch-and-bound is any-time, so the
             # warm start is the floor of what allocate() returns
-            t0 = time.time()
+            t0 = time.perf_counter()
             siloed = self.best_siloed(
                 wls, models=list(wls), caps=caps, chip_caps=chip_caps,
                 gpu_subset=gpu_subset,
                 min_ondemand_frac=min_ondemand_frac,
                 replacement_delay_s=replacement_delay_s,
                 time_budget_s=min(1.0, time_budget_s / 3))
-            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+            main_budget = max(0.1, time_budget_s - (time.perf_counter() - t0))
         if siloed is not None:
             if set(siloed) != set(fp.models) or any(
                     len(siloed[m].solution.assignment)

@@ -177,6 +177,7 @@ class Autoscaler(_ChipPoolCaps):
             "old_cost": self.current.cost_per_hour,
             "new_cost": new.cost_per_hour,
             "solve_time_s": new.solution.solve_time_s,
+            "solve_stats": new.solution.stats,
         })
         self.current = new
         return diff
@@ -216,6 +217,7 @@ class Autoscaler(_ChipPoolCaps):
             "losses": losses, "stockout": stockout,
             "new": dict(new.counts), "new_cost": new.cost_per_hour,
             "solve_time_s": new.solution.solve_time_s,
+            "solve_stats": new.solution.stats,
         })
         self.current = new
         return diff
@@ -343,6 +345,7 @@ class FleetAutoscaler(_ChipPoolCaps):
             "new_cost": merged.cost_per_hour,
             "solve_time_s": new_sub.per_model[drifted[0]
                                               ].solution.solve_time_s,
+            "solve_stats": new_sub.per_model[drifted[0]].solution.stats,
         })
         self.current = merged
         return diffs
@@ -407,6 +410,7 @@ class FleetAutoscaler(_ChipPoolCaps):
             "new_cost": merged.cost_per_hour,
             "solve_time_s": new_sub.per_model[affected[0]
                                               ].solution.solve_time_s,
+            "solve_stats": new_sub.per_model[affected[0]].solution.stats,
         })
         self.current = merged
         return diffs

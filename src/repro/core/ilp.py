@@ -164,6 +164,71 @@ def spot_share_by_bucket(prob: ILPProblem,
 
 
 @dataclasses.dataclass
+class SolveStats:
+    """Where a ``solve()`` call spent its budget.
+
+    Phase wall times are measured on disjoint intervals of the same
+    monotonic clock (``time.perf_counter``), so
+    ``greedy_s + polish_s + bnb_s <= solve_time_s`` always holds.
+    Prune accounting satisfies the conservation invariant checked by
+    :meth:`consistent`: every composition considered at a branch node is
+    either expanded into a child node or pruned for exactly one reason,
+    so ``(nodes - 1) + Σ pruned == comps_considered``.
+    """
+
+    n_slices: int = 0
+    n_columns: int = 0
+    n_groups: int = 0
+    # per-phase wall time (disjoint perf_counter intervals)
+    greedy_s: float = 0.0
+    polish_s: float = 0.0
+    bnb_s: float = 0.0
+    # branch-and-bound accounting
+    nodes: int = 0
+    comps_considered: int = 0
+    pruned_lp_bound: int = 0      # separable-LP suffix bound (incl. tail break)
+    pruned_cap: int = 0           # per-type or grouped-cap infeasible
+    pruned_ceiling: int = 0       # committed-ceiling lower bound
+    pruned_deadline: int = 0      # abandoned when the time budget expired
+    deadline_hit: bool = False
+    restricted: bool = False      # branching sets cut to cheapest types
+    restricted_retry: bool = False  # unrestricted retry after cap-infeasible
+    nodes_by_depth: list[int] = dataclasses.field(default_factory=list)
+    # (t_since_solve_start_s, cost) every time the incumbent improved
+    incumbents: list[tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def phase_total_s(self) -> float:
+        return self.greedy_s + self.polish_s + self.bnb_s
+
+    @property
+    def pruned_total(self) -> int:
+        return (self.pruned_lp_bound + self.pruned_cap
+                + self.pruned_ceiling + self.pruned_deadline)
+
+    def consistent(self) -> bool:
+        """Conservation check: children expanded + prunes == considered."""
+        if self.nodes == 0:
+            return self.comps_considered == 0 and self.pruned_total == 0
+        return (self.nodes - 1 + self.pruned_total
+                == self.comps_considered)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["incumbents"] = [[float(t), float(c)] for t, c in self.incumbents]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolveStats":
+        kw = {f.name: d[f.name] for f in dataclasses.fields(cls)
+              if f.name in d}
+        kw["incumbents"] = [(float(t), float(c))
+                            for t, c in kw.get("incumbents", [])]
+        return cls(**kw)
+
+
+@dataclasses.dataclass
 class ILPSolution:
     assignment: np.ndarray          # (N,) gpu index per slice
     counts: np.ndarray              # (M,) B_j
@@ -171,6 +236,7 @@ class ILPSolution:
     optimal: bool
     solve_time_s: float
     nodes: int = 0
+    stats: Optional[SolveStats] = None
 
     def by_gpu(self, names: Sequence[str]) -> dict[str, int]:
         return {n: int(c) for n, c in zip(names, self.counts) if c > 0}
@@ -187,7 +253,8 @@ def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
                   ) -> tuple[np.ndarray, np.ndarray]:
     """Single-slice improving moves until a local optimum (in place).
 
-    ``deadline`` (absolute ``time.time()`` value) bounds the polish on
+    ``deadline`` (absolute ``time.perf_counter()`` value — monotonic, so
+    an NTP step can't blow or negate the budget) bounds the polish on
     large stacked problems so solve() honours its caller's time budget;
     the interim assignment is always feasible, so stopping early is safe.
     """
@@ -199,7 +266,7 @@ def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
         it += 1
         for i in range(N):
             if deadline is not None and i % 64 == 0 \
-                    and time.time() > deadline:
+                    and time.perf_counter() > deadline:
                 return assign, load
             cur = assign[i]
             for j in range(M):
@@ -286,12 +353,14 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     active the search is a (high-quality) heuristic and ``optimal`` is
     reported False; small instances — all exactness tests — are unaffected.
     """
-    t0 = time.time()
+    t0 = time.perf_counter()
     N, M = prob.loads.shape
+    stats = SolveStats(n_slices=N, n_columns=M)
     gmat = prob.group_matrix()
     gcaps = prob.grouped_caps
     if N == 0:
-        return ILPSolution(np.zeros(0, int), np.zeros(M, int), 0.0, True, 0.0)
+        return ILPSolution(np.zeros(0, int), np.zeros(M, int), 0.0, True, 0.0,
+                           stats=stats)
 
     finite = np.isfinite(prob.loads)
     if not finite.any(axis=1).all():
@@ -308,6 +377,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         if wa.shape == (N,) and len(wa) and ((wa >= 0) & (wa < M)).all():
             candidates.append(wa)
     warm = _greedy(prob, deadline=t0 + time_budget_s)
+    stats.greedy_s = time.perf_counter() - t0
     if warm is not None:
         candidates.append(warm)
     # LP-relaxation rounding: each slice to argmin c_j L_ij
@@ -338,10 +408,13 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     # (multi-model fleets) the branch-and-bound below is effectively an
     # any-time heuristic, so incumbent quality is what the caller gets
     if best_assign is not None:
+        t_polish = time.perf_counter()
         best_assign, best_load = _local_search(prob, best_assign, best_load,
                                                gmat,
                                                deadline=t0 + time_budget_s)
         best_cost = _counts_cost(best_load, prob.costs)
+        stats.polish_s = time.perf_counter() - t_polish
+        stats.incumbents.append((time.perf_counter() - t0, best_cost))
     # (no feasible warm start is not proof of infeasibility once grouped
     # caps are present — the branch-and-bound below still searches)
 
@@ -400,13 +473,17 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     timeout = False
     best_counts_per_group = None
     cur_counts: list[Optional[tuple]] = [None] * G
+    stats.n_groups = G
+    stats.restricted = restricted
+    stats.nodes_by_depth = [0] * (G + 1)
 
     def dfs(gi: int, load: np.ndarray, frac: float):
         nonlocal nodes, timeout, best_cost, best_counts_per_group
         if timeout:
             return
         nodes += 1
-        if nodes % 64 == 0 and time.time() - t0 > time_budget_s:
+        stats.nodes_by_depth[gi] += 1
+        if nodes % 64 == 0 and time.perf_counter() - t0 > time_budget_s:
             timeout = True
             return
         if gi == G:
@@ -414,15 +491,19 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
             if cost < best_cost - 1e-9:
                 best_cost = cost
                 best_counts_per_group = [c for c in cur_counts]
+                stats.incumbents.append(
+                    (time.perf_counter() - t0, best_cost))
             return
         # pre-sorted by fractional cost (see comp_cache construction)
         comps, incs, feas = comp_cache[gi]
+        stats.comps_considered += len(incs)
         row_feas = rows_o[gi][feas]
         # comps sorted by inc => everything at/after the cutoff is pruned
         # by the separable-LP suffix bound (incumbent may improve below,
         # which only shrinks the cutoff further — rechecked per branch)
         n_ok = int(np.searchsorted(incs,
                                    best_cost - 1e-7 - frac - suffix_lb[gi + 1]))
+        stats.pruned_lp_bound += len(incs) - n_ok
         if n_ok == 0:
             return
         # vectorized feasibility + committed-ceiling bound over all
@@ -441,13 +522,18 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
             base_usage = gmat @ base_counts - gmat[:, feas] @ base_counts[feas]
             usage = base_usage[:, None] + gmat[:, feas] @ ceil_feas.T
             ok &= (usage <= gcaps[:, None] + _EPS).all(axis=0)
+        ok_idx = np.nonzero(ok)[0]
+        stats.pruned_cap += n_ok - len(ok_idx)
         # committed-ceiling lower bound per composition
         lb_ceil = fixed_cost + ceil_feas @ prob.costs[feas]
-        for ci in np.nonzero(ok)[0]:
+        for pos, ci in enumerate(ok_idx):
             inc = float(incs[ci])
             if frac + inc + suffix_lb[gi + 1] >= best_cost - 1e-7:
-                break                      # incumbent improved: prune tail
+                # incumbent improved: prune the whole sorted tail
+                stats.pruned_lp_bound += len(ok_idx) - pos
+                break
             if lb_ceil[ci] >= best_cost - 1e-7:
+                stats.pruned_ceiling += 1
                 continue
             add = np.zeros(M)
             add[feas] = comps[ci] * row_feas
@@ -457,9 +543,16 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
             dfs(gi + 1, load + add, frac + inc)
             cur_counts[gi] = None
             if timeout:
+                # budget expired mid-loop: the rest of this node's
+                # candidates are abandoned, not bound-pruned
+                stats.pruned_deadline += len(ok_idx) - pos - 1
                 return
 
+    t_bnb = time.perf_counter()
     dfs(0, np.zeros(M), 0.0)
+    stats.bnb_s = time.perf_counter() - t_bnb
+    stats.nodes = nodes
+    stats.deadline_hit = timeout
 
     if best_counts_per_group is not None:
         best_assign = np.empty(N, dtype=int)
@@ -475,10 +568,17 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         # the cheapest-types restriction may have excluded the only
         # cap-feasible columns: retry unrestricted before declaring
         # infeasibility (bounded by the leftover budget)
-        remaining = time_budget_s - (time.time() - t0)
+        remaining = time_budget_s - (time.perf_counter() - t0)
         if restricted and remaining > 0.05:
-            return solve(prob, time_budget_s=remaining,
-                         max_types_per_group=M)
+            retry = solve(prob, time_budget_s=remaining,
+                          max_types_per_group=M)
+            if retry is not None:
+                # the retry's stats are self-consistent on their own; only
+                # stretch the clock to cover the abandoned first attempt
+                retry.solve_time_s = time.perf_counter() - t0
+                if retry.stats is not None:
+                    retry.stats.restricted_retry = True
+            return retry
         return None
     counts = np.zeros(M, dtype=int)
     for j in range(M):
@@ -486,8 +586,8 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         counts[j] = int(math.ceil(lj - _EPS))
     return ILPSolution(best_assign, counts, float(np.sum(counts * prob.costs)),
                        optimal=not timeout and not restricted,
-                       solve_time_s=time.time() - t0,
-                       nodes=nodes)
+                       solve_time_s=time.perf_counter() - t0,
+                       nodes=nodes, stats=stats)
 
 
 def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
@@ -505,7 +605,7 @@ def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
     if any(len(f) == 0 for f in feasible):
         return None
     best = None
-    t0 = time.time()
+    t0 = time.perf_counter()
     for combo in itertools.product(*feasible):
         load = np.zeros(M)
         for i, j in enumerate(combo):
@@ -516,5 +616,5 @@ def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
         cost = float(np.sum(counts * prob.costs))
         if best is None or cost < best.cost - 1e-12:
             best = ILPSolution(np.array(combo), counts.astype(int), cost,
-                               True, time.time() - t0)
+                               True, time.perf_counter() - t0)
     return best

@@ -206,8 +206,13 @@ class ClusterEngine:
 
     def __init__(self, profile: Profile, em: EngineModel, *,
                  seed: int = 0, straggler_factor: float = 0.0,
-                 prefill_chunk: int = 4096, depth_aware: bool = True):
+                 prefill_chunk: int = 4096, depth_aware: bool = True,
+                 tracer=None):
         self.profile = profile
+        # optional repro.obs.trace.SpanTracer: sampled request-lifecycle
+        # spans are emitted at completion/drop (zero work when absent or
+        # disabled); duck-typed to keep the simulator obs-import-free
+        self._tracer = tracer
         self.em = em
         self.prefill_chunk = prefill_chunk
         self.instances: dict[int, InstanceEngine] = {}
@@ -446,6 +451,10 @@ class ClusterEngine:
     def drop(self, req: SimRequest) -> None:
         req.dropped = True
         self.dropped.append(req)
+        tr = self._tracer
+        if tr is not None and tr.sampled(req.rid):
+            tr.instant(f"drop:{req.rid}", self.now, track="events",
+                       model=req.model or None)
 
     def schedule(self, t: float, fn: Callable[["ClusterEngine"], None]) -> None:
         """Run ``fn(engine)`` at simulated time ``t`` (control event)."""
@@ -492,6 +501,11 @@ class ClusterEngine:
             self.balancer.observe(inst.model, r.input_len, r.output_len,
                                   inst_id=iid, tpot=r.tpot)
             self.completed.append(r)
+            tr = self._tracer
+            if tr is not None and tr.sampled(r.rid):
+                tr.request_span(r.rid, r.arrival, r.first_token_t,
+                                r.finish_t, gpu=inst.gpu_name,
+                                model=r.model or inst.model)
         if dur is None:
             self._stepping.discard(iid)
             if inst.queue:

@@ -16,6 +16,8 @@ os.environ["XLA_FLAGS"] += (
 
 import argparse
 import json
+import logging
+import sys
 import time
 import traceback
 from pathlib import Path
@@ -27,6 +29,8 @@ from repro.configs.shapes import SHAPES, applicable, get_shape
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import lower_cell
+
+log = logging.getLogger(__name__)
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, variant: str,
@@ -58,8 +62,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, variant: str,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
         rec.update(hlo_analysis.summarize_cost(compiled))
-        print(compiled.memory_analysis())
-        print({k: v for k, v in (rec.get("memory") or {}).items()})
+        log.info("%s", compiled.memory_analysis())
+        log.info("%s", {k: v for k, v in (rec.get("memory") or {}).items()})
         txt = compiled.as_text()
         rec["collectives"] = {
             k: v for k, v in hlo_analysis.analyze_collectives(txt).items()
@@ -93,7 +97,18 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="reduced configs (CI sanity)")
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--verbose", action="store_true",
+                    help="DEBUG-level logging (per-cell HLO details)")
     args = ap.parse_args()
+
+    # stdout at message-only format so default output is byte-identical
+    # to the old print()s; --verbose turns on DEBUG for repro loggers only
+    # (root stays INFO — jax's own DEBUG chatter would drown the report)
+    logging.basicConfig(level=logging.INFO, format="%(message)s",
+                        stream=sys.stdout)
+    if args.verbose:
+        logging.getLogger("repro").setLevel(logging.DEBUG)
+        log.setLevel(logging.DEBUG)
 
     archs = list_archs() if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
@@ -114,10 +129,12 @@ def main() -> None:
                 n_ok += status == "OK"
                 n_fail += status == "FAIL"
                 n_skip += status == "SKIP"
-                print(f"[{status}] {arch} × {shape} × "
-                      f"{'multi' if mp else 'single'} ({dt:.1f}s) "
-                      f"{rec.get('error', '')}", flush=True)
-    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+                log.info("[%s] %s × %s × %s (%.1fs) %s", status, arch,
+                         shape, "multi" if mp else "single", dt,
+                         rec.get("error", ""))
+                if "traceback" in rec:
+                    log.debug("%s", rec["traceback"])
+    log.info("done: %d ok, %d skipped, %d failed", n_ok, n_skip, n_fail)
     if n_fail:
         raise SystemExit(1)
 

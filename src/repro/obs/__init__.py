@@ -1,0 +1,29 @@
+"""Dependency-free observability: labeled metrics, span tracing, and run
+reports for the solver/autoscaler/orchestrator stack.
+
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  Prometheus text exposition and JSONL snapshots.
+* :mod:`repro.obs.trace` — dual-clock (sim + wall) span tracer emitting
+  Chrome trace-event JSON (open in Perfetto).
+* :mod:`repro.obs.report` — renders a run report from a ``Timeline``
+  plus metric snapshots.
+
+Solver-internal instrumentation (``SolveStats``) lives with the solver
+in :mod:`repro.core.ilp` and flows through allocations, autoscaler
+histories, and ``Timeline`` decisions.
+"""
+from .metrics import (DEFAULT_LATENCY_BUCKETS, REGISTRY, SNAPSHOT_SCHEMA,
+                      Counter, Gauge, Histogram, MetricsRegistry,
+                      parse_prometheus, validate_snapshot)
+from .trace import SIM_PID, TRACER, WALL_PID, SpanTracer, validate_chrome_trace
+# report imports repro.orchestrator.timeline (which itself pulls metrics/
+# trace back through this package), so it must come after those two
+from .report import render_report, report_dict
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "REGISTRY",
+    "DEFAULT_LATENCY_BUCKETS", "SNAPSHOT_SCHEMA", "parse_prometheus",
+    "validate_snapshot",
+    "SpanTracer", "TRACER", "WALL_PID", "SIM_PID", "validate_chrome_trace",
+    "render_report", "report_dict",
+]

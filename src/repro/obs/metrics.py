@@ -1,0 +1,529 @@
+"""Labeled metrics registry: counters, gauges, histograms.
+
+Dependency-free observability for the allocator/autoscaler/orchestrator
+stack.  The registry is deliberately tiny — the point is not to compete
+with a real Prometheus client but to give every layer of the simulator a
+single place to record what happened, with two export paths:
+
+* ``to_prometheus()`` — Prometheus text exposition (``# HELP``/``# TYPE``
+  headers, ``name{label="v"} value`` samples, histogram ``_bucket``/
+  ``_sum``/``_count`` series) so a run's final state can be scraped or
+  diffed with standard tooling.
+* ``snapshot()`` / ``to_jsonl()`` — structured snapshots for the
+  benchmark harness, validated against :data:`SNAPSHOT_SCHEMA`.
+
+Canonical label names across the repo: ``gpu``, ``tp``, ``tier``,
+``region``, ``model``, ``bucket``.  Instrumented code holds a metric's
+labeled child (``counter.labels(gpu="A100")``) and calls ``inc``/``set``/
+``observe`` on it; when the owning registry is disabled every such call
+is a single boolean check and an early return, so tier-1 test timing is
+unaffected by the default-on instrumentation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Iterable, Mapping, Optional, Sequence
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DEFAULT_LATENCY_BUCKETS", "SNAPSHOT_SCHEMA",
+    "parse_prometheus", "validate_snapshot", "REGISTRY",
+]
+
+# Solver / control-loop latencies span ~100µs (warm re-solves) to the
+# multi-second budgeted B&B, so the fixed buckets cover 1ms..30s.
+DEFAULT_LATENCY_BUCKETS: tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0,
+)
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _check_name(name: str) -> str:
+    if not _NAME_RE.match(name):
+        raise ValueError(f"invalid metric name {name!r}")
+    return name
+
+
+def _check_labelnames(labelnames: Sequence[str]) -> tuple[str, ...]:
+    out = tuple(labelnames)
+    if len(set(out)) != len(out):
+        raise ValueError(f"duplicate label names in {out!r}")
+    for ln in out:
+        if not _LABEL_RE.match(ln) or ln.startswith("__"):
+            raise ValueError(f"invalid label name {ln!r}")
+    return out
+
+
+def _escape_label_value(v: str) -> str:
+    return v.replace("\\", "\\\\").replace("\n", "\\n").replace('"', '\\"')
+
+
+def _fmt(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+class _Metric:
+    """A metric family: name + help + label names + labeled children."""
+
+    kind = "untyped"
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str,
+                 labelnames: Sequence[str]):
+        self.registry = registry
+        self.name = _check_name(name)
+        self.help = help
+        self.labelnames = _check_labelnames(labelnames)
+        self._children: dict[tuple[str, ...], _Metric] = {}
+        self._is_child = False
+
+    # -- label resolution ----------------------------------------------------
+    def labels(self, *values, **kv):
+        """Get or create the child for one label-value combination."""
+        if self._is_child:
+            raise ValueError("labels() called on an already-labeled child")
+        if values and kv:
+            raise ValueError("pass label values positionally or by name")
+        if kv:
+            extra = set(kv) - set(self.labelnames)
+            if extra:
+                raise ValueError(
+                    f"unknown label(s) {sorted(extra)} for {self.name} "
+                    f"(declared: {list(self.labelnames)})")
+            try:
+                values = tuple(kv[ln] for ln in self.labelnames)
+            except KeyError as e:
+                raise ValueError(
+                    f"missing label {e.args[0]!r} for {self.name}") from None
+        if len(values) != len(self.labelnames):
+            raise ValueError(
+                f"{self.name} takes {len(self.labelnames)} label value(s) "
+                f"{list(self.labelnames)}, got {len(values)}")
+        key = tuple(str(v) for v in values)
+        child = self._children.get(key)
+        if child is None:
+            child = self._new_child()
+            child._labelvalues = key
+            self._children[key] = child
+        return child
+
+    def _new_child(self):
+        child = type(self).__new__(type(self))
+        child.registry = self.registry
+        child.name = self.name
+        child.help = self.help
+        child.labelnames = self.labelnames
+        child._children = {}
+        child._is_child = True
+        child._init_value()
+        return child
+
+    def _init_value(self) -> None:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+    def _samples(self) -> Iterable[tuple[str, tuple[str, ...],
+                                         tuple[str, ...], float]]:
+        """Yield (sample_name, labelnames, labelvalues, value)."""
+        raise NotImplementedError
+
+    def _each(self):
+        """(labelvalues, child) pairs — the unlabeled metric itself when
+        it has no label names."""
+        if self.labelnames:
+            return sorted(self._children.items())
+        return [((), self)]
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def __init__(self, registry, name, help, labelnames=()):
+        super().__init__(registry, name, help, labelnames)
+        self._init_value()
+
+    def _init_value(self) -> None:
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if not self.registry.enabled:
+            return
+        if self.labelnames and not self._is_child:
+            raise ValueError(f"{self.name} needs .labels(...) first")
+        if amount < 0:
+            raise ValueError("counters only go up")
+        self.value += amount
+
+    def _samples(self):
+        for lv, child in self._each():
+            yield (self.name, self.labelnames, lv, child.value)
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def __init__(self, registry, name, help, labelnames=()):
+        super().__init__(registry, name, help, labelnames)
+        self._init_value()
+
+    def _init_value(self) -> None:
+        self.value = 0.0
+
+    def _check(self):
+        if self.labelnames and not self._is_child:
+            raise ValueError(f"{self.name} needs .labels(...) first")
+
+    def set(self, value: float) -> None:
+        if not self.registry.enabled:
+            return
+        self._check()
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        if not self.registry.enabled:
+            return
+        self._check()
+        self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.inc(-amount)
+
+    def _samples(self):
+        for lv, child in self._each():
+            yield (self.name, self.labelnames, lv, child.value)
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, registry, name, help, labelnames=(),
+                 buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS):
+        b = tuple(float(x) for x in buckets)
+        if list(b) != sorted(b) or len(set(b)) != len(b):
+            raise ValueError("histogram buckets must be strictly increasing")
+        if not b:
+            raise ValueError("need at least one finite bucket bound")
+        if b and b[-1] == math.inf:
+            b = b[:-1]  # +Inf bucket is implicit
+        self.buckets = b
+        super().__init__(registry, name, help, labelnames)
+        self._init_value()
+
+    def _new_child(self):
+        child = super()._new_child()
+        child.buckets = self.buckets
+        child._init_value()
+        return child
+
+    def _init_value(self) -> None:
+        # counts[i] = observations <= buckets[i]; counts[-1] = +Inf bucket.
+        self.counts = [0] * (len(getattr(self, "buckets", ())) + 1)
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        if not self.registry.enabled:
+            return
+        if self.labelnames and not self._is_child:
+            raise ValueError(f"{self.name} needs .labels(...) first")
+        v = float(value)
+        self.sum += v
+        self.count += 1
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    def cumulative(self) -> list[int]:
+        out, acc = [], 0
+        for c in self.counts:
+            acc += c
+            out.append(acc)
+        return out
+
+    def _samples(self):
+        le = self.labelnames + ("le",)
+        for lv, child in self._each():
+            cum = child.cumulative()
+            for i, b in enumerate(child.buckets):
+                yield (self.name + "_bucket", le, lv + (_fmt(b),), cum[i])
+            yield (self.name + "_bucket", le, lv + ("+Inf",), cum[-1])
+            yield (self.name + "_sum", self.labelnames, lv, child.sum)
+            yield (self.name + "_count", self.labelnames, lv, child.count)
+
+
+class MetricsRegistry:
+    """Create-or-get metric families; export state as Prometheus text or
+    JSON snapshots.  ``enabled=False`` turns every ``inc``/``set``/
+    ``observe`` into a boolean check + return."""
+
+    def __init__(self, enabled: bool = True, namespace: str = "melange"):
+        self.enabled = enabled
+        self.namespace = namespace
+        self._metrics: dict[str, _Metric] = {}
+
+    def _get_or_create(self, cls, name, help, labelnames, **kw):
+        name = _check_name(name)
+        existing = self._metrics.get(name)
+        if existing is not None:
+            if type(existing) is not cls:
+                raise ValueError(
+                    f"{name} already registered as {existing.kind}")
+            if existing.labelnames != _check_labelnames(labelnames):
+                raise ValueError(
+                    f"{name} already registered with labels "
+                    f"{list(existing.labelnames)}")
+            return existing
+        m = cls(self, name, help, labelnames, **kw)
+        self._metrics[name] = m
+        return m
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Sequence[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labelnames)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Sequence[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labelnames)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS
+                  ) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labelnames,
+                                   buckets=buckets)
+
+    def reset(self) -> None:
+        self._metrics.clear()
+
+    # -- export --------------------------------------------------------------
+    def to_prometheus(self) -> str:
+        lines: list[str] = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            for sname, lnames, lvalues, value in m._samples():
+                if lnames:
+                    lbl = ",".join(
+                        f'{k}="{_escape_label_value(v)}"'
+                        for k, v in zip(lnames, lvalues))
+                    lines.append(f"{sname}{{{lbl}}} {_fmt(value)}")
+                else:
+                    lines.append(f"{sname} {_fmt(value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def snapshot(self) -> dict:
+        metrics = []
+        for name in sorted(self._metrics):
+            m = self._metrics[name]
+            entry: dict = {"name": name, "kind": m.kind, "help": m.help,
+                           "labelnames": list(m.labelnames), "series": []}
+            if isinstance(m, Histogram):
+                entry["buckets"] = list(m.buckets)
+                for lv, child in m._each():
+                    entry["series"].append({
+                        "labels": dict(zip(m.labelnames, lv)),
+                        "counts": list(child.counts),
+                        "sum": child.sum, "count": child.count})
+            else:
+                for lv, child in m._each():
+                    entry["series"].append({
+                        "labels": dict(zip(m.labelnames, lv)),
+                        "value": child.value})
+            metrics.append(entry)
+        return {"namespace": self.namespace, "metrics": metrics}
+
+    def to_jsonl(self) -> str:
+        """One JSON object per line, one line per metric family (plus a
+        leading header line) — greppable, diffable, append-friendly."""
+        snap = self.snapshot()
+        lines = [json.dumps({"namespace": snap["namespace"],
+                             "n_metrics": len(snap["metrics"])})]
+        lines.extend(json.dumps(m, sort_keys=True) for m in snap["metrics"])
+        return "\n".join(lines) + "\n"
+
+
+# -- snapshot schema (hand-rolled validation: no jsonschema dependency) ------
+SNAPSHOT_SCHEMA: dict = {
+    "type": "object",
+    "required": ["namespace", "metrics"],
+    "properties": {
+        "namespace": {"type": "string"},
+        "metrics": {
+            "type": "array",
+            "items": {
+                "type": "object",
+                "required": ["name", "kind", "labelnames", "series"],
+                "properties": {
+                    "name": {"type": "string"},
+                    "kind": {"enum": ["counter", "gauge", "histogram"]},
+                    "help": {"type": "string"},
+                    "labelnames": {"type": "array",
+                                   "items": {"type": "string"}},
+                    "buckets": {"type": "array", "items": {"type": "number"}},
+                    "series": {"type": "array", "items": {"type": "object"}},
+                },
+            },
+        },
+    },
+}
+
+
+def validate_snapshot(snap: object) -> list[str]:
+    """Validate a snapshot dict against :data:`SNAPSHOT_SCHEMA`.  Returns
+    a list of problems (empty means valid)."""
+    errs: list[str] = []
+    if not isinstance(snap, dict):
+        return [f"snapshot must be an object, got {type(snap).__name__}"]
+    if not isinstance(snap.get("namespace"), str):
+        errs.append("missing/invalid 'namespace'")
+    metrics = snap.get("metrics")
+    if not isinstance(metrics, list):
+        return errs + ["missing/invalid 'metrics' array"]
+    for i, m in enumerate(metrics):
+        where = f"metrics[{i}]"
+        if not isinstance(m, dict):
+            errs.append(f"{where} must be an object")
+            continue
+        name = m.get("name")
+        if not isinstance(name, str) or not _NAME_RE.match(name):
+            errs.append(f"{where}.name invalid: {name!r}")
+        kind = m.get("kind")
+        if kind not in ("counter", "gauge", "histogram"):
+            errs.append(f"{where}.kind invalid: {kind!r}")
+        lnames = m.get("labelnames")
+        if (not isinstance(lnames, list)
+                or any(not isinstance(x, str) for x in lnames)):
+            errs.append(f"{where}.labelnames must be a list of strings")
+            lnames = []
+        series = m.get("series")
+        if not isinstance(series, list):
+            errs.append(f"{where}.series must be an array")
+            continue
+        if kind == "histogram":
+            buckets = m.get("buckets")
+            if (not isinstance(buckets, list)
+                    or any(not isinstance(b, (int, float)) for b in buckets)):
+                errs.append(f"{where}.buckets must be a number array")
+                buckets = []
+            for j, s in enumerate(series):
+                sw = f"{where}.series[{j}]"
+                if not isinstance(s, dict):
+                    errs.append(f"{sw} must be an object")
+                    continue
+                counts = s.get("counts")
+                if (not isinstance(counts, list)
+                        or len(counts) != len(buckets) + 1
+                        or any(not isinstance(c, int) or c < 0
+                               for c in counts)):
+                    errs.append(f"{sw}.counts must be {len(buckets) + 1} "
+                                "non-negative ints")
+                if not isinstance(s.get("sum"), (int, float)):
+                    errs.append(f"{sw}.sum must be a number")
+                cnt = s.get("count")
+                if not isinstance(cnt, int) or cnt < 0:
+                    errs.append(f"{sw}.count must be a non-negative int")
+                elif isinstance(counts, list) and all(
+                        isinstance(c, int) for c in counts) and (
+                        sum(c for c in counts
+                            if isinstance(c, int)) != cnt):
+                    errs.append(f"{sw}: bucket counts sum != count")
+                if not _check_series_labels(s, lnames):
+                    errs.append(f"{sw}.labels must cover {lnames}")
+        else:
+            for j, s in enumerate(series):
+                sw = f"{where}.series[{j}]"
+                if not isinstance(s, dict):
+                    errs.append(f"{sw} must be an object")
+                    continue
+                if not isinstance(s.get("value"), (int, float)):
+                    errs.append(f"{sw}.value must be a number")
+                if not _check_series_labels(s, lnames):
+                    errs.append(f"{sw}.labels must cover {lnames}")
+    return errs
+
+
+def _check_series_labels(s: Mapping, lnames: list) -> bool:
+    labels = s.get("labels")
+    return (isinstance(labels, dict)
+            and sorted(labels) == sorted(lnames)
+            and all(isinstance(v, str) for v in labels.values()))
+
+
+# -- Prometheus text parsing (for round-trip tests & external scrapes) -------
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)\s*$")
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+@dataclasses.dataclass
+class PromSample:
+    name: str
+    labels: dict[str, str]
+    value: float
+
+
+def parse_prometheus(text: str) -> tuple[dict[str, str], list[PromSample]]:
+    """Parse Prometheus text exposition.  Returns ``(types, samples)``
+    where ``types`` maps family name -> declared TYPE.  Raises
+    ``ValueError`` on malformed lines — a successful parse of our own
+    exposition is the round-trip guarantee the bench smoke lane checks."""
+    types: dict[str, str] = {}
+    samples: list[PromSample] = []
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(None, 3)
+            if len(parts) < 4:
+                raise ValueError(f"line {lineno}: malformed TYPE: {raw!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: malformed sample: {raw!r}")
+        labels: dict[str, str] = {}
+        body = m.group("labels")
+        if body:
+            consumed = 0
+            for pm in _LABEL_PAIR_RE.finditer(body):
+                labels[pm.group(1)] = (
+                    pm.group(2).replace('\\"', '"')
+                    .replace("\\n", "\n").replace("\\\\", "\\"))
+                consumed = pm.end()
+            rest = body[consumed:].strip().strip(",").strip()
+            if rest:
+                raise ValueError(
+                    f"line {lineno}: malformed labels: {body!r}")
+        v = m.group("value")
+        if v == "+Inf":
+            value = math.inf
+        elif v == "-Inf":
+            value = -math.inf
+        else:
+            value = float(v)
+        samples.append(PromSample(m.group("name"), labels, value))
+    return types, samples
+
+
+#: Process-global default registry.  Default-on; orchestrators and
+#: benchmarks use it unless handed their own.  Disable for timing-
+#: sensitive baselines with ``REGISTRY.enabled = False``.
+REGISTRY = MetricsRegistry(enabled=True)

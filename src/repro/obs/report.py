@@ -1,0 +1,172 @@
+"""Run reports: turn a ``Timeline`` + metric snapshots into a readable
+post-mortem of an elastic run.
+
+``render_report`` produces a plain-text report with four sections:
+
+* cost over time — the fleet's $/h at each window close (sparkline +
+  integral);
+* attainment — overall, per-class (bucket), per-model, per-region
+  (whichever label sets the metrics snapshot carries);
+* fleet composition — instance counts by variant at the final window,
+  plus total churn (scale-ups / scale-downs / preemption re-solves);
+* solver latency — a histogram of re-solve wall times with the
+  :class:`repro.core.ilp.SolveStats` phase breakdown aggregated across
+  every decision that carried one.
+
+Everything is derived, nothing is re-simulated: the report renders only
+what the run actually recorded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.ilp import SolveStats
+from repro.orchestrator.timeline import Timeline
+
+__all__ = ["render_report", "report_dict"]
+
+_BARS = " ▁▂▃▄▅▆▇█"
+
+
+def _spark(values: list[float]) -> str:
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    if hi - lo < 1e-12:
+        return _BARS[4] * len(values)
+    return "".join(_BARS[1 + int(round((v - lo) / (hi - lo) * 7))]
+                   for v in values)
+
+
+def _pct(x: float) -> str:
+    return f"{x * 100:.2f}%"
+
+
+def _cost_integral(tl: Timeline) -> float:
+    """$-hours actually spent: Σ cost_rate · window length."""
+    return sum(w.cost_rate * (w.t1 - w.t0) / 3600.0 for w in tl.windows)
+
+
+def _attainment_rows(snapshot: Optional[dict], label: str) -> dict[str, str]:
+    """Pull per-``label`` attainment gauges out of a metrics snapshot."""
+    out: dict[str, str] = {}
+    if not snapshot:
+        return out
+    for m in snapshot.get("metrics", []):
+        if m.get("name") != "melange_slo_attainment":
+            continue
+        for s in m.get("series", []):
+            key = s.get("labels", {}).get(label)
+            if key:
+                out[key] = _pct(float(s.get("value", 0.0)))
+    return out
+
+
+def _agg_stats(stats: list[SolveStats]) -> Optional[dict]:
+    if not stats:
+        return None
+    n = len(stats)
+    return {
+        "solves": n,
+        "greedy_s": sum(s.greedy_s for s in stats),
+        "polish_s": sum(s.polish_s for s in stats),
+        "bnb_s": sum(s.bnb_s for s in stats),
+        "nodes": sum(s.nodes for s in stats),
+        "pruned_lp_bound": sum(s.pruned_lp_bound for s in stats),
+        "pruned_cap": sum(s.pruned_cap for s in stats),
+        "pruned_ceiling": sum(s.pruned_ceiling for s in stats),
+        "pruned_deadline": sum(s.pruned_deadline for s in stats),
+        "deadline_hits": sum(1 for s in stats if s.deadline_hit),
+        "restricted": sum(1 for s in stats if s.restricted),
+    }
+
+
+def report_dict(tl: Timeline, snapshot: Optional[dict] = None) -> dict:
+    """The report's data, for programmatic consumers (benchmarks emit
+    this next to their result rows)."""
+    summ = tl.summary()
+    lats = tl.solver_latencies
+    final_fleet = dict(tl.windows[-1].fleet) if tl.windows else {}
+    return {
+        "summary": summ,
+        "cost_dollar_hours": _cost_integral(tl),
+        "cost_rate_over_time": [(w.t1, w.cost_rate) for w in tl.windows],
+        "attainment_over_time": [(w.t1, w.slo_attainment)
+                                 for w in tl.windows],
+        "final_fleet": final_fleet,
+        "per_model": _attainment_rows(snapshot, "model"),
+        "per_region": _attainment_rows(snapshot, "region"),
+        "per_bucket": _attainment_rows(snapshot, "bucket"),
+        "solver_latencies_s": lats,
+        "solve_stats": _agg_stats(tl.solve_stats()),
+    }
+
+
+def render_report(tl: Timeline, snapshot: Optional[dict] = None,
+                  title: str = "run report") -> str:
+    d = report_dict(tl, snapshot)
+    summ = d["summary"]
+    lines = [f"== {title} ==", ""]
+
+    # -- cost over time ------------------------------------------------------
+    rates = [r for _, r in d["cost_rate_over_time"]]
+    lines.append("cost over time ($/h at window close)")
+    if rates:
+        lines.append(f"  {_spark(rates)}  "
+                     f"min={min(rates):.2f} max={max(rates):.2f} "
+                     f"final={rates[-1]:.2f}")
+    lines.append(f"  total spend: ${d['cost_dollar_hours']:.2f} "
+                 f"over {summ['windows']} windows")
+    lines.append("")
+
+    # -- attainment ----------------------------------------------------------
+    att = [a for _, a in d["attainment_over_time"]]
+    lines.append("slo attainment (dropped-inclusive)")
+    lines.append(f"  overall: {_pct(summ['slo_attainment'])} "
+                 f"({summ['completed']} completed, "
+                 f"{summ['dropped']} dropped)")
+    if att:
+        lines.append(f"  per window: {_spark(att)}  worst={_pct(min(att))}")
+    for section, rows in (("model", d["per_model"]),
+                          ("region", d["per_region"]),
+                          ("bucket", d["per_bucket"])):
+        for k in sorted(rows):
+            lines.append(f"  {section}={k}: {rows[k]}")
+    pm = summ.get("per_model", {})
+    for m in sorted(pm):
+        lines.append(f"  model={m} (timeline): "
+                     f"{_pct(pm[m]['slo_attainment'])}")
+    lines.append("")
+
+    # -- fleet composition ---------------------------------------------------
+    lines.append("fleet composition (final window)")
+    for g in sorted(d["final_fleet"]):
+        lines.append(f"  {g}: {d['final_fleet'][g]}")
+    lines.append(f"  churn: {summ['scale_ups']} scale-ups, "
+                 f"{summ['scale_downs']} scale-downs, "
+                 f"{summ['preemption_resolves']} preemption re-solves")
+    lines.append("")
+
+    # -- solver --------------------------------------------------------------
+    lats = d["solver_latencies_s"]
+    lines.append("solver latency")
+    if lats:
+        lines.append(f"  {len(lats)} re-solves, "
+                     f"mean={summ['mean_solver_latency_s'] * 1e3:.1f}ms, "
+                     f"max={summ['max_solver_latency_s'] * 1e3:.1f}ms")
+        lines.append(f"  {_spark(lats)}")
+    agg = d["solve_stats"]
+    if agg:
+        tot = max(agg["greedy_s"] + agg["polish_s"] + agg["bnb_s"], 1e-12)
+        lines.append(
+            f"  phase split: greedy {_pct(agg['greedy_s'] / tot)}, "
+            f"polish {_pct(agg['polish_s'] / tot)}, "
+            f"b&b {_pct(agg['bnb_s'] / tot)} "
+            f"({agg['nodes']} nodes over {agg['solves']} solves)")
+        lines.append(
+            f"  prunes: lp-bound {agg['pruned_lp_bound']}, "
+            f"cap {agg['pruned_cap']}, ceiling {agg['pruned_ceiling']}, "
+            f"deadline {agg['pruned_deadline']} "
+            f"({agg['deadline_hits']} budget hits, "
+            f"{agg['restricted']} restricted searches)")
+    return "\n".join(lines) + "\n"

@@ -38,6 +38,10 @@ from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelPara
 from repro.core.simulator import (ClusterEngine, SimRequest,
                                   slo_attainment_by_model)
 from repro.core.workload import workload_from_samples
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanTracer
 from repro.traces.trace import FleetEvent, WorkloadTrace
 
 from .timeline import Timeline, WindowRecord
@@ -90,11 +94,12 @@ def _requests_from_trace(trace: WorkloadTrace,
 
 def _build_engine(melange: Melange, counts: dict[str, int], *,
                   seed: int, straggler_factor: float, prefill_chunk: int,
-                  engine_params: EngineModelParams) -> ClusterEngine:
+                  engine_params: EngineModelParams,
+                  tracer: Optional[SpanTracer] = None) -> ClusterEngine:
     eng = ClusterEngine(melange.profile,
                         EngineModel(melange.model, engine_params),
                         seed=seed, straggler_factor=straggler_factor,
-                        prefill_chunk=prefill_chunk)
+                        prefill_chunk=prefill_chunk, tracer=tracer)
     for gpu, n in sorted(counts.items()):
         for _ in range(int(n)):
             eng.add_instance(gpu, at=0.0)
@@ -200,7 +205,123 @@ class _SpotPreemptionSampler:
             t += dt
 
 
-class ClusterOrchestrator(_SpotPreemptionSampler):
+class _Observed:
+    """Shared instrumentation for the orchestrators: one metrics registry
+    + span tracer per run (defaulting to the process globals), with the
+    metric families every control loop records into.  All recording goes
+    through :meth:`_record`, which feeds the ``Timeline`` *and* the
+    metrics/trace side — when the registry and tracer are disabled each
+    call is a couple of boolean checks."""
+
+    # which dimension a WindowRecord's per_model keys live on: "model" for
+    # the single/fleet orchestrators, "region" for the geo one — all share
+    # one attainment family so a snapshot can carry both side by side
+    _att_dim = "model"
+
+    def _init_obs(self, metrics: Optional[MetricsRegistry],
+                  tracer: Optional[SpanTracer]) -> None:
+        self.metrics = (metrics if metrics is not None
+                        else obs_metrics.REGISTRY)
+        self.tracer = tracer if tracer is not None else obs_trace.TRACER
+        mx = self.metrics
+        self._seen_gpus: set[str] = set()
+        self._m_windows = mx.counter(
+            "melange_windows_total", "telemetry windows processed")
+        self._m_arrived = mx.counter(
+            "melange_requests_arrived_total", "requests arrived")
+        self._m_completed = mx.counter(
+            "melange_requests_completed_total", "requests completed")
+        self._m_dropped = mx.counter(
+            "melange_requests_dropped_total", "requests dropped")
+        self._m_window_att = mx.gauge(
+            "melange_window_slo_attainment",
+            "dropped-inclusive SLO attainment of the last window")
+        self._m_model_att = mx.gauge(
+            "melange_slo_attainment",
+            "dropped-inclusive SLO attainment",
+            ("model", "region", "bucket"))
+        self._m_fleet = mx.gauge(
+            "melange_fleet_instances", "live instances by variant", ("gpu",))
+        self._m_cost = mx.gauge(
+            "melange_fleet_cost_per_hour", "fleet $/h at window close")
+        self._m_resolves = mx.counter(
+            "melange_resolves_total", "controller re-solves", ("kind",))
+        self._m_solver_lat = mx.histogram(
+            "melange_solver_latency_seconds", "ILP re-solve wall time")
+        self._m_solver_nodes = mx.counter(
+            "melange_solver_nodes_total", "branch-and-bound nodes expanded")
+        self._m_launched = mx.counter(
+            "melange_instances_launched_total", "cold launches", ("gpu",))
+        self._m_drained = mx.counter(
+            "melange_instances_drained_total", "drains begun", ("gpu",))
+        self._m_reused = mx.counter(
+            "melange_instances_reused_total",
+            "draining instances reused warm", ("gpu",))
+        self._m_retargeted = mx.counter(
+            "melange_instances_retargeted_total",
+            "cross-model weight reloads", ("gpu",))
+        self._m_preempt = mx.counter(
+            "melange_preemptions_total", "preemption events", ("gpu",))
+        self._m_stockouts = mx.counter(
+            "melange_stockouts_total", "market stockouts", ("gpu",))
+        self._m_restocks = mx.counter(
+            "melange_restocks_total", "market restocks", ("gpu",))
+
+    def _record(self, now: float, kind: str, **detail) -> None:
+        """Timeline decision + metrics + a trace instant, in one place."""
+        self.timeline.record_decision(now, kind, **detail)
+        mx = self.metrics
+        if mx.enabled:
+            if kind in ("rescale", "failure"):
+                self._m_resolves.labels(kind=kind).inc()
+                if "solve_time_s" in detail:
+                    self._m_solver_lat.observe(detail["solve_time_s"])
+                st = detail.get("solve_stats")
+                if st is not None:
+                    self._m_solver_nodes.inc(st.nodes)
+            for fam, key in ((self._m_launched, "launched"),
+                             (self._m_drained, "drained"),
+                             (self._m_reused, "reused_draining"),
+                             (self._m_retargeted, "retargeted")):
+                for g, n in (detail.get(key) or {}).items():
+                    fam.labels(gpu=g).inc(n)
+            gpu = detail.get("gpu", "")
+            if kind.startswith("preemption"):
+                self._m_preempt.labels(gpu=gpu).inc()
+            elif kind == "stockout":
+                self._m_stockouts.labels(gpu=gpu).inc()
+            elif kind == "restock":
+                self._m_restocks.labels(gpu=gpu).inc()
+        self.tracer.instant(kind, now, track="decisions",
+                            gpu=detail.get("gpu"),
+                            lost=detail.get("lost"),
+                            solve_time_s=detail.get("solve_time_s"))
+
+    def _obs_window(self, rec: WindowRecord) -> None:
+        mx = self.metrics
+        if mx.enabled:
+            self._m_windows.inc()
+            self._m_arrived.inc(rec.arrived)
+            self._m_completed.inc(rec.completed)
+            self._m_dropped.inc(rec.dropped)
+            self._m_window_att.set(rec.slo_attainment)
+            self._m_cost.set(rec.cost_rate)
+            self._seen_gpus.update(rec.fleet)
+            for g in self._seen_gpus:
+                self._m_fleet.labels(gpu=g).set(rec.fleet.get(g, 0))
+            for m in rec.per_model:
+                kw = {"model": "", "region": "", "bucket": "",
+                      self._att_dim: m}
+                self._m_model_att.labels(**kw).set(rec.model_attainment(m))
+        self.tracer.sim_span(
+            "window", rec.t0, rec.t1, track="windows",
+            arrived=rec.arrived, completed=rec.completed,
+            dropped=rec.dropped,
+            attainment=round(rec.slo_attainment, 4),
+            cost_rate=round(rec.cost_rate, 4))
+
+
+class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
     """Runs a ``WorkloadTrace`` against an elastic Mélange-allocated fleet."""
 
     def __init__(self, melange: Melange, trace: WorkloadTrace, *,
@@ -220,9 +341,12 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
                  spot_sample_s: Optional[float] = None,
                  spot_stockout_prob: float = 0.0,
                  spot_restock_s: Optional[float] = None,
-                 engine_params: EngineModelParams = DEFAULT_ENGINE):
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[SpanTracer] = None):
         self.melange = melange
         self.trace = trace
+        self._init_obs(metrics, tracer)
         self.window_s = window_s
         self.launch_delay_s = launch_delay_s
         self.seed = seed
@@ -315,7 +439,7 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
                         e.begin_drain(iid)
 
             eng.schedule(now + self.launch_delay_s + 1e-3, retry_drains)
-        self.timeline.record_decision(
+        self._record(
             now, kind, add=dict(diff.add), remove=dict(diff.remove),
             launched=launched, reused_draining=reused, drained=drained,
             deferred_drains=len(deferred), **detail)
@@ -341,13 +465,15 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
                 rates = np.zeros_like(asc.observed)
             asc.observe_rates(rates)
             wall0 = time.perf_counter()
-            diff = asc.maybe_rescale()
+            with self.tracer.span("resolve:rescale", track="solver", t=t1):
+                diff = asc.maybe_rescale()
             wall = time.perf_counter() - wall0
             if diff is not None and not diff.is_noop:
                 self._apply_diff(
                     eng, diff, t1, "rescale",
                     drift=asc.history[-1]["drift"],
                     solve_time_s=asc.history[-1]["solve_time_s"],
+                    solve_stats=asc.history[-1].get("solve_stats"),
                     wall_time_s=wall, new_cost=asc.history[-1]["new_cost"])
         # completions/drops since the previous window close
         comp = eng.completed
@@ -357,14 +483,16 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
         slo = self.melange.profile.slo_tpot_s
         slo_ok = sum(1 for r in new_comp
                      if r.decoded <= 1 or r.tpot <= slo + 1e-9)
-        self.timeline.windows.append(WindowRecord(
+        rec = WindowRecord(
             t0=t0, t1=t1, arrived=n_arr, completed=len(new_comp),
             dropped=len(drop) - d0, slo_ok=slo_ok,
             observed_rate=n_arr / dt,
             fleet=eng.fleet_counts(),
             draining={g: len(eng.draining_ids(g))
                       for g in eng.fleet_counts() if eng.draining_ids(g)},
-            cost_rate=eng.cost_rate()))
+            cost_rate=eng.cost_rate())
+        self.timeline.windows.append(rec)
+        self._obs_window(rec)
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
 
@@ -373,7 +501,7 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
         now = ev.t
         if ev.kind == "restock":
             asc.lift_stockout(ev.gpu)
-            self.timeline.record_decision(now, "restock", gpu=ev.gpu)
+            self._record(now, "restock", gpu=ev.gpu)
             return
         if ev.kind == "stockout":
             # cap the *pool*: chips held right now are all the market will
@@ -382,16 +510,15 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
             # ('v5e') — or a spot variant, capping only its spot sub-pool.
             live = _live_chips(eng, _pool_of(eng, ev.gpu))
             asc.set_chip_stockout(ev.gpu, live)
-            self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
-                                          cap=live)
+            self._record(now, "stockout", gpu=ev.gpu, cap=live)
             return
         # preemption: kill up to n live instances drawing on the type's pool
         victims = _select_victims(eng, ev.gpu, ev.n)
         if not victims:
             if ev.stockout:                 # the market event still happened:
                 asc.set_chip_stockout(ev.gpu, 0)  # pool empty until restock
-            self.timeline.record_decision(now, "preemption-miss", gpu=ev.gpu,
-                                          stockout=ev.stockout)
+            self._record(now, "preemption-miss", gpu=ev.gpu,
+                         stockout=ev.stockout)
             return
         # only non-draining kills reduce the solver's target: a draining
         # instance had already left the target fleet
@@ -414,22 +541,24 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
             else:
                 for r in orphans:
                     eng.drop(r)
-            self.timeline.record_decision(
+            self._record(
                 now, "preemption-drained-only", gpu=ev.gpu,
                 lost=len(victims), stockout=ev.stockout)
             return
         wall0 = time.perf_counter()
         try:
-            diff = asc.on_instance_failure(ev.gpu, n_target_lost,
-                                           stockout=ev.stockout,
-                                           losses=target_losses)
+            with self.tracer.span("resolve:failure", track="solver",
+                                  gpu=ev.gpu, t=now):
+                diff = asc.on_instance_failure(ev.gpu, n_target_lost,
+                                               stockout=ev.stockout,
+                                               losses=target_losses)
         except RuntimeError as e:
             if eng.instances:
                 eng.resubmit(orphans, now)
             else:                       # nothing left and no replacement
                 for r in orphans:
                     eng.drop(r)
-            self.timeline.record_decision(
+            self._record(
                 now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
                 dropped=0 if eng.instances else len(orphans), error=str(e))
             return
@@ -437,7 +566,8 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
         self._apply_diff(
             eng, diff, now, "failure", gpu=ev.gpu, lost=len(victims),
             resubmitted=len(orphans), stockout=ev.stockout,
-            solve_time_s=asc.history[-1]["solve_time_s"], wall_time_s=wall)
+            solve_time_s=asc.history[-1]["solve_time_s"],
+            solve_stats=asc.history[-1].get("solve_stats"), wall_time_s=wall)
         if eng.instances or diff.add:
             # during a full-fleet gap the engine holds arrivals pending and
             # requeues them when the replacement launches arrive
@@ -452,7 +582,8 @@ class ClusterOrchestrator(_SpotPreemptionSampler):
                             seed=self.seed,
                             straggler_factor=self.straggler_factor,
                             prefill_chunk=self.prefill_chunk,
-                            engine_params=self.engine_params)
+                            engine_params=self.engine_params,
+                            tracer=self.tracer)
         reqs = _requests_from_trace(self.trace, seed)
         for r in reqs:
             eng.submit(r)
@@ -525,7 +656,8 @@ def _build_fleet_engine(fleet: MelangeFleet,
                         counts_by_model: dict[str, dict[str, int]], *,
                         seed: int, straggler_factor: float,
                         prefill_chunk: int,
-                        engine_params: EngineModelParams) -> ClusterEngine:
+                        engine_params: EngineModelParams,
+                        tracer: Optional[SpanTracer] = None) -> ClusterEngine:
     members = {}
     for m in fleet.models:
         spec = fleet.specs[m]
@@ -534,7 +666,7 @@ def _build_fleet_engine(fleet: MelangeFleet,
                                   spec.engine_params or engine_params))
     eng = ClusterEngine.for_fleet(members, seed=seed,
                                   straggler_factor=straggler_factor,
-                                  prefill_chunk=prefill_chunk)
+                                  prefill_chunk=prefill_chunk, tracer=tracer)
     for m, counts in sorted(counts_by_model.items()):
         for gpu, n in sorted(counts.items()):
             for _ in range(int(n)):
@@ -579,7 +711,7 @@ def _fleet_requests(traces: dict[str, WorkloadTrace],
     return reqs
 
 
-class FleetOrchestrator(_SpotPreemptionSampler):
+class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
     """Drives several models' traces against one elastic shared pool.
 
     Per-model telemetry windows feed the :class:`FleetAutoscaler`: only
@@ -611,7 +743,9 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                  spot_sample_s: Optional[float] = None,
                  spot_stockout_prob: float = 0.0,
                  spot_restock_s: Optional[float] = None,
-                 engine_params: EngineModelParams = DEFAULT_ENGINE):
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[SpanTracer] = None):
         self.fleet = fleet
         if traces is None:
             traces = {}
@@ -673,6 +807,7 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                 "initial fleet workloads are infeasible for every GPU type "
                 "under the models' SLOs")
         self.timeline = Timeline()
+        self._init_obs(metrics, tracer)
 
     @property
     def duration(self) -> float:
@@ -773,7 +908,7 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                         e.begin_drain(iid)
 
             eng.schedule(now + self.launch_delay_s + 1e-3, retry_drains)
-        self.timeline.record_decision(
+        self._record(
             now, kind,
             add={f"{m}:{g}": n for (m, g), n in sorted(add.items()) if n},
             remove={f"{m}:{g}": n
@@ -802,7 +937,8 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                 else:
                     asc.observe_rates(m, np.zeros_like(asc.observed[m]))
             wall0 = time.perf_counter()
-            diffs = asc.maybe_rescale()
+            with self.tracer.span("resolve:rescale", track="solver", t=t1):
+                diffs = asc.maybe_rescale()
             wall = time.perf_counter() - wall0
             if diffs and any(not d.is_noop for d in diffs.values()):
                 h = asc.history[-1]
@@ -810,7 +946,8 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                     eng, diffs, t1, "rescale", models=h["models"],
                     drift={m: round(v, 4) for m, v in h["drift"].items()},
                     solve_time_s=h["solve_time_s"], wall_time_s=wall,
-                    new_cost=h["new_cost"])
+                    new_cost=h["new_cost"],
+                    solve_stats=h.get("solve_stats"))
         comp = eng.completed
         drop = eng.dropped
         c0, d0 = state["comp_ptr"], state["drop_ptr"]
@@ -819,7 +956,7 @@ class FleetOrchestrator(_SpotPreemptionSampler):
         per_model = _per_model_stats(self.fleet, eng, new_comp, new_drop,
                                      arrived_by_model)
         n_arr = sum(arrived_by_model.values())
-        self.timeline.windows.append(WindowRecord(
+        rec = WindowRecord(
             t0=t0, t1=t1, arrived=n_arr, completed=len(new_comp),
             dropped=len(new_drop),
             slo_ok=sum(d["slo_ok"] for d in per_model.values()),
@@ -828,7 +965,9 @@ class FleetOrchestrator(_SpotPreemptionSampler):
             draining={g: len(eng.draining_ids(g))
                       for g in eng.fleet_counts() if eng.draining_ids(g)},
             cost_rate=eng.cost_rate(),
-            per_model=per_model))
+            per_model=per_model)
+        self.timeline.windows.append(rec)
+        self._obs_window(rec)
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
 
@@ -837,21 +976,20 @@ class FleetOrchestrator(_SpotPreemptionSampler):
         now = ev.t
         if ev.kind == "restock":
             asc.lift_stockout(ev.gpu)
-            self.timeline.record_decision(now, "restock", gpu=ev.gpu)
+            self._record(now, "restock", gpu=ev.gpu)
             return
         if ev.kind == "stockout":
             live = _live_chips(eng, _pool_of(eng, ev.gpu))
             asc.set_chip_stockout(ev.gpu, live)
-            self.timeline.record_decision(now, "stockout", gpu=ev.gpu,
-                                          cap=live)
+            self._record(now, "stockout", gpu=ev.gpu, cap=live)
             return
         # preemption of the shared pool: victims may belong to any model
         victims = _select_victims(eng, ev.gpu, ev.n)
         if not victims:
             if ev.stockout:
                 asc.set_chip_stockout(ev.gpu, 0)
-            self.timeline.record_decision(now, "preemption-miss", gpu=ev.gpu,
-                                          stockout=ev.stockout)
+            self._record(now, "preemption-miss", gpu=ev.gpu,
+                         stockout=ev.stockout)
             return
         losses: dict[str, dict[str, int]] = {}
         for v in victims:
@@ -867,18 +1005,20 @@ class FleetOrchestrator(_SpotPreemptionSampler):
                     ev.gpu, eng.chips_by_pool().get(_pool_of(eng, ev.gpu),
                                                     0))
             eng.resubmit(orphans, now)
-            self.timeline.record_decision(
+            self._record(
                 now, "preemption-drained-only", gpu=ev.gpu,
                 lost=len(victims), stockout=ev.stockout)
             return
         wall0 = time.perf_counter()
         try:
-            diffs = asc.on_instance_failure(
-                next(iter(losses)), ev.gpu, stockout=ev.stockout,
-                losses=losses)
+            with self.tracer.span("resolve:failure", track="solver",
+                                  gpu=ev.gpu, t=now):
+                diffs = asc.on_instance_failure(
+                    next(iter(losses)), ev.gpu, stockout=ev.stockout,
+                    losses=losses)
         except RuntimeError as e:
             eng.resubmit(orphans, now)
-            self.timeline.record_decision(
+            self._record(
                 now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
                 error=str(e))
             return
@@ -886,7 +1026,8 @@ class FleetOrchestrator(_SpotPreemptionSampler):
         self._apply_diffs(
             eng, diffs, now, "failure", gpu=ev.gpu, lost=len(victims),
             resubmitted=len(orphans), stockout=ev.stockout,
-            solve_time_s=asc.history[-1]["solve_time_s"], wall_time_s=wall)
+            solve_time_s=asc.history[-1]["solve_time_s"], wall_time_s=wall,
+            solve_stats=asc.history[-1].get("solve_stats"))
         eng.resubmit(orphans, now)
 
     # -- main entry ----------------------------------------------------------
@@ -896,7 +1037,8 @@ class FleetOrchestrator(_SpotPreemptionSampler):
         eng = _build_fleet_engine(self.fleet, counts0, seed=self.seed,
                                   straggler_factor=self.straggler_factor,
                                   prefill_chunk=self.prefill_chunk,
-                                  engine_params=self.engine_params)
+                                  engine_params=self.engine_params,
+                                  tracer=self.tracer)
         reqs = _fleet_requests(self.traces, seed)
         for r in reqs:
             eng.submit(r)

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
 from repro.core.simulator import ClusterEngine, SimRequest
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanTracer
 from repro.core.workload import grid_edges, workload_from_samples
 from repro.regions.allocator import RegionalMelange
 from repro.regions.autoscaler import RegionalAutoscaler
@@ -194,12 +196,14 @@ def _regional_requests(traces: Mapping[str, WorkloadTrace],
 def _build_regional_engine(melange: RegionalMelange, counts: dict[str, int],
                            *, seed: int, straggler_factor: float,
                            prefill_chunk: int, overflow_backlog: int,
-                           engine_params: EngineModelParams
+                           engine_params: EngineModelParams,
+                           tracer: Optional[SpanTracer] = None
                            ) -> RegionalClusterEngine:
     eng = RegionalClusterEngine(
         melange.profile, EngineModel(melange.model, engine_params),
         melange.rc, overflow_backlog=overflow_backlog, seed=seed,
-        straggler_factor=straggler_factor, prefill_chunk=prefill_chunk)
+        straggler_factor=straggler_factor, prefill_chunk=prefill_chunk,
+        tracer=tracer)
     for gpu, n in sorted(counts.items()):
         for _ in range(int(n)):
             eng.add_instance(gpu, at=0.0)
@@ -215,6 +219,8 @@ class RegionalOrchestrator(ClusterOrchestrator):
     catalog) and replaces demand observation, routing, and SLO judgment
     with their geo-aware versions.
     """
+
+    _att_dim = "region"   # per_model keys are home regions here
 
     def __init__(self, melange: RegionalMelange,
                  traces: Mapping[str, WorkloadTrace], *,
@@ -235,7 +241,9 @@ class RegionalOrchestrator(ClusterOrchestrator):
                  spot_sample_s: Optional[float] = None,
                  spot_stockout_prob: float = 0.0,
                  spot_restock_s: Optional[float] = None,
-                 engine_params: EngineModelParams = DEFAULT_ENGINE):
+                 engine_params: EngineModelParams = DEFAULT_ENGINE,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[SpanTracer] = None):
         # deliberately NOT calling ClusterOrchestrator.__init__: demand is
         # a geography, the controller a RegionalAutoscaler — only the
         # fleet-event and diff-application machinery is inherited
@@ -294,6 +302,7 @@ class RegionalOrchestrator(ClusterOrchestrator):
                 "initial regional demand is infeasible for every (GPU, "
                 "region) column under the SLO")
         self.timeline = Timeline()
+        self._init_obs(metrics, tracer)
 
     @property
     def duration(self) -> float:
@@ -324,38 +333,49 @@ class RegionalOrchestrator(ClusterOrchestrator):
                                       np.zeros_like(asc.observed[home]))
             import time as _time
             wall0 = _time.perf_counter()
-            diff = asc.maybe_rescale()
+            with self.tracer.span("resolve:rescale", track="solver", t=t1):
+                diff = asc.maybe_rescale()
             wall = _time.perf_counter() - wall0
             if diff is not None and not diff.is_noop:
                 self._apply_diff(
                     eng, diff, t1, "rescale",
                     drift=asc.history[-1]["drift"],
                     solve_time_s=asc.history[-1]["solve_time_s"],
-                    wall_time_s=wall, new_cost=asc.history[-1]["new_cost"])
+                    wall_time_s=wall, new_cost=asc.history[-1]["new_cost"],
+                    solve_stats=asc.history[-1].get("solve_stats"))
         comp = eng.completed
         drop = eng.dropped
         c0, d0 = state["comp_ptr"], state["drop_ptr"]
         new_comp = comp[c0:]
+        new_drop = drop[d0:]
         slo = self.melange.profile.slo_tpot_s
-        slo_ok = sum(1 for r in new_comp
-                     if r.decoded <= 1 or r.tpot_charged <= slo + 1e-9)
+
+        def _ok(r: SimRequest) -> bool:
+            return r.decoded <= 1 or r.tpot_charged <= slo + 1e-9
+
+        slo_ok = sum(1 for r in new_comp if _ok(r))
         per_region = {
             h: {"arrived": arrived_by_home.get(h, 0),
                 "completed": sum(1 for r in new_comp if r.home_region == h),
+                "dropped": sum(1 for r in new_drop if r.home_region == h),
+                "slo_ok": sum(1 for r in new_comp
+                              if r.home_region == h and _ok(r)),
                 "served_remote": sum(1 for r in new_comp
                                      if r.home_region == h
                                      and r.served_region != h)}
             for h in self.traces}
         n_arr = sum(arrived_by_home.values())
-        self.timeline.windows.append(WindowRecord(
+        rec = WindowRecord(
             t0=t0, t1=t1, arrived=n_arr, completed=len(new_comp),
-            dropped=len(drop) - d0, slo_ok=slo_ok,
+            dropped=len(new_drop), slo_ok=slo_ok,
             observed_rate=n_arr / dt,
             fleet=eng.fleet_counts(),
             draining={g: len(eng.draining_ids(g))
                       for g in eng.fleet_counts() if eng.draining_ids(g)},
             cost_rate=eng.cost_rate(),
-            per_model=per_region))
+            per_model=per_region)
+        self.timeline.windows.append(rec)
+        self._obs_window(rec)
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
 
@@ -371,7 +391,8 @@ class RegionalOrchestrator(ClusterOrchestrator):
             straggler_factor=self.straggler_factor,
             prefill_chunk=self.prefill_chunk,
             overflow_backlog=self.overflow_backlog,
-            engine_params=self.engine_params)
+            engine_params=self.engine_params,
+            tracer=self.tracer)
         reqs = _regional_requests(self.traces, seed)
         for r in reqs:
             eng.submit(r)

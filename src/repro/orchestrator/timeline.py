@@ -3,6 +3,12 @@
 One ``WindowRecord`` per telemetry window plus a decision log; the
 ``Timeline`` aggregates them into the numbers the elastic-vs-static
 benchmark reports (cost integral, SLO attainment, fleet churn).
+
+SLO attainment is **dropped-inclusive** everywhere: the denominator is
+``completed + dropped``, matching the simulator's request-level
+attainment (``(tpot <= slo).sum() / (len(tpot) + n_dropped)``).  A
+request the fleet shed counts as a miss — an under-provisioned fleet
+can't buy attainment by dropping its queue.
 """
 from __future__ import annotations
 
@@ -10,6 +16,8 @@ import dataclasses
 import json
 from pathlib import Path
 from typing import Optional
+
+from repro.core.ilp import SolveStats
 
 
 @dataclasses.dataclass
@@ -32,24 +40,47 @@ class WindowRecord:
 
     @property
     def slo_attainment(self) -> float:
-        return self.slo_ok / self.completed if self.completed else 1.0
+        """Dropped-inclusive window attainment (see module docstring)."""
+        denom = self.completed + self.dropped
+        return self.slo_ok / denom if denom else 1.0
 
     def model_attainment(self, model: str) -> float:
         d = self.per_model.get(model, {})
-        comp = d.get("completed", 0)
-        return d.get("slo_ok", 0) / comp if comp else 1.0
+        denom = d.get("completed", 0) + d.get("dropped", 0)
+        return d.get("slo_ok", 0) / denom if denom else 1.0
 
 
 @dataclasses.dataclass
 class Decision:
-    """One controller action (re-solve, failure response, launch, drain)."""
+    """One controller action (re-solve, failure response, launch, drain).
+
+    ``detail`` may carry a ``solve_stats`` entry (a
+    :class:`repro.core.ilp.SolveStats` or its dict form) when the action
+    involved a solver call.
+    """
 
     t: float
     kind: str                           # "rescale" | "failure" | ...
     detail: dict
 
+    @property
+    def solve_stats(self) -> Optional[SolveStats]:
+        s = self.detail.get("solve_stats")
+        if s is None or isinstance(s, SolveStats):
+            return s
+        return SolveStats.from_dict(s)
+
     def to_dict(self) -> dict:
-        return {"t": self.t, "kind": self.kind, **self.detail}
+        # detail is nested under its own key: a detail named "t" or
+        # "kind" must never shadow the decision's own fields
+        detail = {
+            k: (v.to_dict() if isinstance(v, SolveStats) else v)
+            for k, v in self.detail.items()}
+        return {"t": self.t, "kind": self.kind, "detail": detail}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Decision":
+        return cls(d["t"], d["kind"], dict(d.get("detail", {})))
 
 
 @dataclasses.dataclass
@@ -84,6 +115,11 @@ class Timeline:
         return [d.detail["solve_time_s"] for d in self.decisions
                 if "solve_time_s" in d.detail]
 
+    def solve_stats(self) -> list[SolveStats]:
+        """Every decision's solver breakdown, in decision order."""
+        return [s for s in (d.solve_stats for d in self.decisions)
+                if s is not None]
+
     def fleet_over_time(self) -> list[tuple[float, dict[str, int]]]:
         return [(w.t1, dict(w.fleet)) for w in self.windows]
 
@@ -97,19 +133,20 @@ class Timeline:
                 for k in a:
                     a[k] += d.get(k, 0)
         for m, a in agg.items():
-            a["slo_attainment"] = (a["slo_ok"] / a["completed"]
-                                   if a["completed"] else 1.0)
+            denom = a["completed"] + a["dropped"]
+            a["slo_attainment"] = a["slo_ok"] / denom if denom else 1.0
         return agg
 
     def summary(self) -> dict:
         comp = sum(w.completed for w in self.windows)
+        drop = sum(w.dropped for w in self.windows)
         ok = sum(w.slo_ok for w in self.windows)
         lats = self.solver_latencies
         out = {
             "windows": len(self.windows),
             "completed": comp,
-            "dropped": sum(w.dropped for w in self.windows),
-            "slo_attainment": ok / comp if comp else 1.0,
+            "dropped": drop,
+            "slo_attainment": ok / (comp + drop) if comp + drop else 1.0,
             "scale_ups": self.n_scale_ups,
             "scale_downs": self.n_scale_downs,
             "preemption_resolves": self.n_preemption_resolves,
@@ -127,6 +164,18 @@ class Timeline:
             "decisions": [d.to_dict() for d in self.decisions],
             "summary": self.summary(),
         }, indent=1, default=str)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Timeline":
+        raw = json.loads(text)
+        tl = cls()
+        for w in raw.get("windows", []):
+            fields = {f.name for f in dataclasses.fields(WindowRecord)}
+            tl.windows.append(WindowRecord(
+                **{k: v for k, v in w.items() if k in fields}))
+        tl.decisions = [Decision.from_dict(d)
+                        for d in raw.get("decisions", [])]
+        return tl
 
     def save(self, path) -> None:
         Path(path).write_text(self.to_json())

@@ -174,7 +174,7 @@ class RegionalMelange:
                    for g in warm_from.region_problem.gpu_names]
             warm_assign = np.array([col[j] for j in wa])
         elif warm and gpu_subset is None and len(self.rc.names) > 1:
-            t0 = time.time()
+            t0 = time.perf_counter()
             pre_budget = min(1.0, time_budget_s / 3)
             best_cost = np.inf
             for region in self.rc.names:
@@ -189,7 +189,7 @@ class RegionalMelange:
                 col = [rp.gpu_names.index(g) for g in sub[0].gpu_names]
                 warm_assign = np.array([col[j]
                                         for j in sub[1].assignment])
-            main_budget = max(0.1, time_budget_s - (time.time() - t0))
+            main_budget = max(0.1, time_budget_s - (time.perf_counter() - t0))
         sol = solve(rp.prob, time_budget_s=main_budget,
                     warm_assign=warm_assign)
         if sol is None:

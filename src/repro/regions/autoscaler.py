@@ -112,6 +112,7 @@ class RegionalAutoscaler(_ChipPoolCaps):
             "old_cost": self.current.cost_per_hour,
             "new_cost": new.cost_per_hour,
             "solve_time_s": new.solution.solve_time_s,
+            "solve_stats": new.solution.stats,
         })
         self.current = new
         return diff
@@ -148,6 +149,7 @@ class RegionalAutoscaler(_ChipPoolCaps):
             "losses": losses, "stockout": stockout,
             "new": dict(new.counts), "new_cost": new.cost_per_hour,
             "solve_time_s": new.solution.solve_time_s,
+            "solve_stats": new.solution.stats,
         })
         self.current = new
         return diff
