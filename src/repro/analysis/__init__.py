@@ -1,0 +1,27 @@
+"""`repro.analysis`: AST-based invariant linter for the solver/simulator
+contracts.
+
+The repo's headline numbers rest on invariants nothing else enforces
+mechanically: exact cost parity between the four solver layers, a
+deterministic sim-clock-pure simulator, the single half-open bucketing
+rule, inf (never 1e9) infeasibility masks, canonical pool-name
+composition, seeded RNG everywhere, bounded metric label cardinality, and
+pure jit/pallas kernel bodies.  Each rule here encodes one of those
+contracts as a single-AST-walk check; the CLI (``python -m
+repro.analysis``) runs them over the source tree, honours per-line
+``# lint: allow[rule]`` pragmas and a grandfathering baseline file, and
+exits non-zero under ``--strict`` so CI can gate on them.
+
+Everything is stdlib-only (``ast`` + ``re`` + ``json``): the linter adds
+no dependency to the environment it protects.
+"""
+from .core import (FileLint, LintResult, Rule, RULES, Violation,
+                   iter_py_files, lint_paths, lint_source, load_baseline,
+                   write_baseline, rule)
+from . import rules as _rules  # noqa: F401  (registers the rule set)
+
+__all__ = [
+    "FileLint", "LintResult", "Rule", "RULES", "Violation",
+    "iter_py_files", "lint_paths", "lint_source", "load_baseline",
+    "write_baseline", "rule",
+]

@@ -1,0 +1,116 @@
+"""CLI: ``python -m repro.analysis [paths] [--strict] [--json] ...``.
+
+Exit status: 0 when clean (or when violations exist but ``--strict`` was
+not given — advisory mode), 1 under ``--strict`` with unfiltered
+violations or any parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import (RULES, lint_paths, load_baseline, write_baseline)
+
+_PKG_ROOT = Path(__file__).resolve().parents[1]          # src/repro
+_REPO_ROOT = Path(__file__).resolve().parents[3]         # repo checkout
+_DEFAULT_BASELINE = _REPO_ROOT / ".lint-baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant linter for the solver/simulator "
+                    "contracts (stdlib-only). Default target: src/repro.")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories to lint (default: the repro "
+                         "package)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unfiltered violation")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules to run")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="grandfathering baseline file (default: "
+                         ".lint-baseline.json at the repo root, if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current violations to the baseline file and "
+                         "exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--explain", metavar="RULE", default=None,
+                    help="print a rule's full documentation and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(n) for n in RULES)
+        for name in sorted(RULES):
+            print(f"{name:<{width}}  {RULES[name].summary}")
+        return 0
+
+    if args.explain:
+        cls = RULES.get(args.explain)
+        if cls is None:
+            print(f"unknown rule {args.explain!r}; known rules:",
+                  ", ".join(sorted(RULES)), file=sys.stderr)
+            return 2
+        print(f"{cls.name} — {cls.summary}\n")
+        print(cls.explain)
+        return 0
+
+    rule_names = args.rules.split(",") if args.rules else None
+    paths = args.paths or [_PKG_ROOT]
+
+    baseline_path = args.baseline or (
+        _DEFAULT_BASELINE if _DEFAULT_BASELINE.exists() else None)
+    baseline = None
+    if baseline_path is not None and not args.no_baseline \
+            and not args.write_baseline and Path(baseline_path).exists():
+        baseline = load_baseline(baseline_path)
+
+    result = lint_paths(paths, rule_names, baseline)
+
+    if args.write_baseline:
+        out = args.baseline or _DEFAULT_BASELINE
+        write_baseline(result.violations, out)
+        print(f"wrote {len(result.violations)} entr"
+              f"{'y' if len(result.violations) == 1 else 'ies'} to {out}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps({
+            "violations": [v.to_dict() for v in result.violations],
+            "files": result.n_files,
+            "parse_errors": result.n_parse_errors,
+            "baseline_filtered": result.baseline_filtered,
+            "rules": sorted(RULES) if rule_names is None else rule_names,
+        }, indent=1))
+    else:
+        for v in result.violations:
+            print(v.format())
+            text = v.line_text.strip()
+            if text:
+                print(f"    {text}")
+        tail = (f" ({result.baseline_filtered} grandfathered by baseline)"
+                if result.baseline_filtered else "")
+        if result.violations:
+            print(f"{len(result.violations)} violation"
+                  f"{'' if len(result.violations) == 1 else 's'} in "
+                  f"{result.n_files} files{tail}")
+        else:
+            print(f"clean: {result.n_files} files, "
+                  f"{len(rule_names or RULES)} rules{tail}")
+
+    failed = result.violations or result.n_parse_errors
+    return 1 if (args.strict and failed) else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:           # e.g. `... | head` closed the pipe
+        sys.exit(0)

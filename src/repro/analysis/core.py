@@ -1,0 +1,333 @@
+"""Lint framework: single-AST-walk rule engine, pragmas, baseline.
+
+Design goals, in order:
+
+1. **Zero dependencies.**  Everything here is stdlib ``ast``/``re``/
+   ``json``/``hashlib``.  The linter guards the environment's invariants;
+   it must not change the environment to do so.
+2. **One walk per file.**  Rules declare the node types they care about
+   (``node_types``); the engine parses each file once and dispatches each
+   node to the interested rules.  Adding a rule never adds a traversal.
+3. **Escape hatches that leave a paper trail.**  A violation can be
+   suppressed inline with ``# lint: allow[rule-name]`` on the offending
+   line or the line directly above (comma-separate several rules,
+   ``allow[*]`` suppresses everything) — the pragma sits next to the code
+   it excuses, so review sees both.  Pre-existing violations can be
+   grandfathered via a baseline file (``--write-baseline``) whose entries
+   are fingerprints of (path, rule, stripped line text): the fingerprint
+   survives pure line-number drift but dies when the offending line is
+   edited, forcing a fresh look.
+
+Rules subclass :class:`Rule` and register with the :func:`rule`
+decorator.  A fresh rule instance is created per file, so instance
+attributes are per-file state; rules that need to see the whole file
+(e.g. decorator-conditional checks) collect candidates in ``visit`` and
+emit in ``finish``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import re
+from collections import Counter
+from pathlib import Path
+from typing import Iterable, Optional, Sequence, Type
+
+PRAGMA_RE = re.compile(r"#\s*lint:\s*allow\[([^\]]+)\]")
+
+#: rule-name -> Rule subclass; populated by the @rule decorator.
+RULES: dict[str, Type["Rule"]] = {}
+
+
+def rule(cls: Type["Rule"]) -> Type["Rule"]:
+    """Class decorator: register a Rule subclass under ``cls.name``."""
+    if not cls.name:
+        raise ValueError(f"rule class {cls.__name__} has no name")
+    if cls.name in RULES:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    RULES[cls.name] = cls
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str          # repo-style posix path, e.g. "repro/core/ilp.py"
+    line: int
+    col: int
+    message: str
+    line_text: str = ""
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def fingerprint(self) -> str:
+        """Baseline identity: survives line-number drift, dies on edit."""
+        key = f"{self.path}|{self.rule}|{self.line_text.strip()}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+class Rule:
+    """Base class for lint rules.
+
+    Subclasses set ``name`` (kebab-case id used in pragmas/CLI),
+    ``summary`` (one line), ``explain`` (the ``--explain`` text — doubles
+    as the rule's documentation), and ``node_types`` (ast classes
+    dispatched to ``visit``).  ``applies_to(rel)`` scopes the rule to a
+    subset of the tree; out-of-scope files never instantiate the rule.
+    """
+
+    name: str = ""
+    summary: str = ""
+    explain: str = ""
+    node_types: tuple = ()
+
+    def applies_to(self, rel: str) -> bool:
+        return True
+
+    def visit(self, node: ast.AST, ctx: "FileLint") -> None:
+        pass
+
+    def finish(self, ctx: "FileLint") -> None:
+        pass
+
+
+class FileLint:
+    """Per-file lint context: source, tree, import aliases, pragmas.
+
+    Rules receive this as ``ctx``.  Useful surface:
+
+    - ``ctx.qualname(expr)``: dotted name of a Name/Attribute chain with
+      import aliases resolved (``pc()`` after ``from time import
+      perf_counter as pc`` resolves to ``"time.perf_counter"``); ``None``
+      for non-name expressions.
+    - ``ctx.func_stack``: enclosing FunctionDef/Lambda nodes, outermost
+      first.
+    - ``ctx.report(rule, node, message)``: file a violation unless a
+      pragma on the node's line (or the line above) allows it.
+    """
+
+    def __init__(self, rel: str, source: str,
+                 rules: Sequence[Rule]) -> None:
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        self.rules = list(rules)
+        self.violations: list[Violation] = []
+        self.func_stack: list[ast.AST] = []
+        # import-alias tables, filled during the walk (imports precede use)
+        self.aliases: dict[str, str] = {}        # "np" -> "numpy"
+        self.from_imports: dict[str, str] = {}   # "pc" -> "time.perf_counter"
+        self._pragmas = self._parse_pragmas()
+        self._dispatch: dict[type, list[Rule]] = {}
+        for r in self.rules:
+            for t in r.node_types:
+                self._dispatch.setdefault(t, []).append(r)
+
+    # ---- pragmas ---------------------------------------------------------
+    def _parse_pragmas(self) -> dict[int, set[str]]:
+        out: dict[int, set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(line)
+            if m:
+                out[i] = {p.strip() for p in m.group(1).split(",") if p.strip()}
+        return out
+
+    def allowed(self, rule_name: str, lineno: int) -> bool:
+        tags = self._pragmas.get(lineno)
+        if tags and (rule_name in tags or "*" in tags):
+            return True
+        # the line above counts only as a *standalone* pragma comment —
+        # a trailing pragma on code never spills onto the next line
+        above = self._pragmas.get(lineno - 1)
+        if above and self.line_text(lineno - 1).strip().startswith("#"):
+            return rule_name in above or "*" in above
+        return False
+
+    # ---- rule surface ----------------------------------------------------
+    def qualname(self, node: ast.AST) -> Optional[str]:
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = node.id
+        if base in self.aliases:
+            parts.append(self.aliases[base])
+        elif base in self.from_imports:
+            parts.append(self.from_imports[base])
+        else:
+            parts.append(base)
+        return ".".join(reversed(parts))
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def report(self, r: Rule, node: ast.AST, message: str) -> None:
+        lineno = getattr(node, "lineno", 1)
+        if self.allowed(r.name, lineno):
+            return
+        self.violations.append(Violation(
+            rule=r.name, path=self.rel, line=lineno,
+            col=getattr(node, "col_offset", 0) + 1, message=message,
+            line_text=self.line_text(lineno)))
+
+    # ---- the walk --------------------------------------------------------
+    def run(self) -> list[Violation]:
+        self._walk(self.tree)
+        for r in self.rules:
+            r.finish(self)
+        self.violations.sort(key=lambda v: (v.line, v.col, v.rule))
+        return self.violations
+
+    def _record_import(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    self.aliases[a.asname] = a.name
+                else:
+                    # "import a.b.c" binds "a" to package "a"
+                    self.aliases[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                self.from_imports[a.asname or a.name] = \
+                    f"{node.module}.{a.name}"
+
+    def _walk(self, node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            self._handle(child)
+
+    def _handle(self, node: ast.AST) -> None:
+        t = type(node)
+        if t in (ast.Import, ast.ImportFrom):
+            self._record_import(node)
+        for r in self._dispatch.get(t, ()):
+            r.visit(node, self)
+        if t in (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda):
+            self.func_stack.append(node)
+            self._walk(node)
+            self.func_stack.pop()
+        else:
+            self._walk(node)
+
+
+# ---- entry points --------------------------------------------------------
+
+def _make_rules(rel: str,
+                rule_names: Optional[Sequence[str]] = None) -> list[Rule]:
+    names = list(rule_names) if rule_names is not None else sorted(RULES)
+    out = []
+    for n in names:
+        if n not in RULES:
+            raise KeyError(f"unknown rule {n!r} (see --list-rules)")
+        r = RULES[n]()
+        if r.applies_to(rel):
+            out.append(r)
+    return out
+
+
+def lint_source(source: str, rel: str,
+                rule_names: Optional[Sequence[str]] = None) -> list[Violation]:
+    """Lint one source string as if it lived at repo path ``rel``."""
+    rules = _make_rules(rel, rule_names)
+    if not rules:
+        return []
+    return FileLint(rel, source, rules).run()
+
+
+def repo_rel(path: Path) -> str:
+    """Repo-style path: suffix starting at the last ``repro`` component."""
+    parts = list(Path(path).resolve().parts)
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        return "/".join(parts[i:])
+    return Path(path).name
+
+
+def iter_py_files(paths: Iterable[Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    return files
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: list[Violation]          # after baseline filtering
+    n_files: int
+    n_parse_errors: int = 0
+    baseline_filtered: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations and not self.n_parse_errors
+
+
+def load_baseline(path: Path) -> Counter:
+    data = json.loads(Path(path).read_text())
+    return Counter(e["fingerprint"] for e in data.get("entries", []))
+
+
+def write_baseline(violations: Sequence[Violation], path: Path) -> None:
+    entries = [{"fingerprint": v.fingerprint(), "rule": v.rule,
+                "path": v.path} for v in violations]
+    Path(path).write_text(json.dumps(
+        {"version": 1, "entries": entries}, indent=1) + "\n")
+
+
+def apply_baseline(violations: Sequence[Violation],
+                   baseline: Counter) -> tuple[list[Violation], int]:
+    """Multiset filtering: each baseline fingerprint absorbs one match."""
+    budget = Counter(baseline)
+    kept, dropped = [], 0
+    for v in violations:
+        fp = v.fingerprint()
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+            dropped += 1
+        else:
+            kept.append(v)
+    return kept, dropped
+
+
+# the linter's own rule definitions embed the very string patterns the
+# rules hunt for, so the package never lints itself
+SELF_PREFIX = "repro/analysis/"
+
+
+def lint_paths(paths: Iterable[Path],
+               rule_names: Optional[Sequence[str]] = None,
+               baseline: Optional[Counter] = None) -> LintResult:
+    violations: list[Violation] = []
+    n_files = n_err = 0
+    for f in iter_py_files(paths):
+        rel = repo_rel(f)
+        if rel.startswith(SELF_PREFIX):
+            continue
+        n_files += 1
+        try:
+            src = f.read_text()
+            violations.extend(lint_source(src, rel, rule_names))
+        except SyntaxError as e:
+            n_err += 1
+            violations.append(Violation(
+                rule="parse-error", path=rel, line=e.lineno or 1, col=1,
+                message=f"could not parse: {e.msg}"))
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    dropped = 0
+    if baseline:
+        violations, dropped = apply_baseline(violations, baseline)
+    return LintResult(violations, n_files, n_err, dropped)

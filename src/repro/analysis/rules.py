@@ -1,0 +1,613 @@
+"""The repo-specific rule set.
+
+Each rule encodes one invariant the solver/simulator stack depends on
+but that nothing else enforces mechanically.  The ``explain`` strings
+are the rule documentation (``python -m repro.analysis --explain RULE``);
+keep them the source of truth when changing a rule's scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .core import FileLint, Rule, rule
+
+
+def _scoped(rel: str, files: tuple = (), prefixes: tuple = ()) -> bool:
+    return rel in files or any(rel.startswith(p) for p in prefixes)
+
+
+# --------------------------------------------------------------------------
+@rule
+class SimClockPurity(Rule):
+    name = "sim-clock-purity"
+    summary = "sim-scope code must use the sim clock, not wall clocks"
+    explain = """\
+The simulator's determinism (and every cost/attainment number derived
+from it) requires that simulated time comes only from the event loop's
+sim clock.  In sim scope — core/simulator.py, orchestrator/, traces/ —
+ALL wall-clock reads are banned: time.time/monotonic/perf_counter(_ns),
+datetime.now/utcnow/today.  Real-infrastructure latency measurement in
+sim-scope modules must go through obs.trace.wall_now(), the sanctioned
+dual-clock helper (PR 6's design: sim time for semantics, wall time for
+observability only).
+
+Outside sim scope, only NON-MONOTONIC clocks (time.time, datetime.now)
+are flagged: interval math on them breaks under NTP steps — use
+time.perf_counter().  Epoch timestamps that genuinely must be wall time
+(e.g. the real serving engine's request arrival stamps) carry a
+`# lint: allow[sim-clock-purity]` pragma with a justifying comment.
+
+repro/obs/ is exempt: it is the sanctioned wall-clock layer (span
+tracing, metric export timestamps)."""
+    node_types = (ast.Call,)
+
+    SIM_FILES = ("repro/core/simulator.py",)
+    SIM_PREFIXES = ("repro/orchestrator/", "repro/traces/")
+    WALL = {
+        "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+        "time.perf_counter", "time.perf_counter_ns",
+        "datetime.datetime.now", "datetime.datetime.utcnow",
+        "datetime.datetime.today", "datetime.date.today",
+    }
+    NON_MONOTONIC = {
+        "time.time", "time.time_ns",
+        "datetime.datetime.now", "datetime.datetime.utcnow",
+        "datetime.datetime.today", "datetime.date.today",
+    }
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/") and not rel.startswith("repro/obs/")
+
+    def visit(self, node: ast.Call, ctx: FileLint) -> None:
+        q = ctx.qualname(node.func)
+        if q is None:
+            return
+        in_sim = _scoped(ctx.rel, self.SIM_FILES, self.SIM_PREFIXES)
+        if in_sim and q in self.WALL:
+            ctx.report(self, node,
+                       f"wall clock {q}() in sim scope; use the sim clock, "
+                       "or obs.trace.wall_now() for latency measurement")
+        elif not in_sim and q in self.NON_MONOTONIC:
+            ctx.report(self, node,
+                       f"non-monotonic clock {q}(); use time.perf_counter() "
+                       "for intervals (pragma epoch timestamps that must be "
+                       "wall time)")
+
+
+# --------------------------------------------------------------------------
+@rule
+class SeededRng(Rule):
+    name = "seeded-rng"
+    summary = "no global-state RNG; require explicit seeded generators"
+    explain = """\
+Reproducibility contract: every random draw flows from an explicit
+seeded generator — random.Random(seed), numpy.random.default_rng(seed),
+or a jax PRNG key — threaded through the call chain.  Module-level
+random.* functions and the legacy numpy.random.<fn> aliases mutate
+hidden global state, so two call sites can perturb each other and
+"same seed, same trace" silently stops holding.  Flagged: any call
+resolving to random.<fn> (except the generator constructors
+Random/SystemRandom) or numpy.random.<fn> (except default_rng and the
+Generator/BitGenerator constructors).  jax.random is inherently
+key-passing and never flagged."""
+    node_types = (ast.Call,)
+
+    PY_OK = {"Random", "SystemRandom"}
+    NP_OK = {"default_rng", "Generator", "RandomState", "SeedSequence",
+             "BitGenerator", "PCG64", "PCG64DXSM", "Philox", "MT19937",
+             "SFC64"}
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/")
+
+    def visit(self, node: ast.Call, ctx: FileLint) -> None:
+        q = ctx.qualname(node.func)
+        if not q:
+            return
+        parts = q.split(".")
+        if parts[0] == "random" and len(parts) == 2 \
+                and parts[1] not in self.PY_OK:
+            ctx.report(self, node,
+                       f"global-state RNG {q}(); thread a seeded "
+                       "random.Random(seed) instead")
+        elif parts[:2] == ["numpy", "random"] and len(parts) == 3 \
+                and parts[2] not in self.NP_OK:
+            ctx.report(self, node,
+                       f"global-state RNG {q}(); use "
+                       "numpy.random.default_rng(seed)")
+
+
+# --------------------------------------------------------------------------
+@rule
+class BucketEdges(Rule):
+    name = "bucket-edges"
+    summary = "half-open bucket-edge math lives only in core/workload.py"
+    explain = """\
+PR 3 unified request bucketing on ONE half-open convention
+(edges[k] <= x < edges[k+1], searchsorted side="right"), after
+edge-drift bugs where two call sites disagreed about which bucket a
+boundary request lands in — which flips which GPU looks cheapest for
+that bucket.  All bucketization goes through workload.edge_bucket /
+Workload.bucket_indices.  Outside core/workload.py, any
+searchsorted/digitize/bisect call is flagged: if it is genuinely not
+bucket-edge math (e.g. the solver's sorted-cost cutoff, event-index
+lookup in a sorted arrival array), pragma it with a comment saying what
+it searches."""
+    node_types = (ast.Call,)
+
+    BISECT = {"bisect.bisect", "bisect.bisect_left", "bisect.bisect_right",
+              "bisect.insort", "bisect.insort_left", "bisect.insort_right"}
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/") and rel != "repro/core/workload.py"
+
+    def visit(self, node: ast.Call, ctx: FileLint) -> None:
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("searchsorted", "digitize"):
+            ctx.report(self, node,
+                       f".{node.func.attr}() outside core/workload.py; "
+                       "bucketization must use workload.edge_bucket / "
+                       "bucket_indices (pragma if not bucket-edge math)")
+            return
+        q = ctx.qualname(node.func)
+        if q in self.BISECT:
+            ctx.report(self, node,
+                       f"{q}() outside core/workload.py; bucketization must "
+                       "use workload.edge_bucket / bucket_indices (pragma "
+                       "if not bucket-edge math)")
+
+
+# --------------------------------------------------------------------------
+@rule
+class InfMaskConvention(Rule):
+    name = "inf-mask-convention"
+    summary = "infeasibility is math.inf masks, never 1e9-style sentinels"
+    explain = """\
+The load matrix encodes "this slice cannot run on this column" as
+math.inf, and every solver layer tests np.isfinite.  A big-M sentinel
+(1e9 and friends) is poison here: it survives arithmetic, so a
+"forbidden" column can still win a cost comparison after enough
+multiplication, silently flipping which GPU mix is cheapest — the exact
+inconsistency class arxiv 2502.00722 shows flips heterogeneous
+cost rankings.  In the mask-carrying modules (core/ilp.py,
+core/loadmatrix.py, core/allocator.py, core/crosscheck.py,
+regions/problem.py) any numeric literal with magnitude >= 1e8 is
+flagged; use float("inf") / math.inf / np.inf."""
+    node_types = (ast.Constant,)
+
+    FILES = ("repro/core/ilp.py", "repro/core/loadmatrix.py",
+             "repro/core/allocator.py", "repro/core/crosscheck.py",
+             "repro/regions/problem.py")
+
+    def applies_to(self, rel: str) -> bool:
+        return rel in self.FILES
+
+    def visit(self, node: ast.Constant, ctx: FileLint) -> None:
+        v = node.value
+        if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                and abs(v) >= 1e8:
+            ctx.report(self, node,
+                       f"sentinel-sized literal {v!r} in a mask-carrying "
+                       "module; infeasibility must be math.inf")
+
+
+# --------------------------------------------------------------------------
+@rule
+class PoolKeyLiterals(Rule):
+    name = "pool-key-literals"
+    summary = "pool names are composed/parsed only by accelerators.py helpers"
+    explain = """\
+Pool names compose as name[xN][:spot]@region and PR 5's composition-
+order bug (building "g:spot@r" one place and "g@r:spot" another) made
+two layers disagree about which pool a column belonged to.  All
+composition and parsing goes through core/accelerators.py
+(market_pool, with_region, pool_key, split_region, is_spot_pool).
+Flagged outside that file: f-string fragments containing ":spot";
+endswith/startswith(":spot"); and — in core/, regions/, orchestrator/,
+serving/ — the "{x}@{y}" f-string composition shape and
+split/partition("@") parsing.  Display-only strings that merely look
+similar carry a pragma saying they never name a pool."""
+    node_types = (ast.Call, ast.JoinedStr)
+
+    AT_PREFIXES = ("repro/core/", "repro/regions/", "repro/orchestrator/",
+                   "repro/serving/")
+    SPLITTERS = ("split", "rsplit", "partition", "rpartition")
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/") \
+            and rel != "repro/core/accelerators.py"
+
+    def visit(self, node: ast.AST, ctx: FileLint) -> None:
+        if isinstance(node, ast.JoinedStr):
+            self._joined(node, ctx)
+        elif isinstance(node, ast.Call):
+            self._call(node, ctx)
+
+    def _joined(self, node: ast.JoinedStr, ctx: FileLint) -> None:
+        in_at = _scoped(ctx.rel, prefixes=self.AT_PREFIXES)
+        vals = node.values
+        for i, part in enumerate(vals):
+            if not (isinstance(part, ast.Constant)
+                    and isinstance(part.value, str)):
+                continue
+            if ":spot" in part.value:
+                ctx.report(self, node,
+                           'hand-built ":spot" pool suffix in f-string; use '
+                           "accelerators.market_pool/pool_key")
+            elif in_at and part.value == "@" and 0 < i < len(vals) - 1 \
+                    and isinstance(vals[i - 1], ast.FormattedValue) \
+                    and isinstance(vals[i + 1], ast.FormattedValue):
+                ctx.report(self, node,
+                           'hand-built "{x}@{y}" composition; use '
+                           "accelerators.with_region/pool_key (pragma "
+                           "display-only strings)")
+
+    def _call(self, node: ast.Call, ctx: FileLint) -> None:
+        if not isinstance(node.func, ast.Attribute):
+            return
+        attr = node.func.attr
+        args = node.args
+        first = args[0].value if args and isinstance(args[0], ast.Constant) \
+            else None
+        if attr in ("endswith", "startswith") and isinstance(first, str) \
+                and ":spot" in first:
+            ctx.report(self, node,
+                       f'.{attr}(":spot") re-parses pool names; use '
+                       "accelerators.is_spot_pool")
+        elif attr in self.SPLITTERS and first == "@" \
+                and _scoped(ctx.rel, prefixes=self.AT_PREFIXES):
+            ctx.report(self, node,
+                       f'.{attr}("@") re-parses pool names; use '
+                       "accelerators.split_region")
+
+
+# --------------------------------------------------------------------------
+@rule
+class FloatEq(Rule):
+    name = "float-eq"
+    summary = "no ==/!= against float-typed expressions in solver modules"
+    explain = """\
+The solver stack compares costs that went through ceil/sum/matmul chains;
+exact equality on such floats is representation-dependent, and a parity
+assertion that holds on one machine can fail on another (or after a
+numpy upgrade).  In solver modules (core/ilp.py, loadmatrix.py,
+allocator.py, crosscheck.py, autoscaler.py, and regions/), ==/!= where
+either operand is float-typed on its face — a float literal, float(...),
+math.inf/np.inf/nan — is flagged.  Use math.isclose/np.isclose or the
+module's _EPS tolerances.  Integer-valued comparisons (indices, counts)
+are untouched.  Config-validation equality on user-entered floats may be
+pragma'd with a comment."""
+    node_types = (ast.Compare,)
+
+    FILES = ("repro/core/ilp.py", "repro/core/loadmatrix.py",
+             "repro/core/allocator.py", "repro/core/crosscheck.py",
+             "repro/core/autoscaler.py")
+    PREFIXES = ("repro/regions/",)
+    FLOAT_ATTRS = {"math.inf", "math.nan", "numpy.inf", "numpy.nan",
+                   "math.pi", "math.e"}
+
+    def applies_to(self, rel: str) -> bool:
+        return _scoped(rel, self.FILES, self.PREFIXES)
+
+    def _floaty(self, node: ast.AST, ctx: FileLint) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, float)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            return self._floaty(node.operand, ctx)
+        if isinstance(node, ast.Call):
+            return ctx.qualname(node.func) == "float"
+        if isinstance(node, ast.Attribute):
+            return ctx.qualname(node) in self.FLOAT_ATTRS
+        return False
+
+    def visit(self, node: ast.Compare, ctx: FileLint) -> None:
+        operands = [node.left] + list(node.comparators)
+        for i, op in enumerate(node.ops):
+            if not isinstance(op, (ast.Eq, ast.NotEq)):
+                continue
+            if self._floaty(operands[i], ctx) \
+                    or self._floaty(operands[i + 1], ctx):
+                ctx.report(self, node,
+                           "exact ==/!= on a float-typed expression in "
+                           "solver code; use math.isclose/np.isclose or an "
+                           "_EPS tolerance")
+                return
+
+
+# --------------------------------------------------------------------------
+@rule
+class ObsLabelDiscipline(Rule):
+    name = "obs-label-discipline"
+    summary = "metric labelnames are literal tuples; no unbounded-id labels"
+    explain = """\
+The metrics registry keys each (family, label-values) child in a dict
+that lives for the process: label names must be knowable statically
+(literal tuple/list of strings at the counter/gauge/histogram call) and
+label VALUES must be low-cardinality.  A request id / instance id /
+timestamp label grows one child per request and the registry becomes an
+unbounded memory leak that also blows up every export.  Flagged:
+non-literal labelnames arguments, and labelnames or .labels() kwargs
+drawn from the known-unbounded set (request_id, rid, inst_id,
+instance_id, timestamp, ts, uuid, trace_id, span_id).  obs/metrics.py
+itself (the registry implementation) is exempt."""
+    node_types = (ast.Call,)
+
+    FAMILIES = ("counter", "gauge", "histogram")
+    DENY = {"request_id", "rid", "req_id", "inst_id", "instance_id",
+            "timestamp", "ts", "uuid", "trace_id", "span_id"}
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/") and rel != "repro/obs/metrics.py"
+
+    def visit(self, node: ast.Call, ctx: FileLint) -> None:
+        if not isinstance(node.func, ast.Attribute):
+            return
+        attr = node.func.attr
+        if attr in self.FAMILIES:
+            self._family(node, ctx)
+        elif attr == "labels":
+            for kw in node.keywords:
+                if kw.arg in self.DENY:
+                    ctx.report(self, node,
+                               f"unbounded-cardinality label {kw.arg!r} in "
+                               ".labels(); one child per id leaks the "
+                               "registry")
+
+    def _family(self, node: ast.Call, ctx: FileLint) -> None:
+        labelnames: Optional[ast.AST] = None
+        for kw in node.keywords:
+            if kw.arg == "labelnames":
+                labelnames = kw.value
+        if labelnames is None and len(node.args) >= 3:
+            labelnames = node.args[2]
+        if labelnames is None:
+            return
+        if not (isinstance(labelnames, (ast.Tuple, ast.List))
+                and all(isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)
+                        for e in labelnames.elts)):
+            ctx.report(self, node,
+                       "metric labelnames must be a literal tuple/list of "
+                       "string constants (cardinality must be auditable "
+                       "statically)")
+            return
+        for e in labelnames.elts:
+            if e.value in self.DENY:
+                ctx.report(self, node,
+                           f"unbounded-cardinality label {e.value!r} in "
+                           "metric labelnames")
+
+
+# --------------------------------------------------------------------------
+@rule
+class JitPurity(Rule):
+    name = "jit-purity"
+    summary = "jit/pallas kernel bodies stay pure: no prints, syncs, clocks"
+    explain = """\
+Bodies traced by jax.jit or run as pallas_call kernels execute at trace
+time and then never again: a print() fires once (or not at all inside
+pallas), .item()/.tolist()/.block_until_ready() force a host sync that
+serializes the pipeline, wall-clock and global-RNG reads bake one
+trace-time value into the compiled artifact, and global/nonlocal
+mutation of closed-over Python state is invisible to retraces.  In
+kernels/, functions decorated with jax.jit (directly or via
+functools.partial) or referenced as a pallas_call kernel (directly or
+via functools.partial) are checked for all of the above.  Debug paths
+should use jax.debug.print / jax.debug.callback, which are
+trace-aware."""
+    node_types = (ast.Call, ast.FunctionDef, ast.AsyncFunctionDef,
+                  ast.Global, ast.Nonlocal)
+
+    SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+
+    def __init__(self) -> None:
+        self._defs: dict[str, ast.AST] = {}
+        self._jit_ids: set[int] = set()
+        self._kernel_names: set[str] = set()
+        self._candidates: list[tuple[frozenset, ast.AST, str]] = []
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith("repro/kernels/")
+
+    # -- collection --------------------------------------------------------
+    def _dec_is_jit(self, dec: ast.AST, ctx: FileLint) -> bool:
+        for sub in ast.walk(dec):
+            q = ctx.qualname(sub) if isinstance(
+                sub, (ast.Name, ast.Attribute)) else None
+            if q and (q in ("jax.jit", "jax.pmap", "jit")
+                      or q.endswith(".pallas_call")):
+                return True
+        return False
+
+    def _flag(self, node: ast.AST, ctx: FileLint, msg: str) -> None:
+        if ctx.func_stack:
+            self._candidates.append(
+                (frozenset(id(f) for f in ctx.func_stack), node, msg))
+
+    def visit(self, node: ast.AST, ctx: FileLint) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._defs[node.name] = node
+            if any(self._dec_is_jit(d, ctx) for d in node.decorator_list):
+                self._jit_ids.add(id(node))
+            return
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            self._flag(node, ctx,
+                       f"{type(node).__name__.lower()} mutation of "
+                       "closed-over Python state in a traced body is "
+                       "invisible to retraces")
+            return
+        # Call
+        q = ctx.qualname(node.func)
+        if q and q.endswith(".pallas_call") and node.args:
+            self._kernel(node.args[0], ctx)
+        if q == "print":
+            self._flag(node, ctx,
+                       "print() in a traced body fires at trace time only; "
+                       "use jax.debug.print")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in self.SYNC_ATTRS and not node.args:
+            self._flag(node, ctx,
+                       f".{node.func.attr}() forces a host sync inside a "
+                       "traced body")
+        elif q and (q.startswith("time.") or q.startswith("datetime.")):
+            self._flag(node, ctx,
+                       f"{q}() bakes a trace-time clock value into the "
+                       "compiled artifact")
+        elif q and (q.split(".")[0] == "random"
+                    or q.startswith("numpy.random.")):
+            self._flag(node, ctx,
+                       f"{q}() draws host RNG at trace time; use a jax "
+                       "PRNG key argument")
+
+    def _kernel(self, arg: ast.AST, ctx: FileLint) -> None:
+        # pallas_call(_kernel, ...) or pallas_call(partial(_kernel, ...), ...)
+        if isinstance(arg, ast.Call) \
+                and ctx.qualname(arg.func) in ("functools.partial", "partial") \
+                and arg.args:
+            arg = arg.args[0]
+        if isinstance(arg, ast.Name):
+            self._kernel_names.add(arg.id)
+
+    # -- resolution --------------------------------------------------------
+    def finish(self, ctx: FileLint) -> None:
+        jit_ids = set(self._jit_ids)
+        jit_ids.update(id(self._defs[n]) for n in self._kernel_names
+                       if n in self._defs)
+        for stack_ids, node, msg in self._candidates:
+            if stack_ids & jit_ids:
+                ctx.report(self, node, msg)
+
+
+# --------------------------------------------------------------------------
+@rule
+class SolverLayerParity(Rule):
+    name = "solver-layer-parity"
+    summary = "every ILPProblem constraint field reaches all four solver layers"
+    explain = """\
+The repo's cost claims rest on four solver layers — greedy warm start
+(_greedy), local search (_local_search), branch-and-bound (solve), and
+the brute-force reference (solve_brute_force) — enforcing EXACTLY the
+same constraint set.  Historically every new axis (TP chip pools, model
+rows, spot floors, regions) had to be hand-wired into each layer, and a
+layer that silently skips a cap makes cross-checks pass on small
+instances while production allocations violate availability.
+
+This rule parses core/ilp.py structurally: the constraint fields are
+ILPProblem's dataclass fields minus the data fields
+(loads/costs/gpu_names/bucket_of_slice) minus any field whose preceding
+comment block contains the word "metadata" (the sanctioned way to add a
+non-constraint field, e.g. spot_col/region_col — say WHY it is
+metadata).  For each layer it computes the set of fields reachable from
+the layer function through module helpers and ILPProblem
+methods/properties (counts_within_caps, group_matrix, grouped_caps, ...)
+WITHOUT passing through the other three layers — each layer must
+enforce caps via its own call chain, not by delegating to another
+layer.  Any constraint field missing from any layer's closure is a
+violation: new cap axes can never silently skip a layer."""
+    # everything happens in finish(); no per-node dispatch
+    node_types = ()
+
+    DATA_FIELDS = {"loads", "costs", "gpu_names", "bucket_of_slice"}
+    LAYERS = {
+        "greedy warm start": "_greedy",
+        "local search": "_local_search",
+        "branch-and-bound": "solve",
+        "brute-force reference": "solve_brute_force",
+    }
+
+    def applies_to(self, rel: str) -> bool:
+        return rel == "repro/core/ilp.py"
+
+    @staticmethod
+    def _names_and_attrs(fn: ast.AST) -> tuple[set, set]:
+        """All Name ids and Attribute attrs in a function's subtree."""
+        names, attrs = set(), set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Name):
+                names.add(sub.id)
+            elif isinstance(sub, ast.Attribute):
+                attrs.add(sub.attr)
+        return names, attrs
+
+    def _metadata_fields(self, cls: ast.ClassDef, ctx: FileLint) -> set:
+        """Fields whose directly-preceding comment block says 'metadata'."""
+        out = set()
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            ln = stmt.lineno - 1
+            while ln >= 1 and ctx.line_text(ln).strip().startswith("#"):
+                if "metadata" in ctx.line_text(ln):
+                    out.add(stmt.target.id)
+                    break
+                ln -= 1
+        return out
+
+    def finish(self, ctx: FileLint) -> None:
+        cls = next((n for n in ctx.tree.body
+                    if isinstance(n, ast.ClassDef)
+                    and n.name == "ILPProblem"), None)
+        if cls is None:
+            ctx.report(self, ctx.tree,
+                       "ILPProblem class not found in core/ilp.py")
+            return
+        fields = [s.target.id for s in cls.body
+                  if isinstance(s, ast.AnnAssign)
+                  and isinstance(s.target, ast.Name)]
+        constraint = (set(fields) - self.DATA_FIELDS
+                      - self._metadata_fields(cls, ctx))
+        # ILPProblem methods/properties: name -> (fields touched, members used)
+        members: dict[str, tuple[set, set]] = {}
+        member_names = {s.name for s in cls.body
+                        if isinstance(s, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))}
+        for s in cls.body:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _, attrs = self._names_and_attrs(s)
+                members[s.name] = (attrs & constraint, attrs & member_names)
+        # module-level functions: name -> (node, names used, attrs used)
+        funcs = {n.name: n for n in ctx.tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        layer_fns = set(self.LAYERS.values())
+        for layer, fn_name in self.LAYERS.items():
+            if fn_name not in funcs:
+                ctx.report(self, ctx.tree,
+                           f"solver layer {layer!r} ({fn_name}) not found "
+                           "in core/ilp.py")
+                continue
+            covered: set = set()
+            seen: set = set()
+            frontier = [fn_name]
+            while frontier:
+                cur = frontier.pop()
+                if cur in seen:
+                    continue
+                seen.add(cur)
+                names, attrs = self._names_and_attrs(funcs[cur])
+                covered |= attrs & constraint
+                # ILPProblem methods/properties reached via attribute access
+                mseen: set = set()
+                mfrontier = list(attrs & member_names)
+                while mfrontier:
+                    m = mfrontier.pop()
+                    if m in mseen:
+                        continue
+                    mseen.add(m)
+                    mfields, mmembers = members[m]
+                    covered |= mfields
+                    mfrontier.extend(mmembers - mseen)
+                # other module functions, never through another layer
+                for callee in names & set(funcs):
+                    if callee != fn_name and callee in layer_fns:
+                        continue
+                    frontier.append(callee)
+            for missing in sorted(constraint - covered):
+                ctx.report(
+                    self, funcs[fn_name],
+                    f"ILPProblem constraint field {missing!r} is never "
+                    f"referenced by solver layer {layer!r} ({fn_name}): "
+                    "every cap axis must be enforced by all four layers "
+                    "(mark non-constraint fields with a '# metadata' "
+                    "comment)")

@@ -134,7 +134,10 @@ def small_tier_problem(rng: np.random.Generator
     costs = np.empty(M)
     costs[0::2] = od_cost
     costs[1::2] = spot_cost
-    names = [n for j in range(n_gpus) for n in (f"g{j}", f"g{j}:spot")]
+    # synthetic fixture names for randomized cross-checks; the harness
+    # deliberately builds raw ":spot" strings to mirror what market_pool
+    # emits without importing catalog machinery into the fixture
+    names = [n for j in range(n_gpus) for n in (f"g{j}", f"g{j}:spot")]  # lint: allow[pool-key-literals]
     spot_col = np.tile([False, True], n_gpus)
     prob = ILPProblem(np.stack(rows), costs, names,
                       np.asarray(bucket_of),

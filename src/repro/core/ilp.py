@@ -500,8 +500,10 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         row_feas = rows_o[gi][feas]
         # comps sorted by inc => everything at/after the cutoff is pruned
         # by the separable-LP suffix bound (incumbent may improve below,
-        # which only shrinks the cutoff further — rechecked per branch)
-        n_ok = int(np.searchsorted(incs,
+        # which only shrinks the cutoff further — rechecked per branch).
+        # Cost-cutoff search in the sorted composition costs — not
+        # request bucketization.
+        n_ok = int(np.searchsorted(incs,  # lint: allow[bucket-edges]
                                    best_cost - 1e-7 - frac - suffix_lb[gi + 1]))
         stats.pruned_lp_bound += len(incs) - n_ok
         if n_ok == 0:

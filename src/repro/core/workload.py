@@ -114,8 +114,9 @@ class Workload:
     def scaled(self, total_rate: float) -> "Workload":
         cur = self.total_rate
         f = total_rate / cur if cur > 0 else 0.0
+        # display-only workload label ("chat@5.0"); never names a pool
         return Workload(self.buckets, self.rates * f,
-                        name=f"{self.name}@{total_rate}")
+                        name=f"{self.name}@{total_rate}")  # lint: allow[pool-key-literals]
 
     def slices(self, slice_factor: int = DEFAULT_SLICE_FACTOR):
         """§5.4.1: split each non-empty bucket into `slice_factor` slices.

@@ -55,12 +55,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, variant: str,
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         lowered = lower_cell(cfg, case, mesh, variant)
-        rec["lower_s"] = round(time.time() - t0, 2)
-        t1 = time.time()
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
         rec.update(hlo_analysis.summarize_cost(compiled))
         log.info("%s", compiled.memory_analysis())
         log.info("%s", {k: v for k, v in (rec.get("memory") or {}).items()})
@@ -120,10 +120,10 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                t0 = time.time()
+                t0 = time.perf_counter()
                 rec = run_cell(arch, shape, mp, args.variant, out_dir,
                                reduced=args.reduced)
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 status = ("SKIP" if "skipped" in rec
                           else "OK" if rec["ok"] else "FAIL")
                 n_ok += status == "OK"

@@ -27,10 +27,23 @@ import time
 from typing import Iterator, Optional
 
 __all__ = ["SpanTracer", "validate_chrome_trace", "TRACER",
-           "WALL_PID", "SIM_PID"]
+           "WALL_PID", "SIM_PID", "wall_now"]
 
 WALL_PID = 1
 SIM_PID = 2
+
+
+def wall_now() -> float:
+    """Monotonic wall-clock reading, for *observability only*.
+
+    Sim-scope code (orchestrators, simulator, traces) must never branch
+    on wall time — the `sim-clock-purity` lint rule bans direct
+    ``time.*`` reads there.  But measuring how long the real solver
+    spent is observability, not simulation semantics, so this is the
+    one sanctioned wall read for sim-scope modules: routing through
+    ``obs`` keeps the dual-clock boundary (sim time for semantics, wall
+    time for measurement) visible at every call site."""
+    return time.perf_counter()
 
 
 class SpanTracer:

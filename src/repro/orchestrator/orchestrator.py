@@ -26,7 +26,6 @@ runs *inside* the discrete-event simulation clock.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import numpy as np
@@ -41,7 +40,7 @@ from repro.core.workload import workload_from_samples
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry
-from repro.obs.trace import SpanTracer
+from repro.obs.trace import SpanTracer, wall_now
 from repro.traces.trace import FleetEvent, WorkloadTrace
 
 from .timeline import Timeline, WindowRecord
@@ -450,8 +449,9 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
         asc = self.autoscaler
         reqs = state["requests"]
         arrivals = state["arrivals"]
-        lo = int(np.searchsorted(arrivals, t0, side="right"))
-        hi = int(np.searchsorted(arrivals, t1, side="right"))
+        # event-index lookup in the sorted arrival times, not bucket math
+        lo = int(np.searchsorted(arrivals, t0, side="right"))  # lint: allow[bucket-edges]
+        hi = int(np.searchsorted(arrivals, t1, side="right"))  # lint: allow[bucket-edges]
         n_arr = hi - lo
         dt = max(t1 - t0, 1e-9)
         if control:
@@ -464,10 +464,10 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
             else:
                 rates = np.zeros_like(asc.observed)
             asc.observe_rates(rates)
-            wall0 = time.perf_counter()
+            wall0 = wall_now()
             with self.tracer.span("resolve:rescale", track="solver", t=t1):
                 diff = asc.maybe_rescale()
-            wall = time.perf_counter() - wall0
+            wall = wall_now() - wall0
             if diff is not None and not diff.is_noop:
                 self._apply_diff(
                     eng, diff, t1, "rescale",
@@ -545,7 +545,7 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
                 now, "preemption-drained-only", gpu=ev.gpu,
                 lost=len(victims), stockout=ev.stockout)
             return
-        wall0 = time.perf_counter()
+        wall0 = wall_now()
         try:
             with self.tracer.span("resolve:failure", track="solver",
                                   gpu=ev.gpu, t=now):
@@ -562,7 +562,7 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
                 now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
                 dropped=0 if eng.instances else len(orphans), error=str(e))
             return
-        wall = time.perf_counter() - wall0
+        wall = wall_now() - wall0
         self._apply_diff(
             eng, diff, now, "failure", gpu=ev.gpu, lost=len(victims),
             resubmitted=len(orphans), stockout=ev.stockout,
@@ -924,8 +924,9 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
         arrived_by_model: dict[str, int] = {}
         if control:
             for m, (reqs_m, arrivals_m) in state["by_model"].items():
-                lo = int(np.searchsorted(arrivals_m, t0, side="right"))
-                hi = int(np.searchsorted(arrivals_m, t1, side="right"))
+                # event-index lookup in sorted arrivals, not bucket math
+                lo = int(np.searchsorted(arrivals_m, t0, side="right"))  # lint: allow[bucket-edges]
+                hi = int(np.searchsorted(arrivals_m, t1, side="right"))  # lint: allow[bucket-edges]
                 arrived_by_model[m] = hi - lo
                 if hi > lo:
                     window = reqs_m[lo:hi]
@@ -936,10 +937,10 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                     asc.observe_rates(m, wl.rates)
                 else:
                     asc.observe_rates(m, np.zeros_like(asc.observed[m]))
-            wall0 = time.perf_counter()
+            wall0 = wall_now()
             with self.tracer.span("resolve:rescale", track="solver", t=t1):
                 diffs = asc.maybe_rescale()
-            wall = time.perf_counter() - wall0
+            wall = wall_now() - wall0
             if diffs and any(not d.is_noop for d in diffs.values()):
                 h = asc.history[-1]
                 self._apply_diffs(
@@ -1009,7 +1010,7 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                 now, "preemption-drained-only", gpu=ev.gpu,
                 lost=len(victims), stockout=ev.stockout)
             return
-        wall0 = time.perf_counter()
+        wall0 = wall_now()
         try:
             with self.tracer.span("resolve:failure", track="solver",
                                   gpu=ev.gpu, t=now):
@@ -1022,7 +1023,7 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                 now, "failure-infeasible", gpu=ev.gpu, lost=len(victims),
                 error=str(e))
             return
-        wall = time.perf_counter() - wall0
+        wall = wall_now() - wall0
         self._apply_diffs(
             eng, diffs, now, "failure", gpu=ev.gpu, lost=len(victims),
             resubmitted=len(orphans), stockout=ev.stockout,

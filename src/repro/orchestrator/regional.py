@@ -29,7 +29,7 @@ import numpy as np
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
 from repro.core.simulator import ClusterEngine, SimRequest
 from repro.obs.metrics import MetricsRegistry
-from repro.obs.trace import SpanTracer
+from repro.obs.trace import SpanTracer, wall_now
 from repro.core.workload import grid_edges, workload_from_samples
 from repro.regions.allocator import RegionalMelange
 from repro.regions.autoscaler import RegionalAutoscaler
@@ -316,8 +316,9 @@ class RegionalOrchestrator(ClusterOrchestrator):
         arrived_by_home: dict[str, int] = {}
         if control:
             for home, (reqs_h, arrivals_h) in state["by_home"].items():
-                lo = int(np.searchsorted(arrivals_h, t0, side="right"))
-                hi = int(np.searchsorted(arrivals_h, t1, side="right"))
+                # event-index lookup in sorted arrivals, not bucket math
+                lo = int(np.searchsorted(arrivals_h, t0, side="right"))  # lint: allow[bucket-edges]
+                hi = int(np.searchsorted(arrivals_h, t1, side="right"))  # lint: allow[bucket-edges]
                 arrived_by_home[home] = hi - lo
                 if hi > lo:
                     window = reqs_h[lo:hi]
@@ -331,11 +332,10 @@ class RegionalOrchestrator(ClusterOrchestrator):
                 else:
                     asc.observe_rates(home,
                                       np.zeros_like(asc.observed[home]))
-            import time as _time
-            wall0 = _time.perf_counter()
+            wall0 = wall_now()
             with self.tracer.span("resolve:rescale", track="solver", t=t1):
                 diff = asc.maybe_rescale()
-            wall = _time.perf_counter() - wall0
+            wall = wall_now() - wall0
             if diff is not None and not diff.is_noop:
                 self._apply_diff(
                     eng, diff, t1, "rescale",

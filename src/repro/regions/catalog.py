@@ -79,7 +79,9 @@ class RegionCatalog:
         norm: dict[tuple[str, str], float] = {}
         for (a, b), v in self.rtt_s.items():
             if a == b:
-                if v != 0.0:
+                # config validation of a user-entered literal: exact zero
+                # is the contract (an RTT of 1e-12 to yourself is a typo)
+                if v != 0.0:  # lint: allow[float-eq]
                     raise ValueError(
                         f"rtt_s[{a!r}, {b!r}] must be 0 (same region)")
                 continue

@@ -83,7 +83,10 @@ class ServingEngine:
 
     # -- public -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        req.arrival_t = req.arrival_t or time.time()
+        # The real engine stamps requests with *epoch* wall time: its
+        # latencies are reported against client-visible arrival clocks,
+        # not a sim clock — the one layer where time.time() is correct.
+        req.arrival_t = req.arrival_t or time.time()  # lint: allow[sim-clock-purity]
         self.queue.append(req)
 
     @property
@@ -110,7 +113,8 @@ class ServingEngine:
             L = len(req.prompt)
             if L + req.max_new_tokens > self.ecfg.max_seq:
                 self.queue.popleft()
-                req.finish_t = time.time()
+                # epoch stamp, same clock as arrival_t (see submit())
+                req.finish_t = time.time()  # lint: allow[sim-clock-purity]
                 self.finished.append(req)      # rejected: too long
                 continue
             free_slots = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -132,7 +136,8 @@ class ServingEngine:
                                         slot, L)
             first = self._sample(logits[:, L - 1], req)
             req.generated.append(int(first))
-            req.first_token_t = time.time()
+            # epoch stamp, same clock as arrival_t (see submit())
+            req.first_token_t = time.time()  # lint: allow[sim-clock-purity]
             self.blocks.append_token(req.rid)
             req.slot = slot
             self.slot_req[slot] = req
@@ -150,7 +155,8 @@ class ServingEngine:
         return int(jax.random.categorical(sub, lg))
 
     def _retire(self, req: Request) -> None:
-        req.finish_t = time.time()
+        # epoch stamp, same clock as arrival_t (see submit())
+        req.finish_t = time.time()  # lint: allow[sim-clock-purity]
         self.finished.append(req)
         self.blocks.free_seq(req.rid)
         if req.slot >= 0 and self.slot_req[req.slot] is req:
@@ -171,7 +177,8 @@ class ServingEngine:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self.lengths))
-        now = time.time()
+        # epoch stamp, same clock as arrival_t (see submit())
+        now = time.time()  # lint: allow[sim-clock-purity]
         for r in list(active):
             tok = self._sample(logits[r.slot], r)
             r.generated.append(tok)

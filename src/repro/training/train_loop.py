@@ -65,7 +65,7 @@ def train(cfg: ModelConfig, tcfg: TrainConfig,
             log_fn(f"[train] resumed from step {latest}")
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, tcfg.steps):
         if fail_at_step is not None and step == fail_at_step:
             if ckpt:
@@ -81,7 +81,7 @@ def train(cfg: ModelConfig, tcfg: TrainConfig,
         loss = float(metrics["loss"])
         losses.append(loss)
         if (step + 1) % tcfg.log_every == 0:
-            dt = (time.time() - t0) / max(1, len(losses))
+            dt = (time.perf_counter() - t0) / max(1, len(losses))
             log_fn(f"[train] step {step+1}/{tcfg.steps} "
                    f"loss={loss:.4f} ({dt*1e3:.0f} ms/step)")
         if ckpt is not None and (step + 1) % tcfg.ckpt_every == 0:
