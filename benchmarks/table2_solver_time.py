@@ -8,8 +8,6 @@ and why candidates were pruned, instead of a single opaque latency.
 """
 from __future__ import annotations
 
-import time
-
 from repro.core import Melange, ModelPerf, PAPER_GPUS, make_workload
 from repro.core.loadmatrix import build_problem
 from repro.core.ilp import solve
@@ -26,6 +24,23 @@ SWEEP_SLICES = (4, 8, 16, 32)
 SMOKE_GPUS = (2, len(PAPER_GPUS))
 SMOKE_SLICES = (4, 8)
 
+# pre-fast-path solve latencies, measured at the previous commit on this
+# container with the full sweep budgets below: the "before" side of
+# BENCH_solver.json and the denominator of the reported speedup.  Every
+# full-sweep cell was deadline-bound at ~the 2.0 s budget.
+PRE_PR_BASELINE = {
+    "classic_max_solve_s": 1.006,
+    "scaling_mean_solve_s": 2.007,
+    "scaling_max_solve_s": 2.039,
+    "largest_shape": {"gpus": 4, "slice_factor": 32, "solve_s": 2.039},
+}
+
+# smoke-lane latency gate: the largest smoke shape (full catalog x sf=8,
+# 440 slices) solves in ~0.1 s with the fast path, where pre-fast-path it
+# consumed the whole 0.25 s smoke budget.  The gate fails the bench-smoke
+# CI lane if a regression drags it back toward budget-bound.
+SMOKE_GATE_SOLVE_S = 0.2
+
 
 def classic_table():
     """The original Table 2 reproduction (kept verbatim)."""
@@ -40,9 +55,13 @@ def classic_table():
             for rate in RATES:
                 wl = make_workload(ds, rate)
                 prob = build_problem(wl, mel.profile, 8)
-                t0 = time.perf_counter()
                 sol = solve(prob, time_budget_s=1.0)
-                times[rate] = round(time.perf_counter() - t0, 3)
+                # the solver's own clock, so the headline Table 2 numbers
+                # can never disagree with the SolveStats phase splits
+                st = sol.stats
+                assert st is not None and st.consistent(), \
+                    f"SolveStats inconsistent for {ds}@{rate} (slo={slo})"
+                times[rate] = round(sol.solve_time_s, 3)
                 latencies.append(times[rate])
             out[f"{ds}_{int(slo*1000)}ms"] = times
             rows.append(row(
@@ -88,10 +107,20 @@ def scaling_sweep(smoke: bool = False):
                 "pruned": {"lp_bound": st.pruned_lp_bound,
                            "cap": st.pruned_cap,
                            "ceiling": st.pruned_ceiling,
-                           "deadline": st.pruned_deadline},
+                           "deadline": st.pruned_deadline,
+                           "stall": st.pruned_stall},
                 "deadline_hit": st.deadline_hit,
+                "stalled": st.stalled,
+                "cols_dominated": st.cols_dominated,
                 "cost_per_hour": round(sol.cost, 3),
             })
+    largest = max(cells, key=lambda c: c["n_columns"] * c["n_slices"])
+    if smoke:
+        # the bench-smoke lane's latency-budget gate (solver fast path)
+        assert largest["solve_s"] <= SMOKE_GATE_SOLVE_S, (
+            f"solver fast-path regression: largest smoke shape "
+            f"({largest['gpus']} gpus x sf={largest['slice_factor']}) took "
+            f"{largest['solve_s']:.3f}s > {SMOKE_GATE_SOLVE_S}s gate")
     for c in cells:
         tot = max(c["greedy_s"] + c["polish_s"] + c["bnb_s"], 1e-12)
         rows.append(row(
@@ -114,6 +143,32 @@ def main(smoke: bool = False):
     out["scaling_sweep"] = cells
     rows += srows
     emit("table2_solver_time", out)
+    if not smoke:
+        # before/after perf trajectory for the solver fast path (the
+        # smoke sweep's shapes differ from the baseline's, so the file is
+        # only emitted from the full sweep)
+        solve_ts = [c["solve_s"] for c in cells]
+        largest = max(cells, key=lambda c: c["n_columns"] * c["n_slices"])
+        after = {
+            "classic_max_solve_s": max(
+                max(t.values()) for k, t in out.items()
+                if isinstance(t, dict) and k != "scaling_sweep"),
+            "scaling_mean_solve_s": round(sum(solve_ts) / len(solve_ts), 4),
+            "scaling_max_solve_s": max(solve_ts),
+            "largest_shape": {"gpus": largest["gpus"],
+                              "slice_factor": largest["slice_factor"],
+                              "solve_s": largest["solve_s"]},
+        }
+        base = PRE_PR_BASELINE
+        emit("BENCH_solver", {
+            "before": base, "after": after,
+            "speedup_largest_shape": round(
+                base["largest_shape"]["solve_s"]
+                / max(after["largest_shape"]["solve_s"], 1e-9), 2),
+            "speedup_scaling_mean": round(
+                base["scaling_mean_solve_s"]
+                / max(after["scaling_mean_solve_s"], 1e-9), 2),
+        })
     return rows
 
 

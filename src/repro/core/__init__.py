@@ -10,8 +10,10 @@ from .autoscaler import (AllocationDiff, Autoscaler, FleetAutoscaler,
                          allocation_diff)
 from .balancer import FleetBalancer, InstanceRef, LoadBalancer
 from .engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams, ModelPerf
+from .dominance import DominanceReduction, dominance_mask, reduce_problem
 from .ilp import (ILPProblem, ILPSolution, counts_within_caps, solve,
-                  solve_brute_force, spot_share_by_bucket)
+                  solve_brute_force, solve_incremental,
+                  spot_share_by_bucket)
 from .loadmatrix import (FleetProblem, availability, build_fleet_problem,
                          build_problem)
 from .profiler import Profile, profile_catalog, profile_from_dryrun

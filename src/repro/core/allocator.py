@@ -24,7 +24,7 @@ import numpy as np
 from .accelerators import (Accelerator, chips_by_base, chips_by_pool,
                            expand_price_tiers, expand_tp_variants, pool_key)
 from .engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
-from .ilp import ILPProblem, ILPSolution, solve
+from .ilp import ILPProblem, ILPSolution, solve, solve_incremental
 from .loadmatrix import build_fleet_problem, build_problem
 from .profiler import Profile, profile_catalog
 from .workload import ModelSpec, Workload
@@ -67,6 +67,10 @@ class Allocation:
         return sum(self.counts.values())
 
     solution_gpu_names: list[str] = dataclasses.field(default_factory=list)
+    # the ILP this allocation solved — kept so the next allocate() call can
+    # diff against it and re-open only the changed columns (solver fast
+    # path's incremental re-solve)
+    problem: Optional[ILPProblem] = None
 
     def counts_by_tp(self) -> dict[tuple[str, int], int]:
         """Instance counts keyed by (base type, tp degree)."""
@@ -156,14 +160,21 @@ class Melange:
                  over_provision: float = 0.0,
                  min_ondemand_frac: float = 0.0,
                  replacement_delay_s: float = 0.0,
-                 time_budget_s: float = 5.0) -> Optional[Allocation]:
+                 time_budget_s: float = 5.0,
+                 prev: Optional[Allocation] = None) -> Optional[Allocation]:
         """Derive the minimal-cost allocation (§5.4). ``over_provision``
         inflates bucket rates (§6.3's burst-absorption knob); ``caps``
         bounds instances of a named variant, ``chip_caps`` bounds chips of
         a base type shared across its TP variants (a ``"<base>:spot"`` key
         bounds only the spot sub-pool).  ``min_ondemand_frac`` /
         ``replacement_delay_s`` are the availability floor for price-tier
-        catalogs (no-ops without spot variants)."""
+        catalogs (no-ops without spot variants).
+
+        ``prev`` (a previous allocation from this instance) switches to
+        the incremental re-solve: slices whose load row, price, and cap
+        context are unchanged stay pinned to their previous column and
+        only the drifted remainder is re-opened (falling back to a
+        warm-started cold solve when nothing carries over)."""
         wl = workload if over_provision <= 0 else Workload(
             workload.buckets, workload.rates * (1 + over_provision),
             name=workload.name + f"+op{over_provision}")
@@ -172,6 +183,19 @@ class Melange:
                              chip_caps=chip_caps,
                              min_ondemand_frac=min_ondemand_frac,
                              replacement_delay_s=replacement_delay_s)
+        if prev is not None and prev.problem is not None:
+            # incremental re-solve off the previous allocation: the tp=1
+            # pre-solve is skipped — the previous solution already seeds
+            # the search, and unchanged slices stay pinned
+            sol = solve_incremental(
+                prob, np.asarray(prev.solution.assignment, dtype=int),
+                prev_prob=prev.problem, time_budget_s=time_budget_s)
+            if sol is None:
+                return None
+            counts = sol.by_gpu(prob.gpu_names)
+            return Allocation(counts, sol.cost, sol, self.profile, wl,
+                              solution_gpu_names=prob.gpu_names,
+                              problem=prob)
         # hierarchical warm start for TP-expanded catalogs: the tp=1
         # sub-catalog solution is a feasible point of the full problem and
         # enters the candidate pool, so the returned cost never exceeds the
@@ -202,7 +226,7 @@ class Melange:
             return None
         counts = sol.by_gpu(prob.gpu_names)
         alloc = Allocation(counts, sol.cost, sol, self.profile, wl,
-                           solution_gpu_names=prob.gpu_names)
+                           solution_gpu_names=prob.gpu_names, problem=prob)
         return alloc
 
     def single_type_baseline(self, workload: Workload, gpu: str,
@@ -372,10 +396,17 @@ class MelangeFleet:
         sol_m = ILPSolution(assign, counts, float(np.sum(counts * costs)),
                             sol.optimal, sol.solve_time_s, nodes=sol.nodes,
                             stats=sol.stats)
+        # local view of the stacked ILP (this model's slice rows x its
+        # column block) — what the next fleet allocate() diffs against to
+        # pin this model's unchanged slices in the incremental re-solve
+        lprob = ILPProblem(loads[:, k * G:(k + 1) * G].copy(), costs,
+                           list(fp.gpu_names),
+                           fp.prob.bucket_of_slice[lo:hi].copy())
         return Allocation({g: int(c) for g, c in zip(fp.gpu_names, counts)
                            if c > 0},
                           sol_m.cost, sol_m, member.profile, wl,
-                          solution_gpu_names=list(fp.gpu_names))
+                          solution_gpu_names=list(fp.gpu_names),
+                          problem=lprob)
 
     def allocate(self, workloads: Optional[Mapping[str, Workload]] = None, *,
                  models: Optional[Sequence[str]] = None,
@@ -387,7 +418,8 @@ class MelangeFleet:
                  replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
                  warm: bool = True,
-                 warm_siloed: Optional[Mapping[str, Allocation]] = None
+                 warm_siloed: Optional[Mapping[str, Allocation]] = None,
+                 prev: Optional[Mapping[str, Allocation]] = None
                  ) -> Optional[FleetAllocation]:
         """Jointly allocate the (selected) fleet against the shared pool.
 
@@ -399,7 +431,16 @@ class MelangeFleet:
         pass it as ``warm_siloed``: the joint solve then dominates *that
         exact* solution by construction, not just its own quick re-derive.
         ``warm_siloed`` allocations must come from the same workloads /
-        slice factor / GPU subset as this call."""
+        slice factor / GPU subset as this call.
+
+        ``prev`` (model -> its previous per-model :class:`Allocation`,
+        from an earlier fleet allocate over the same models and catalog)
+        switches to the incremental re-solve: the previous stacked loads /
+        costs / assignment are reconstructed from the per-model views and
+        slices with unchanged rows stay pinned to their previous column
+        (cap pins only apply when this call carries no caps — with caps
+        the previous assignment still seeds a warm full solve).  A prev
+        that no longer matches the problem shape is silently ignored."""
         wls = self._workloads(workloads, models)
         if over_provision > 0:
             wls = {m: Workload(w.buckets, w.rates * (1 + over_provision),
@@ -410,6 +451,39 @@ class MelangeFleet:
             self.slice_factor, caps=caps, gpu_subset=gpu_subset,
             chip_caps=chip_caps, min_ondemand_frac=min_ondemand_frac,
             replacement_delay_s=replacement_delay_s)
+        if prev is not None and set(prev) >= set(fp.models):
+            G = fp.n_gpus
+            usable = all(
+                prev[m].problem is not None
+                and prev[m].problem.loads.shape
+                == (fp.slice_ranges[m][1] - fp.slice_ranges[m][0], G)
+                and list(prev[m].solution_gpu_names) == list(fp.gpu_names)
+                and len(prev[m].solution.assignment)
+                == fp.slice_ranges[m][1] - fp.slice_ranges[m][0]
+                for m in fp.models)
+            if usable:
+                N, Mtot = fp.prob.loads.shape
+                prev_loads = np.full((N, Mtot), np.inf)
+                prev_costs = np.empty(Mtot)
+                prev_assign = np.empty(N, dtype=int)
+                for k, m in enumerate(fp.models):
+                    lo, hi = fp.slice_ranges[m]
+                    p = prev[m].problem
+                    prev_loads[lo:hi, k * G:(k + 1) * G] = p.loads
+                    prev_costs[k * G:(k + 1) * G] = p.costs
+                    prev_assign[lo:hi] = (
+                        np.asarray(prev[m].solution.assignment, dtype=int)
+                        + k * G)
+                sol = solve_incremental(
+                    fp.prob, prev_assign,
+                    prev_loads=prev_loads, prev_costs=prev_costs,
+                    caps_clean=not caps and not chip_caps,
+                    time_budget_s=time_budget_s)
+                if sol is None:
+                    return None
+                per_model = {m: self._per_model_view(fp, sol, m, wls[m])
+                             for m in fp.models}
+                return FleetAllocation(per_model, solution=sol)
         warm_assign = None
         main_budget = time_budget_s
         siloed: Optional[Mapping[str, Allocation]] = warm_siloed

@@ -167,7 +167,7 @@ class Autoscaler(_ChipPoolCaps):
             caps=self.caps or None, chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             return None
         diff = allocation_diff(self.current.counts, new.counts)
@@ -206,7 +206,7 @@ class Autoscaler(_ChipPoolCaps):
             chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve "
@@ -324,7 +324,8 @@ class FleetAutoscaler(_ChipPoolCaps):
             over_provision=self.headroom,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s,
+            prev={m: self.current.per_model[m] for m in drifted})
         if new_sub is None:
             return None
         per_model = dict(self.current.per_model)
@@ -391,7 +392,8 @@ class FleetAutoscaler(_ChipPoolCaps):
             over_provision=self.headroom,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s,
+            prev={m: self.current.per_model[m] for m in affected})
         if new_sub is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve the "

@@ -281,3 +281,77 @@ def check_region_case(seed: int, time_budget_s: float = 10.0) -> None:
 def run_region_crosschecks(n_cases: int, seed: int) -> dict:
     """Benchmark gate: how many seeded cases pass ``check_region_case``."""
     return _run_crosschecks(check_region_case, n_cases, seed)
+
+
+# ---------------------------------------------------------------------------
+# dominance pruning: injected dominated columns must never change the
+# optimal cost and must never appear in the pruned solve's output
+# ---------------------------------------------------------------------------
+def small_dominated_problem(rng: np.random.Generator
+                            ) -> tuple[ILPProblem, list[int]]:
+    """A small stacked problem with 1-2 *provably dominated* columns
+    injected: each duplicate copies an existing column's load rows and
+    group-row weights but carries a strictly higher price, so the rule in
+    :mod:`repro.core.dominance` must prune it.
+
+    Returns (problem, injected): the injected columns' indices in the
+    expanded problem, for prune verification.
+    """
+    import dataclasses as _dc
+    base = small_fleet_problem(rng)
+    N, M = base.loads.shape
+    n_inj = int(rng.integers(1, 3))
+    donors = rng.integers(0, M, size=n_inj)
+    loads = base.loads
+    costs = base.costs
+    names = list(base.gpu_names)
+    grows = base.group_rows
+    injected: list[int] = []
+    for d in map(int, donors):
+        j = loads.shape[1]
+        loads = np.concatenate([loads, loads[:, [d]]], axis=1)
+        costs = np.concatenate(
+            [costs, [costs[d] * float(rng.uniform(1.05, 2.0))]])
+        names.append(f"{names[d]}+dup")
+        if grows is not None:
+            grows = np.concatenate([grows, grows[:, [d]]], axis=1)
+        injected.append(j)
+    prob = _dc.replace(base, loads=loads, costs=costs, gpu_names=names,
+                       group_rows=grows)
+    return prob, injected
+
+
+def check_dominance_case(seed: int, time_budget_s: float = 10.0) -> None:
+    """One seeded dominance case: the pruned solve, the unpruned solve,
+    and brute force must agree on feasibility and optimal cost; the
+    injected duplicates must actually be pruned; and the pruned solve
+    must assign no slice (and no instances) to them."""
+    from .dominance import dominance_mask
+    rng = np.random.default_rng(seed)
+    prob, injected = small_dominated_problem(rng)
+    pruned, _dom = dominance_mask(prob)
+    for j in injected:
+        assert pruned[j], f"seed {seed}: injected duplicate {j} not pruned"
+    bf = solve_brute_force(prob)
+    bb = solve(prob, time_budget_s=time_budget_s)             # pruned path
+    raw = solve(prob, time_budget_s=time_budget_s, prune_dominated=False)
+    assert (bf is None) == (bb is None) == (raw is None), \
+        f"seed {seed}: feasibility disagreement (bf={bf}, bb={bb}, raw={raw})"
+    if bf is None:
+        return
+    assert abs(bf.cost - bb.cost) < 1e-6, \
+        f"seed {seed}: pruning changed optimal cost bf={bf.cost} bb={bb.cost}"
+    assert abs(bf.cost - raw.cost) < 1e-6, \
+        f"seed {seed}: unpruned cost mismatch bf={bf.cost} raw={raw.cost}"
+    assert bb.stats is not None and bb.stats.cols_dominated >= len(injected), \
+        f"seed {seed}: stats do not record the injected prunes"
+    for j in injected:
+        assert int(bb.counts[j]) == 0, \
+            f"seed {seed}: pruned column {j} got instances"
+        assert not np.any(np.asarray(bb.assignment, dtype=int) == j), \
+            f"seed {seed}: pruned column {j} got slices"
+
+
+def run_dominance_crosschecks(n_cases: int, seed: int) -> dict:
+    """Benchmark gate: how many seeded cases pass ``check_dominance_case``."""
+    return _run_crosschecks(check_dominance_case, n_cases, seed)

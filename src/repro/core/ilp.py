@@ -46,6 +46,22 @@ the problem's structure (an optimal B is always B_j = ceil(load_j)):
 
 Solutions carry an ``optimal`` flag; tests verify exactness against brute
 force on small instances.
+
+Fast path (PR 8): the greedy and local-search hot loops are vectorized
+over columns (the scalar originals are retained as
+``_greedy_reference``/``_local_search_reference`` and byte-identical
+parity is property-tested); ``solve`` runs a dominance pre-pass
+(``core/dominance.py``) that drops columns provably absent from some
+optimum; and the branch-and-bound stops on a deterministic *stall
+cutoff* — ``stall_nodes``/``stall_comps`` without an incumbent
+improvement — because on large stacked problems the polished warm start
+is almost always already optimal and the search otherwise burns the
+whole deadline proving it.  A stalled solve reports ``optimal=False``.
+``solve_incremental`` re-solves a drifted problem by pinning every
+slice whose loads/costs/caps context is unchanged to its previous
+column (the same structural inf-mask mechanism as the on-demand floor,
+so all four layers enforce the pins by construction) and warm-starting
+from the previous assignment.
 """
 from __future__ import annotations
 
@@ -60,6 +76,18 @@ import numpy as np
 
 INFEASIBLE = float("inf")
 _EPS = 1e-9
+
+# Warm-start budgeting (satellite fix: the warm phase used to inherit the
+# *entire* deadline, starving branch-and-bound on big stacked problems).
+_WARM_GREEDY_FRAC = 0.4         # greedy warm start alone
+_WARM_TOTAL_FRAC = 0.7          # greedy + incumbent polish combined
+# Deterministic stall cutoff: stop the DFS once this many nodes (or
+# candidate compositions) have been expanded since the incumbent last
+# improved.  Counter-based, so the decision is machine-independent.
+# Sized well above what any exactness-tested instance needs to complete
+# (crosscheck/golden searches finish in at most a few hundred nodes).
+_STALL_NODES = 1024
+_STALL_COMPS = 200_000
 
 
 @dataclasses.dataclass
@@ -190,9 +218,17 @@ class SolveStats:
     pruned_cap: int = 0           # per-type or grouped-cap infeasible
     pruned_ceiling: int = 0       # committed-ceiling lower bound
     pruned_deadline: int = 0      # abandoned when the time budget expired
+    pruned_stall: int = 0         # abandoned when the stall cutoff tripped
     deadline_hit: bool = False
+    stalled: bool = False         # stopped by stall cutoff (=> optimal False)
     restricted: bool = False      # branching sets cut to cheapest types
     restricted_retry: bool = False  # unrestricted retry after cap-infeasible
+    warm_budget_s: float = 0.0    # budget cap handed to greedy + polish
+    cols_dominated: int = 0       # columns dropped by the dominance pre-pass
+    # incremental re-solve accounting (solve_incremental)
+    incremental: bool = False
+    pinned_slices: int = 0        # slices pinned to their previous column
+    reopened_slices: int = 0      # slices left free to move
     nodes_by_depth: list[int] = dataclasses.field(default_factory=list)
     # (t_since_solve_start_s, cost) every time the incumbent improved
     incumbents: list[tuple[float, float]] = dataclasses.field(
@@ -205,7 +241,8 @@ class SolveStats:
     @property
     def pruned_total(self) -> int:
         return (self.pruned_lp_bound + self.pruned_cap
-                + self.pruned_ceiling + self.pruned_deadline)
+                + self.pruned_ceiling + self.pruned_deadline
+                + self.pruned_stall)
 
     def consistent(self) -> bool:
         """Conservation check: children expanded + prunes == considered."""
@@ -246,18 +283,18 @@ def _counts_cost(loads_sum: np.ndarray, costs: np.ndarray) -> float:
     return float(np.sum(costs * np.ceil(loads_sum - _EPS)))
 
 
-def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
-                  gmat: Optional[np.ndarray],
-                  max_sweeps: int = 50,
-                  deadline: Optional[float] = None
-                  ) -> tuple[np.ndarray, np.ndarray]:
-    """Single-slice improving moves until a local optimum (in place).
+def _local_search_reference(prob: ILPProblem, assign: np.ndarray,
+                            load: np.ndarray,
+                            gmat: Optional[np.ndarray],
+                            max_sweeps: int = 50,
+                            deadline: Optional[float] = None
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Scalar reference for :func:`_local_search`.
 
-    ``deadline`` (absolute ``time.perf_counter()`` value — monotonic, so
-    an NTP step can't blow or negate the budget) bounds the polish on
-    large stacked problems so solve() honours its caller's time budget;
-    the interim assignment is always feasible, so stopping early is safe.
-    """
+    Kept verbatim (modulo the historical rebind-instead-of-mutate bug)
+    so property tests can assert the vectorized fast path is
+    byte-identical.  Not a solver layer — production calls go through
+    ``_local_search``."""
     N, M = prob.loads.shape
     improved = True
     it = 0
@@ -287,9 +324,11 @@ def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
     return assign, load
 
 
-def _greedy(prob: ILPProblem,
-            deadline: Optional[float] = None) -> Optional[np.ndarray]:
-    """Warm start: assign to argmin marginal-cost, then local moves."""
+def _greedy_reference(prob: ILPProblem,
+                      deadline: Optional[float] = None
+                      ) -> Optional[np.ndarray]:
+    """Scalar reference for :func:`_greedy` (see
+    :func:`_local_search_reference`)."""
     N, M = prob.loads.shape
     gmat = prob.group_matrix()
     assign = np.full(N, -1, dtype=int)
@@ -316,6 +355,142 @@ def _greedy(prob: ILPProblem,
             return None
         assign[i] = best_j
         load[best_j] += prob.loads[i, best_j]
+    assign, _ = _local_search_reference(prob, assign, load, gmat,
+                                        deadline=deadline)
+    return assign
+
+
+def _local_search(prob: ILPProblem, assign: np.ndarray, load: np.ndarray,
+                  gmat: Optional[np.ndarray],
+                  max_sweeps: int = 50,
+                  deadline: Optional[float] = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Single-slice improving moves until a local optimum (in place).
+
+    Vectorized over columns: each slice's M candidate moves are scored
+    with O(1) incremental ceil deltas against running ``counts`` /
+    group-usage state instead of a full load-vector copy and two O(M)
+    cost sums per candidate.  Moves are accepted exactly like the scalar
+    reference (first improving column in index order), so assignments
+    match ``_local_search_reference`` byte for byte.
+
+    Both ``assign`` and ``load`` ARE mutated in place — the caller's
+    arrays always equal the returned ones (which are the same objects).
+
+    ``deadline`` (absolute ``time.perf_counter()`` value — monotonic, so
+    an NTP step can't blow or negate the budget) bounds the polish on
+    large stacked problems so solve() honours its caller's time budget;
+    the interim assignment is always feasible, so stopping early is safe.
+    """
+    N, M = prob.loads.shape
+    if gmat is None:
+        gmat = prob.group_matrix()
+    if N == 0 or M <= 1:
+        return assign, load
+    caps = prob.caps
+    gcaps = prob.grouped_caps
+    costs = prob.costs
+    # running state: counts == ceil(load - eps) and usage == gmat @ counts
+    # at all times.  All quantities are integer-valued float64 well below
+    # 2**53, so the incremental updates are exact — identical to the
+    # reference's from-scratch recomputation.
+    counts = np.ceil(load - _EPS)
+    usage = gmat @ counts if gmat is not None else None
+    improved = True
+    it = 0
+    while improved and it < max_sweeps:
+        improved = False
+        it += 1
+        for i in range(N):
+            if deadline is not None and i % 64 == 0 \
+                    and time.perf_counter() > deadline:
+                return assign, load
+            cur = int(assign[i])
+            lrow = prob.loads[i]
+            fin = np.isfinite(lrow)
+            lrow_safe = np.where(fin, lrow, 0.0)
+            # removing slice i from its current column (count can only drop)
+            cur_load = load[cur] - lrow[cur]
+            cur_count = np.ceil(cur_load - _EPS)
+            d_cur = cur_count - counts[cur]
+            # adding it to each candidate column j
+            cand_counts = np.ceil(load + lrow_safe - _EPS)
+            d_j = cand_counts - counts
+            delta = costs[cur] * d_cur + costs * d_j
+            ok = fin.copy()
+            ok[cur] = False
+            ok &= delta < -_EPS
+            if ok.any() and caps is not None:
+                ok &= cand_counts <= caps + _EPS
+            if ok.any() and gmat is not None:
+                base = usage + gmat[:, cur] * d_cur
+                cand_usage = base[:, None] + gmat * d_j[None, :]
+                ok &= (cand_usage <= gcaps[:, None] + _EPS).all(axis=0)
+            if not ok.any():
+                continue
+            j = int(np.argmax(ok))          # first improving feasible column
+            load[cur] -= prob.loads[i, cur]
+            load[j] += prob.loads[i, j]
+            if gmat is not None:
+                usage += gmat[:, cur] * d_cur \
+                    + gmat[:, j] * (cand_counts[j] - counts[j])
+            counts[cur] = cur_count
+            counts[j] = cand_counts[j]
+            assign[i] = j
+            improved = True
+    return assign, load
+
+
+def _greedy(prob: ILPProblem,
+            deadline: Optional[float] = None) -> Optional[np.ndarray]:
+    """Warm start: assign to argmin marginal-cost, then local moves.
+
+    Vectorized over columns — per slice, the marginal-cost increments and
+    all cap families are evaluated for every column in one batch against
+    running counts/usage state; the winner is picked by the same
+    running-min-with-epsilon fold as ``_greedy_reference``, so the
+    result is byte-identical."""
+    N, M = prob.loads.shape
+    gmat = prob.group_matrix()
+    caps = prob.caps
+    gcaps = prob.grouped_caps
+    costs = prob.costs
+    assign = np.full(N, -1, dtype=int)
+    load = np.zeros(M)
+    counts = np.zeros(M)
+    usage = np.zeros(gmat.shape[0]) if gmat is not None else None
+    # counts only grow, so if even the empty fleet violates a cap (a
+    # negative cap from a stockout) no candidate can ever pass — exactly
+    # the reference's behaviour of rejecting every column.
+    if N and not counts_within_caps(counts, prob, gmat):
+        return None
+    order = np.argsort(-np.nanmax(
+        np.where(np.isfinite(prob.loads), prob.loads, np.nan), axis=1))
+    for i in order:
+        lrow = prob.loads[i]
+        fin = np.isfinite(lrow)
+        lrow_safe = np.where(fin, lrow, 0.0)
+        new_counts = np.ceil(load + lrow_safe - _EPS)
+        dc = new_counts - counts
+        ok = fin.copy()
+        if caps is not None:
+            ok &= new_counts <= caps + _EPS
+        if gmat is not None:
+            cand_usage = usage[:, None] + gmat * dc[None, :]
+            ok &= (cand_usage <= gcaps[:, None] + _EPS).all(axis=0)
+        inc = dc * costs + (costs * lrow_safe) * 1e-6
+        best_j, best_inc = -1, INFEASIBLE
+        for j in np.nonzero(ok)[0]:
+            if inc[j] < best_inc - _EPS:
+                best_inc, best_j = inc[j], j
+        if best_j < 0:
+            return None
+        best_j = int(best_j)
+        assign[i] = best_j
+        load[best_j] += prob.loads[i, best_j]
+        if gmat is not None:
+            usage += gmat[:, best_j] * dc[best_j]
+        counts[best_j] = new_counts[best_j]
     assign, _ = _local_search(prob, assign, load, gmat, deadline=deadline)
     return assign
 
@@ -331,13 +506,22 @@ def _compositions(m: int, k: int):
 
 
 @functools.lru_cache(maxsize=256)
-def _compositions_cached(m: int, k: int):
-    return list(_compositions(m, k))
+def _compositions_cached(m: int, k: int) -> np.ndarray:
+    """(n_comps, k) int64 array, cached: the list->array conversion was
+    a measurable share of solve time on stacked problems (~6.5k rows per
+    multiplicity-32 group).  Read-only — callers fancy-index copies."""
+    arr = np.array(list(_compositions(m, k)), dtype=np.int64).reshape(-1, k)
+    arr.setflags(write=False)
+    return arr
 
 
 def solve(prob: ILPProblem, time_budget_s: float = 5.0,
           max_types_per_group: int = 8,
-          warm_assign: Optional[np.ndarray] = None) -> Optional[ILPSolution]:
+          warm_assign: Optional[np.ndarray] = None,
+          prune_dominated: bool = True,
+          stall_nodes: Optional[int] = _STALL_NODES,
+          stall_comps: Optional[int] = _STALL_COMPS
+          ) -> Optional[ILPSolution]:
     """Exact branch-and-bound at bucket-group granularity.
 
     Slices within a bucket are identical, so the search assigns *counts* per
@@ -352,6 +536,15 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     (by fractional unit cost) feasible types.  When the restriction is
     active the search is a (high-quality) heuristic and ``optimal`` is
     reported False; small instances — all exactness tests — are unaffected.
+
+    ``prune_dominated`` runs the :mod:`repro.core.dominance` pre-pass and
+    solves the reduced catalog (answers provably unchanged; cross-checked
+    against brute force).  ``stall_nodes``/``stall_comps`` stop the DFS
+    once that many nodes / candidate compositions have been expanded with
+    no incumbent improvement — pass ``None`` to disable either and search
+    to the deadline.  Stall cutoffs are pure counters, so whether a given
+    problem stalls is machine-independent; a stalled solve keeps the
+    incumbent and reports ``optimal=False``.
     """
     t0 = time.perf_counter()
     N, M = prob.loads.shape
@@ -366,6 +559,27 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     if not finite.any(axis=1).all():
         return None                                    # some slice fits nowhere
 
+    # ---- dominance pre-pass: drop columns that provably appear in no
+    # optimum, solve the reduced catalog (recursing through this same
+    # layer, so every constraint field is still enforced here), and map
+    # the solution back to original column indices.
+    if prune_dominated and M > 1:
+        from .dominance import reduce_problem
+        red = reduce_problem(prob)
+        if red is not None:
+            wa_red = (red.map_assignment(warm_assign)
+                      if warm_assign is not None else None)
+            remaining = max(0.05, time_budget_s
+                            - (time.perf_counter() - t0))
+            sub = solve(red.problem, time_budget_s=remaining,
+                        max_types_per_group=max_types_per_group,
+                        warm_assign=wa_red, prune_dominated=False,
+                        stall_nodes=stall_nodes, stall_comps=stall_comps)
+            if sub is None:
+                return None
+            return red.expand_solution(sub, M,
+                                       time.perf_counter() - t0)
+
     # ---- warm starts: caller-provided (e.g. the tp=1 sub-catalog optimum),
     # greedy+local-search, LP rounding, single-type
     candidates: list[np.ndarray] = []
@@ -376,7 +590,10 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         # out-of-range column indices
         if wa.shape == (N,) and len(wa) and ((wa >= 0) & (wa < M)).all():
             candidates.append(wa)
-    warm = _greedy(prob, deadline=t0 + time_budget_s)
+    # the warm phase gets a *fraction* of the budget (it used to inherit
+    # the whole deadline and could starve branch-and-bound entirely)
+    stats.warm_budget_s = _WARM_TOTAL_FRAC * time_budget_s
+    warm = _greedy(prob, deadline=t0 + _WARM_GREEDY_FRAC * time_budget_s)
     stats.greedy_s = time.perf_counter() - t0
     if warm is not None:
         candidates.append(warm)
@@ -409,9 +626,9 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     # any-time heuristic, so incumbent quality is what the caller gets
     if best_assign is not None:
         t_polish = time.perf_counter()
-        best_assign, best_load = _local_search(prob, best_assign, best_load,
-                                               gmat,
-                                               deadline=t0 + time_budget_s)
+        best_assign, best_load = _local_search(
+            prob, best_assign, best_load, gmat,
+            deadline=t0 + _WARM_TOTAL_FRAC * time_budget_s)
         best_cost = _counts_cost(best_load, prob.costs)
         stats.polish_s = time.perf_counter() - t_polish
         stats.incumbents.append((time.perf_counter() - t0, best_cost))
@@ -462,8 +679,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
                           key=lambda j: cost_g[gorder[gi]][j]
                           )[:max_types_per_group]
             restricted = True
-        comps = np.array(_compositions_cached(int(mult_o[gi]), len(feas)),
-                         dtype=np.int64).reshape(-1, len(feas))
+        comps = _compositions_cached(int(mult_o[gi]), len(feas))
         unit = cost_g[gorder[gi]][feas]
         inc = comps @ unit
         order = np.argsort(inc, kind="stable")
@@ -471,6 +687,9 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
 
     nodes = 0
     timeout = False
+    stalled = False
+    improve_node = 0
+    improve_comps = 0
     best_counts_per_group = None
     cur_counts: list[Optional[tuple]] = [None] * G
     stats.n_groups = G
@@ -478,19 +697,35 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
     stats.nodes_by_depth = [0] * (G + 1)
 
     def dfs(gi: int, load: np.ndarray, frac: float):
-        nonlocal nodes, timeout, best_cost, best_counts_per_group
-        if timeout:
+        nonlocal nodes, timeout, stalled, best_cost, best_counts_per_group
+        nonlocal improve_node, improve_comps
+        if timeout or stalled:
             return
         nodes += 1
         stats.nodes_by_depth[gi] += 1
         if nodes % 64 == 0 and time.perf_counter() - t0 > time_budget_s:
             timeout = True
             return
+        # deterministic stall cutoff: only once an incumbent exists (a
+        # feasible answer in hand), stop after stall_nodes nodes or
+        # stall_comps candidate compositions without an improvement —
+        # on large stacked problems the polished warm start is usually
+        # already optimal and the search would burn the whole deadline.
+        if best_assign is not None or best_counts_per_group is not None:
+            if (stall_nodes is not None
+                    and nodes - improve_node > stall_nodes) \
+                    or (stall_comps is not None
+                        and stats.comps_considered - improve_comps
+                        > stall_comps):
+                stalled = True
+                return
         if gi == G:
             cost = _counts_cost(load, prob.costs)
             if cost < best_cost - 1e-9:
                 best_cost = cost
                 best_counts_per_group = [c for c in cur_counts]
+                improve_node = nodes
+                improve_comps = stats.comps_considered
                 stats.incumbents.append(
                     (time.perf_counter() - t0, best_cost))
             return
@@ -549,12 +784,16 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
                 # candidates are abandoned, not bound-pruned
                 stats.pruned_deadline += len(ok_idx) - pos - 1
                 return
+            if stalled:
+                stats.pruned_stall += len(ok_idx) - pos - 1
+                return
 
     t_bnb = time.perf_counter()
     dfs(0, np.zeros(M), 0.0)
     stats.bnb_s = time.perf_counter() - t_bnb
     stats.nodes = nodes
     stats.deadline_hit = timeout
+    stats.stalled = stalled
 
     if best_counts_per_group is not None:
         best_assign = np.empty(N, dtype=int)
@@ -573,7 +812,9 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         remaining = time_budget_s - (time.perf_counter() - t0)
         if restricted and remaining > 0.05:
             retry = solve(prob, time_budget_s=remaining,
-                          max_types_per_group=M)
+                          max_types_per_group=M,
+                          prune_dominated=prune_dominated,
+                          stall_nodes=stall_nodes, stall_comps=stall_comps)
             if retry is not None:
                 # the retry's stats are self-consistent on their own; only
                 # stretch the clock to cover the abandoned first attempt
@@ -587,7 +828,7 @@ def solve(prob: ILPProblem, time_budget_s: float = 5.0,
         lj = prob.loads[np.arange(N)[best_assign == j], j].sum()
         counts[j] = int(math.ceil(lj - _EPS))
     return ILPSolution(best_assign, counts, float(np.sum(counts * prob.costs)),
-                       optimal=not timeout and not restricted,
+                       optimal=not timeout and not restricted and not stalled,
                        solve_time_s=time.perf_counter() - t0,
                        nodes=nodes, stats=stats)
 
@@ -620,3 +861,176 @@ def solve_brute_force(prob: ILPProblem) -> Optional[ILPSolution]:
             best = ILPSolution(np.array(combo), counts.astype(int), cost,
                                True, time.perf_counter() - t0)
     return best
+
+
+def _cap_dirty_columns(prob: ILPProblem, prev: ILPProblem
+                       ) -> tuple[bool, np.ndarray]:
+    """Which columns' *cap context* changed between two same-width
+    problems.  Returns ``(clean, dirty)``: ``clean`` is True when every
+    cap family is identical; ``dirty[j]`` marks columns whose caps may
+    have moved (conservatively all columns when a family's structure
+    changed shape or appeared/disappeared)."""
+    M = prob.loads.shape[1]
+    dirty = np.zeros(M, dtype=bool)
+
+    def _same(a, b) -> bool:
+        if a is None or b is None:
+            return a is None and b is None
+        a = np.asarray(a, dtype=float)
+        b = np.asarray(b, dtype=float)
+        return a.shape == b.shape \
+            and bool(np.isclose(a, b, rtol=0.0, atol=0.0).all())
+
+    # per-column availability caps: exact per-column dirt
+    if (prob.caps is None) != (prev.caps is None):
+        dirty[:] = True
+    elif prob.caps is not None and not _same(prob.caps, prev.caps):
+        dirty |= ~np.isclose(np.asarray(prob.caps, dtype=float),
+                             np.asarray(prev.caps, dtype=float),
+                             rtol=0.0, atol=0.0)
+    # chip pools: any change re-opens every pooled column
+    if not (_same(prob.chip_weight, prev.chip_weight)
+            and _same(prob.chip_group, prev.chip_group)
+            and _same(prob.group_caps, prev.group_caps)):
+        if (prob.group_caps is None) != (prev.group_caps is None) \
+                or prob.chip_group is None:
+            dirty[:] = True
+        else:
+            dirty |= np.asarray(prob.chip_group) >= 0
+            if prev.chip_group is not None \
+                    and len(prev.chip_group) == M:
+                dirty |= np.asarray(prev.chip_group) >= 0
+    # general shared-resource rows: columns touched by a changed row
+    if (prob.group_rows is None) != (prev.group_rows is None):
+        dirty[:] = True
+    elif prob.group_rows is not None:
+        gr_new = np.asarray(prob.group_rows, dtype=float)
+        gr_old = np.asarray(prev.group_rows, dtype=float)
+        caps_new = (None if prob.group_row_caps is None
+                    else np.asarray(prob.group_row_caps, dtype=float))
+        caps_old = (None if prev.group_row_caps is None
+                    else np.asarray(prev.group_row_caps, dtype=float))
+        shapes_differ = gr_new.shape != gr_old.shape \
+            or (caps_new is None) != (caps_old is None) \
+            or (caps_new is not None and caps_new.shape != caps_old.shape)
+        if shapes_differ:
+            dirty[:] = True
+        else:
+            row_diff = ~np.isclose(gr_new, gr_old,
+                                   rtol=0.0, atol=0.0).all(axis=1)
+            if caps_new is not None:
+                row_diff |= ~np.isclose(caps_new, caps_old,
+                                        rtol=0.0, atol=0.0)
+            if row_diff.any():
+                dirty |= (np.abs(gr_new[row_diff]) > 0).any(axis=0)
+                dirty |= (np.abs(gr_old[row_diff]) > 0).any(axis=0)
+    return bool(not dirty.any()), dirty
+
+
+def solve_incremental(prob: ILPProblem,
+                      prev_assign: Optional[np.ndarray],
+                      *,
+                      prev_prob: Optional[ILPProblem] = None,
+                      prev_loads: Optional[np.ndarray] = None,
+                      prev_costs: Optional[np.ndarray] = None,
+                      caps_clean: bool = False,
+                      time_budget_s: float = 5.0,
+                      max_types_per_group: int = 8
+                      ) -> Optional[ILPSolution]:
+    """Per-column incremental re-solve, warm-started from ``prev_assign``.
+
+    Generalizes the ``FleetAutoscaler``'s per-model partial re-solve:
+    compare the drifted problem against the previous one (``prev_prob``,
+    or raw ``prev_loads``/``prev_costs`` plus a ``caps_clean`` flag for
+    stacked fleet problems whose previous caps aren't reconstructable)
+    and *pin* every slice whose load row is unchanged and which cannot
+    use any column whose price or cap context changed: its row is masked
+    ``inf`` everywhere except the previously assigned column.  (A dirty
+    column re-opens every slice that could use it, so a price drop
+    elsewhere is always allowed to steal otherwise-unchanged slices —
+    the controllers' price-chasing behavior survives pinning.)  Pinning
+    uses the same structural inf-mask mechanism as the on-demand floor,
+    so all four solver layers enforce the pins by construction, and the
+    pinned problem still carries the NEW problem's full cap set — the
+    reduced solve can never emit a cap-violating allocation.  If the
+    pinned problem is infeasible (caps tightened underneath a pin), fall
+    back to a cold warm-started solve of the full problem.
+
+    Any solve with pinned slices is a restriction of the true problem,
+    so the returned solution conservatively reports ``optimal=False``.
+    Stats carry ``incremental`` / ``pinned_slices`` / ``reopened_slices``.
+    """
+    t0 = time.perf_counter()
+    N, M = prob.loads.shape
+
+    def _mark(sol: Optional[ILPSolution], pinned: int) -> \
+            Optional[ILPSolution]:
+        if sol is not None:
+            sol.solve_time_s = time.perf_counter() - t0
+            if sol.stats is not None:
+                sol.stats.incremental = True
+                sol.stats.pinned_slices = pinned
+                sol.stats.reopened_slices = N - pinned
+        return sol
+
+    def _cold(wa: Optional[np.ndarray]) -> Optional[ILPSolution]:
+        remaining = max(0.05, time_budget_s - (time.perf_counter() - t0))
+        return _mark(solve(prob, time_budget_s=remaining,
+                           max_types_per_group=max_types_per_group,
+                           warm_assign=wa), 0)
+
+    a: Optional[np.ndarray] = None
+    if prev_assign is not None:
+        a = np.asarray(prev_assign, dtype=int)
+        if a.shape != (N,) or (N and not ((a >= 0) & (a < M)).all()):
+            a = None
+    if a is None or N == 0:
+        return _cold(a)
+
+    if prev_prob is not None:
+        if prev_prob.loads.shape != prob.loads.shape \
+                or list(prev_prob.gpu_names) != list(prob.gpu_names):
+            return _cold(None)          # different catalog: nothing carries
+        prev_loads = prev_prob.loads
+        prev_costs = prev_prob.costs
+        caps_clean, cap_dirty = _cap_dirty_columns(prob, prev_prob)
+    else:
+        if prev_loads is None or prev_costs is None \
+                or np.asarray(prev_loads).shape != prob.loads.shape \
+                or np.asarray(prev_costs).shape != prob.costs.shape:
+            return _cold(a)
+        prev_loads = np.asarray(prev_loads, dtype=float)
+        prev_costs = np.asarray(prev_costs, dtype=float)
+        cap_dirty = np.zeros(M, dtype=bool)
+        if not caps_clean:
+            cap_dirty[:] = True
+
+    dirty_col = cap_dirty | ~np.isclose(prob.costs, prev_costs,
+                                        rtol=0.0, atol=0.0)
+    row_clean = np.isclose(prob.loads, prev_loads,
+                           rtol=0.0, atol=0.0).all(axis=1)
+    # a dirty column (price or cap context changed) re-opens every slice
+    # that could *use* it, not just the slices assigned to it — a price
+    # drop elsewhere must be allowed to steal an otherwise-unchanged slice
+    pinned = row_clean \
+        & ~(np.isfinite(prob.loads) & dirty_col[None, :]).any(axis=1) \
+        & np.isfinite(prob.loads[np.arange(N), a])
+    n_pin = int(pinned.sum())
+    if n_pin == 0:
+        return _cold(a)
+
+    ploads = prob.loads.copy()
+    pin_idx = np.nonzero(pinned)[0]
+    kept = ploads[pin_idx, a[pin_idx]]
+    ploads[pin_idx, :] = np.inf
+    ploads[pin_idx, a[pin_idx]] = kept
+    pinned_prob = dataclasses.replace(prob, loads=ploads)
+    sol = solve(pinned_prob, time_budget_s=time_budget_s,
+                max_types_per_group=max_types_per_group, warm_assign=a)
+    if sol is None:
+        # pins made the new cap set unreachable: re-open everything
+        return _cold(a)
+    # pinned rows keep their true load value at the assigned column, so
+    # counts/cost computed on the pinned loads equal the real problem's
+    sol.optimal = False
+    return _mark(sol, n_pin)

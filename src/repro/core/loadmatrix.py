@@ -86,19 +86,26 @@ def build_problem(workload: Workload, profile: Profile,
     accs = [profile.gpus[g] for g in gpu_names]
     quota = _ondemand_quota(workload, slice_factor, min_ondemand_frac)
     seen: dict[int, int] = {}
-    loads = np.full((N, M), np.inf)
     bucket_of = np.zeros(N, dtype=int)
+    rate_of = np.zeros(N)
+    pinned_of = np.zeros(N, dtype=bool)
     for i, (bi, rate) in enumerate(slices):
         bucket_of[i] = bi
-        pinned = seen.get(bi, 0) < quota.get(bi, 0)
+        rate_of[i] = rate
+        pinned_of[i] = seen.get(bi, 0) < quota.get(bi, 0)
         seen[bi] = seen.get(bi, 0) + 1
-        for j, acc in enumerate(accs):
-            if acc.is_spot and pinned:
-                continue                       # floor: on-demand only
-            tput = (profile.max_tput[gpu_names[j]][bi]
-                    * availability(acc, replacement_delay_s))
-            if tput > 0:
-                loads[i, j] = rate / tput
+    # vectorized row assembly: tput per (bucket, column) computed once,
+    # then one masked divide — bit-identical to the old per-entry
+    # ``rate / tput`` loop (same two operands per element)
+    avail = np.array([availability(acc, replacement_delay_s)
+                      for acc in accs])
+    spot_mask = np.array([acc.is_spot for acc in accs])
+    tput = (np.stack([np.asarray(profile.max_tput[g], dtype=float)
+                      for g in gpu_names], axis=1) * avail)   # (B, M)
+    ok = tput[bucket_of] > 0
+    ok &= ~(pinned_of[:, None] & spot_mask[None, :])  # floor: on-demand only
+    loads = np.full((N, M), np.inf)
+    np.divide(rate_of[:, None], tput[bucket_of], out=loads, where=ok)
     costs = np.array([acc.price_hr for acc in accs])
     caps_arr = None
     if caps is not None:
@@ -235,18 +242,23 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
         quota = _ondemand_quota(workload, slice_factor, min_ondemand_frac)
         seen: dict[int, int] = {}
         lo = len(slice_rows)
+        # vectorized row assembly, same recipe as build_problem: tput per
+        # (bucket, column) once, then a masked ``rate / tput`` divide with
+        # the identical operands the old per-entry loop used
+        m_accs = [profile.gpus[g] for g in gpu_names]
+        avail = np.array([availability(a, replacement_delay_s)
+                          for a in m_accs])
+        m_spot = np.array([a.is_spot for a in m_accs])
+        tput = (np.stack([np.asarray(profile.max_tput[g], dtype=float)
+                          for g in gpu_names], axis=1) * avail)   # (B, G)
         for bi, rate in workload.slices(slice_factor):
             pinned = seen.get(bi, 0) < quota.get(bi, 0)
             seen[bi] = seen.get(bi, 0) + 1
             row = np.full(M, np.inf)
-            for j, g in enumerate(gpu_names):
-                acc = profile.gpus[g]
-                if acc.is_spot and pinned:
-                    continue
-                tput = (profile.max_tput[g][bi]
-                        * availability(acc, replacement_delay_s))
-                if tput > 0:
-                    row[k * G + j] = rate / tput
+            ok = tput[bi] > 0
+            if pinned:
+                ok &= ~m_spot
+            np.divide(rate, tput[bi], out=row[k * G:(k + 1) * G], where=ok)
             slice_rows.append(row)
             # per-model bucket-id offset: slices of different models are
             # never interchangeable even when their load rows coincide

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.accelerators import Accelerator, chips_by_pool
 from repro.core.allocator import group_cost_by, group_counts_by
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModelParams, ModelPerf
-from repro.core.ilp import ILPSolution, solve
+from repro.core.ilp import ILPSolution, solve, solve_incremental
 from repro.core.profiler import Profile
 from repro.core.workload import Bucket, Workload
 
@@ -144,7 +144,8 @@ class RegionalMelange:
                  replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
                  warm: bool = True,
-                 warm_from: Optional[RegionAllocation] = None
+                 warm_from: Optional[RegionAllocation] = None,
+                 prev: Optional[RegionAllocation] = None
                  ) -> Optional[RegionAllocation]:
         """Jointly place the whole geography's demand across every
         region's columns.  The best single-region deployment (when one is
@@ -154,13 +155,31 @@ class RegionalMelange:
         ``best_single_region`` with a bigger budget) should pass it as
         ``warm_from``: the joint solve then dominates *that exact*
         solution by construction.  ``warm_from`` must come from the same
-        demand / slice factor / caps as this call."""
+        demand / slice factor / caps as this call.
+
+        ``prev`` (an earlier allocation from this instance) switches to
+        the incremental re-solve: demand slices whose load row, price, and
+        cap context are unchanged stay pinned to their previous column and
+        only the drifted remainder is re-opened (falling back to a
+        warm-started cold solve when nothing carries over)."""
         wls = self._demand(demand, over_provision)
         rp = build_region_problem(
             wls, self.profiles, slice_factor=self.slice_factor,
             caps=caps, chip_caps=chip_caps, gpu_subset=gpu_subset,
             min_ondemand_frac=min_ondemand_frac,
             replacement_delay_s=replacement_delay_s)
+        if prev is not None:
+            # the single-region pre-solve is skipped: the previous
+            # allocation already seeds the search
+            sol = solve_incremental(
+                rp.prob, np.asarray(prev.solution.assignment, dtype=int),
+                prev_prob=prev.region_problem.prob,
+                time_budget_s=time_budget_s)
+            if sol is None:
+                return None
+            counts = sol.by_gpu(rp.gpu_names)
+            return RegionAllocation(counts, sol.cost, sol, rp, wls,
+                                    self.profiles.sim_profile)
         warm_assign = None
         main_budget = time_budget_s
         if warm_from is not None:

@@ -102,7 +102,7 @@ class RegionalAutoscaler(_ChipPoolCaps):
             caps=self.caps or None, chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             return None
         diff = allocation_diff(self.current.counts, new.counts)
@@ -138,7 +138,7 @@ class RegionalAutoscaler(_ChipPoolCaps):
             chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
-            time_budget_s=self.solver_budget_s)
+            time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             raise RuntimeError(
                 "infeasible after failure: no region's capacity can serve "

@@ -1,0 +1,303 @@
+"""Solver fast path (PR 8): vectorized layers vs. scalar references,
+dominance pruning, incremental re-solve, and the warm-start budget split.
+
+The vectorized ``_greedy`` / ``_local_search`` must be *byte-identical*
+to the retained scalar reference implementations — not merely equal in
+cost — so every golden solved before the fast path stays bit-stable.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crosscheck import (run_dominance_crosschecks,
+                                   small_dominated_problem,
+                                   small_fleet_problem,
+                                   small_region_problem,
+                                   small_tier_problem)
+from repro.core.dominance import dominance_mask, reduce_problem
+from repro.core.ilp import (ILPProblem, _greedy, _greedy_reference,
+                            _local_search, _local_search_reference, solve,
+                            solve_brute_force, solve_incremental)
+
+_EPS = 1e-9
+
+
+def _rand_problem(rng) -> ILPProblem:
+    """Dense-ish random instance (caps sometimes present)."""
+    N = int(rng.integers(3, 10))
+    M = int(rng.integers(2, 5))
+    loads = rng.uniform(0.05, 0.9, size=(N, M))
+    loads = np.where(rng.random((N, M)) < 0.15, np.inf, loads)
+    loads[:, 0] = np.where(np.isfinite(loads[:, 0]), loads[:, 0], 0.5)
+    costs = rng.uniform(0.5, 8.0, size=M)
+    buckets = np.sort(rng.integers(0, 3, size=N))
+    caps = (rng.integers(2, 6, size=M).astype(float)
+            if rng.random() < 0.5 else None)
+    return ILPProblem(loads, costs, [f"g{j}" for j in range(M)], buckets,
+                      caps)
+
+
+def _corpus_problem(rng) -> ILPProblem:
+    """One instance drawn from the full crosscheck corpus: stacked fleet,
+    price-tiered, multi-region, or plain random — every constraint family
+    the solver layers must enforce."""
+    kind = int(rng.integers(0, 4))
+    if kind == 0:
+        return small_fleet_problem(rng)
+    if kind == 1:
+        return small_tier_problem(rng)[0]
+    if kind == 2:
+        return small_region_problem(rng)[0]
+    return _rand_problem(rng)
+
+
+def _check_greedy_parity(prob: ILPProblem) -> None:
+    ref = _greedy_reference(prob)
+    fast = _greedy(prob)
+    if ref is None:
+        assert fast is None
+    else:
+        assert fast is not None
+        np.testing.assert_array_equal(fast, ref)
+
+
+# ---------------------------------------------------------------------------
+# vectorized layers == scalar references, byte for byte
+# ---------------------------------------------------------------------------
+def test_vectorized_greedy_matches_reference_across_corpus():
+    rng = np.random.default_rng(7)
+    for _ in range(60):
+        _check_greedy_parity(_corpus_problem(rng))
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=30, deadline=None)
+def test_property_vectorized_greedy_matches_reference(seed):
+    _check_greedy_parity(_corpus_problem(np.random.default_rng(seed)))
+
+
+def _random_feasible_start(rng, prob):
+    """A random finite-column assignment plus its per-column loads."""
+    N, M = prob.loads.shape
+    assign = np.empty(N, dtype=int)
+    for i in range(N):
+        finite = np.nonzero(np.isfinite(prob.loads[i]))[0]
+        assign[i] = int(rng.choice(finite))
+    load = np.zeros(M)
+    for i in range(N):
+        load[assign[i]] += prob.loads[i, assign[i]]
+    return assign, load
+
+
+def test_vectorized_local_search_matches_reference_and_is_in_place():
+    """Parity with the scalar reference AND the satellite-A regression:
+    the documented in-place contract is real — the arrays passed in ARE
+    the arrays returned, and the passed-in ``load`` matches the returned
+    assignment's loads (the historical rebind bug silently diverged)."""
+    rng = np.random.default_rng(13)
+    for _ in range(60):
+        prob = _corpus_problem(rng)
+        a0, l0 = _random_feasible_start(rng, prob)
+        gmat = prob.group_matrix()
+        a_in, l_in = a0.copy(), l0.copy()
+        a_out, l_out = _local_search(prob, a_in, l_in, gmat)
+        a_ref, l_ref = _local_search_reference(prob, a0.copy(), l0.copy(),
+                                               gmat)
+        np.testing.assert_array_equal(a_out, a_ref)
+        np.testing.assert_array_equal(l_out, l_ref)
+        # in-place contract: same objects, and the caller's load vector
+        # agrees with the returned assignment
+        assert a_out is a_in and l_out is l_in
+        recomputed = np.zeros(prob.loads.shape[1])
+        for i, j in enumerate(a_out):
+            recomputed[j] += prob.loads[i, j]
+        np.testing.assert_allclose(l_in, recomputed, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# dominance pruning never changes the optimal cost
+# ---------------------------------------------------------------------------
+def test_dominance_crosschecks_20_of_20():
+    res = run_dominance_crosschecks(20, seed=1234)
+    assert res == {"checked": 20, "passed": 20}
+
+
+def test_dominance_mask_prunes_injected_duplicates():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        prob, injected = small_dominated_problem(rng)
+        pruned, dominator = dominance_mask(prob)
+        for j in injected:
+            assert pruned[j]
+            # the resolved dominator is itself kept
+            assert not pruned[dominator[j]]
+        red = reduce_problem(prob)
+        assert red is not None
+        assert red.n_pruned == int(pruned.sum())
+        # kept columns partition: every column is kept xor pruned
+        assert len(red.keep) + red.n_pruned == prob.loads.shape[1]
+
+
+def test_dominance_prune_transparent_in_solve():
+    """``solve`` with pruning on must agree with pruning off AND brute
+    force on the whole corpus (most corpus instances have nothing to
+    prune — the pre-pass must be a strict no-op there)."""
+    rng = np.random.default_rng(17)
+    for _ in range(20):
+        prob = _corpus_problem(rng)
+        bf = solve_brute_force(prob)
+        on = solve(prob, time_budget_s=10)
+        off = solve(prob, time_budget_s=10, prune_dominated=False)
+        assert (bf is None) == (on is None) == (off is None)
+        if bf is None:
+            continue
+        assert abs(on.cost - bf.cost) < 1e-6
+        assert abs(off.cost - bf.cost) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# incremental re-solve
+# ---------------------------------------------------------------------------
+def test_incremental_pins_clean_rows_and_matches_cold_on_full_drift():
+    rng = np.random.default_rng(11)
+    partial_seen = 0
+    for _ in range(30):
+        prob = small_fleet_problem(rng)
+        cold = solve(prob, time_budget_s=10)
+        if cold is None:
+            continue
+        N = prob.loads.shape[0]
+        drift = rng.random(N) < 0.5
+        loads2 = prob.loads.copy()
+        scale = rng.uniform(1.05, 1.3)
+        loads2[drift] = np.where(np.isfinite(loads2[drift]),
+                                 loads2[drift] * scale, np.inf)
+        prob2 = dataclasses.replace(prob, loads=loads2)
+        inc = solve_incremental(prob2, cold.assignment, prev_prob=prob,
+                                time_budget_s=10)
+        cold2 = solve(prob2, time_budget_s=10)
+        if cold2 is None:
+            # caps may have become unreachable; incremental must agree
+            assert inc is None
+            continue
+        assert inc is not None
+        st_ = inc.stats
+        assert st_ is not None and st_.incremental
+        n_clean = int((~drift).sum())
+        if drift.all():
+            # nothing pinned: warm cold solve, exact parity with cold
+            assert st_.pinned_slices == 0
+            assert abs(inc.cost - cold2.cost) < 1e-6
+        elif st_.pinned_slices:
+            partial_seen += 1
+            # a pinned solve is a restriction: never reported optimal
+            assert not inc.optimal
+            assert st_.pinned_slices == n_clean
+            assert st_.reopened_slices == N - n_clean
+            # pinned slices keep their previous column
+            a = np.asarray(inc.assignment, dtype=int)
+            prev = np.asarray(cold.assignment, dtype=int)
+            np.testing.assert_array_equal(a[~drift], prev[~drift])
+        # the pinned solve is a restriction: never better than optimal
+        assert inc.cost >= cold2.cost - 1e-9
+    assert partial_seen >= 3, "corpus never exercised the pinned path"
+
+
+def test_incremental_price_drop_reopens_pinned_slices():
+    """A dirty column re-opens every slice that could use it: after a
+    price drop on an unused column, pinned slices must still be able to
+    move there (the controllers' price-chasing behavior)."""
+    loads = np.full((4, 2), 0.4)
+    prob = ILPProblem(loads, np.array([1.0, 10.0]), ["a", "b"],
+                      np.zeros(4, dtype=int))
+    cold = solve(prob, time_budget_s=5)
+    assert cold is not None and set(cold.assignment) == {0}
+    # column b becomes nearly free; loads unchanged
+    prob2 = dataclasses.replace(prob, costs=np.array([1.0, 0.01]))
+    inc = solve_incremental(prob2, cold.assignment, prev_prob=prob,
+                            time_budget_s=5)
+    assert inc is not None
+    assert set(np.asarray(inc.assignment)) == {1}, \
+        "pinning must not trap slices on a now-expensive column"
+    assert inc.stats.pinned_slices == 0
+
+
+def test_incremental_garbage_prev_assign_falls_back_cold():
+    prob = _rand_problem(np.random.default_rng(5))
+    bad = np.full(prob.loads.shape[0], 99)
+    inc = solve_incremental(prob, bad, prev_prob=prob, time_budget_s=5)
+    cold = solve(prob, time_budget_s=5)
+    assert (inc is None) == (cold is None)
+    if cold is not None:
+        assert abs(inc.cost - cold.cost) < 1e-6
+        assert inc.stats.pinned_slices == 0
+
+
+def test_melange_allocate_prev_threads_incremental():
+    """End-to-end: ``Melange.allocate(prev=...)`` runs the incremental
+    path and pins the undrifted buckets' slices."""
+    from repro.core import Melange, ModelPerf, PAPER_GPUS, Workload, \
+        make_workload
+    mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12, slice_factor=4)
+    wl = make_workload("mixed", 4)
+    a0 = mel.allocate(wl, time_budget_s=2.0)
+    assert a0 is not None and a0.problem is not None
+    rates2 = wl.rates.copy()
+    rates2[int(np.argmax(rates2))] *= 1.5      # drift ONE bucket only
+    a1 = mel.allocate(Workload(wl.buckets, rates2, name="drifted"),
+                      time_budget_s=2.0, prev=a0)
+    assert a1 is not None
+    st_ = a1.solution.stats
+    assert st_ is not None and st_.incremental
+    assert st_.pinned_slices > 0
+    assert not a1.solution.optimal
+
+
+# ---------------------------------------------------------------------------
+# satellite B: the warm start must not starve branch-and-bound
+# ---------------------------------------------------------------------------
+def test_bnb_gets_nonzero_time_on_budget_bound_problem():
+    rng = np.random.default_rng(23)
+    N, M = 600, 4
+    loads = rng.uniform(0.01, 0.4, size=(N, M))
+    prob = ILPProblem(loads, rng.uniform(0.5, 8.0, size=M),
+                      [f"g{j}" for j in range(M)],
+                      np.repeat(np.arange(20), N // 20))
+    budget = 0.25
+    sol = solve(prob, time_budget_s=budget)
+    assert sol is not None
+    st_ = sol.stats
+    assert st_ is not None
+    assert st_.warm_budget_s == pytest.approx(0.7 * budget)
+    # greedy + polish stay within their budget fraction (small slack for
+    # the per-64-slice deadline check granularity)
+    assert st_.greedy_s + st_.polish_s <= st_.warm_budget_s + 0.1
+    assert st_.bnb_s > 0.0, "warm start starved branch-and-bound"
+
+
+# ---------------------------------------------------------------------------
+# stall cutoff
+# ---------------------------------------------------------------------------
+def test_stall_cutoff_trips_and_none_disables():
+    rng = np.random.default_rng(31)
+    N, M = 60, 3
+    loads = rng.uniform(0.05, 0.6, size=(N, M))
+    prob = ILPProblem(loads, rng.uniform(0.5, 8.0, size=M),
+                      [f"g{j}" for j in range(M)],
+                      np.repeat(np.arange(6), N // 6))
+    tight = solve(prob, time_budget_s=10, stall_nodes=1, stall_comps=None)
+    full = solve(prob, time_budget_s=10, stall_nodes=None, stall_comps=None)
+    assert tight is not None and full is not None
+    assert full.stats is not None and not full.stats.stalled
+    assert full.stats.pruned_stall == 0
+    if tight.stats.stalled:
+        # a stalled search abandoned work, so it may not claim optimality
+        # (pruned_stall counts only abandoned *siblings* and can be 0)
+        assert not tight.optimal
+    # a stalled search still returns a feasible incumbent, never better
+    # than the exhaustive one
+    assert tight.cost >= full.cost - 1e-9
+    if not full.stats.deadline_hit:
+        assert full.optimal
