@@ -17,11 +17,12 @@ no dependency to the environment it protects.
 """
 from .core import (FileLint, LintResult, Rule, RULES, Violation,
                    iter_py_files, lint_paths, lint_source, load_baseline,
-                   write_baseline, rule)
+                   load_baseline_entries, write_baseline, rule)
 from . import rules as _rules  # noqa: F401  (registers the rule set)
+from . import dataflow  # noqa: F401  (units/aliasing engine)
 
 __all__ = [
-    "FileLint", "LintResult", "Rule", "RULES", "Violation",
+    "FileLint", "LintResult", "Rule", "RULES", "Violation", "dataflow",
     "iter_py_files", "lint_paths", "lint_source", "load_baseline",
-    "write_baseline", "rule",
+    "load_baseline_entries", "write_baseline", "rule",
 ]

@@ -11,11 +11,22 @@ import json
 import sys
 from pathlib import Path
 
-from .core import (RULES, lint_paths, load_baseline, write_baseline)
+from .core import (RULES, lint_paths, load_baseline_entries,
+                   write_baseline)
 
 _PKG_ROOT = Path(__file__).resolve().parents[1]          # src/repro
 _REPO_ROOT = Path(__file__).resolve().parents[3]         # repo checkout
 _DEFAULT_BASELINE = _REPO_ROOT / ".lint-baseline.json"
+
+
+def _default_paths() -> list[Path]:
+    """src/repro plus the tests/ and benchmarks/ trees when present."""
+    out = [_PKG_ROOT]
+    for extra in ("benchmarks", "tests"):
+        p = _REPO_ROOT / extra
+        if p.is_dir():
+            out.append(p)
+    return out
 
 
 def main(argv=None) -> int:
@@ -40,6 +51,9 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current violations to the baseline file and "
                          "exit")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline file keeping only entries "
+                         "that still match a violation, and exit")
     ap.add_argument("--list-rules", action="store_true",
                     help="list registered rules and exit")
     ap.add_argument("--explain", metavar="RULE", default=None,
@@ -63,16 +77,32 @@ def main(argv=None) -> int:
         return 0
 
     rule_names = args.rules.split(",") if args.rules else None
-    paths = args.paths or [_PKG_ROOT]
+    paths = args.paths or _default_paths()
 
     baseline_path = args.baseline or (
         _DEFAULT_BASELINE if _DEFAULT_BASELINE.exists() else None)
-    baseline = None
+    entries = None
     if baseline_path is not None and not args.no_baseline \
             and not args.write_baseline and Path(baseline_path).exists():
-        baseline = load_baseline(baseline_path)
+        entries = load_baseline_entries(baseline_path)
 
-    result = lint_paths(paths, rule_names, baseline)
+    if args.prune_baseline:
+        if not entries:
+            print("no baseline entries to prune")
+            return 0
+        # re-lint WITHOUT filtering, keep entries that still match
+        raw = lint_paths(paths, rule_names)
+        live = {v.fingerprint() for v in raw.violations}
+        kept = [e for e in entries if e.get("fingerprint") in live]
+        out = baseline_path
+        Path(out).write_text(json.dumps(
+            {"version": 1, "entries": kept}, indent=1) + "\n")
+        print(f"pruned {len(entries) - len(kept)} stale entr"
+              f"{'y' if len(entries) - len(kept) == 1 else 'ies'}; "
+              f"{len(kept)} kept in {out}")
+        return 0
+
+    result = lint_paths(paths, rule_names, baseline_entries=entries)
 
     if args.write_baseline:
         out = args.baseline or _DEFAULT_BASELINE
@@ -87,6 +117,7 @@ def main(argv=None) -> int:
             "files": result.n_files,
             "parse_errors": result.n_parse_errors,
             "baseline_filtered": result.baseline_filtered,
+            "stale_baseline": len(result.stale_baseline),
             "rules": sorted(RULES) if rule_names is None else rule_names,
         }, indent=1))
     else:

@@ -86,6 +86,8 @@ class Rule:
     summary: str = ""
     explain: str = ""
     node_types: tuple = ()
+    #: rules that inspect other rules' outcomes (dead-pragma) finish last
+    runs_last: bool = False
 
     def applies_to(self, rel: str) -> bool:
         return True
@@ -113,18 +115,25 @@ class FileLint:
     """
 
     def __init__(self, rel: str, source: str,
-                 rules: Sequence[Rule]) -> None:
+                 rules: Sequence[Rule],
+                 selected: Optional[set] = None) -> None:
         self.rel = rel
         self.source = source
         self.lines = source.splitlines()
         self.tree = ast.parse(source, filename=rel)
         self.rules = list(rules)
+        #: rule names requested for this run; None means the full set.
+        #: dead-pragma uses this to avoid calling a pragma dead when the
+        #: rule it suppresses simply wasn't selected.
+        self.selected = selected
         self.violations: list[Violation] = []
         self.func_stack: list[ast.AST] = []
         # import-alias tables, filled during the walk (imports precede use)
         self.aliases: dict[str, str] = {}        # "np" -> "numpy"
         self.from_imports: dict[str, str] = {}   # "pc" -> "time.perf_counter"
         self._pragmas = self._parse_pragmas()
+        #: pragma line -> tags that actually suppressed something
+        self.pragma_hits: dict[int, set[str]] = {}
         self._dispatch: dict[type, list[Rule]] = {}
         for r in self.rules:
             for t in r.node_types:
@@ -142,12 +151,17 @@ class FileLint:
     def allowed(self, rule_name: str, lineno: int) -> bool:
         tags = self._pragmas.get(lineno)
         if tags and (rule_name in tags or "*" in tags):
+            self.pragma_hits.setdefault(lineno, set()).add(
+                rule_name if rule_name in tags else "*")
             return True
         # the line above counts only as a *standalone* pragma comment —
         # a trailing pragma on code never spills onto the next line
         above = self._pragmas.get(lineno - 1)
         if above and self.line_text(lineno - 1).strip().startswith("#"):
-            return rule_name in above or "*" in above
+            if rule_name in above or "*" in above:
+                self.pragma_hits.setdefault(lineno - 1, set()).add(
+                    rule_name if rule_name in above else "*")
+                return True
         return False
 
     # ---- rule surface ----------------------------------------------------
@@ -172,9 +186,13 @@ class FileLint:
             return self.lines[lineno - 1]
         return ""
 
-    def report(self, r: Rule, node: ast.AST, message: str) -> None:
+    def report(self, r: Rule, node: ast.AST, message: str,
+               force: bool = False) -> None:
+        """File a violation.  ``force`` bypasses pragma suppression —
+        used by dead-pragma on ``allow[*]`` lines, which would otherwise
+        self-suppress their own deadness report."""
         lineno = getattr(node, "lineno", 1)
-        if self.allowed(r.name, lineno):
+        if not force and self.allowed(r.name, lineno):
             return
         self.violations.append(Violation(
             rule=r.name, path=self.rel, line=lineno,
@@ -185,7 +203,11 @@ class FileLint:
     def run(self) -> list[Violation]:
         self._walk(self.tree)
         for r in self.rules:
-            r.finish(self)
+            if not r.runs_last:
+                r.finish(self)
+        for r in self.rules:
+            if r.runs_last:
+                r.finish(self)
         self.violations.sort(key=lambda v: (v.line, v.col, v.rule))
         return self.violations
 
@@ -241,15 +263,18 @@ def lint_source(source: str, rel: str,
     rules = _make_rules(rel, rule_names)
     if not rules:
         return []
-    return FileLint(rel, source, rules).run()
+    selected = set(rule_names) if rule_names is not None else None
+    return FileLint(rel, source, rules, selected=selected).run()
 
 
 def repo_rel(path: Path) -> str:
-    """Repo-style path: suffix starting at the last ``repro`` component."""
+    """Repo-style path: suffix starting at the last ``repro`` component
+    (or ``tests``/``benchmarks`` for the top-level trees)."""
     parts = list(Path(path).resolve().parts)
-    if "repro" in parts:
-        i = len(parts) - 1 - parts[::-1].index("repro")
-        return "/".join(parts[i:])
+    for anchor in ("repro", "tests", "benchmarks"):
+        if anchor in parts:
+            i = len(parts) - 1 - parts[::-1].index(anchor)
+            return "/".join(parts[i:])
     return Path(path).name
 
 
@@ -270,15 +295,22 @@ class LintResult:
     n_files: int
     n_parse_errors: int = 0
     baseline_filtered: int = 0
+    #: baseline entries whose fingerprint matched nothing this run
+    stale_baseline: list = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
         return not self.violations and not self.n_parse_errors
 
 
-def load_baseline(path: Path) -> Counter:
+def load_baseline_entries(path: Path) -> list:
+    """Full baseline entries (fingerprint/rule/path) for staleness checks."""
     data = json.loads(Path(path).read_text())
-    return Counter(e["fingerprint"] for e in data.get("entries", []))
+    return list(data.get("entries", []))
+
+
+def load_baseline(path: Path) -> Counter:
+    return Counter(e["fingerprint"] for e in load_baseline_entries(path))
 
 
 def write_baseline(violations: Sequence[Violation], path: Path) -> None:
@@ -310,14 +342,21 @@ SELF_PREFIX = "repro/analysis/"
 
 def lint_paths(paths: Iterable[Path],
                rule_names: Optional[Sequence[str]] = None,
-               baseline: Optional[Counter] = None) -> LintResult:
+               baseline: Optional[Counter] = None,
+               baseline_entries: Optional[Sequence[dict]] = None
+               ) -> LintResult:
+    if baseline is None and baseline_entries is not None:
+        baseline = Counter(e.get("fingerprint")
+                           for e in baseline_entries)
     violations: list[Violation] = []
     n_files = n_err = 0
+    walked: set[str] = set()
     for f in iter_py_files(paths):
         rel = repo_rel(f)
         if rel.startswith(SELF_PREFIX):
             continue
         n_files += 1
+        walked.add(rel)
         try:
             src = f.read_text()
             violations.extend(lint_source(src, rel, rule_names))
@@ -327,7 +366,30 @@ def lint_paths(paths: Iterable[Path],
                 rule="parse-error", path=rel, line=e.lineno or 1, col=1,
                 message=f"could not parse: {e.msg}"))
     violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    # baseline staleness: entries that matched nothing this run, judged
+    # only for walked files and selected rules (otherwise undecidable)
+    stale: list = []
+    if baseline_entries:
+        leftover = Counter(baseline) \
+            - Counter(v.fingerprint() for v in violations)
+        for e in baseline_entries:
+            fp = e.get("fingerprint")
+            if leftover.get(fp, 0) > 0 and e.get("path") in walked \
+                    and (rule_names is None
+                         or e.get("rule") in rule_names):
+                leftover[fp] -= 1
+                stale.append(e)
     dropped = 0
     if baseline:
         violations, dropped = apply_baseline(violations, baseline)
-    return LintResult(violations, n_files, n_err, dropped)
+    dead_pragma_on = rule_names is None or "dead-pragma" in rule_names
+    if stale and dead_pragma_on:
+        for e in stale:
+            violations.append(Violation(
+                rule="dead-pragma", path=e.get("path", "?"), line=0, col=1,
+                message=f"stale baseline fingerprint {e.get('fingerprint')} "
+                        f"({e.get('rule')}) no longer matches any "
+                        "violation; run --prune-baseline"))
+        violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return LintResult(violations, n_files, n_err, dropped,
+                      stale_baseline=stale)

@@ -1,0 +1,1372 @@
+"""Units-of-measure & aliasing dataflow analysis (stdlib-only).
+
+Every headline number this reproduction produces — $/h savings, T/$
+tables, SLO attainment — is the output of hand-written unit arithmetic
+($/hr x h, tokens/s / req/s, GB/s x 1e9, RTT seconds subtracted from
+TPOT budgets).  A silent unit mix-up corrupts the result without
+failing a test.  This module gives the lint engine (PR 7's ``core``)
+a genuine intraprocedural-dataflow + call-graph analysis:
+
+* **Unit lattice.**  A :class:`Unit` is TOP (unknown), ANY (a bare
+  numeric literal — polymorphic, adopts the other operand's unit), or a
+  dimension-exponent product over the base dimensions ``s h tok B GB $
+  flop Tflop`` (``tok/$`` is ``{tok: 1, $: -1}``).  Count-like
+  pseudo-units (``req``, ``step``, ``seq``, ``chip``, ``instance``)
+  normalize to dimensionless: the repo freely mixes per-request and
+  absolute quantities, so ``req/s`` is tracked as ``1/s`` — which keeps
+  ``r [req/s] * (i + o) [tok/req]`` equal to ``tok/s`` without a
+  per-request schism, while still distinguishing $/h from $/s and tok
+  from $.
+
+* **Seeding.**  Units come from the repo's naming conventions
+  (``*_s`` -> s, ``*_hr`` -> h, ``price_hr`` -> $/h, ``*_gbs`` -> GB/s,
+  ``*_bytes`` -> B, ``tput``/``rate`` -> req/s, ``cost`` -> $,
+  ``X_per_Y`` -> unit(X)/unit(Y), ...), from the explicit
+  :data:`ANNOTATIONS` registry for names that defy their suffix
+  (``preemption_rate`` is 1/h, not req/s), and from ``# unit: <expr>``
+  comments on assignments, dataclass fields, function parameters
+  (continuation lines of a ``def``) and returns (the ``def`` line).
+
+* **Abstract interpretation.**  Assignments propagate units through
+  function bodies; ``+``/``-``/comparisons/min/max of incompatible
+  concrete units are violations; ``*``/``/`` compose units
+  algebraically.  Recognized conversion literals (3600 = s/h, 1e9 =
+  B/GB, 1e12 = flop/Tflop) apply their unit only when it cancels
+  against the other operand, so ``r * (i + o) * 3600.0 / acc.price_hr``
+  checks out as tok/$ while ``n * 3600`` stays a plain count.
+
+* **Interprocedural flow.**  Function summaries (parameter units,
+  declared + inferred return unit) resolve calls within a module and —
+  via :func:`project_summaries` — across the solver/serving modules, so
+  a function returning seconds cannot be added to hours at a call site
+  three files away.
+
+* **Aliasing / param-mutation.**  :func:`param_mutations` runs a
+  root-alias analysis over a function body and flags in-place mutation
+  (``x[...] = ``, augmented assigns, ``.sort()``/``.fill()``, ``out=``
+  kwargs) of ndarrays reachable from parameters — the caller-owned
+  in-place rebind bug class PR 8 shipped and had to hot-fix — unless
+  the function is on :data:`SANCTIONED_MUTATORS` or the line is
+  pragma'd.
+
+Violation *reporting* stays in ``rules.py``; this module only computes.
+Everything here is stdlib ``ast``/``re`` — the analysis must not change
+the environment it guards.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Optional, Sequence, Union
+
+# ---------------------------------------------------------------------------
+# the unit lattice
+# ---------------------------------------------------------------------------
+
+#: canonical spellings for unit atoms in ``# unit:`` expressions and the
+#: conventions table.  Mapping to "" means dimensionless (count-like).
+_ALIASES = {
+    "s": "s", "sec": "s", "secs": "s", "second": "s", "seconds": "s",
+    "h": "h", "hr": "h", "hrs": "h", "hour": "h", "hours": "h",
+    "tok": "tok", "toks": "tok", "token": "tok", "tokens": "tok",
+    "b": "B", "byte": "B", "bytes": "B",
+    "gb": "GB", "gib": "GB",
+    "$": "$", "usd": "$", "dollar": "$", "dollars": "$",
+    "flop": "flop", "flops": "flop",
+    "tflop": "Tflop", "tflops": "Tflop",
+    # count-like pseudo-units: normalized to dimensionless (see module doc)
+    "req": "", "reqs": "", "request": "", "requests": "",
+    "step": "", "steps": "", "seq": "", "seqs": "",
+    "chip": "", "chips": "", "inst": "", "instance": "", "instances": "",
+    "slice": "", "slices": "", "block": "", "blocks": "",
+    "1": "", "one": "",
+}
+
+
+class Unit:
+    """TOP (unknown), ANY (polymorphic literal), or a dims product."""
+
+    __slots__ = ("kind", "dims")
+
+    def __init__(self, kind: str, dims: dict | None = None):
+        self.kind = kind                       # "top" | "any" | "dim"
+        self.dims = tuple(sorted((dims or {}).items()))
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def of(dims: dict) -> "Unit":
+        return Unit("dim", {k: v for k, v in dims.items() if v})
+
+    # -- predicates --------------------------------------------------------
+    @property
+    def is_top(self) -> bool:
+        return self.kind == "top"
+
+    @property
+    def is_any(self) -> bool:
+        return self.kind == "any"
+
+    @property
+    def concrete(self) -> bool:
+        return self.kind == "dim"
+
+    @property
+    def dimensionless(self) -> bool:
+        return self.kind == "dim" and not self.dims
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, Unit) and self.kind == other.kind
+                and self.dims == other.dims)
+
+    def __hash__(self) -> int:
+        return hash((self.kind, self.dims))
+
+    # -- algebra -----------------------------------------------------------
+    def _combine(self, other: "Unit", sign: int) -> "Unit":
+        if self.is_top or other.is_top:
+            return TOP
+        if self.is_any:
+            return other if sign > 0 else other.inv()
+        if other.is_any:
+            return self
+        d = dict(self.dims)
+        for k, v in other.dims:
+            d[k] = d.get(k, 0) + sign * v
+        return Unit.of(d)
+
+    def mul(self, other: "Unit") -> "Unit":
+        return self._combine(other, +1)
+
+    def div(self, other: "Unit") -> "Unit":
+        return self._combine(other, -1)
+
+    def inv(self) -> "Unit":
+        if not self.concrete:
+            return self
+        return Unit.of({k: -v for k, v in self.dims})
+
+    def pow(self, n: int) -> "Unit":
+        if not self.concrete:
+            return self
+        return Unit.of({k: v * n for k, v in self.dims})
+
+    def __str__(self) -> str:
+        if self.is_top:
+            return "?"
+        if self.is_any:
+            return "<literal>"
+        num = [f"{k}^{v}" if v > 1 else k for k, v in self.dims if v > 0]
+        den = [f"{k}^{-v}" if v < -1 else k for k, v in self.dims if v < 0]
+        if not num and not den:
+            return "1"
+        head = "*".join(num) if num else "1"
+        return head + ("/" + "*".join(den) if den else "")
+
+    __repr__ = __str__
+
+
+TOP = Unit("top")
+ANY = Unit("any")
+DIMLESS = Unit.of({})
+
+
+class TupleUnit:
+    """Units of a fixed-arity tuple value (e.g. ``(req/s, s)`` returns)."""
+
+    __slots__ = ("elts",)
+
+    def __init__(self, elts: Sequence[Unit]):
+        self.elts = tuple(elts)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, TupleUnit) and self.elts == other.elts
+
+    def __hash__(self) -> int:
+        return hash(self.elts)
+
+    def __str__(self) -> str:
+        return "(" + ", ".join(str(e) for e in self.elts) + ")"
+
+    __repr__ = __str__
+
+
+AbstractUnit = Union[Unit, TupleUnit]
+
+
+def compatible(a: AbstractUnit, b: AbstractUnit) -> bool:
+    """Whether ``a`` and ``b`` may legally meet in +/-/comparison."""
+    if isinstance(a, TupleUnit) or isinstance(b, TupleUnit):
+        if isinstance(a, TupleUnit) and isinstance(b, TupleUnit):
+            return (len(a.elts) == len(b.elts)
+                    and all(compatible(x, y)
+                            for x, y in zip(a.elts, b.elts)))
+        return True          # tuple vs scalar: don't judge
+    if not a.concrete or not b.concrete:
+        return True
+    return a.dims == b.dims
+
+
+def join(a: AbstractUnit, b: AbstractUnit) -> AbstractUnit:
+    """Most informative unit consistent with both (for env merges)."""
+    if isinstance(a, TupleUnit) or isinstance(b, TupleUnit):
+        if (isinstance(a, TupleUnit) and isinstance(b, TupleUnit)
+                and len(a.elts) == len(b.elts)):
+            return TupleUnit([join(x, y) for x, y in zip(a.elts, b.elts)])
+        return TOP
+    if a.concrete and b.concrete:
+        return a if a.dims == b.dims else TOP
+    if a.concrete:
+        return a
+    if b.concrete:
+        return b
+    return ANY if (a.is_any and b.is_any) else TOP
+
+
+# ---------------------------------------------------------------------------
+# parsing ``# unit: <expr>``
+# ---------------------------------------------------------------------------
+
+UNIT_COMMENT_RE = re.compile(r"#\s*unit:\s*([^#]+?)\s*$")
+
+_TOKEN_RE = re.compile(r"\s*([A-Za-z$][\w$]*|-?\d+(?:\.\d+)?|\*\*|[*/()^,])")
+
+
+def parse_unit(text: str) -> AbstractUnit:
+    """Parse a unit expression: ``$ / h``, ``tok/$``, ``GB/s``, ``B/tok``,
+    ``1/h``, ``s^2``, or a tuple ``(req/s, s)``.  Raises ValueError."""
+    text = text.strip()
+    if text.startswith("(") and text.endswith(")"):
+        inner = text[1:-1]
+        if "," in inner:
+            return TupleUnit([parse_unit(p) for p in inner.split(",")])
+        text = inner
+    toks, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if not m:
+            raise ValueError(f"bad unit expression {text!r}")
+        toks.append(m.group(1))
+        pos = m.end()
+    if not toks:
+        raise ValueError("empty unit expression")
+    unit, op, i = DIMLESS, "*", 0
+    while i < len(toks):
+        t = toks[i]
+        if t in ("*", "/"):
+            op, i = t, i + 1
+            continue
+        atom = _atom_unit(t)
+        if atom is None:
+            raise ValueError(f"unknown unit atom {t!r} in {text!r}")
+        i += 1
+        if i + 1 < len(toks) and toks[i] in ("^", "**"):
+            atom = atom.pow(int(toks[i + 1]))
+            i += 2
+        unit = unit.mul(atom) if op == "*" else unit.div(atom)
+        op = "*"
+    return unit
+
+
+def _atom_unit(tok: str) -> Optional[Unit]:
+    canon = _ALIASES.get(tok, _ALIASES.get(tok.lower()))
+    if canon is None:
+        return None
+    return DIMLESS if canon == "" else Unit.of({canon: 1})
+
+
+def _u(text: str) -> Unit:
+    out = parse_unit(text)
+    assert isinstance(out, Unit)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# seeding: registry + naming conventions
+# ---------------------------------------------------------------------------
+
+#: Explicit annotation registry: bare names whose unit defies their
+#: suffix (or that have no suffix).  Matched on variable names, attribute
+#: names, function names (return units), and parameter names — after
+#: stripping leading underscores.  Extend here rather than sprinkling
+#: ``# unit:`` comments when a name recurs across modules.
+ANNOTATIONS: dict[str, str] = {
+    # accelerators / catalog
+    "preemption_rate": "1/h",       # reclaims per instance-hour, not req/s
+    "eff_flops": "flop/s",
+    "eff_bw": "B/s",
+    "flops_tf": "Tflop/s",          # peak TFLOP/s, not "tera-floating-ops"
+    "price_mult": "1",
+    "spot_mult": "1",
+    "preemption_mult": "1",
+    # profiles / load matrix
+    "max_tput": "req/s",
+    "tputs": "req/s",
+    "costs": "$/h",                 # the ILP cost vector is $/h per column
+    "availability": "1",
+    # engine model
+    "prefill_rate": "tok/s",        # tokens/s, not requests/s
+    "tokens_per_dollar": "tok/$",
+    "decode_step_time": "s",
+    "rate_and_tpot": "(req/s, s)",
+    "kv_avg_occupancy": "1",
+    "mfu": "1",
+    "bw_util": "1",
+    # simulator / orchestrator
+    "rate_fn": "req/s",
+    "ewma": "req/s",
+    "drift": "1",
+    "attainment": "1",
+    "cost_rate": "$/h",             # fleet burn rate, not a req/s rate
+}
+
+#: Suffix/naming conventions, first match wins (compounds before plain
+#: suffixes).  Applied after registry lookup and ``X_per_Y`` splitting.
+CONVENTIONS: list[tuple[str, str]] = [
+    (r"(^|_)price_hr$", "$/h"),
+    (r"(^|_)cost_hr$", "$/h"),
+    (r"(^|_)price_s$", "$/s"),
+    (r"(^|_)gbs$", "GB/s"),
+    (r"(^|_)gb$", "GB"),
+    (r"(^|_)bytes?$", "B"),
+    (r"(^|_)tokens?$|(^|_)toks$", "tok"),
+    (r"(^|_)(s|secs?|seconds?)$", "s"),
+    (r"(^|_)(hrs?|hours?)$", "h"),
+    (r"(^|_)tf$", "Tflop/s"),
+    (r"(^|_)tputs?$|throughput", "req/s"),
+    (r"(^|_)rates?$", "req/s"),
+    (r"^n_|^num_|(^|_)counts?$", "1"),
+    (r"(^|_)(frac|fraction|pct|share|util|efficiency|occupancy|reserve)$",
+     "1"),
+    (r"(^|_)cost$", "$"),
+    (r"^slo_|(^|_)slo$", "s"),
+    (r"^tpot|(^|_)tpot$", "s"),
+    (r"^ttft|(^|_)ttft$", "s"),
+    (r"^rtt$|^rtt_|(^|_)rtt$", "s"),
+    (r"(^|_)(time|latency|delay|duration|deadline)$", "s"),
+]
+
+_COMPILED_CONVENTIONS = [(re.compile(p), u) for p, u in CONVENTIONS]
+
+#: Conversion-factor literals.  Their unit is applied in * and / ONLY
+#: when it cancels against the other operand (which must carry one of
+#: the factor's base dimensions); otherwise the literal stays
+#: polymorphic.  ``x_hr * 3600`` -> s; ``x_s / 3600`` -> h;
+#: ``count * 3600`` -> count.
+CONVERSIONS: dict[float, str] = {
+    3600.0: "s/h",
+    1e9: "B/GB",
+    1e-9: "GB/B",
+    1e12: "flop/Tflop",
+}
+
+
+def seed_unit(name: str) -> Optional[AbstractUnit]:
+    """Unit a bare name suggests (registry, X_per_Y, suffix conventions);
+    None when the name carries no convention."""
+    name = name.lstrip("_")
+    if not name:
+        return None
+    ann = ANNOTATIONS.get(name)
+    if ann is not None:
+        return parse_unit(ann)
+    if "_per_" in name:
+        left, _, right = name.partition("_per_")
+        lu = seed_unit(left) if left else None
+        if lu is None and left:
+            lu = _atom_unit(left.rsplit("_", 1)[-1])
+        ru = _atom_unit(right)
+        if isinstance(lu, Unit) and ru is not None:
+            return lu.div(ru)
+    for rx, unit in _COMPILED_CONVENTIONS:
+        if rx.search(name):
+            return _u(unit)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# function summaries
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FuncSummary:
+    name: str                      # bare name
+    qualname: str                  # "Class.method" or bare name
+    params: dict[str, AbstractUnit] = dataclasses.field(default_factory=dict)
+    param_order: list[str] = dataclasses.field(default_factory=list)
+    ret: AbstractUnit = TOP        # declared if present, else inferred
+    ret_declared: Optional[AbstractUnit] = None
+    ret_inferred: AbstractUnit = TOP
+    is_property: bool = False
+
+
+class _Imports:
+    """Minimal import-alias resolution (mirrors FileLint.qualname)."""
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and not node.level:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def qualname(self, node: ast.AST) -> Optional[str]:
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(self.aliases.get(node.id, node.id))
+        return ".".join(reversed(parts))
+
+
+# calls whose result carries the first argument's (or receiver's) unit
+_PASSTHROUGH_FNS = {
+    "abs", "float", "int", "round", "sorted", "reversed", "sum",
+    "math.floor", "math.ceil", "math.fabs", "math.fsum",
+    "numpy.abs", "numpy.sum", "numpy.mean", "numpy.median", "numpy.sort",
+    "numpy.min", "numpy.max", "numpy.cumsum", "numpy.diff", "numpy.ravel",
+    "numpy.asarray", "numpy.array", "numpy.copy", "numpy.ascontiguousarray",
+    "numpy.full_like", "numpy.percentile", "numpy.quantile", "numpy.where",
+}
+_PASSTHROUGH_METHODS = {
+    "copy", "astype", "reshape", "ravel", "tolist", "sum", "mean", "min",
+    "max", "cumsum", "clip", "item", "squeeze", "flatten", "get",
+}
+# math fns returning dimensionless regardless of (dimensionless-ish) input
+_DIMLESS_FNS = {
+    "len", "math.log", "math.log2", "math.log10", "math.exp", "math.isnan",
+    "math.isinf", "math.isfinite", "numpy.isfinite", "numpy.isnan",
+    "numpy.isinf", "numpy.argmin", "numpy.argmax", "numpy.argsort",
+    "numpy.count_nonzero", "numpy.sign", "bool", "numpy.log", "numpy.log2",
+    "numpy.exp",
+}
+_MINMAX_FNS = {"min", "max", "numpy.minimum", "numpy.maximum"}
+_ISCLOSE_FNS = {"math.isclose", "numpy.isclose", "numpy.allclose"}
+
+
+class ModuleUnits:
+    """Unit analysis of one module: summaries + violations.
+
+    ``external`` maps bare/qualified callee names to FuncSummary from
+    other modules (see :func:`project_summaries`).
+    """
+
+    def __init__(self, source: str, rel: str,
+                 external: Optional[dict[str, FuncSummary]] = None,
+                 tree: Optional[ast.AST] = None):
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source,
+                                                            filename=rel)
+        self.imports = _Imports(self.tree)
+        self.external = external or {}
+        self.violations: list[tuple[ast.AST, str]] = []
+        #: per-line ``# unit:`` annotations (1-based), parse errors noted
+        self.line_units: dict[int, AbstractUnit] = {}
+        #: named form ``# unit: i: tok, o: tok, return: req/s`` — used on
+        #: one-line ``def`` signatures to type params + return at once
+        self.line_named: dict[int, dict[str, AbstractUnit]] = {}
+        self._scan_unit_comments()
+        #: attribute/field name -> unit, from annotated class fields here
+        self.field_units: dict[str, Unit] = {}
+        #: function summaries, keyed by bare name AND qualname
+        self.summaries: dict[str, FuncSummary] = {}
+        self._functions: list[tuple[ast.AST, str, dict]] = []
+        self.module_env: dict[str, AbstractUnit] = {}
+        self._collect()
+        self._fixed_point()
+
+    # -- setup -------------------------------------------------------------
+    @staticmethod
+    def _split_commas(text: str) -> list[str]:
+        """Split on top-level commas (commas inside parens don't count)."""
+        parts, depth, cur = [], 0, []
+        for ch in text:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        parts.append("".join(cur))
+        return parts
+
+    def _scan_unit_comments(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            m = UNIT_COMMENT_RE.search(line)
+            if not m:
+                continue
+            text = m.group(1).strip()
+            try:
+                if ":" in text and not text.startswith("("):
+                    named = {}
+                    for part in self._split_commas(text):
+                        name, _, expr = part.partition(":")
+                        if not name.strip() or not expr.strip():
+                            raise ValueError(
+                                f"bad named unit entry {part!r}")
+                        named[name.strip()] = parse_unit(expr.strip())
+                    self.line_named[i] = named
+                else:
+                    self.line_units[i] = parse_unit(text)
+            except ValueError as e:
+                self.violations.append((_FakeNode(i), f"bad # unit: {e}"))
+
+    def _collect(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._functions.append((node, node.name, {}))
+            elif isinstance(node, ast.ClassDef):
+                for stmt in node.body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        self._functions.append(
+                            (stmt, f"{node.name}.{stmt.name}", {}))
+                    elif isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name):
+                        u = self.line_units.get(stmt.lineno)
+                        if isinstance(u, Unit):
+                            self.field_units[stmt.target.id] = u
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                self._module_assign(node)
+        for fn, qual, _ in self._functions:
+            self.summaries[qual] = self._initial_summary(fn, qual)
+        # bare-name access: last definition wins unless ambiguous
+        for fn, qual, _ in self._functions:
+            bare = qual.rsplit(".", 1)[-1]
+            if bare != qual:
+                prev = self.summaries.get(bare)
+                cur = self.summaries[qual]
+                if prev is not None and prev.ret != cur.ret:
+                    continue                       # ambiguous: keep first
+                self.summaries.setdefault(bare, cur)
+
+    def _module_assign(self, node: ast.AST) -> None:
+        u = self.line_units.get(node.lineno)
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name):
+                if u is not None:
+                    self.module_env[t.id] = u
+
+    def _initial_summary(self, fn: ast.AST, qual: str) -> FuncSummary:
+        args = list(getattr(fn.args, "posonlyargs", [])) + fn.args.args \
+            + fn.args.kwonlyargs
+        params: dict[str, AbstractUnit] = {}
+        order: list[str] = []
+        by_line: dict[int, list[ast.arg]] = {}
+        for a in args:
+            by_line.setdefault(a.lineno, []).append(a)
+        named = self.line_named.get(fn.lineno, {})
+        for a in args:
+            if a.arg in ("self", "cls"):
+                continue
+            order.append(a.arg)
+            u: Optional[AbstractUnit] = named.get(a.arg)
+            if u is None and a.lineno > fn.lineno \
+                    and a.lineno in self.line_units:
+                u = self.line_units[a.lineno]
+            if u is None:
+                u = seed_unit(a.arg)
+            params[a.arg] = u if u is not None else TOP
+        declared = named.get("return", named.get("ret"))
+        if declared is None:
+            declared = self.line_units.get(fn.lineno)
+        if declared is None:
+            declared = seed_unit(fn.name)
+        is_prop = any(
+            isinstance(d, ast.Name) and d.id == "property"
+            or isinstance(d, ast.Attribute) and d.attr in ("property",
+                                                           "cached_property")
+            for d in fn.decorator_list)
+        return FuncSummary(fn.name, qual, params, order,
+                           ret=declared if declared is not None else TOP,
+                           ret_declared=declared, is_property=is_prop)
+
+    # -- the fixed point ---------------------------------------------------
+    def _fixed_point(self) -> None:
+        for final in (False, True):
+            for fn, qual, _ in self._functions:
+                s = self.summaries[qual]
+                interp = _FnInterp(self, fn, s, report=final)
+                ret = interp.run()
+                s.ret_inferred = ret
+                if s.ret_declared is None:
+                    s.ret = ret
+                elif final:
+                    self._check_declared_ret(fn, s)
+
+    def _check_declared_ret(self, fn: ast.AST, s: FuncSummary) -> None:
+        dec, inf = s.ret_declared, s.ret_inferred
+        if isinstance(dec, Unit) and isinstance(inf, Unit) \
+                and dec.concrete and inf.concrete and not inf.dimensionless \
+                and dec.dims != inf.dims:
+            self.violations.append((
+                fn, f"return of {s.qualname}() is declared "
+                    f"'{dec}' but body infers '{inf}'"))
+
+    # -- lookup surface used by the interpreter ----------------------------
+    def lookup_callee(self, name: str) -> Optional[FuncSummary]:
+        return self.summaries.get(name) or self.external.get(name)
+
+    def attr_unit(self, attr: str) -> Optional[AbstractUnit]:
+        """Unit of an attribute access by bare attribute name."""
+        if attr in self.field_units:
+            return self.field_units[attr]
+        s = self.lookup_callee(attr)
+        if s is not None and s.is_property:
+            return s.ret
+        return seed_unit(attr)
+
+
+class _FakeNode:
+    """Line anchor for violations with no AST node (comment parses)."""
+
+    def __init__(self, lineno: int):
+        self.lineno = lineno
+        self.col_offset = 0
+
+
+class _FnInterp:
+    """Forward abstract interpreter over one function body."""
+
+    def __init__(self, mod: ModuleUnits, fn: ast.AST, summary: FuncSummary,
+                 report: bool, outer_env: Optional[dict] = None):
+        self.mod = mod
+        self.fn = fn
+        self.summary = summary
+        self.report = report
+        self.env: dict[str, AbstractUnit] = dict(outer_env or {})
+        self.env.update(summary.params)
+        self.returns: list[AbstractUnit] = []
+
+    # -- plumbing ----------------------------------------------------------
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        if self.report:
+            self.mod.violations.append((node, msg))
+
+    def _name_unit(self, name: str) -> AbstractUnit:
+        if name in self.env:
+            return self.env[name]
+        if name in self.mod.module_env:
+            return self.mod.module_env[name]
+        u = seed_unit(name)
+        return u if u is not None else TOP
+
+    def run(self) -> AbstractUnit:
+        for stmt in self.fn.body:
+            self._stmt(stmt, self.env)
+        concrete = [r for r in self.returns
+                    if isinstance(r, TupleUnit)
+                    or (isinstance(r, Unit) and r.concrete)]
+        if not concrete:
+            return TOP
+        out = concrete[0]
+        for r in concrete[1:]:
+            out = join(out, r)
+        return out
+
+    # -- statements --------------------------------------------------------
+    def _stmt(self, s: ast.stmt, env: dict) -> None:
+        if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._assign(s, env)
+        elif isinstance(s, ast.Return):
+            u = self._infer(s.value, env) if s.value else TOP
+            self.returns.append(u)
+        elif isinstance(s, ast.If):
+            self._infer(s.test, env)
+            e1, e2 = dict(env), dict(env)
+            for b in s.body:
+                self._stmt(b, e1)
+            for b in s.orelse:
+                self._stmt(b, e2)
+            self._merge(env, e1, e2)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            it = self._infer(s.iter, env)
+            e1 = dict(env)
+            self._bind_target(s.target, it, e1)
+            for b in s.body:
+                self._stmt(b, e1)
+            for b in s.orelse:
+                self._stmt(b, e1)
+            self._merge(env, e1, env)
+        elif isinstance(s, ast.While):
+            self._infer(s.test, env)
+            e1 = dict(env)
+            for b in s.body:
+                self._stmt(b, e1)
+            for b in s.orelse:
+                self._stmt(b, e1)
+            self._merge(env, e1, env)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                self._infer(item.context_expr, env)
+            for b in s.body:
+                self._stmt(b, env)
+        elif isinstance(s, ast.Try):
+            for b in s.body + s.orelse + s.finalbody:
+                self._stmt(b, env)
+            for h in s.handlers:
+                for b in h.body:
+                    self._stmt(b, env)
+        elif isinstance(s, ast.Expr):
+            self._infer(s.value, env)
+        elif isinstance(s, ast.Assert):
+            self._infer(s.test, env)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            qual = f"{self.summary.qualname}.<locals>.{s.name}"
+            sub = self.mod._initial_summary(s, qual)
+            interp = _FnInterp(self.mod, s, sub, self.report,
+                               outer_env=env)
+            sub.ret_inferred = interp.run()
+            if sub.ret_declared is None:
+                sub.ret = sub.ret_inferred
+            self.mod.summaries.setdefault(s.name, sub)
+        elif isinstance(s, ast.Raise):
+            if s.exc is not None:
+                self._infer(s.exc, env)
+        # Pass/Break/Continue/Import/Global/Nonlocal/Delete: nothing
+
+    def _merge(self, env: dict, e1: dict, e2: dict) -> None:
+        for k in set(e1) | set(e2):
+            if k in e1 and k in e2:
+                env[k] = join(e1[k], e2[k])
+            else:
+                env[k] = e1.get(k, e2.get(k, TOP))
+
+    def _assign(self, s: ast.stmt, env: dict) -> None:
+        declared = self.mod.line_units.get(s.lineno)
+        if isinstance(s, ast.AugAssign):
+            self._aug_assign(s, env)
+            return
+        value = s.value
+        u = self._infer(value, env) if value is not None else TOP
+        if declared is not None:
+            if isinstance(u, Unit) and isinstance(declared, Unit) \
+                    and u.concrete and declared.concrete \
+                    and not u.dimensionless and u.dims != declared.dims:
+                self._flag(s, f"value has unit '{u}' but is annotated "
+                              f"'# unit: {declared}'")
+            u = declared
+        targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+        for t in targets:
+            self._bind_target(t, u, env, check=declared is None)
+
+    def _bind_target(self, t: ast.AST, u: AbstractUnit, env: dict,
+                     check: bool = False) -> None:
+        if isinstance(t, ast.Name):
+            if check:
+                self._check_seed(t, t.id, u)
+            if isinstance(u, Unit) and u.is_any:
+                # bare-literal init (x = 0): the name's seed is more
+                # informative than the polymorphic literal
+                seed = seed_unit(t.id)
+                if seed is not None:
+                    u = seed
+            env[t.id] = u
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            elts = u.elts if isinstance(u, TupleUnit) \
+                and len(u.elts) == len(t.elts) else [TOP] * len(t.elts)
+            for sub, su in zip(t.elts, elts):
+                self._bind_target(sub, su, env)
+        elif isinstance(t, ast.Subscript):
+            cont = self._infer(t.value, env)
+            if isinstance(cont, Unit) and isinstance(u, Unit) \
+                    and cont.concrete and u.concrete \
+                    and not u.dimensionless and cont.dims != u.dims:
+                self._flag(t, f"storing '{u}' into a container of "
+                              f"'{cont}'")
+        elif isinstance(t, ast.Attribute):
+            if check:
+                self._check_seed(t, t.attr, u)
+        elif isinstance(t, ast.Starred):
+            self._bind_target(t.value, TOP, env)
+
+    def _check_seed(self, node: ast.AST, name: str, u: AbstractUnit) -> None:
+        seed = seed_unit(name)
+        if seed is None or not isinstance(u, Unit) \
+                or not isinstance(seed, Unit):
+            return
+        if u.concrete and seed.concrete and not u.dimensionless \
+                and not seed.dimensionless and u.dims != seed.dims:
+            self._flag(node,
+                       f"assigning '{u}' to '{name}', whose name "
+                       f"suggests '{seed}' (annotate with # unit: if "
+                       "intentional)")
+
+    def _aug_assign(self, s: ast.AugAssign, env: dict) -> None:
+        r = self._infer(s.value, env)
+        t = s.target
+        if isinstance(t, ast.Name):
+            l = self._name_unit(t.id)
+        elif isinstance(t, ast.Attribute):
+            l = self.mod.attr_unit(t.attr) or TOP
+        else:
+            l = self._infer(t.value, env) if isinstance(t, ast.Subscript) \
+                else TOP
+        if isinstance(s.op, (ast.Add, ast.Sub)):
+            out = self._check_add(s, l, r, "augmented assignment")
+            if isinstance(t, ast.Name):
+                env[t.id] = out
+        elif isinstance(t, ast.Name) and isinstance(l, Unit) \
+                and isinstance(r, Unit):
+            if isinstance(s.op, ast.Mult):
+                env[t.id] = l.mul(r)
+            elif isinstance(s.op, (ast.Div, ast.FloorDiv)):
+                env[t.id] = l.div(r)
+
+    def _check_add(self, node: ast.AST, l: AbstractUnit, r: AbstractUnit,
+                   what: str) -> AbstractUnit:
+        if not compatible(l, r):
+            self._flag(node, f"unit mismatch in {what}: '{l}' vs '{r}'")
+            return TOP
+        return join(l, r) if not (isinstance(l, Unit) and l.is_any
+                                  and isinstance(r, Unit) and r.is_any) \
+            else ANY
+
+    # -- expressions -------------------------------------------------------
+    def _infer(self, e: Optional[ast.AST], env: dict) -> AbstractUnit:
+        if e is None:
+            return TOP
+        if isinstance(e, ast.Constant):
+            return ANY if isinstance(e.value, (int, float)) \
+                and not isinstance(e.value, bool) else ANY
+        if isinstance(e, ast.Name):
+            return self._name_unit(e.id)
+        if isinstance(e, ast.Attribute):
+            self._infer(e.value, env)
+            u = self.mod.attr_unit(e.attr)
+            return u if u is not None else TOP
+        if isinstance(e, ast.BinOp):
+            return self._binop(e, env)
+        if isinstance(e, ast.UnaryOp):
+            return self._infer(e.operand, env)
+        if isinstance(e, ast.Compare):
+            return self._compare(e, env)
+        if isinstance(e, ast.BoolOp):
+            out: AbstractUnit = TOP
+            for i, v in enumerate(e.values):
+                u = self._infer(v, env)
+                out = u if i == 0 else join(out, u)
+            return out
+        if isinstance(e, ast.IfExp):
+            self._infer(e.test, env)
+            return join(self._infer(e.body, env),
+                        self._infer(e.orelse, env))
+        if isinstance(e, ast.Call):
+            return self._call(e, env)
+        if isinstance(e, ast.Subscript):
+            base = self._infer(e.value, env)
+            self._infer(e.slice, env)
+            if isinstance(base, TupleUnit):
+                idx = e.slice
+                if isinstance(idx, ast.Constant) \
+                        and isinstance(idx.value, int) \
+                        and -len(base.elts) <= idx.value < len(base.elts):
+                    return base.elts[idx.value]
+                out: AbstractUnit = base.elts[0] if base.elts else TOP
+                for el in base.elts[1:]:
+                    out = join(out, el)
+                return out
+            return base        # container ≡ element unit
+        if isinstance(e, ast.Tuple):
+            return TupleUnit([self._infer(x, env) for x in e.elts])
+        if isinstance(e, (ast.List, ast.Set)):
+            out = TOP
+            for i, x in enumerate(e.elts):
+                u = self._infer(x, env)
+                out = u if i == 0 else join(out, u)
+            return out
+        if isinstance(e, ast.Dict):
+            out = TOP
+            for i, v in enumerate(e.values):
+                if v is None:
+                    continue
+                u = self._infer(v, env)
+                out = u if i == 0 else join(out, u)
+            return out
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            sub = dict(env)
+            for gen in e.generators:
+                self._bind_target(gen.target, self._infer(gen.iter, sub),
+                                  sub)
+            return self._infer(e.elt, sub)
+        if isinstance(e, ast.DictComp):
+            sub = dict(env)
+            for gen in e.generators:
+                self._bind_target(gen.target, self._infer(gen.iter, sub),
+                                  sub)
+            return self._infer(e.value, sub)
+        if isinstance(e, ast.NamedExpr):
+            u = self._infer(e.value, env)
+            self._bind_target(e.target, u, env)
+            return u
+        if isinstance(e, ast.Starred):
+            return self._infer(e.value, env)
+        if isinstance(e, (ast.JoinedStr, ast.FormattedValue, ast.Lambda)):
+            return TOP
+        if isinstance(e, ast.Slice):
+            for part in (e.lower, e.upper, e.step):
+                if part is not None:
+                    self._infer(part, env)
+            return TOP
+        return TOP
+
+    def _conv_literal(self, e: ast.AST) -> Optional[Unit]:
+        node = e
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            node = node.operand
+        if isinstance(node, ast.Constant) \
+                and isinstance(node.value, (int, float)) \
+                and not isinstance(node.value, bool):
+            conv = CONVERSIONS.get(float(node.value))
+            if conv is not None:
+                return _u(conv)
+        return None
+
+    def _binop(self, e: ast.BinOp, env: dict) -> AbstractUnit:
+        l = self._infer(e.left, env)
+        r = self._infer(e.right, env)
+        if not isinstance(l, Unit) or not isinstance(r, Unit):
+            return TOP
+        if isinstance(e.op, (ast.Add, ast.Sub)):
+            return self._check_add(
+                e, l, r, "+" if isinstance(e.op, ast.Add) else "-")
+        if isinstance(e.op, (ast.Mult, ast.Div, ast.FloorDiv)):
+            lc, rc = self._conv_literal(e.left), self._conv_literal(e.right)
+            if rc is not None and l.concrete and self._shares(l, rc):
+                r = rc
+            elif lc is not None and r.concrete and self._shares(r, lc):
+                l = lc
+            return l.mul(r) if isinstance(e.op, ast.Mult) else l.div(r)
+        if isinstance(e.op, ast.Mod):
+            return l
+        if isinstance(e.op, ast.Pow):
+            if isinstance(e.right, ast.Constant) \
+                    and isinstance(e.right.value, int):
+                return l.pow(e.right.value)
+            return l if l.dimensionless or not l.concrete else TOP
+        if isinstance(e.op, ast.MatMult):
+            return l.mul(r)
+        return TOP
+
+    @staticmethod
+    def _shares(u: Unit, conv: Unit) -> bool:
+        dims = {k for k, _ in u.dims}
+        return any(k in dims for k, _ in conv.dims)
+
+    def _compare(self, e: ast.Compare, env: dict) -> AbstractUnit:
+        ops = [self._infer(x, env)
+               for x in [e.left] + list(e.comparators)]
+        for i, op in enumerate(e.ops):
+            if isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE,
+                               ast.Eq, ast.NotEq)):
+                if not compatible(ops[i], ops[i + 1]):
+                    self._flag(e, "unit mismatch in comparison: "
+                                  f"'{ops[i]}' vs '{ops[i + 1]}'")
+        return DIMLESS
+
+    def _call(self, e: ast.Call, env: dict) -> AbstractUnit:
+        arg_units = [self._infer(a, env) for a in e.args]
+        kw_units = {kw.arg: self._infer(kw.value, env)
+                    for kw in e.keywords if kw.arg}
+        q = self.mod.imports.qualname(e.func)
+        recv_u: Optional[AbstractUnit] = None
+        attr = None
+        if isinstance(e.func, ast.Attribute):
+            attr = e.func.attr
+            recv_u = self._infer(e.func.value, env)
+        tail = (q or attr or "").rsplit(".", 1)[-1]
+        if q in _MINMAX_FNS or tail in ("minimum", "maximum") \
+                and q in _MINMAX_FNS:
+            return self._minmax(e, arg_units)
+        if tail in ("min", "max") and q in _MINMAX_FNS:
+            return self._minmax(e, arg_units)
+        if q in _ISCLOSE_FNS or (attr in ("isclose", "allclose")):
+            if len(arg_units) >= 2 and not compatible(arg_units[0],
+                                                      arg_units[1]):
+                self._flag(e, "unit mismatch in closeness check: "
+                              f"'{arg_units[0]}' vs '{arg_units[1]}'")
+            return DIMLESS
+        if q in _DIMLESS_FNS:
+            return DIMLESS
+        if q == "numpy.clip" or attr == "clip":
+            units = ([recv_u] if attr == "clip" and recv_u is not None
+                     else []) + arg_units
+            out = units[0] if units else TOP
+            for u in units[1:]:
+                if not compatible(out, u):
+                    self._flag(e, f"unit mismatch in clip: '{out}' vs "
+                                  f"'{u}'")
+                out = join(out, u)
+            return out
+        if q in ("numpy.divide", "numpy.true_divide") \
+                and len(arg_units) >= 2:
+            a, b = arg_units[0], arg_units[1]
+            if isinstance(a, Unit) and isinstance(b, Unit):
+                return a.div(b)
+            return TOP
+        if q == "numpy.dot" and len(arg_units) == 2 \
+                and isinstance(arg_units[0], Unit) \
+                and isinstance(arg_units[1], Unit):
+            return arg_units[0].mul(arg_units[1])
+        if q in _PASSTHROUGH_FNS:
+            return arg_units[0] if arg_units else TOP
+        if attr in _PASSTHROUGH_METHODS and recv_u is not None:
+            return recv_u
+        if q == "enumerate":
+            return TupleUnit([DIMLESS,
+                              arg_units[0] if arg_units else TOP])
+        if q == "zip":
+            return TupleUnit(arg_units)
+        if q == "range":
+            return DIMLESS
+        # user function: summary lookup (local first, then project)
+        callee = None
+        if isinstance(e.func, ast.Name):
+            callee = self.mod.lookup_callee(e.func.id)
+        elif attr is not None:
+            callee = self.mod.lookup_callee(attr)
+        if callee is not None:
+            self._check_args(e, callee, arg_units, kw_units)
+            return callee.ret
+        if q is not None:
+            u = seed_unit(q.rsplit(".", 1)[-1])
+            if u is not None:
+                return u
+        return TOP
+
+    def _minmax(self, e: ast.Call, arg_units: list) -> AbstractUnit:
+        if len(arg_units) < 2:        # min(xs) over one iterable
+            return arg_units[0] if arg_units else TOP
+        out = arg_units[0]
+        for u in arg_units[1:]:
+            if not compatible(out, u):
+                self._flag(e, f"unit mismatch in min/max: '{out}' vs "
+                              f"'{u}'")
+            out = join(out, u)
+        return out
+
+    def _check_args(self, e: ast.Call, callee: FuncSummary,
+                    arg_units: list, kw_units: dict) -> None:
+        pairs = list(zip(callee.param_order, arg_units))
+        pairs += [(k, u) for k, u in kw_units.items()
+                  if k in callee.params]
+        for pname, got in pairs:
+            want = callee.params.get(pname, TOP)
+            if isinstance(want, Unit) and isinstance(got, Unit) \
+                    and want.concrete and got.concrete \
+                    and not want.dimensionless and not got.dimensionless \
+                    and want.dims != got.dims:
+                self._flag(e, f"argument '{pname}' of "
+                              f"{callee.qualname}() expects '{want}', "
+                              f"got '{got}'")
+
+
+# ---------------------------------------------------------------------------
+# cross-module summaries
+# ---------------------------------------------------------------------------
+
+#: modules whose function summaries feed interprocedural resolution
+PROJECT_MODULES = (
+    "repro/core/accelerators.py",
+    "repro/core/workload.py",
+    "repro/core/profiler.py",
+    "repro/core/engine_model.py",
+    "repro/core/loadmatrix.py",
+    "repro/core/simulator.py",
+    "repro/serving/kv_cache.py",
+    "repro/regions/catalog.py",
+    "repro/regions/problem.py",
+    "repro/regions/allocator.py",
+    "repro/regions/autoscaler.py",
+    "repro/orchestrator/timeline.py",
+    "repro/orchestrator/orchestrator.py",
+    "repro/orchestrator/regional.py",
+)
+
+_SRC_ROOT = Path(__file__).resolve().parents[1]      # .../src/repro
+_project_cache: dict = {}
+
+
+def _module_path(rel: str) -> Path:
+    return _SRC_ROOT / rel.split("repro/", 1)[1]
+
+
+def project_summaries(exclude_rel: Optional[str] = None
+                      ) -> dict[str, FuncSummary]:
+    """Two-pass global summary table over :data:`PROJECT_MODULES`.
+
+    ``exclude_rel`` omits one module (the file currently being linted —
+    its in-flight source, not the on-disk copy, is authoritative).
+    Cached per (mtimes, exclude) key."""
+    paths = [(rel, _module_path(rel)) for rel in PROJECT_MODULES
+             if rel != exclude_rel]
+    paths = [(rel, p) for rel, p in paths if p.exists()]
+    key = (exclude_rel, tuple(p.stat().st_mtime_ns for _, p in paths))
+    if key in _project_cache:
+        return _project_cache[key]
+    table: dict[str, FuncSummary] = {}
+    for _pass in range(2):
+        for rel, p in paths:
+            try:
+                mod = ModuleUnits(p.read_text(), rel, external=table)
+            except SyntaxError:
+                continue
+            for name, s in mod.summaries.items():
+                prev = table.get(name)
+                if prev is not None and "." not in name \
+                        and prev.qualname != s.qualname \
+                        and prev.ret != s.ret:
+                    table[name] = FuncSummary(name, name)   # ambiguous: TOP
+                else:
+                    table[name] = s
+    if len(_project_cache) > 64:     # bound growth across mtime churn
+        _project_cache.clear()
+    _project_cache[key] = table
+    return table
+
+
+# ---------------------------------------------------------------------------
+# param-mutation aliasing analysis
+# ---------------------------------------------------------------------------
+
+#: functions whose contract is in-place mutation of caller arrays
+#: ("<rel>::<qualname>"); the arrays passed in ARE the arrays returned.
+SANCTIONED_MUTATORS = {
+    # PR 8's fast-path contract: greedy/local-search mutate assign/load/
+    # counts in place so callers keep their own arrays (the hot-fix bug
+    # was precisely a rebind that broke this).
+    "repro/core/ilp.py::_local_search",
+    "repro/core/ilp.py::_local_search_reference",
+}
+
+_ND_MUTATOR_METHODS = {"sort", "fill", "partition", "put", "itemset",
+                       "resize", "setfield", "byteswap", "append",
+                       "extend", "insert", "clear", "update"}
+_FUNC_MUTATORS = {"numpy.copyto", "numpy.put", "numpy.place",
+                  "numpy.putmask", "numpy.fill_diagonal",
+                  "random.shuffle"}
+# receiver methods that return views of the receiver (alias-preserving)
+_VIEW_METHODS = {"view", "reshape", "ravel", "transpose", "swapaxes",
+                 "squeeze"}
+_VIEW_FUNCS = {"numpy.asarray", "numpy.ascontiguousarray",
+               "numpy.atleast_1d", "numpy.ravel", "numpy.transpose",
+               "numpy.broadcast_to"}
+
+
+@dataclasses.dataclass
+class Mutation:
+    node: ast.AST
+    param: str
+    what: str
+
+
+def _annotation_is_arrayish(a: ast.arg) -> bool:
+    if a.annotation is None:
+        return False
+    try:
+        text = ast.unparse(a.annotation)
+    except Exception:                                  # pragma: no cover
+        return False
+    return "ndarray" in text or "array" in text
+
+
+def param_mutations(fn: ast.AST, imports: _Imports, rel: str,
+                    qualname: Optional[str] = None) -> list[Mutation]:
+    """In-place mutations of parameter-reachable objects in ``fn``."""
+    qual = qualname or fn.name
+    if f"{rel}::{qual}" in SANCTIONED_MUTATORS \
+            or f"{rel}::{fn.name}" in SANCTIONED_MUTATORS:
+        return []
+    # *args tuples and **kwargs dicts are freshly constructed per call —
+    # mutating them never aliases caller state, so only named params count
+    args = list(getattr(fn.args, "posonlyargs", [])) + fn.args.args \
+        + fn.args.kwonlyargs
+    params = [a for a in args if a.arg not in ("self", "cls")]
+    aliases = {a.arg for a in params}
+    arrayish = {a.arg for a in params if _annotation_is_arrayish(a)}
+    out: list[Mutation] = []
+    _walk_mutations(fn.body, aliases, arrayish,
+                    {a: a for a in aliases}, imports, out)
+    return out
+
+
+def _alias_root(e: ast.AST, aliases: set) -> Optional[str]:
+    """Param name an expression aliases, or None."""
+    if isinstance(e, ast.Name):
+        return e.id if e.id in aliases else None
+    if isinstance(e, (ast.Attribute, ast.Subscript, ast.Starred)):
+        return _alias_root(e.value, aliases)
+    if isinstance(e, ast.Call):
+        q = None
+        if isinstance(e.func, ast.Attribute) \
+                and e.func.attr in _VIEW_METHODS:
+            return _alias_root(e.func.value, aliases)
+        if isinstance(e.func, (ast.Name, ast.Attribute)):
+            q = _qual_of(e.func)
+        if q in _VIEW_FUNCS and e.args:
+            return _alias_root(e.args[0], aliases)
+        return None
+    if isinstance(e, ast.IfExp):
+        return _alias_root(e.body, aliases) \
+            or _alias_root(e.orelse, aliases)
+    if isinstance(e, ast.NamedExpr):
+        return _alias_root(e.value, aliases)
+    return None
+
+
+_qual_imports: Optional[_Imports] = None
+
+
+def _qual_of(node: ast.AST) -> Optional[str]:
+    if _qual_imports is not None:
+        return _qual_imports.qualname(node)
+    return None
+
+
+def _walk_mutations(body: list, aliases: set, arrayish: set,
+                    origin: dict, imports: _Imports,
+                    out: list[Mutation]) -> None:
+    global _qual_imports
+    _qual_imports = imports
+    for s in body:
+        _mut_stmt(s, aliases, arrayish, origin, imports, out)
+
+
+def _origin_of(name: Optional[str], origin: dict) -> str:
+    return origin.get(name, name) or "?"
+
+
+def _mut_stmt(s: ast.stmt, aliases: set, arrayish: set, origin: dict,
+              imports: _Imports, out: list[Mutation]) -> None:
+    if isinstance(s, ast.Assign):
+        _mut_expr(s.value, aliases, origin, imports, out)
+        src = _alias_root(s.value, aliases)
+        for t in s.targets:
+            if isinstance(t, ast.Subscript):
+                root = _alias_root(t.value, aliases)
+                if root is not None:
+                    out.append(Mutation(
+                        t, _origin_of(root, origin),
+                        "in-place subscript store"))
+                _mut_expr(t.value, aliases, origin, imports, out)
+            elif isinstance(t, ast.Name):
+                if src is not None:
+                    aliases.add(t.id)
+                    origin[t.id] = _origin_of(src, origin)
+                    if src in arrayish or _origin_of(src, origin) \
+                            in arrayish:
+                        arrayish.add(t.id)
+                else:
+                    aliases.discard(t.id)
+                    arrayish.discard(t.id)
+                    origin.pop(t.id, None)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for el in t.elts:
+                    if isinstance(el, ast.Name):
+                        aliases.discard(el.id)
+                        arrayish.discard(el.id)
+    elif isinstance(s, ast.AugAssign):
+        _mut_expr(s.value, aliases, origin, imports, out)
+        t = s.target
+        if isinstance(t, ast.Subscript):
+            root = _alias_root(t.value, aliases)
+            if root is not None:
+                out.append(Mutation(t, _origin_of(root, origin),
+                                    "augmented subscript assign"))
+        elif isinstance(t, ast.Name) and t.id in aliases \
+                and (t.id in arrayish
+                     or _origin_of(t.id, origin) in arrayish):
+            out.append(Mutation(t, _origin_of(t.id, origin),
+                                "augmented assign on ndarray "
+                                "(in-place via __iadd__)"))
+        elif isinstance(t, ast.Attribute):
+            root = _alias_root(t.value, aliases)
+            if root is not None:
+                out.append(Mutation(t, _origin_of(root, origin),
+                                    "augmented attribute assign"))
+    elif isinstance(s, (ast.For, ast.AsyncFor)):
+        _mut_expr(s.iter, aliases, origin, imports, out)
+        if isinstance(s.target, ast.Name):
+            aliases.discard(s.target.id)
+            arrayish.discard(s.target.id)
+        for b in s.body + s.orelse:
+            _mut_stmt(b, aliases, arrayish, origin, imports, out)
+    elif isinstance(s, (ast.If, ast.While)):
+        _mut_expr(s.test, aliases, origin, imports, out)
+        for b in s.body + s.orelse:
+            _mut_stmt(b, aliases, arrayish, origin, imports, out)
+    elif isinstance(s, (ast.With, ast.AsyncWith)):
+        for b in s.body:
+            _mut_stmt(b, aliases, arrayish, origin, imports, out)
+    elif isinstance(s, ast.Try):
+        for b in s.body + s.orelse + s.finalbody:
+            _mut_stmt(b, aliases, arrayish, origin, imports, out)
+        for h in s.handlers:
+            for b in h.body:
+                _mut_stmt(b, aliases, arrayish, origin, imports, out)
+    elif isinstance(s, (ast.Expr, ast.Return, ast.Assert, ast.Raise)):
+        for v in ast.iter_child_nodes(s):
+            _mut_expr(v, aliases, origin, imports, out)
+    elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        inner_args = {a.arg for a in
+                      list(getattr(s.args, "posonlyargs", []))
+                      + s.args.args + s.args.kwonlyargs}
+        sub_aliases = {a for a in aliases if a not in inner_args}
+        sub_array = {a for a in arrayish if a not in inner_args}
+        _walk_mutations(s.body, sub_aliases, sub_array, dict(origin),
+                        imports, out)
+
+
+def _mut_expr(e: ast.AST, aliases: set, origin: dict,
+              imports: _Imports, out: list[Mutation]) -> None:
+    for node in ast.walk(e):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _ND_MUTATOR_METHODS:
+            root = _alias_root(node.func.value, aliases)
+            if root is not None:
+                out.append(Mutation(
+                    node, _origin_of(root, origin),
+                    f".{node.func.attr}() mutates in place"))
+        q = imports.qualname(node.func)
+        if q in _FUNC_MUTATORS and node.args:
+            root = _alias_root(node.args[0], aliases)
+            if root is not None:
+                out.append(Mutation(node, _origin_of(root, origin),
+                                    f"{q}() mutates its first argument"))
+        for kw in node.keywords:
+            if kw.arg == "out":
+                root = _alias_root(kw.value, aliases)
+                if root is not None:
+                    out.append(Mutation(
+                        node, _origin_of(root, origin),
+                        "out= kwarg writes into parameter array"))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def infer_module(source: str, rel: str,
+                 external: Optional[dict[str, FuncSummary]] = None
+                 ) -> ModuleUnits:
+    """Analyze one module's units; external defaults to no cross-module
+    summaries (pass :func:`project_summaries` output for full flow)."""
+    return ModuleUnits(source, rel, external=external)

@@ -90,7 +90,9 @@ hidden global state, so two call sites can perturb each other and
 resolving to random.<fn> (except the generator constructors
 Random/SystemRandom) or numpy.random.<fn> (except default_rng and the
 Generator/BitGenerator constructors).  jax.random is inherently
-key-passing and never flagged."""
+key-passing and never flagged.  Applies to tests/ and benchmarks/ too:
+an unseeded draw in a test is a flake, in a benchmark an
+unreproducible number."""
     node_types = (ast.Call,)
 
     PY_OK = {"Random", "SystemRandom"}
@@ -99,7 +101,7 @@ key-passing and never flagged."""
              "SFC64"}
 
     def applies_to(self, rel: str) -> bool:
-        return rel.startswith("repro/")
+        return rel.startswith(("repro/", "tests/", "benchmarks/"))
 
     def visit(self, node: ast.Call, ctx: FileLint) -> None:
         q = ctx.qualname(node.func)
@@ -203,11 +205,12 @@ order bug (building "g:spot@r" one place and "g@r:spot" another) made
 two layers disagree about which pool a column belonged to.  All
 composition and parsing goes through core/accelerators.py
 (market_pool, with_region, pool_key, split_region, is_spot_pool).
-Flagged outside that file: f-string fragments containing ":spot";
-endswith/startswith(":spot"); and — in core/, regions/, orchestrator/,
-serving/ — the "{x}@{y}" f-string composition shape and
-split/partition("@") parsing.  Display-only strings that merely look
-similar carry a pragma saying they never name a pool."""
+Flagged outside that file (including tests/ and benchmarks/): f-string
+fragments containing ":spot"; endswith/startswith(":spot"); and — in
+core/, regions/, orchestrator/, serving/ — the "{x}@{y}" f-string
+composition shape and split/partition("@") parsing.  Display-only
+strings that merely look similar carry a pragma saying they never name
+a pool."""
     node_types = (ast.Call, ast.JoinedStr)
 
     AT_PREFIXES = ("repro/core/", "repro/regions/", "repro/orchestrator/",
@@ -215,7 +218,7 @@ similar carry a pragma saying they never name a pool."""
     SPLITTERS = ("split", "rsplit", "partition", "rpartition")
 
     def applies_to(self, rel: str) -> bool:
-        return rel.startswith("repro/") \
+        return rel.startswith(("repro/", "tests/", "benchmarks/")) \
             and rel != "repro/core/accelerators.py"
 
     def visit(self, node: ast.AST, ctx: FileLint) -> None:
@@ -272,18 +275,20 @@ The solver stack compares costs that went through ceil/sum/matmul chains;
 exact equality on such floats is representation-dependent, and a parity
 assertion that holds on one machine can fail on another (or after a
 numpy upgrade).  In solver modules (core/ilp.py, loadmatrix.py,
-allocator.py, crosscheck.py, autoscaler.py, and regions/), ==/!= where
-either operand is float-typed on its face — a float literal, float(...),
-math.inf/np.inf/nan — is flagged.  Use math.isclose/np.isclose or the
-module's _EPS tolerances.  Integer-valued comparisons (indices, counts)
-are untouched.  Config-validation equality on user-entered floats may be
-pragma'd with a comment."""
+allocator.py, crosscheck.py, autoscaler.py, regions/, and all of
+benchmarks/), ==/!= where either operand is float-typed on its face — a
+float literal, float(...), math.inf/np.inf/nan — is flagged.  Use
+math.isclose/np.isclose or the module's _EPS tolerances.  Integer-valued
+comparisons (indices, counts) are untouched.  Config-validation equality
+on user-entered floats — and golden-regression assertions in tests,
+which are *intentionally* byte-exact — may be pragma'd with a
+comment."""
     node_types = (ast.Compare,)
 
     FILES = ("repro/core/ilp.py", "repro/core/loadmatrix.py",
              "repro/core/allocator.py", "repro/core/crosscheck.py",
              "repro/core/autoscaler.py")
-    PREFIXES = ("repro/regions/",)
+    PREFIXES = ("repro/regions/", "benchmarks/", "tests/")
     FLOAT_ATTRS = {"math.inf", "math.nan", "numpy.inf", "numpy.nan",
                    "math.pi", "math.e"}
 
@@ -611,3 +616,181 @@ violation: new cap axes can never silently skip a layer."""
                     "every cap axis must be enforced by all four layers "
                     "(mark non-constraint fields with a '# metadata' "
                     "comment)")
+
+
+# --------------------------------------------------------------------------
+@rule
+class UnitsChecker(Rule):
+    name = "units"
+    summary = "dimensional analysis of the cost/throughput arithmetic"
+    explain = """\
+Every headline number — $/h savings, tokens/$, SLO attainment — is the
+output of hand-written unit arithmetic, and a silent unit mix-up
+($/h added to $/s, a GB where bytes were meant, RTT-seconds compared to
+an hours budget) corrupts the result without failing any test.  This
+rule runs repro.analysis.dataflow: an abstract interpreter that
+propagates units-of-measure through assignments, checks +/-/comparisons
+/min/max/isclose for dimensional compatibility, and composes units
+algebraically through * and / (so r * (i + o) * 3600.0 / acc.price_hr
+checks out as tok/$).
+
+Units are seeded from naming conventions (*_s -> seconds, *_hr -> hours,
+price_hr -> $/h, *_gbs -> GB/s, *_bytes -> B, tput/rate -> req/s,
+X_per_Y -> unit(X)/unit(Y), ...), from the dataflow.ANNOTATIONS
+registry for names that defy their suffix (preemption_rate is 1/h), and
+from `# unit: <expr>` comments — on an assignment they declare (and
+check) the target's unit; on a dataclass field line they type the
+field; on a def's own line they declare the return unit; on a
+continuation line of a multi-line signature they type that parameter.
+Count-like units (req, step, seq, chip) are dimensionless: the repo
+freely mixes per-request and absolute quantities, so req/s is tracked
+as 1/s while $/h vs $/s and tok vs $ stay distinct.  Conversion
+literals (3600 = s/h, 1e9 = B/GB, 1e12 = flop/Tflop) apply only when
+they cancel against the other operand.
+
+Parameter and return units flow interprocedurally across the solver/
+serving modules (dataflow.PROJECT_MODULES), so a function returning
+seconds cannot be added to hours at a call site in another file.  Fix a
+finding by correcting the math, annotating the name with `# unit:` (or
+the registry) when the convention mis-reads it, or pragma'ing with
+justification."""
+    node_types = ()
+
+    FILES = ("repro/core/engine_model.py", "repro/core/loadmatrix.py",
+             "repro/core/simulator.py", "repro/serving/kv_cache.py")
+    PREFIXES = ("repro/regions/", "repro/orchestrator/")
+
+    def applies_to(self, rel: str) -> bool:
+        return _scoped(rel, self.FILES, self.PREFIXES)
+
+    def finish(self, ctx: FileLint) -> None:
+        from . import dataflow
+        try:
+            external = dataflow.project_summaries(exclude_rel=ctx.rel)
+        except Exception:            # project files unreadable: intra only
+            external = {}
+        mod = dataflow.ModuleUnits(ctx.source, ctx.rel,
+                                   external=external, tree=ctx.tree)
+        for node, msg in mod.violations:
+            ctx.report(self, node, msg)
+
+
+# --------------------------------------------------------------------------
+@rule
+class ParamMutation(Rule):
+    name = "param-mutation"
+    summary = "no in-place mutation of ndarrays reachable from parameters"
+    explain = """\
+PR 8's vectorized solver shipped a real bug in exactly this class: a
+hot loop mutated an ndarray the caller still owned, so a "pure"
+re-solve corrupted its input and downstream allocations went silently
+wrong.  In the solver modules (core/ilp.py, loadmatrix.py,
+allocator.py, autoscaler.py, dominance.py, crosscheck.py, regions/),
+this rule runs an aliasing dataflow analysis (repro.analysis.dataflow.
+param_mutations): starting from the function's parameters it tracks
+aliases through assignments, views (.reshape/.ravel/np.asarray/...) and
+conditional expressions — copies (.copy()/np.array/.astype) break the
+alias — and flags in-place mutation of anything still parameter-
+reachable: subscript stores (x[...] = v), augmented subscript assigns,
+augmented assigns on ndarray-annotated parameters (+= is __iadd__, in
+place), mutator methods (.sort()/.fill()/.put()/...), out= kwargs, and
+mutator functions (np.copyto/np.put/np.fill_diagonal/...).
+
+Functions whose *contract* is in-place mutation (the arrays passed in
+ARE the arrays returned — e.g. _local_search) are listed in
+dataflow.SANCTIONED_MUTATORS; everything else copies first or carries
+a pragma with a justifying comment."""
+    node_types = ()
+
+    FILES = ("repro/core/ilp.py", "repro/core/loadmatrix.py",
+             "repro/core/allocator.py", "repro/core/autoscaler.py",
+             "repro/core/dominance.py", "repro/core/crosscheck.py")
+    PREFIXES = ("repro/regions/",)
+
+    def applies_to(self, rel: str) -> bool:
+        return _scoped(rel, self.FILES, self.PREFIXES)
+
+    def finish(self, ctx: FileLint) -> None:
+        from . import dataflow
+        imports = dataflow._Imports(ctx.tree)
+        funcs: list[tuple[ast.AST, str]] = []
+        for n in ctx.tree.body:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                funcs.append((n, n.name))
+            elif isinstance(n, ast.ClassDef):
+                for m in n.body:
+                    if isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                        funcs.append((m, f"{n.name}.{m.name}"))
+        for fn, qual in funcs:
+            for mut in dataflow.param_mutations(fn, imports, ctx.rel,
+                                                qualname=qual):
+                ctx.report(self, mut.node,
+                           f"in-place mutation of caller-owned "
+                           f"parameter {mut.param!r}: {mut.what} "
+                           "(copy first, add the function to "
+                           "dataflow.SANCTIONED_MUTATORS if mutation "
+                           "is its contract, or pragma with "
+                           "justification)")
+
+
+# --------------------------------------------------------------------------
+class _LineAnchor:
+    """Violation anchor for findings tied to a line, not an AST node."""
+
+    def __init__(self, lineno: int):
+        self.lineno = lineno
+        self.col_offset = 0
+
+
+@rule
+class DeadPragma(Rule):
+    name = "dead-pragma"
+    summary = "lint pragmas must suppress something; baselines must match"
+    explain = """\
+Escape hatches rot: a `# lint: allow[rule]` pragma whose violation was
+since fixed (or whose rule was renamed) silently disables future
+checking on that line, and a baseline fingerprint whose offending line
+was edited no longer grandfathers anything but still bloats the file.
+After all other rules run, this rule reports every pragma tag that
+suppressed nothing — including tags naming unknown rules — and the CLI
+reports baseline entries that matched no violation (judged only when
+the entry's rule was part of the run; `allow[*]` deadness is judged
+only on full-rule-set runs, and its report bypasses the pragma so it
+cannot self-suppress).  Use --prune-baseline to rewrite the baseline
+minus stale entries.  tests/ is exempt: lint fixtures there embed
+pragma strings that are test *data*, not escape hatches."""
+    node_types = ()
+    runs_last = True
+
+    def applies_to(self, rel: str) -> bool:
+        return rel.startswith(("repro/", "benchmarks/"))
+
+    def finish(self, ctx: FileLint) -> None:
+        from .core import RULES
+        for lineno in sorted(ctx._pragmas):
+            tags = ctx._pragmas[lineno]
+            hits = ctx.pragma_hits.get(lineno, set())
+            for tag in sorted(tags):
+                if tag in hits:
+                    continue
+                anchor = _LineAnchor(lineno)
+                if tag == "*":
+                    # judged only when every rule ran; bypasses pragma
+                    # suppression (allow[*] would self-suppress)
+                    if ctx.selected is None and "*" not in hits:
+                        ctx.report(self, anchor,
+                                   "allow[*] suppresses nothing on this "
+                                   "line; remove it", force=True)
+                    continue
+                if tag not in RULES:
+                    ctx.report(self, anchor,
+                               f"pragma names unknown rule {tag!r}; "
+                               "remove or fix the tag")
+                    continue
+                if ctx.selected is not None and tag not in ctx.selected:
+                    continue     # rule not in this run: can't judge
+                ctx.report(self, anchor,
+                           f"pragma allow[{tag}] suppresses nothing on "
+                           "this line; the violation was fixed or moved "
+                           "— remove the pragma")

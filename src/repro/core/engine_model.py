@@ -117,7 +117,7 @@ class EngineModel:
                 + max_tokens * self.m.kv_bytes_per_token)
         return need <= acc.mem_bytes * (1 - self.p.activation_reserve)
 
-    def max_batch(self, acc: Accelerator, i: int, o: int) -> int:
+    def max_batch(self, acc: Accelerator, i: int, o: int) -> int:  # unit: i: tok, o: tok
         avail = acc.mem_bytes * (1 - self.p.activation_reserve) - self.m.param_bytes
         if avail <= 0:
             return 0
@@ -148,20 +148,24 @@ class EngineModel:
         return (2.0 * self.m.n_layers * self.p.tp_collective_latency_s
                 * math.log2(acc.tp))
 
-    def decode_step_time(self, acc: Accelerator, b: int, ctx: float) -> float:
+    def decode_step_time(self, acc: Accelerator, b: int, ctx: float) -> float:  # unit: b: 1, ctx: tok, return: s
         """One engine step decoding b tokens at average context ctx."""
+        # b plays two dimensional roles: count of co-resident sequences
+        # (KV reads, per-seq overhead) and tokens decoded this step (FLOP
+        # and collective traffic) — one new token per sequence per step
+        new_toks = float(b)  # unit: tok
         kv_read = b * ctx * self.m.kv_bytes_per_token + b * self.m.state_bytes
         mem_t = (self._bytes_base + kv_read) / (acc.eff_bw * self.p.bw_util)
-        flop_t = self._flops_per_token * b / (acc.eff_flops * self.p.mfu)
+        flop_t = self._flops_per_token * new_toks / (acc.eff_flops * self.p.mfu)
         comm_t = 0.0
         if acc.tp > 1:
             link = max(acc.link_gbs, 1e-3) * 1e9
-            comm_t = (b * self._tp_comm_bytes_per_token(acc) / link
+            comm_t = (new_toks * self._tp_comm_bytes_per_token(acc) / link
                       + self._tp_step_latency(acc))
         return (max(mem_t, flop_t) + comm_t + self.p.step_overhead_s
                 + b * self.p.per_seq_overhead_s)
 
-    def prefill_rate(self, acc: Accelerator, i: int) -> float:
+    def prefill_rate(self, acc: Accelerator, i: int) -> float:  # unit: i: tok
         """Prefill tokens/s (compute-bound, incl. quadratic attention)."""
         attn = 2.0 * self.m.n_layers * self.m.d_model * i   # per-token avg
         fpt = self._flops_per_token + attn
@@ -171,7 +175,7 @@ class EngineModel:
             t_per_tok += self._tp_comm_bytes_per_token(acc) / link
         return 1.0 / t_per_tok
 
-    def rate_and_tpot(self, acc: Accelerator, b: int, i: int, o: int):
+    def rate_and_tpot(self, acc: Accelerator, b: int, i: int, o: int):  # unit: b: 1, i: tok, o: tok, return: (req/s, s)
         """(throughput req/s, avg TPOT) at steady concurrency b.
 
         Throughput is utilization-bounded: each request consumes
@@ -183,20 +187,22 @@ class EngineModel:
         ctx = i + self.p.kv_avg_occupancy * o
         t_d = self.decode_step_time(acc, b, ctx)
         r_pf = self.prefill_rate(acc, i)
-        r = 1.0 / (i / r_pf + o * t_d / b)
+        # each of the b co-resident sequences decodes one token per step
+        toks_per_step = float(b)  # unit: tok
+        r = 1.0 / (i / r_pf + o * t_d / toks_per_step)
         phi = min(0.95, r * i / r_pf)
         tpot = t_d / max(0.05, 1.0 - phi * (b - 1) / b)
         return r, tpot
 
-    def tpot(self, acc: Accelerator, b: int, i: int, o: int) -> float:
+    def tpot(self, acc: Accelerator, b: int, i: int, o: int) -> float:  # unit: i: tok, o: tok
         return self.rate_and_tpot(acc, b, i, o)[1]
 
-    def ttft(self, acc: Accelerator, b: int, i: int, o: int) -> float:
+    def ttft(self, acc: Accelerator, b: int, i: int, o: int) -> float:  # unit: i: tok, o: tok
         return i / self.prefill_rate(acc, i) + self.decode_step_time(
             acc, b, i + self.p.kv_avg_occupancy * o)
 
     # -- MaxTput (§5.3) -----------------------------------------------------
-    def max_throughput(self, acc: Accelerator, i: int, o: int,
+    def max_throughput(self, acc: Accelerator, i: int, o: int,  # unit: i: tok, o: tok
                        slo_tpot_s: float) -> float:
         """Max request rate (req/s) for (i, o) requests under the TPOT SLO.
 
@@ -219,7 +225,7 @@ class EngineModel:
         r, _ = self.rate_and_tpot(acc, lo, i, o)
         return r
 
-    def tokens_per_dollar(self, acc: Accelerator, i: int, o: int,
+    def tokens_per_dollar(self, acc: Accelerator, i: int, o: int,  # unit: i: tok, o: tok
                           slo_tpot_s: float) -> float:
         """The paper's T/$ metric: (input+output tokens)/hour / $/hour."""
         r = self.max_throughput(acc, i, o, slo_tpot_s)

@@ -174,10 +174,10 @@ class _SpotPreemptionSampler:
             if inst.is_spot:
                 live[inst.gpu_name] = live.get(inst.gpu_name, 0) + 1
         for name in sorted(live):
-            rate = eng.profile.gpus[name].preemption_rate
-            if rate <= 0:
+            preemption_rate = eng.profile.gpus[name].preemption_rate
+            if preemption_rate <= 0:
                 continue
-            lam = live[name] * rate * dt / 3600.0
+            lam = live[name] * preemption_rate * dt / 3600.0
             k = int(self._spot_rng.poisson(lam))
             if k <= 0:
                 continue

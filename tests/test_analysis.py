@@ -36,7 +36,8 @@ def names_of(violations):
 def test_all_rules_registered_and_documented():
     expected = {"sim-clock-purity", "seeded-rng", "bucket-edges",
                 "inf-mask-convention", "pool-key-literals", "float-eq",
-                "obs-label-discipline", "jit-purity", "solver-layer-parity"}
+                "obs-label-discipline", "jit-purity", "solver-layer-parity",
+                "units", "param-mutation", "dead-pragma"}
     assert expected <= set(RULES)
     for cls in RULES.values():
         assert cls.summary, cls.name

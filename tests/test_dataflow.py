@@ -1,0 +1,484 @@
+"""repro.analysis.dataflow: units-of-measure + aliasing dataflow analysis.
+
+Each new rule gets a seeded-violation fixture (must be caught) and a
+clean twin (must pass); the differential tests run the units checker on
+the *real* engine_model.py/loadmatrix.py and pin the inferred units of
+the headline symbols; the acceptance fixtures reproduce PR 8's
+caller-owned-ndarray rebind (param-mutation must flag it) and a
+per-second price swapped into tokens_per_dollar (units must flag it).
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, lint_source, lint_paths
+from repro.analysis import dataflow as df
+from repro.analysis.core import load_baseline_entries, write_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+ENGINE_MODEL = SRC / "repro" / "core" / "engine_model.py"
+LOADMATRIX = SRC / "repro" / "core" / "loadmatrix.py"
+
+
+def names_of(violations):
+    return sorted({v.rule for v in violations})
+
+
+# -- the unit lattice ------------------------------------------------------
+
+def test_parse_unit_algebra():
+    u = df.parse_unit("tok/$")
+    assert u == df.parse_unit("tok").div(df.parse_unit("$"))
+    assert str(df.parse_unit("$/h")) == "$/h"
+    assert df.parse_unit("GB/s").mul(df.parse_unit("s")) \
+        == df.parse_unit("GB")
+    assert df.parse_unit("s^2") == df.parse_unit("s").mul(
+        df.parse_unit("s"))
+    # count-like pseudo-units are dimensionless: req/s == 1/s
+    assert df.parse_unit("req/s") == df.parse_unit("1/s")
+    assert df.parse_unit("tok/req") == df.parse_unit("tok")
+
+
+def test_parse_unit_tuples_and_errors():
+    t = df.parse_unit("(req/s, s)")
+    assert isinstance(t, df.TupleUnit)
+    assert t.elts[1] == df.parse_unit("s")
+    with pytest.raises(ValueError):
+        df.parse_unit("furlong/fortnight")
+    with pytest.raises(ValueError):
+        df.parse_unit("")
+
+
+def test_seed_unit_conventions():
+    assert df.seed_unit("price_hr") == df.parse_unit("$/h")
+    assert df.seed_unit("replacement_delay_s") == df.parse_unit("s")
+    assert df.seed_unit("bw_gbs") == df.parse_unit("GB/s")
+    assert df.seed_unit("param_bytes") == df.parse_unit("B")
+    assert df.seed_unit("kv_bytes_per_token") == df.parse_unit("B/tok")
+    assert df.seed_unit("slo_tpot_s") == df.parse_unit("s")
+    # registry overrides the _rate suffix convention
+    assert df.seed_unit("preemption_rate") == df.parse_unit("1/h")
+    # tput must not fire on *output* (substring trap)
+    assert df.seed_unit("rep_output") is None
+    assert df.seed_unit("max_tput") == df.parse_unit("req/s")
+
+
+# -- units rule: fixture pairs ---------------------------------------------
+
+UNITS_REL = "repro/core/engine_model.py"
+
+
+def test_units_add_mismatch_flagged():
+    bad = (
+        "def total(price_hr, rtt_s):\n"
+        "    return price_hr + rtt_s\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    assert "$/h" in v[0].message and "s" in v[0].message
+
+
+def test_units_add_clean_twin():
+    ok = (
+        "def total(launch_delay_s, rtt_s):\n"
+        "    return launch_delay_s + rtt_s\n"
+    )
+    assert lint_source(ok, UNITS_REL, ["units"]) == []
+
+
+def test_units_composition_through_mul_div():
+    # GB/s * s / B is fine dimensionally only after the 1e9 conversion;
+    # the wrong composition (forgot the conversion partner) is flagged
+    # by the seeded-name check on the target.
+    ok = (
+        "def bytes_moved(bw_gbs, dur_s):\n"
+        "    xfer_bytes = bw_gbs * 1e9 * dur_s  # GB/s -> B/s\n"
+        "    return xfer_bytes\n"
+    )
+    assert lint_source(ok, UNITS_REL, ["units"]) == []
+    bad = (
+        "def bytes_moved(bw_gbs, dur_s):\n"
+        "    xfer_bytes = bw_gbs * dur_s\n"
+        "    return xfer_bytes\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    assert "GB" in v[0].message
+
+
+def test_units_comparison_mismatch():
+    bad = (
+        "def over_budget(cost_hr, slo_tpot_s):\n"
+        "    return cost_hr > slo_tpot_s\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+
+
+def test_units_interprocedural_return_flow():
+    # callee's declared return unit flows to the caller's env: adding
+    # the seconds it returns to an hours price must be flagged
+    bad = (
+        "def spin_up_delay(n):  # unit: return: s\n"
+        "    return n * 0.5\n"
+        "\n"
+        "def total(price_hr, n):\n"
+        "    return price_hr + spin_up_delay(n)\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    ok = (
+        "def spin_up_delay(n):  # unit: return: s\n"
+        "    return n * 0.5\n"
+        "\n"
+        "def total(boot_s, n):\n"
+        "    return boot_s + spin_up_delay(n)\n"
+    )
+    assert lint_source(ok, UNITS_REL, ["units"]) == []
+
+
+def test_units_argument_check_against_callee_params():
+    bad = (
+        "def window(dur_s):  # unit: dur_s: s\n"
+        "    return dur_s * 2\n"
+        "\n"
+        "def caller(price_hr):\n"
+        "    return window(price_hr)\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    assert "dur_s" in v[0].message
+
+
+def test_units_annotation_declares_and_checks():
+    # a # unit: comment on an assignment is checked against the inferred
+    # unit of the value
+    bad = (
+        "def f(price_hr):\n"
+        "    x = price_hr  # unit: s\n"
+        "    return x\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    ok = (
+        "def f(price_hr):\n"
+        "    x = price_hr  # unit: $/h\n"
+        "    return x\n"
+    )
+    assert lint_source(ok, UNITS_REL, ["units"]) == []
+
+
+def test_units_bad_annotation_is_a_violation():
+    bad = (
+        "def f(x):\n"
+        "    y = x  # unit: parsecs/week\n"
+        "    return y\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    assert "bad # unit" in v[0].message
+
+
+def test_units_pragma_suppresses():
+    bad = (
+        "def total(price_hr, rtt_s):\n"
+        "    return price_hr + rtt_s  # lint: allow[units]\n"
+    )
+    assert lint_source(bad, UNITS_REL, ["units"]) == []
+
+
+# -- units: acceptance fixture (per-second price) --------------------------
+
+def test_units_catches_per_second_price_in_tokens_per_dollar():
+    # fixture copy of EngineModel.tokens_per_dollar with the hourly
+    # price swapped for a per-second price: the declared tok/$ return
+    # no longer matches the body's inference
+    bad = (
+        "def tokens_per_dollar(r, i, o, price_s):"
+        "  # unit: r: req/s, i: tok, o: tok, return: tok/$\n"
+        "    return r * (i + o) * 3600.0 / price_s\n"
+    )
+    v = lint_source(bad, UNITS_REL, ["units"])
+    assert names_of(v) == ["units"]
+    assert "tok/$" in v[0].message
+    ok = (
+        "def tokens_per_dollar(r, i, o, price_hr):"
+        "  # unit: r: req/s, i: tok, o: tok, return: tok/$\n"
+        "    return r * (i + o) * 3600.0 / price_hr\n"
+    )
+    assert lint_source(ok, UNITS_REL, ["units"]) == []
+
+
+# -- units: differential on the real modules -------------------------------
+
+def test_differential_engine_model_units():
+    src = ENGINE_MODEL.read_text()
+    m = df.infer_module(
+        src, "repro/core/engine_model.py",
+        external=df.project_summaries(
+            exclude_rel="repro/core/engine_model.py"))
+    assert m.violations == []
+    mt = m.summaries["EngineModel.max_throughput"]
+    assert mt.ret_inferred == df.parse_unit("req/s")
+    tpd = m.summaries["EngineModel.tokens_per_dollar"]
+    assert tpd.ret_inferred == df.parse_unit("tok/$")
+    rt = m.summaries["EngineModel.rate_and_tpot"]
+    assert rt.ret_inferred == df.parse_unit("(req/s, s)")
+    assert m.summaries["EngineModel.ttft"].ret_inferred \
+        == df.parse_unit("s")
+    assert m.summaries["EngineModel.prefill_rate"].ret \
+        == df.parse_unit("tok/s")
+
+
+def test_differential_loadmatrix_units():
+    src = LOADMATRIX.read_text()
+    m = df.infer_module(
+        src, "repro/core/loadmatrix.py",
+        external=df.project_summaries(
+            exclude_rel="repro/core/loadmatrix.py"))
+    assert m.violations == []
+    av = m.summaries["availability"]
+    assert av.ret_inferred == df.parse_unit("1")   # a fraction
+
+
+# -- param-mutation rule ---------------------------------------------------
+
+MUT_REL = "repro/core/ilp.py"
+
+
+def test_param_mutation_catches_pr8_rebind():
+    # the PR 8 bug class: solver hot loop writes into arrays the caller
+    # still owns
+    bad = (
+        "import numpy as np\n"
+        "def _improve(assign: np.ndarray, load: np.ndarray, j: int):\n"
+        "    assign[j] += 1\n"
+        "    load[j] = 0.0\n"
+        "    return assign, load\n"
+    )
+    v = lint_source(bad, MUT_REL, ["param-mutation"])
+    assert names_of(v) == ["param-mutation"]
+    assert len(v) == 2
+    assert {"assign", "load"} == {m.split("'")[1] for m in
+                                  (x.message for x in v)}
+
+
+def test_param_mutation_clean_on_copy():
+    ok = (
+        "import numpy as np\n"
+        "def _improve(assign: np.ndarray, j: int):\n"
+        "    out = assign.copy()\n"
+        "    out[j] += 1\n"
+        "    return out\n"
+    )
+    assert lint_source(ok, MUT_REL, ["param-mutation"]) == []
+
+
+def test_param_mutation_sees_through_views():
+    bad = (
+        "import numpy as np\n"
+        "def f(load: np.ndarray):\n"
+        "    flat = load.ravel()\n"
+        "    flat[0] = 1.0\n"
+    )
+    v = lint_source(bad, MUT_REL, ["param-mutation"])
+    assert names_of(v) == ["param-mutation"]
+    assert "'load'" in v[0].message
+
+
+def test_param_mutation_mutator_methods_and_out_kwarg():
+    bad = (
+        "import numpy as np\n"
+        "def f(costs: np.ndarray, scratch: np.ndarray):\n"
+        "    costs.sort()\n"
+        "    np.add(scratch, 1.0, out=scratch)\n"
+    )
+    v = lint_source(bad, MUT_REL, ["param-mutation"])
+    assert len(v) == 2
+
+
+def test_param_mutation_sanctioned_mutator_exempt():
+    # _local_search's contract IS in-place mutation (PR 8's fix)
+    ok = (
+        "import numpy as np\n"
+        "def _local_search(prob, assign: np.ndarray, load: np.ndarray):\n"
+        "    assign[0] += 1\n"
+        "    load[0] = 0.0\n"
+        "    return assign, load\n"
+    )
+    assert lint_source(ok, MUT_REL, ["param-mutation"]) == []
+
+
+def test_param_mutation_pragma_suppresses():
+    bad = (
+        "import numpy as np\n"
+        "def f(load: np.ndarray):\n"
+        "    load[0] = 1.0  # lint: allow[param-mutation]\n"
+    )
+    assert lint_source(bad, MUT_REL, ["param-mutation"]) == []
+
+
+def test_real_solver_modules_are_mutation_clean():
+    for rel in ("repro/core/ilp.py", "repro/core/loadmatrix.py",
+                "repro/core/allocator.py", "repro/core/dominance.py"):
+        src = (SRC / rel).read_text()
+        assert lint_source(src, rel, ["param-mutation"]) == [], rel
+
+
+# -- dead-pragma rule ------------------------------------------------------
+
+def test_dead_pragma_flags_useless_pragma():
+    src = (
+        "import math\n"
+        "def f(x):\n"
+        "    return x + 1  # lint: allow[float-eq]\n"
+    )
+    v = lint_source(src, "repro/core/ilp.py",
+                    ["float-eq", "dead-pragma"])
+    assert names_of(v) == ["dead-pragma"]
+    assert "float-eq" in v[0].message
+
+
+def test_dead_pragma_quiet_when_pragma_suppresses():
+    src = (
+        "def f(x):\n"
+        "    return x == 1.5  # lint: allow[float-eq]\n"
+    )
+    v = lint_source(src, "repro/core/ilp.py",
+                    ["float-eq", "dead-pragma"])
+    assert v == []
+
+
+def test_dead_pragma_unknown_rule_name():
+    src = (
+        "def f(x):\n"
+        "    return x  # lint: allow[no-such-rule]\n"
+    )
+    v = lint_source(src, "repro/core/ilp.py", ["dead-pragma"])
+    assert names_of(v) == ["dead-pragma"]
+    assert "unknown rule" in v[0].message
+
+
+def test_dead_pragma_skips_unselected_rules():
+    # float-eq not part of the run: its pragma can't be judged
+    src = (
+        "def f(x):\n"
+        "    return x  # lint: allow[float-eq]\n"
+    )
+    assert lint_source(src, "repro/core/ilp.py", ["dead-pragma"]) == []
+
+
+def test_dead_pragma_star_judged_on_full_runs_only():
+    src = (
+        "def f(x):\n"
+        "    return x  # lint: allow[*]\n"
+    )
+    # subset run: cannot judge allow[*]
+    assert lint_source(src, "repro/core/ilp.py", ["dead-pragma"]) == []
+    # full run: allow[*] suppresses nothing -> dead, and the report
+    # bypasses the pragma's own suppression
+    v = [x for x in lint_source(src, "repro/core/ilp.py")
+         if x.rule == "dead-pragma"]
+    assert len(v) == 1
+    assert "allow[*]" in v[0].message
+
+
+def test_dead_pragma_exempts_tests_tree():
+    src = (
+        "def f(x):\n"
+        "    return x  # lint: allow[float-eq]\n"
+    )
+    assert lint_source(src, "tests/test_x.py",
+                       ["float-eq", "dead-pragma"]) == []
+
+
+# -- stale baseline + --prune-baseline -------------------------------------
+
+def _write_pkg(tmp_path, name, text):
+    d = tmp_path / "repro"
+    d.mkdir(exist_ok=True)
+    f = d / name
+    f.write_text(text)
+    return f
+
+
+def test_stale_baseline_reported_and_pruned(tmp_path):
+    f = _write_pkg(tmp_path, "mod.py",
+                   "import random\ndef f():\n    return random.random()\n")
+    res = lint_paths([f], ["seeded-rng"])
+    assert len(res.violations) == 1
+    bl = tmp_path / "baseline.json"
+    write_baseline(res.violations, bl)
+
+    # baseline still matches: filtered, nothing stale
+    entries = load_baseline_entries(bl)
+    res2 = lint_paths([f], ["seeded-rng", "dead-pragma"],
+                      baseline_entries=entries)
+    assert res2.violations == [] and res2.stale_baseline == []
+
+    # fix the line: fingerprint dies, stale entry surfaces as dead-pragma
+    f.write_text("def f(rng):\n    return rng.random()\n")
+    res3 = lint_paths([f], ["seeded-rng", "dead-pragma"],
+                      baseline_entries=entries)
+    assert len(res3.stale_baseline) == 1
+    assert names_of(res3.violations) == ["dead-pragma"]
+    assert "stale baseline" in res3.violations[0].message
+    assert res3.violations[0].line == 0
+
+    # --prune-baseline rewrites the file minus the dead entry
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(f),
+         "--baseline", str(bl), "--prune-baseline"],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr
+    assert "pruned 1 stale entry" in proc.stdout
+    assert load_baseline_entries(bl) == []
+
+
+# -- registry self-check ---------------------------------------------------
+
+def test_every_rule_listed_and_documented_via_cli():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr
+    listed = {line.split()[0] for line in
+              proc.stdout.strip().splitlines()}
+    assert listed == set(RULES)
+    for name in ("units", "param-mutation", "dead-pragma"):
+        assert name in listed
+    for cls in RULES.values():
+        assert cls.summary, cls.name
+        assert len(cls.explain) > 80, cls.name
+
+
+def test_new_rules_explain_via_cli():
+    for name in ("units", "param-mutation", "dead-pragma"):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--explain", name],
+            capture_output=True, text=True, cwd=REPO,
+            env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+        assert proc.returncode == 0, proc.stderr
+        assert name in proc.stdout
+        assert len(proc.stdout) > 200
+
+
+# -- the whole repo is clean under the full rule set -----------------------
+
+def test_repo_strict_clean_over_src_tests_benchmarks():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--strict", "--json"],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout[-2000:]
+    out = json.loads(proc.stdout)
+    assert out["violations"] == []
+    # the walk must actually cover the three trees
+    assert out["files"] >= 90
+    assert "units" in out["rules"] and "param-mutation" in out["rules"]

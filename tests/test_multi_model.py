@@ -223,7 +223,7 @@ def test_fleet_problem_structure(two_model_fleet):
     gm = fp.prob.group_matrix()
     assert gm.shape[0] == 2                       # one caps + one chip row
     j_a100 = fp.gpu_names.index("A100")
-    assert all(gm[0, k * G + j_a100] == 1.0 for k in range(len(fp.models)))
+    assert all(gm[0, k * G + j_a100] == 1.0 for k in range(len(fp.models)))  # lint: allow[float-eq] (exact hand-set value)
     assert fp.col_model(G) == fp.models[1] and fp.col_gpu(G) == \
         fp.gpu_names[0]
 

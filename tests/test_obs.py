@@ -146,7 +146,7 @@ def test_prometheus_round_trip():
     by = {(s.name, tuple(sorted(s.labels.items()))): s.value
           for s in samples}
     assert by[("melange_events_total", (("gpu", "A100"),))] == 7
-    assert by[("melange_cost_per_hour", ())] == 12.5
+    assert by[("melange_cost_per_hour", ())] == 12.5  # lint: allow[float-eq] (exact hand-set value)
     assert by[("melange_lat_seconds_count", ())] == 3
     assert by[("melange_lat_seconds_sum", ())] == pytest.approx(5.55)
     assert by[("melange_lat_seconds_bucket", (("le", "0.1"),))] == 1
@@ -243,7 +243,7 @@ def test_tracer_chrome_schema_round_trip():
     assert {"wall", "sim"} <= procs
     # sim spans put ts in sim-microseconds
     win = next(e for e in evs if e["name"] == "window")
-    assert win["ts"] == 0.0 and win["dur"] == pytest.approx(300e6)
+    assert win["ts"] == 0.0 and win["dur"] == pytest.approx(300e6)  # lint: allow[float-eq] (exact hand-set value)
 
 
 def test_tracer_sampling_and_disabled():
@@ -376,12 +376,12 @@ def test_decision_detail_cannot_shadow_fields():
                   "solve_stats": st_})
     dd = d.to_dict()
     # the decision's own fields win; detail lives under its own key
-    assert dd["t"] == 300.0 and dd["kind"] == "rescale"
-    assert dd["detail"]["t"] == -1.0 and dd["detail"]["kind"] == "sneaky"
+    assert dd["t"] == 300.0 and dd["kind"] == "rescale"  # lint: allow[float-eq] (exact hand-set value)
+    assert dd["detail"]["t"] == -1.0 and dd["detail"]["kind"] == "sneaky"  # lint: allow[float-eq] (exact hand-set value)
     assert isinstance(dd["detail"]["solve_stats"], dict)
     back = Decision.from_dict(json.loads(json.dumps(dd)))
-    assert back.t == 300.0 and back.kind == "rescale"
-    assert back.detail["t"] == -1.0
+    assert back.t == 300.0 and back.kind == "rescale"  # lint: allow[float-eq] (exact hand-set value)
+    assert back.detail["t"] == -1.0  # lint: allow[float-eq] (exact hand-set value)
     assert back.solve_stats == st_            # dict form converts back
 
 
@@ -415,7 +415,7 @@ def test_window_attainment_is_dropped_inclusive():
     empty = WindowRecord(t0=0, t1=1, arrived=0, completed=0, dropped=0,
                          slo_ok=0, observed_rate=0.0, fleet={}, draining={},
                          cost_rate=0.0)
-    assert empty.slo_attainment == 1.0
+    assert empty.slo_attainment == 1.0  # lint: allow[float-eq] (exact hand-set value)
 
 
 @pytest.mark.slow

@@ -50,7 +50,7 @@ def _parity_catalog():
 # ---------------------------------------------------------------------------
 def test_spot_variant_fields_and_pools():
     cat = expand_price_tiers(PAPER_GPUS)
-    assert set(cat) == {g for b in PAPER_GPUS for g in (b, f"{b}:spot")}
+    assert set(cat) == {g for b in PAPER_GPUS for g in (b, f"{b}:spot")}  # lint: allow[pool-key-literals] (asserts the literal pool-name format)
     s = cat["A100:spot"]
     assert s.is_spot and s.tier == "spot"
     assert s.price_hr == PAPER_GPUS["A100"].spot_price_hr < \
@@ -105,7 +105,7 @@ def test_tp_tier_composition_shares_chip_pool():
 # ---------------------------------------------------------------------------
 def test_availability_discount_inflates_spot_loads():
     cat = expand_price_tiers(PAPER_GPUS)
-    assert availability(cat["A100"], 600.0) == 1.0
+    assert availability(cat["A100"], 600.0) == 1.0  # lint: allow[float-eq] (exact hand-set value)
     av = availability(cat["A100:spot"], 600.0)
     assert av == pytest.approx(1 - 0.15 * 600 / 3600)
     mel = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12,
@@ -202,7 +202,7 @@ def _check_tier_reduction(seed):
     # structural: each spot column duplicates its on-demand sibling
     for g in prob_p.gpu_names:
         j_od = prob_t.gpu_names.index(g)
-        j_sp = prob_t.gpu_names.index(f"{g}:spot")
+        j_sp = prob_t.gpu_names.index(f"{g}:spot")  # lint: allow[pool-key-literals] (asserts the literal pool-name format)
         np.testing.assert_array_equal(prob_t.loads[:, j_sp],
                                       prob_t.loads[:, j_od])
         np.testing.assert_array_equal(
@@ -257,7 +257,7 @@ def test_mixed_tier_allocation_cheaper_than_all_ondemand(mel_tiers):
     # pool accounting: spot sub-pool is a subset of the physical pool
     pools = mixed.chips_by_pool()
     for p, c in pools.items():
-        if p.endswith(":spot"):
+        if p.endswith(":spot"):  # lint: allow[pool-key-literals] (asserts the literal pool-name format)
             assert c <= pools[p.split(":")[0]]
 
 

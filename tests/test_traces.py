@@ -12,15 +12,15 @@ def test_schedule_queries():
         TraceSegment(0.0, 100.0, 2.0, {"arena": 1.0}),
         TraceSegment(100.0, 100.0, 6.0, {"mixed": 1.0}),
     ])
-    assert tr.duration == 200.0
-    assert tr.rate_at(50) == 2.0
-    assert tr.rate_at(150) == 6.0
+    assert tr.duration == 200.0  # lint: allow[float-eq] (exact hand-set value)
+    assert tr.rate_at(50) == 2.0  # lint: allow[float-eq] (exact hand-set value)
+    assert tr.rate_at(150) == 6.0  # lint: allow[float-eq] (exact hand-set value)
     assert tr.mix_at(150) == {"mixed": 1.0}
-    assert tr.peak_rate == 6.0
+    assert tr.peak_rate == 6.0  # lint: allow[float-eq] (exact hand-set value)
     assert abs(tr.mean_rate - 4.0) < 1e-9
     assert list(tr.windows(80)) == [(0.0, 80.0), (80.0, 160.0),
                                     (160.0, 200.0)]
-    assert tr.peak_time == 100.0
+    assert tr.peak_time == 100.0  # lint: allow[float-eq] (exact hand-set value)
 
 
 def test_diurnal_shape():
