@@ -18,11 +18,12 @@ diurnal shape are untouched by the compression.
 from __future__ import annotations
 
 from repro.core import Melange, ModelPerf, PAPER_GPUS
-from repro.obs import MetricsRegistry, SpanTracer, parse_prometheus
+from repro.obs import MetricsRegistry, SpanTracer, parse_prometheus, replay_audit
 from repro.orchestrator import ClusterOrchestrator, run_static
 from repro.traces import FleetEvent, diurnal_trace, inject_bursts
 
-from .common import emit, emit_metrics, emit_trace, parse_bench_args, row, timed
+from .common import (emit, emit_audit, emit_metrics, emit_trace,
+                     parse_bench_args, row, timed)
 
 HOUR_S = 120.0                      # compressed: one "hour" of the day
 BASE_RATE, PEAK_RATE = 1.0, 8.0
@@ -122,6 +123,17 @@ def compute(smoke: bool = False):
     out["elastic"]["metrics_snapshot"] = emit_metrics(
         "bench_elastic_trace", registry)
     emit_trace("bench_elastic_trace", tracer)
+
+    # decision audit: schema-valid every run (emit_audit raises on schema
+    # errors), and replaying the logged chain through a *freshly built*
+    # solver must reproduce every re-solve byte-identically — counts and
+    # assignment SHA both
+    emit_audit("bench_elastic_trace", orch.audit, orch.health)
+    mism = replay_audit(Melange(PAPER_GPUS, model, SLO_TPOT_S),
+                        orch.audit.records)
+    assert mism == [], f"audit replay mismatches: {mism[:3]}"
+    out["elastic"]["audit_records"] = len(orch.audit)
+    out["elastic"]["health"] = orch.health.summary()
 
     # -- arm 3: best single GPU type at peak, held all day
     singles = {}

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
@@ -77,6 +78,32 @@ def emit_trace(name: str, tracer) -> dict:
         RESULTS.mkdir(parents=True, exist_ok=True)
         (RESULTS / f"{name}.trace.json").write_text(json.dumps(obj))
     return obj
+
+
+def emit_audit(name: str, audit_log, health=None) -> None:
+    """Schema-validate a decision :class:`repro.obs.AuditLog` *every* run
+    — smoke included, that is the CI gate — and write the JSONL plus the
+    fleet-health alert summary next to the benchmark's results
+    (``<name>.audit.jsonl`` / ``<name>.alerts.json``).  Smoke runs never
+    touch results/, but when ``AUDIT_ARTIFACT_DIR`` is set (the CI
+    bench-smoke lane does) the artifacts are written there regardless,
+    so a failed lane can be replayed post-mortem from the upload."""
+    errs = audit_log.validate()
+    if errs:
+        raise AssertionError(
+            f"{name}: audit log failed schema validation: {errs[:5]}")
+    dirs = []
+    art = os.environ.get("AUDIT_ARTIFACT_DIR")
+    if art:
+        dirs.append(Path(art))
+    if not SMOKE:
+        dirs.append(RESULTS)
+    for d in dirs:
+        d.mkdir(parents=True, exist_ok=True)
+        (d / f"{name}.audit.jsonl").write_text(audit_log.to_jsonl())
+        if health is not None:
+            (d / f"{name}.alerts.json").write_text(
+                json.dumps(health.summary(), indent=1, default=str))
 
 
 def record_solver_metrics(registry, *solutions) -> None:

@@ -3,6 +3,12 @@ baseline record.
 
     PYTHONPATH=src python -m benchmarks.perf_compare \
         --arch kimi-k2-1t-a32b --shape train_4k --variant fsdp
+
+Also a registered benchmark (``benchmarks.run`` / ``--smoke``): without
+arch/shape/variant it sweeps every variant record in results/dryrun against
+its baseline; in smoke mode a synthetic baseline/variant pair exercises the
+whole delta/speedup arithmetic with no dry-run artifacts, so CI catches a
+rotted compare path before the next real perf investigation needs it.
 """
 from __future__ import annotations
 
@@ -13,6 +19,10 @@ import sys
 from pathlib import Path
 
 from benchmarks.roofline import DRYRUN, analyze_record
+
+from .common import row
+
+SMOKE_ARCH, SMOKE_SHAPE, SMOKE_MESH = "internlm2-1.8b", "train_4k", "pod_16x16"
 
 
 def load(arch, shape, mesh, variant):
@@ -33,9 +43,9 @@ def run_variant(arch, shape, variant, mesh_flag="single"):
                         "PYTHONPATH": "src"})
 
 
-def compare(arch, shape, variant, mesh="pod_16x16"):
-    base = load(arch, shape, mesh, "baseline")
-    var = load(arch, shape, mesh, variant)
+def compare(arch, shape, variant, mesh="pod_16x16", *, base=None, var=None):
+    base = base or load(arch, shape, mesh, "baseline")
+    var = var or load(arch, shape, mesh, variant)
     assert base and var, (arch, shape, variant)
     rb, rv = analyze_record(base), analyze_record(var)
     out = {"arch": arch, "shape": shape, "variant": variant}
@@ -56,14 +66,76 @@ def compare(arch, shape, variant, mesh="pod_16x16"):
     return out
 
 
-def main():
+def _smoke_pair():
+    """Synthetic dry-run record pair: compute-dominant baseline, variant
+    with the compute term halved and memory trimmed 10%."""
+    def rec(variant, flops, byts, peak):
+        return {"ok": True, "arch": SMOKE_ARCH, "shape": SMOKE_SHAPE,
+                "mesh": SMOKE_MESH, "variant": variant,
+                "flops_tc": flops, "bytes_tc": byts,
+                "flops": flops, "bytes_accessed": byts,
+                "collectives": {"total_bytes": 5.0e10},
+                "n_params": 1.8e9, "n_params_active": 1.8e9,
+                "memory": {"peak_bytes_per_device": peak}}
+    base = rec("baseline", 1.97e15, 8.19e11, 2 ** 34)
+    var = rec("smokevar", 0.985e15, 7.37e11, 2 ** 33)
+    return base, var
+
+
+def sweep():
+    """Compare every non-baseline record in results/dryrun against its
+    baseline cell; variants whose baseline is missing are skipped."""
+    outs = []
+    files = sorted(DRYRUN.glob("*.json")) if DRYRUN.exists() else []
+    for f in files:
+        arch, shape, mesh, variant = f.stem.split("__")
+        if variant == "baseline" or not load(arch, shape, mesh, variant):
+            continue
+        if load(arch, shape, mesh, "baseline"):
+            outs.append(compare(arch, shape, variant, mesh))
+    return outs
+
+
+def main(smoke: bool = False):
+    if smoke:
+        base, var = _smoke_pair()
+        out = compare(SMOKE_ARCH, SMOKE_SHAPE, "smokevar", SMOKE_MESH,
+                      base=base, var=var)
+        # the arithmetic gates: halved compute on a compute-dominant cell
+        import math
+        assert out["dominant_before"] == "compute"
+        assert math.isclose(out["dominant_term_speedup"], 2.0)
+        assert math.isclose(out["compute"]["delta_pct"], -50.0)
+        assert (out["peak_bytes_per_device"]["after"]
+                < out["peak_bytes_per_device"]["before"])
+        return [row("perf_compare_smoke", 0.0,
+                    f"dominant={out['dominant_before']} "
+                    f"speedup={out['dominant_term_speedup']}")]
+    outs = sweep()
+    if not outs:
+        return [row("perf_compare", 0.0, "no variant dry-run artifacts; "
+                    "run `python -m repro.launch.dryrun --variant ...`")]
+    return [row(f"perf_compare_{o['arch']}_{o['shape']}_{o['variant']}", 0.0,
+                f"dominant={o['dominant_before']} "
+                f"speedup={o['dominant_term_speedup']}") for o in outs]
+
+
+def cli(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant")
     ap.add_argument("--no-run", action="store_true",
                     help="only compare existing records")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="synthetic-record self-check, no artifacts needed")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        for r in main(smoke=True):
+            print(",".join(map(str, r)))
+        return
+    if not (args.arch and args.shape and args.variant):
+        ap.error("--arch/--shape/--variant required (or use --smoke)")
     if not args.no_run:
         run_variant(args.arch, args.shape, args.variant)
     out = compare(args.arch, args.shape, args.variant)
@@ -71,4 +143,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    cli()

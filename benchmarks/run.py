@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.bench_spot_mix",
     "benchmarks.bench_regions",
     "benchmarks.roofline",
+    "benchmarks.perf_compare",
 ]
 
 

@@ -161,6 +161,7 @@ class Melange:
                  min_ondemand_frac: float = 0.0,
                  replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
+                 tput_scale: Optional[Mapping] = None,
                  prev: Optional[Allocation] = None) -> Optional[Allocation]:
         """Derive the minimal-cost allocation (§5.4). ``over_provision``
         inflates bucket rates (§6.3's burst-absorption knob); ``caps``
@@ -174,7 +175,13 @@ class Melange:
         the incremental re-solve: slices whose load row, price, and cap
         context are unchanged stay pinned to their previous column and
         only the drifted remainder is re-opened (falling back to a
-        warm-started cold solve when nothing carries over)."""
+        warm-started cold solve when nothing carries over).
+
+        ``tput_scale`` (variant name -> scalar or per-bucket multiplier)
+        corrects predicted throughput per column — the fleet health
+        engine's drift feedback.  A scale change alters those columns'
+        load rows, so the incremental re-solve re-opens exactly the
+        drifted columns' slices."""
         wl = workload if over_provision <= 0 else Workload(
             workload.buckets, workload.rates * (1 + over_provision),
             name=workload.name + f"+op{over_provision}")
@@ -182,7 +189,8 @@ class Melange:
                              caps=caps, gpu_subset=gpu_subset,
                              chip_caps=chip_caps,
                              min_ondemand_frac=min_ondemand_frac,
-                             replacement_delay_s=replacement_delay_s)
+                             replacement_delay_s=replacement_delay_s,
+                             tput_scale=tput_scale)
         if prev is not None and prev.problem is not None:
             # incremental re-solve off the previous allocation: the tp=1
             # pre-solve is skipped — the previous solution already seeds
@@ -214,7 +222,8 @@ class Melange:
                                   caps=caps, gpu_subset=tp1,
                                   chip_caps=chip_caps,
                                   min_ondemand_frac=min_ondemand_frac,
-                                  replacement_delay_s=replacement_delay_s)
+                                  replacement_delay_s=replacement_delay_s,
+                                  tput_scale=tput_scale)
             sol1 = solve(prob1, time_budget_s=min(1.0, time_budget_s / 3))
             # the pre-solve spends part of the caller's budget, not extra
             main_budget = max(0.1, time_budget_s - (time.perf_counter() - t0))
@@ -417,6 +426,7 @@ class MelangeFleet:
                  min_ondemand_frac: float = 0.0,
                  replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
+                 tput_scale: Optional[Mapping] = None,
                  warm: bool = True,
                  warm_siloed: Optional[Mapping[str, Allocation]] = None,
                  prev: Optional[Mapping[str, Allocation]] = None
@@ -450,7 +460,8 @@ class MelangeFleet:
             {m: (self.members[m].profile, w) for m, w in wls.items()},
             self.slice_factor, caps=caps, gpu_subset=gpu_subset,
             chip_caps=chip_caps, min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=replacement_delay_s)
+            replacement_delay_s=replacement_delay_s,
+            tput_scale=tput_scale)
         if prev is not None and set(prev) >= set(fp.models):
             G = fp.n_gpus
             usable = all(
@@ -497,7 +508,8 @@ class MelangeFleet:
                 gpu_subset=gpu_subset,
                 min_ondemand_frac=min_ondemand_frac,
                 replacement_delay_s=replacement_delay_s,
-                time_budget_s=min(1.0, time_budget_s / 3))
+                time_budget_s=min(1.0, time_budget_s / 3),
+                tput_scale=tput_scale)
             main_budget = max(0.1, time_budget_s - (time.perf_counter() - t0))
         if siloed is not None:
             if set(siloed) != set(fp.models) or any(
@@ -530,7 +542,8 @@ class MelangeFleet:
                         over_provision: float = 0.0,
                         min_ondemand_frac: float = 0.0,
                         replacement_delay_s: float = 0.0,
-                        time_budget_s: float = 5.0
+                        time_budget_s: float = 5.0,
+                        tput_scale: Optional[Mapping] = None
                         ) -> Optional[dict[str, Allocation]]:
         """The no-coordination baseline: each model is allocated alone, in
         ``order``, consuming pool capacity as it goes (later silos see only
@@ -550,7 +563,7 @@ class MelangeFleet:
                 gpu_subset=gpu_subset, over_provision=over_provision,
                 min_ondemand_frac=min_ondemand_frac,
                 replacement_delay_s=replacement_delay_s,
-                time_budget_s=budget)
+                time_budget_s=budget, tput_scale=tput_scale)
             if alloc is None:
                 return None
             out[m] = alloc

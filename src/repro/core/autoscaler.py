@@ -70,10 +70,67 @@ class _ChipPoolCaps:
 
     caps: dict[str, int]
     chip_caps: dict[str, int]
+    tput_corrections: dict      # gpu variant -> per-bucket scale (ndarray)
+    audit_log = None            # duck-typed repro.obs.audit.AuditLog
 
     @property
     def _catalog(self):
         raise NotImplementedError
+
+    # -- throughput-drift feedback -------------------------------------------
+    def set_tput_corrections(self, corrections: Optional[Mapping]) -> bool:
+        """Install published drift corrections from a throughput-drift
+        detector (``{variant: per-bucket multiplier}``).  Every subsequent
+        re-solve passes them as ``tput_scale``, so the solver prices the
+        fleet at *measured* capability instead of the profiled belief.
+        Unit corrections are dropped (absent means "trust the model").
+        Returns True when the installed set changed — the caller's signal
+        to force a re-solve."""
+        new: dict = {}
+        for g, v in (corrections or {}).items():
+            arr = np.asarray(v, dtype=float)
+            if np.allclose(arr, 1.0):
+                continue
+            # scalars stay scalars: the load matrix accepts a scalar or a
+            # full per-bucket vector, nothing in between
+            new[g] = float(arr) if arr.ndim == 0 else arr
+        old = self.tput_corrections
+        changed = set(old) != set(new) or any(
+            not np.array_equal(old[g], new[g]) for g in new)
+        self.tput_corrections = new
+        return changed
+
+    # -- decision audit ------------------------------------------------------
+    def _audit(self, kind: str, *, rates, caps, chip_caps, prev, alloc,
+               extra: Optional[dict] = None) -> None:
+        """Record one solver call in the attached audit log (no-op when
+        none is attached).  ``rates`` is the exact rate vector (or
+        per-home mapping) the solver saw; ``caps``/``chip_caps`` the exact
+        cap dicts passed; ``prev`` the allocation the incremental re-solve
+        chained from."""
+        log = self.audit_log
+        if log is None:
+            return
+        inputs = {
+            "rates": rates,
+            "over_provision": self.headroom,
+            "caps": {g: int(v) for g, v in (caps or {}).items()},
+            "chip_caps": {k: int(v) for k, v in (chip_caps or {}).items()},
+            "min_ondemand_frac": self.min_ondemand_frac,
+            "replacement_delay_s": self.replacement_delay_s,
+            "time_budget_s": self.solver_budget_s,
+            "tput_scale": dict(self.tput_corrections),
+            "prev": None if prev is None else log.fingerprint(
+                prev.counts, prev.solution.assignment),
+        }
+        if extra:
+            inputs.update(extra)
+        log.record_solve(
+            kind=kind, inputs=inputs, counts=alloc.counts,
+            cost_per_hour=alloc.cost_per_hour,
+            assignment=alloc.solution.assignment,
+            optimal=alloc.solution.optimal,
+            solve_stats=alloc.solution.stats)
 
     def _base_of(self, gpu: str) -> str:
         acc = self._catalog.get(gpu)
@@ -107,7 +164,8 @@ class Autoscaler(_ChipPoolCaps):
                  headroom: float = 0.10, drift_threshold: float = 0.15,
                  ewma: float = 0.3, solver_budget_s: float = 5.0,
                  min_ondemand_frac: float = 0.0,
-                 replacement_delay_s: float = 0.0):
+                 replacement_delay_s: float = 0.0,
+                 audit_log=None):
         self.melange = melange
         self.headroom = headroom
         self.drift_threshold = drift_threshold
@@ -124,11 +182,16 @@ class Autoscaler(_ChipPoolCaps):
         self.buckets = initial.buckets
         self.caps: dict[str, int] = {}        # per-variant instance caps
         self.chip_caps: dict[str, int] = {}   # per-pool chip caps
+        self.tput_corrections: dict[str, np.ndarray] = {}
+        self.audit_log = audit_log
         self.current: Optional[Allocation] = melange.allocate(
             initial, over_provision=headroom,
             min_ondemand_frac=min_ondemand_frac,
             replacement_delay_s=replacement_delay_s,
             time_budget_s=solver_budget_s)
+        if self.current is not None:
+            self._audit("initial", rates=initial.rates, caps=None,
+                        chip_caps=None, prev=None, alloc=self.current)
         self.history: list[dict] = []
 
     # -- chip accounting -----------------------------------------------------
@@ -167,9 +230,12 @@ class Autoscaler(_ChipPoolCaps):
             caps=self.caps or None, chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             return None
+        self._audit("rescale", rates=wl.rates, caps=self.caps,
+                    chip_caps=self.chip_caps, prev=self.current, alloc=new)
         diff = allocation_diff(self.current.counts, new.counts)
         self.history.append({
             "event": "rescale", "drift": self.drift(),
@@ -206,11 +272,14 @@ class Autoscaler(_ChipPoolCaps):
             chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve "
                 "workload under SLO — page a human")
+        self._audit("failure", rates=wl.rates, caps=self.caps,
+                    chip_caps=self.chip_caps, prev=self.current, alloc=new)
         diff = allocation_diff(counts, new.counts)
         self.history.append({
             "event": "failure", "gpu": gpu, "n": sum(losses.values()),
@@ -241,7 +310,8 @@ class FleetAutoscaler(_ChipPoolCaps):
                  headroom: float = 0.10, drift_threshold: float = 0.15,
                  ewma: float = 0.3, solver_budget_s: float = 5.0,
                  min_ondemand_frac: float = 0.0,
-                 replacement_delay_s: float = 0.0):
+                 replacement_delay_s: float = 0.0,
+                 audit_log=None):
         self.fleet = fleet
         self.headroom = headroom
         self.drift_threshold = drift_threshold
@@ -258,11 +328,18 @@ class FleetAutoscaler(_ChipPoolCaps):
         self.buckets = {m: w.buckets for m, w in wls.items()}
         self.caps: dict[str, int] = {}        # pool-level instance caps
         self.chip_caps: dict[str, int] = {}   # pool-level chip caps
+        self.tput_corrections: dict[str, np.ndarray] = {}
+        self.audit_log = audit_log
         self.current: Optional[FleetAllocation] = fleet.allocate(
             wls, over_provision=headroom,
             min_ondemand_frac=min_ondemand_frac,
             replacement_delay_s=replacement_delay_s,
             time_budget_s=solver_budget_s)
+        if self.current is not None:
+            self._audit_fleet("initial",
+                              rates={m: w.rates for m, w in wls.items()},
+                              models=list(wls), caps=None, chip_caps=None,
+                              prev=None, sub=self.current)
         self.history: list[dict] = []
 
     # -- pool accounting -----------------------------------------------------
@@ -286,6 +363,40 @@ class FleetAutoscaler(_ChipPoolCaps):
         chips = {k: max(0, int(c) - held_chips.get(self._pool_of(k), 0))
                  for k, c in self.chip_caps.items()} or None
         return caps, chips
+
+    # -- decision audit ------------------------------------------------------
+    def _audit_fleet(self, kind: str, *, rates: dict, models, caps,
+                     chip_caps, prev, sub) -> None:
+        """Fleet-shaped audit record: the solved sub-fleet's nested counts
+        plus a per-model assignment fingerprint (``sub`` covers exactly
+        ``models`` — the partial re-solve's scope)."""
+        log = self.audit_log
+        if log is None:
+            return
+        inputs = {
+            "rates": dict(rates),
+            # actual order passed to allocate(): the stacked fleet problem
+            # (and so the assignment vector replay hashes) is order-sensitive
+            "models": list(models),
+            "over_provision": self.headroom,
+            "caps": {g: int(v) for g, v in (caps or {}).items()},
+            "chip_caps": {k: int(v) for k, v in (chip_caps or {}).items()},
+            "min_ondemand_frac": self.min_ondemand_frac,
+            "replacement_delay_s": self.replacement_delay_s,
+            "time_budget_s": self.solver_budget_s,
+            "tput_scale": dict(self.tput_corrections),
+            "prev": None if prev is None else {
+                m: log.fingerprint(a.counts, a.solution.assignment)
+                for m, a in sorted(prev.items())},
+        }
+        per_model = {m: log.fingerprint(sub.per_model[m].counts,
+                                        sub.per_model[m].solution.assignment)
+                     for m in models}
+        log.record_solve(
+            kind=kind, inputs=inputs,
+            counts={m: dict(sub.per_model[m].counts) for m in models},
+            cost_per_hour=sub.cost_per_hour,
+            extra={"per_model": per_model})
 
     # -- telemetry -----------------------------------------------------------
     def observe_rates(self, model: str, rates: np.ndarray) -> None:
@@ -319,15 +430,21 @@ class FleetAutoscaler(_ChipPoolCaps):
         caps, chip_caps = self._remaining_pool(stable)
         wls = {m: Workload(self.buckets[m], self.observed[m].copy(),
                            name=f"observed:{m}") for m in drifted}
+        prev_sub = {m: self.current.per_model[m] for m in drifted}
         new_sub = self.fleet.allocate(
             wls, models=drifted, caps=caps, chip_caps=chip_caps,
             over_provision=self.headroom,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s,
-            prev={m: self.current.per_model[m] for m in drifted})
+            prev=prev_sub)
         if new_sub is None:
             return None
+        self._audit_fleet("rescale",
+                          rates={m: w.rates for m, w in wls.items()},
+                          models=drifted, caps=caps, chip_caps=chip_caps,
+                          prev=prev_sub, sub=new_sub)
         per_model = dict(self.current.per_model)
         diffs: dict[str, AllocationDiff] = {}
         old_counts = {m: dict(self.current.per_model[m].counts)
@@ -387,17 +504,23 @@ class FleetAutoscaler(_ChipPoolCaps):
         caps, chip_caps = self._remaining_pool(stable)
         wls = {m: Workload(self.buckets[m], self.observed[m].copy(),
                            name=f"post-failure:{m}") for m in affected}
+        prev_sub = {m: self.current.per_model[m] for m in affected}
         new_sub = self.fleet.allocate(
             wls, models=affected, caps=caps, chip_caps=chip_caps,
             over_provision=self.headroom,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s,
-            prev={m: self.current.per_model[m] for m in affected})
+            prev=prev_sub)
         if new_sub is None:
             raise RuntimeError(
                 "infeasible after failure: no capacity able to serve the "
                 f"fleet's affected models {affected} under SLO — page a human")
+        self._audit_fleet("failure",
+                          rates={m: w.rates for m, w in wls.items()},
+                          models=affected, caps=caps, chip_caps=chip_caps,
+                          prev=prev_sub, sub=new_sub)
         per_model = dict(self.current.per_model)
         diffs: dict[str, AllocationDiff] = {}
         for m in affected:

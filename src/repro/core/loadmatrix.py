@@ -73,13 +73,47 @@ def _ondemand_quota(workload: Workload, slice_factor: int,
             for bi, n in quota.items()}
 
 
+def _tput_scale_matrix(tput_scale, gpu_names: list[str],
+                       n_buckets: int) -> np.ndarray | None:
+    """``tput_scale`` -> a (B, M) multiplier matrix (None when a no-op).
+
+    ``tput_scale`` maps a column (variant) name to either a scalar
+    multiplier or a per-bucket sequence — observed/predicted throughput
+    correction factors (dimensionless) from e.g. the fleet health
+    engine's drift detector.  Unknown names are ignored so a caller may
+    pass corrections keyed by a superset of the active columns.
+    """
+    if not tput_scale:
+        return None
+    scale = np.ones((n_buckets, len(gpu_names)))
+    hit = False
+    for j, g in enumerate(gpu_names):
+        s = tput_scale.get(g)
+        if s is None:
+            continue
+        col = np.asarray(s, dtype=float)
+        if col.ndim == 0:
+            col = np.full(n_buckets, float(col))
+        elif col.shape != (n_buckets,):
+            raise ValueError(
+                f"tput_scale[{g!r}] has shape {col.shape}, "
+                f"want scalar or ({n_buckets},)")
+        if np.any(col <= 0) or not np.all(np.isfinite(col)):
+            raise ValueError(
+                f"tput_scale[{g!r}] must be finite and positive")
+        scale[:, j] = col
+        hit = True
+    return scale if hit else None
+
+
 def build_problem(workload: Workload, profile: Profile,
                   slice_factor: int = 8,
                   caps: dict[str, int] | None = None,
                   gpu_subset: list[str] | None = None,
                   chip_caps: dict[str, int] | None = None,
                   min_ondemand_frac: float = 0.0,
-                  replacement_delay_s: float = 0.0) -> ILPProblem:
+                  replacement_delay_s: float = 0.0,
+                  tput_scale: Mapping | None = None) -> ILPProblem:
     gpu_names = sorted(gpu_subset or profile.gpus)
     slices = workload.slices(slice_factor)
     N, M = len(slices), len(gpu_names)
@@ -102,6 +136,11 @@ def build_problem(workload: Workload, profile: Profile,
     spot_mask = np.array([acc.is_spot for acc in accs])
     tput = (np.stack([np.asarray(profile.max_tput[g], dtype=float)
                       for g in gpu_names], axis=1) * avail)   # (B, M)
+    # drift corrections scale predicted throughput per (bucket, column),
+    # exactly like the spot availability discount above
+    scale = _tput_scale_matrix(tput_scale, gpu_names, tput.shape[0])
+    if scale is not None:
+        tput = tput * scale
     ok = tput[bucket_of] > 0
     ok &= ~(pinned_of[:, None] & spot_mask[None, :])  # floor: on-demand only
     loads = np.full((N, M), np.inf)
@@ -204,7 +243,8 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
                         gpu_subset: list[str] | None = None,
                         chip_caps: Mapping[str, int] | None = None,
                         min_ondemand_frac: float = 0.0,
-                        replacement_delay_s: float = 0.0
+                        replacement_delay_s: float = 0.0,
+                        tput_scale: Mapping | None = None
                         ) -> FleetProblem:
     """Stack each model's §5.4.2 load matrix into one shared-pool problem.
 
@@ -251,6 +291,11 @@ def build_fleet_problem(members: Mapping[str, tuple[Profile, Workload]],
         m_spot = np.array([a.is_spot for a in m_accs])
         tput = (np.stack([np.asarray(profile.max_tput[g], dtype=float)
                           for g in gpu_names], axis=1) * avail)   # (B, G)
+        # drift corrections apply per (bucket, column), shared across
+        # models — the physical GPU type drifted, not one model's view
+        mscale = _tput_scale_matrix(tput_scale, gpu_names, tput.shape[0])
+        if mscale is not None:
+            tput = tput * mscale
         for bi, rate in workload.slices(slice_factor):
             pinned = seen.get(bi, 0) < quota.get(bi, 0)
             seen[bi] = seen.get(bi, 0) + 1

@@ -73,8 +73,15 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=None,
     """Single-token GQA decode. q:(B,H,Dh) cache:(B,S,KVH,Dh) -> (B,H,Dh)."""
     which = _impl(impl)
     if k_new is not None:
-        # append mode: jnp path only (the Pallas kernel reads a committed
-        # cache; append-merge is a TODO there)
+        # Append mode is PINNED to the jnp fallback, for every impl: the
+        # Pallas decode kernel reads a committed cache and has no
+        # (k_new, v_new) merge, and the analytic self-attention merge in
+        # the fallback adds only O(B*H) work on top of the cache read, so
+        # a kernel-side merge buys nothing measurable.  Contract (parity-
+        # tested in tests/test_kernels.py): append over a read-only
+        # L-token cache == committed decode over the same cache with the
+        # token written at slot L and lengths L+1, for all window/softcap
+        # combinations.
         return ref.decode_attention_direct(
             q, k_cache, v_cache, lengths, window=window, softcap=softcap,
             k_new=k_new, v_new=v_new)

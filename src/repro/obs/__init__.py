@@ -5,8 +5,13 @@ reports for the solver/autoscaler/orchestrator stack.
   Prometheus text exposition and JSONL snapshots.
 * :mod:`repro.obs.trace` — dual-clock (sim + wall) span tracer emitting
   Chrome trace-event JSON (open in Perfetto).
+* :mod:`repro.obs.health` — active fleet health: multi-window burn-rate
+  SLO alerting, cost-anomaly detection, and throughput-drift detection
+  feeding the autoscalers' re-solve triggers.
+* :mod:`repro.obs.audit` — append-only, replayable decision audit log
+  of every solver call the control loops make.
 * :mod:`repro.obs.report` — renders a run report from a ``Timeline``
-  plus metric snapshots.
+  plus metric snapshots, alert summaries, and drift corrections.
 
 Solver-internal instrumentation (``SolveStats``) lives with the solver
 in :mod:`repro.core.ilp` and flows through allocations, autoscaler
@@ -16,8 +21,13 @@ from .metrics import (DEFAULT_LATENCY_BUCKETS, REGISTRY, SNAPSHOT_SCHEMA,
                       Counter, Gauge, Histogram, MetricsRegistry,
                       parse_prometheus, validate_snapshot)
 from .trace import SIM_PID, TRACER, WALL_PID, SpanTracer, validate_chrome_trace
+from .health import (DEFAULT_BURN_RULES, Alert, BurnRateRule,
+                     FleetHealthEngine, HealthUpdate,
+                     ThroughputDriftDetector)
+from .audit import (AUDIT_SCHEMA, AuditLog, allocation_fingerprint,
+                    replay_audit, validate_audit_record)
 # report imports repro.orchestrator.timeline (which itself pulls metrics/
-# trace back through this package), so it must come after those two
+# trace back through this package), so it must come after the others
 from .report import render_report, report_dict
 
 __all__ = [
@@ -25,5 +35,9 @@ __all__ = [
     "DEFAULT_LATENCY_BUCKETS", "SNAPSHOT_SCHEMA", "parse_prometheus",
     "validate_snapshot",
     "SpanTracer", "TRACER", "WALL_PID", "SIM_PID", "validate_chrome_trace",
+    "BurnRateRule", "DEFAULT_BURN_RULES", "Alert", "HealthUpdate",
+    "FleetHealthEngine", "ThroughputDriftDetector",
+    "AUDIT_SCHEMA", "AuditLog", "allocation_fingerprint",
+    "validate_audit_record", "replay_audit",
     "render_report", "report_dict",
 ]

@@ -1,0 +1,391 @@
+"""Replayable decision audit log for the allocation control loops.
+
+Every solver call an autoscaler makes — the initial provisioning solve,
+drift-triggered rescales, and failure re-solves — is appended to an
+:class:`AuditLog` as one JSON record carrying the *complete* solver
+inputs (observed rates, caps, floor knobs, throughput corrections, time
+budget, and a fingerprint of the previous allocation the incremental
+re-solve chained from) and outputs (instance counts, $/h, a SHA-1 of the
+slice assignment, and the alerts firing when the orchestrator annotated
+the window).  Because the inputs are complete and the sim clock is
+deterministic, :func:`replay_audit` can re-run the solver over the
+logged chain and assert byte-identical allocations — turning every sim
+run into a deterministic regression corpus for the solver stack.
+
+The log is append-only: records are never mutated after the fact except
+for :meth:`AuditLog.annotate`, which merges window-close context
+(alerts firing) into the ``outputs`` of records appended earlier in the
+*same* window, before the log is exported.
+
+Validation is hand-rolled (:func:`validate_audit_record`), matching the
+``SNAPSHOT_SCHEMA`` convention in :mod:`repro.obs.metrics` — no
+jsonschema dependency.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "AUDIT_SCHEMA", "AuditLog", "allocation_fingerprint",
+    "validate_audit_record", "replay_audit",
+]
+
+_KINDS = ("initial", "rescale", "failure")
+_SCOPES = ("cluster", "fleet", "regional")
+
+# Hand-rolled schema notation (documentation + validator contract), in
+# the style of metrics.SNAPSHOT_SCHEMA.
+AUDIT_SCHEMA: dict = {
+    "type": "object",
+    "required": ["seq", "t", "kind", "scope", "inputs", "outputs"],
+    "properties": {
+        "seq": {"type": "integer"},              # 0-based append order
+        "t": {"type": "number"},                 # sim time of the solve
+        "kind": {"enum": list(_KINDS)},
+        "scope": {"enum": list(_SCOPES)},
+        "inputs": {
+            "type": "object",
+            "required": ["rates", "over_provision", "caps", "chip_caps",
+                         "min_ondemand_frac", "replacement_delay_s",
+                         "time_budget_s", "tput_scale", "prev"],
+            "properties": {
+                # list (cluster) or {model|home: list} (fleet/regional)
+                "rates": {"type": ["array", "object"]},
+                "over_provision": {"type": "number"},
+                "caps": {"type": "object"},
+                "chip_caps": {"type": "object"},
+                "min_ondemand_frac": {"type": "number"},
+                "replacement_delay_s": {"type": "number"},
+                "time_budget_s": {"type": "number"},
+                "tput_scale": {"type": "object"},
+                # fingerprint of the allocation the incremental re-solve
+                # chained from; null for the initial solve
+                "prev": {"type": ["object", "null"]},
+                "models": {"type": "array"},     # fleet partial re-solves
+            },
+        },
+        "outputs": {
+            "type": "object",
+            "required": ["counts", "cost_per_hour"],
+            "properties": {
+                "counts": {"type": "object"},
+                "cost_per_hour": {"type": "number"},
+                "assignment_sha": {"type": ["string", "null"]},
+                "optimal": {"type": "boolean"},
+                "solve_stats": {"type": ["object", "null"]},
+                "per_model": {"type": "object"},
+                "alerts_firing": {"type": "array"},
+            },
+        },
+    },
+}
+
+_INPUT_NUMBERS = ("over_provision", "min_ondemand_frac",
+                  "replacement_delay_s", "time_budget_s")
+_INPUT_OBJECTS = ("caps", "chip_caps", "tput_scale")
+
+
+def allocation_fingerprint(counts: Mapping[str, int],
+                           assignment=None) -> dict:
+    """Compact identity of one allocation: counts plus a SHA-1 over the
+    slice assignment (byte-identity of the solver's actual decision, not
+    just the aggregated instance counts)."""
+    fp: dict = {"counts": {g: int(n) for g, n in sorted(counts.items())
+                           if n}}
+    fp["assignment_sha"] = (
+        None if assignment is None else hashlib.sha1(
+            np.asarray(assignment, dtype=np.int64).tobytes()).hexdigest())
+    return fp
+
+
+def validate_audit_record(rec: object) -> list[str]:
+    """Validate one audit record against :data:`AUDIT_SCHEMA`.  Returns a
+    list of problems (empty means valid)."""
+    errs: list[str] = []
+    if not isinstance(rec, dict):
+        return [f"record must be an object, got {type(rec).__name__}"]
+    if not isinstance(rec.get("seq"), int) or rec.get("seq", -1) < 0:
+        errs.append(f"seq must be a non-negative int: {rec.get('seq')!r}")
+    if not isinstance(rec.get("t"), (int, float)):
+        errs.append(f"t must be a number: {rec.get('t')!r}")
+    if rec.get("kind") not in _KINDS:
+        errs.append(f"kind invalid: {rec.get('kind')!r}")
+    if rec.get("scope") not in _SCOPES:
+        errs.append(f"scope invalid: {rec.get('scope')!r}")
+    ins = rec.get("inputs")
+    if not isinstance(ins, dict):
+        return errs + ["missing/invalid 'inputs' object"]
+    if not isinstance(ins.get("rates"), (list, dict)):
+        errs.append("inputs.rates must be an array or object")
+    for k in _INPUT_NUMBERS:
+        if not isinstance(ins.get(k), (int, float)):
+            errs.append(f"inputs.{k} must be a number: {ins.get(k)!r}")
+    for k in _INPUT_OBJECTS:
+        if not isinstance(ins.get(k), dict):
+            errs.append(f"inputs.{k} must be an object: {ins.get(k)!r}")
+    if "prev" not in ins:
+        errs.append("inputs.prev missing (null for the initial solve)")
+    elif ins["prev"] is not None and not isinstance(ins["prev"], dict):
+        errs.append("inputs.prev must be an object or null")
+    if rec.get("kind") == "initial" and ins.get("prev") is not None:
+        errs.append("initial solve must carry prev=null")
+    outs = rec.get("outputs")
+    if not isinstance(outs, dict):
+        return errs + ["missing/invalid 'outputs' object"]
+    if not isinstance(outs.get("counts"), dict):
+        errs.append("outputs.counts must be an object")
+    if not isinstance(outs.get("cost_per_hour"), (int, float)):
+        errs.append("outputs.cost_per_hour must be a number")
+    sha = outs.get("assignment_sha")
+    if sha is not None and not isinstance(sha, str):
+        errs.append("outputs.assignment_sha must be a string or null")
+    alerts = outs.get("alerts_firing")
+    if alerts is not None and (
+            not isinstance(alerts, list)
+            or any(not isinstance(a, str) for a in alerts)):
+        errs.append("outputs.alerts_firing must be a string array")
+    return errs
+
+
+def _jsonable(v):
+    """Numpy scalars/arrays -> plain JSON types (floats via repr, so the
+    round-trip is exact)."""
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+class AuditLog:
+    """Append-only JSONL decision log (see module docstring).
+
+    The autoscalers call :meth:`record_solve` after every successful
+    solver call; the owning orchestrator keeps ``now`` pointed at the sim
+    clock and attaches window context via :meth:`annotate`.
+    """
+
+    # exposed as a method so autoscalers reach the fingerprint through
+    # the (duck-typed) log instance and repro.core never imports repro.obs
+    fingerprint = staticmethod(allocation_fingerprint)
+
+    def __init__(self, scope: str = "cluster"):
+        if scope not in _SCOPES:
+            raise ValueError(f"scope must be one of {_SCOPES}: {scope!r}")
+        self.scope = scope
+        self.records: list[dict] = []
+        self.now: float = 0.0            # sim time, maintained by the owner
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def record_solve(self, *, kind: str, inputs: dict,
+                     counts: Mapping, cost_per_hour: float,
+                     assignment=None, optimal: Optional[bool] = None,
+                     solve_stats=None, extra: Optional[dict] = None) -> dict:
+        """Append one solve record.  ``inputs`` must carry the complete
+        argument set the solver was called with (the schema's required
+        input keys); ``assignment`` is hashed, never stored raw."""
+        outputs = allocation_fingerprint(counts, assignment) \
+            if assignment is not None or not isinstance(
+                next(iter(counts.values()), 0), dict) \
+            else {"counts": {m: {g: int(n) for g, n in sorted(c.items())
+                                 if n}
+                             for m, c in sorted(counts.items())},
+                  "assignment_sha": None}
+        outputs["cost_per_hour"] = float(cost_per_hour)
+        if optimal is not None:
+            outputs["optimal"] = bool(optimal)
+        if solve_stats is not None:
+            outputs["solve_stats"] = (
+                solve_stats if isinstance(solve_stats, dict)
+                else solve_stats.to_dict())
+        if extra:
+            outputs.update(_jsonable(extra))
+        rec = {"seq": len(self.records), "t": float(self.now),
+               "kind": kind, "scope": self.scope,
+               "inputs": _jsonable(inputs), "outputs": outputs}
+        errs = validate_audit_record(rec)
+        if errs:
+            raise ValueError("invalid audit record: " + "; ".join(errs))
+        self.records.append(rec)
+        return rec
+
+    def annotate(self, start: int, **extra) -> None:
+        """Merge window-close context (e.g. ``alerts_firing=[...]``) into
+        the outputs of every record appended at index >= ``start``."""
+        for rec in self.records[start:]:
+            rec["outputs"].update(_jsonable(extra))
+
+    def validate(self) -> list[str]:
+        errs: list[str] = []
+        for i, rec in enumerate(self.records):
+            errs += [f"records[{i}]: {e}" for e in validate_audit_record(rec)]
+            if rec["seq"] != i:
+                errs.append(f"records[{i}]: seq {rec['seq']} out of order")
+        return errs
+
+    # -- serialization -------------------------------------------------------
+    def to_jsonl(self) -> str:
+        lines = [json.dumps({"scope": self.scope,
+                             "n_records": len(self.records)})]
+        lines.extend(json.dumps(r, sort_keys=True) for r in self.records)
+        return "\n".join(lines) + "\n"
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_jsonl())
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "AuditLog":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty audit log")
+        head = json.loads(lines[0])
+        log = cls(head.get("scope", "cluster"))
+        for ln in lines[1:]:
+            rec = json.loads(ln)
+            errs = validate_audit_record(rec)
+            if errs:
+                raise ValueError(
+                    f"invalid audit record (seq {rec.get('seq')}): "
+                    + "; ".join(errs))
+            log.records.append(rec)
+        return log
+
+    @classmethod
+    def load(cls, path) -> "AuditLog":
+        return cls.from_jsonl(Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+def _common_kwargs(ins: dict) -> dict:
+    return {
+        "over_provision": float(ins["over_provision"]),
+        "caps": {g: int(v) for g, v in ins["caps"].items()} or None,
+        "chip_caps": ({k: int(v) for k, v in ins["chip_caps"].items()}
+                      or None),
+        "min_ondemand_frac": float(ins["min_ondemand_frac"]),
+        "replacement_delay_s": float(ins["replacement_delay_s"]),
+        "time_budget_s": float(ins["time_budget_s"]),
+        "tput_scale": ({g: (v if isinstance(v, (int, float))
+                            else np.asarray(v, dtype=float))
+                        for g, v in ins["tput_scale"].items()} or None),
+    }
+
+
+def _mismatches(seq: int, kind: str, want: dict, got: dict) -> list[dict]:
+    out = []
+    if want["counts"] != got["counts"]:
+        out.append({"seq": seq, "kind": kind, "field": "counts",
+                    "want": want["counts"], "got": got["counts"]})
+    if (want.get("assignment_sha") is not None
+            and want["assignment_sha"] != got["assignment_sha"]):
+        out.append({"seq": seq, "kind": kind, "field": "assignment_sha",
+                    "want": want["assignment_sha"],
+                    "got": got["assignment_sha"]})
+    return out
+
+
+def replay_audit(solver, records: Sequence[dict]) -> list[dict]:
+    """Re-run the logged solve chain and diff each allocation against the
+    recorded outputs.  Returns a list of mismatch dicts — empty means
+    every re-solve reproduced its logged allocation byte-identical.
+
+    ``solver`` must be the same kind of allocator the log came from
+    (``Melange`` for scope "cluster", ``MelangeFleet`` for "fleet",
+    ``RegionalMelange`` for "regional"), constructed identically to the
+    original run (profiling is deterministic, so rebuilding it from the
+    same catalog/model/SLO suffices).  The chain starts at the logged
+    ``initial`` record and threads each re-solve's ``prev`` exactly as
+    the live autoscaler did.
+    """
+    from repro.core.workload import Workload
+    if not records:
+        return []
+    scope = records[0]["scope"]
+    mism: list[dict] = []
+    if scope == "cluster":
+        state = None
+        for rec in records:
+            ins = rec["inputs"]
+            wl = Workload(solver.buckets,
+                          np.asarray(ins["rates"], dtype=float),
+                          name="replay")
+            new = solver.allocate(
+                wl, prev=None if rec["kind"] == "initial" else state,
+                **_common_kwargs(ins))
+            if new is None:
+                mism.append({"seq": rec["seq"], "kind": rec["kind"],
+                             "field": "feasible",
+                             "want": rec["outputs"]["counts"], "got": None})
+                return mism
+            got = allocation_fingerprint(new.counts,
+                                         new.solution.assignment)
+            mism += _mismatches(rec["seq"], rec["kind"],
+                                rec["outputs"], got)
+            state = new
+        return mism
+    if scope == "regional":
+        state = None
+        for rec in records:
+            ins = rec["inputs"]
+            demand = {h: Workload(solver.profiles.buckets,
+                                  np.asarray(r, dtype=float),
+                                  name=f"replay:{h}")
+                      for h, r in sorted(ins["rates"].items())}
+            new = solver.allocate(
+                demand, prev=None if rec["kind"] == "initial" else state,
+                **_common_kwargs(ins))
+            if new is None:
+                mism.append({"seq": rec["seq"], "kind": rec["kind"],
+                             "field": "feasible",
+                             "want": rec["outputs"]["counts"], "got": None})
+                return mism
+            got = allocation_fingerprint(new.counts,
+                                         new.solution.assignment)
+            mism += _mismatches(rec["seq"], rec["kind"],
+                                rec["outputs"], got)
+            state = new
+        return mism
+    if scope == "fleet":
+        per_model: dict = {}
+        for rec in records:
+            ins = rec["inputs"]
+            models = list(ins.get("models") or sorted(ins["rates"]))
+            wls = {m: Workload(solver.members[m].buckets,
+                               np.asarray(ins["rates"][m], dtype=float),
+                               name=f"replay:{m}") for m in models}
+            prev = (None if rec["kind"] == "initial"
+                    else {m: per_model[m] for m in models})
+            new = solver.allocate(wls, models=models, prev=prev,
+                                  **_common_kwargs(ins))
+            if new is None:
+                mism.append({"seq": rec["seq"], "kind": rec["kind"],
+                             "field": "feasible",
+                             "want": rec["outputs"]["counts"], "got": None})
+                return mism
+            want_pm = rec["outputs"].get("per_model") or {}
+            for m in models:
+                a = new.per_model[m]
+                got = allocation_fingerprint(a.counts,
+                                             a.solution.assignment)
+                want = want_pm.get(m)
+                if want is not None:
+                    mism += _mismatches(rec["seq"], f"{rec['kind']}:{m}",
+                                        want, got)
+                per_model[m] = a
+        return mism
+    raise ValueError(f"unknown audit scope {scope!r}")

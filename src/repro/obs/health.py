@@ -1,0 +1,403 @@
+"""Fleet health engine: SLO burn-rate alerting + throughput-drift detection.
+
+The PR 6 obs stack records what happened; this module *watches* it on
+the sim clock:
+
+* **Multi-window, multi-burn-rate SLO alerting** — the SRE recipe: an
+  error-budget burn rate is ``(1 - attainment) / (1 - slo_target)``,
+  and a rule fires only when BOTH a long and a short horizon exceed the
+  rule's threshold (the long window keeps the alert significant, the
+  short one makes it reset fast once the problem stops).  Horizons are
+  counted in telemetry windows, so the engine is agnostic to the sim's
+  window length.  Attainment is tracked fleet-wide and per
+  (model | region) via ``WindowRecord.per_model`` drill-down, each key
+  with its own alert lifecycle.
+* **Cost-anomaly rule** — realized fleet ``$/h`` (``WindowRecord.
+  cost_rate``) vs. the solver's predicted cost rate: a sustained gap
+  beyond ``cost_tolerance`` in either direction means the fleet is
+  billing meaningfully off-plan (orphaned instances, a reclaim storm
+  re-billing launches, or a solver cost-model bug).
+* **Alert lifecycle with hysteresis** — breach streaks move an alert
+  ``pending -> firing`` after ``for_windows`` consecutive breaches, and
+  ``firing -> resolved`` after ``clear_windows`` consecutive clears; a
+  pending alert that clears is discarded silently.  Every transition is
+  recorded with its sim time.
+* **Throughput-drift detection** (:class:`ThroughputDriftDetector`) —
+  per (gpu variant, bucket), observed serving behaviour is compared
+  against the solver's ``MaxTput`` belief.  Under-performance is caught
+  via sustained TPOT breach (the engine is slower than modeled, so the
+  allocation sized on the model saturates); over-performance via a
+  witness rate (an instance demonstrably served more than the corrected
+  prediction while meeting the SLO).  Corrections are EWMA-smoothed,
+  clamped, and *sticky*: with no fresh evidence a correction holds —
+  decay-to-one would re-create the bad allocation and oscillate.  The
+  published corrections feed the autoscalers' ``tput_scale``, where a
+  changed column's load row re-opens exactly its slices in
+  ``solve_incremental``.
+
+The engine is orchestrator-agnostic: it consumes ``WindowRecord``-shaped
+objects plus optional pre-aggregated drift evidence, and is fully
+testable standalone on synthetic windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "BurnRateRule", "DEFAULT_BURN_RULES", "Alert", "HealthUpdate",
+    "ThroughputDriftDetector", "FleetHealthEngine",
+]
+
+PENDING = "pending"
+FIRING = "firing"
+RESOLVED = "resolved"
+
+
+@dataclasses.dataclass(frozen=True)
+class BurnRateRule:
+    """One fast/slow window pair: fire when the burn rate over the last
+    ``long_windows`` AND the last ``short_windows`` telemetry windows
+    both exceed ``burn_threshold``."""
+
+    name: str
+    long_windows: int
+    short_windows: int
+    burn_threshold: float
+
+    def __post_init__(self):
+        if self.short_windows < 1 or self.long_windows < self.short_windows:
+            raise ValueError(
+                f"rule {self.name}: need 1 <= short <= long windows, got "
+                f"{self.short_windows}/{self.long_windows}")
+        if self.burn_threshold <= 0:
+            raise ValueError(
+                f"rule {self.name}: burn_threshold must be positive")
+
+
+# The classic page/ticket split, scaled to sim telemetry windows: the
+# fast pair catches budget burning ~8x over a short horizon, the slow
+# pair catches a steady 4x leak over a day-scale horizon.
+DEFAULT_BURN_RULES: tuple[BurnRateRule, ...] = (
+    BurnRateRule("slo-fast-burn", long_windows=6, short_windows=1,
+                 burn_threshold=8.0),
+    BurnRateRule("slo-slow-burn", long_windows=24, short_windows=4,
+                 burn_threshold=4.0),
+)
+
+COST_RULE = "cost-anomaly"
+DRIFT_RULE = "tput-drift"
+
+
+@dataclasses.dataclass
+class Alert:
+    """One (rule, key) alert instance walking the lifecycle."""
+
+    rule: str
+    key: str                  # "" fleet-wide, else "model=x" / "gpu=y" ...
+    state: str                # pending | firing | resolved
+    since_t: float            # sim time the current state was entered
+    breaches: int = 0         # consecutive breached windows
+    clears: int = 0           # consecutive clear windows
+    value: float = 0.0        # magnitude at last breach (burn rate, ...)
+
+    @property
+    def label(self) -> str:
+        return f"{self.rule}[{self.key}]" if self.key else self.rule
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "key": self.key, "state": self.state,
+                "since_t": self.since_t, "value": round(self.value, 4)}
+
+
+@dataclasses.dataclass
+class HealthUpdate:
+    """What one window's observation changed."""
+
+    t: float
+    transitions: list[dict]            # {t, rule, key, state, value}
+    firing: list[str]                  # labels of alerts firing now
+
+    @property
+    def any_firing(self) -> bool:
+        return bool(self.firing)
+
+
+class ThroughputDriftDetector:
+    """Per-(gpu variant, bucket) correction factors for the solver's
+    MaxTput belief (see module docstring for the signal design).
+
+    ``observe`` consumes one window's served-request evidence:
+    ``served`` is an iterable of ``(gpu_name, bucket_index, tpot_s)``
+    tuples for completed requests, ``n_instances`` the live instance
+    count per variant, ``window_s`` the window length.  Returns True
+    when the *published* corrections moved (re-solve worthy).
+    """
+
+    def __init__(self, max_tput: Mapping[str, Sequence[float]],
+                 slo_tpot_s: float, *,
+                 rel_tolerance: float = 0.25,
+                 ewma: float = 0.5,
+                 min_requests: int = 8,
+                 sustain_windows: int = 2,
+                 publish_tolerance: float = 0.10,
+                 clamp: tuple[float, float] = (0.25, 4.0)):
+        if not 0 < ewma <= 1:
+            raise ValueError(f"ewma must be in (0, 1]: {ewma}")
+        if slo_tpot_s <= 0:
+            raise ValueError(f"slo_tpot_s must be positive: {slo_tpot_s}")
+        self.max_tput = {g: np.asarray(v, dtype=float)
+                         for g, v in max_tput.items()}
+        self.slo = float(slo_tpot_s)
+        self.rel_tolerance = rel_tolerance
+        self.ewma = ewma
+        self.min_requests = min_requests
+        self.sustain_windows = sustain_windows
+        self.publish_tolerance = publish_tolerance
+        self.clamp = clamp
+        self.correction = {g: np.ones(len(v))
+                           for g, v in self.max_tput.items()}
+        self._published = {g: np.ones(len(v))
+                           for g, v in self.max_tput.items()}
+        self._streak = {g: np.zeros(len(v), dtype=int)
+                        for g, v in self.max_tput.items()}
+
+    def observe(self, served, n_instances: Mapping[str, int],
+                window_s: float) -> bool:
+        stats: dict[tuple[str, int], list] = {}
+        for gpu, b, tpot in served:
+            if gpu not in self.max_tput:
+                continue
+            stats.setdefault((gpu, int(b)), []).append(float(tpot))
+        dt = max(float(window_s), 1e-9)
+        tol = self.rel_tolerance
+        seen: set[tuple[str, int]] = set()
+        for (gpu, b), tpots in stats.items():
+            corr = self.correction[gpu]
+            if b >= len(corr):
+                continue
+            n = len(tpots)
+            if n < self.min_requests:
+                continue
+            seen.add((gpu, b))
+            mean_tpot = float(np.mean(tpots))
+            inst = max(1, int(n_instances.get(gpu, 1)))
+            per_inst_rate = n / dt / inst
+            eff = self.max_tput[gpu][b] * corr[b]
+            target = None
+            if mean_tpot > self.slo * (1 + tol):
+                # under-performance: the engine takes mean_tpot per token
+                # where the SLO budgeted slo — the believed throughput is
+                # off by about that ratio
+                target = self.slo / mean_tpot
+            elif (eff > 0 and per_inst_rate > eff * (1 + tol)
+                  and mean_tpot <= self.slo * (1 + 1e-9)):
+                # over-performance witness: an instance sustained more
+                # than the *corrected* prediction while in SLO — raises
+                # the correction back up, which is also the recovery path
+                # after a transient under-performance episode
+                target = per_inst_rate / self.max_tput[gpu][b]
+            if target is None:
+                # no fresh evidence: hold the correction (sticky — see
+                # module docstring)
+                self._streak[gpu][b] = (
+                    self._streak[gpu][b] + 1
+                    if abs(corr[b] - 1.0) > tol else 0)
+                continue
+            new = (1 - self.ewma) * corr[b] + self.ewma * target
+            corr[b] = float(np.clip(new, *self.clamp))
+            self._streak[gpu][b] = (self._streak[gpu][b] + 1
+                                    if abs(corr[b] - 1.0) > tol else 0)
+        # cells with no fresh evidence this window decay their drift
+        # streak: a GPU the corrected re-solve stopped routing to stops
+        # *alerting* after a few quiet windows, while its published
+        # correction stays in force (sticky — see module docstring)
+        for g, st in self._streak.items():
+            for b in range(len(st)):
+                if st[b] > 0 and (g, b) not in seen:
+                    st[b] -= 1
+        return self._publish()
+
+    def _publish(self) -> bool:
+        changed = False
+        for g, corr in self.correction.items():
+            pub = self._published[g]
+            sustained = self._streak[g] >= self.sustain_windows
+            active = np.abs(pub - 1.0) > 1e-12
+            candidate = np.where(sustained | active, corr, pub)
+            moved = np.abs(candidate - pub) / np.maximum(pub, 1e-9)
+            if np.any(moved > self.publish_tolerance):
+                self._published[g] = candidate.copy()
+                changed = True
+        return changed
+
+    def corrections(self) -> dict[str, np.ndarray]:
+        """Published per-bucket corrections, only for variants that carry
+        a non-unit correction (absent variants mean "trust the model")."""
+        return {g: pub.copy() for g, pub in self._published.items()
+                if np.any(np.abs(pub - 1.0) > 1e-12)}
+
+    def drifted(self) -> dict[str, float]:
+        """Variants currently drifted (sustained): worst correction per
+        variant — the drift-alert evidence."""
+        out: dict[str, float] = {}
+        for g, corr in self.correction.items():
+            mask = self._streak[g] >= self.sustain_windows
+            if np.any(mask):
+                worst = corr[mask][np.argmax(np.abs(corr[mask] - 1.0))]
+                out[g] = float(worst)
+        return out
+
+
+class FleetHealthEngine:
+    """Watches a stream of ``WindowRecord``s (see module docstring)."""
+
+    def __init__(self, *, slo_target: float = 0.995,
+                 burn_rules: Sequence[BurnRateRule] = DEFAULT_BURN_RULES,
+                 for_windows: int = 2, clear_windows: int = 2,
+                 cost_tolerance: float = 0.5,
+                 att_dim: str = "model"):
+        if not 0 < slo_target < 1:
+            raise ValueError(f"slo_target must be in (0, 1): {slo_target}")
+        if for_windows < 1 or clear_windows < 1:
+            raise ValueError("for_windows/clear_windows must be >= 1")
+        self.slo_target = slo_target
+        self.error_budget = 1.0 - slo_target
+        self.burn_rules = tuple(burn_rules)
+        self.for_windows = for_windows
+        self.clear_windows = clear_windows
+        self.cost_tolerance = cost_tolerance
+        self.att_dim = att_dim
+        horizon = max((r.long_windows for r in self.burn_rules), default=1)
+        # per-window {key: (slo_ok, completed + dropped)}; key "" is the
+        # fleet-wide series, others are per-(model|region) drill-downs
+        self._hist: deque[dict[str, tuple[int, int]]] = deque(maxlen=horizon)
+        self.alerts: dict[tuple[str, str], Alert] = {}   # active
+        self.resolved: list[Alert] = []
+        self.transitions: list[dict] = []
+
+    # -- burn-rate math ------------------------------------------------------
+    def _burn(self, key: str, n_windows: int) -> Optional[float]:
+        """Burn rate over the trailing ``n_windows`` for ``key`` (None
+        when the horizon holds no traffic for that key)."""
+        ok = denom = 0
+        hist = list(self._hist)[-n_windows:]
+        for w in hist:
+            s, d = w.get(key, (0, 0))
+            ok += s
+            denom += d
+        if denom == 0:
+            return None
+        return (1.0 - ok / denom) / self.error_budget
+
+    # -- lifecycle -----------------------------------------------------------
+    def _transition(self, t: float, a: Alert) -> dict:
+        tr = {"t": t, "rule": a.rule, "key": a.key, "state": a.state,
+              "value": round(a.value, 4)}
+        self.transitions.append(tr)
+        return tr
+
+    def _update_state(self, t: float, rule: str, key: str,
+                      breach: bool, value: float,
+                      new_tr: list[dict]) -> None:
+        k = (rule, key)
+        a = self.alerts.get(k)
+        if breach:
+            if a is None:
+                a = Alert(rule, key, PENDING, t, breaches=1, value=value)
+                self.alerts[k] = a
+                new_tr.append(self._transition(t, a))
+                if a.breaches >= self.for_windows:   # for_windows == 1
+                    a.state = FIRING
+                    a.since_t = t
+                    new_tr.append(self._transition(t, a))
+                return
+            a.breaches += 1
+            a.clears = 0
+            a.value = value
+            if a.state == PENDING and a.breaches >= self.for_windows:
+                a.state = FIRING
+                a.since_t = t
+                new_tr.append(self._transition(t, a))
+            return
+        if a is None:
+            return
+        a.clears += 1
+        a.breaches = 0
+        if a.state == PENDING:
+            del self.alerts[k]          # never fired: discard silently
+            return
+        if a.clears >= self.clear_windows:
+            a.state = RESOLVED
+            a.since_t = t
+            new_tr.append(self._transition(t, a))
+            self.resolved.append(a)
+            del self.alerts[k]
+
+    # -- main entry ----------------------------------------------------------
+    def observe_window(self, rec, *,
+                       predicted_cost_rate: Optional[float] = None,
+                       drift: Sequence[tuple[str, bool, float]] = ()
+                       ) -> HealthUpdate:
+        """Consume one closed telemetry window.
+
+        ``rec`` is ``WindowRecord``-shaped (``t1``, ``slo_ok``,
+        ``completed``, ``dropped``, ``cost_rate``, ``per_model``).
+        ``predicted_cost_rate`` is the solver's current planned $/h.
+        ``drift`` carries pre-computed drift evidence per gpu variant:
+        ``(gpu_name, breached, worst_correction)``.
+        """
+        t = float(rec.t1)
+        window: dict[str, tuple[int, int]] = {
+            "": (rec.slo_ok, rec.completed + rec.dropped)}
+        for m, d in (rec.per_model or {}).items():
+            window[f"{self.att_dim}={m}"] = (
+                d.get("slo_ok", 0),
+                d.get("completed", 0) + d.get("dropped", 0))
+        self._hist.append(window)
+        new_tr: list[dict] = []
+        keys = {k for w in self._hist for k in w}
+        for rule in self.burn_rules:
+            for key in sorted(keys):
+                long_burn = self._burn(key, rule.long_windows)
+                short_burn = self._burn(key, rule.short_windows)
+                if long_burn is None:
+                    continue
+                breach = (long_burn > rule.burn_threshold
+                          and short_burn is not None
+                          and short_burn > rule.burn_threshold)
+                self._update_state(t, rule.name, key, breach,
+                                   long_burn, new_tr)
+        if predicted_cost_rate is not None and predicted_cost_rate > 0:
+            ratio = float(rec.cost_rate) / float(predicted_cost_rate)
+            breach = abs(ratio - 1.0) > self.cost_tolerance
+            self._update_state(t, COST_RULE, "", breach, ratio, new_tr)
+        for gpu, breach, worst in drift:
+            self._update_state(t, DRIFT_RULE, f"gpu={gpu}", breach,
+                               worst, new_tr)
+        return HealthUpdate(t, new_tr, self.firing())
+
+    # -- views ---------------------------------------------------------------
+    def firing(self) -> list[str]:
+        return sorted(a.label for a in self.alerts.values()
+                      if a.state == FIRING)
+
+    def firing_by_rule(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for a in self.alerts.values():
+            if a.state == FIRING:
+                out[a.rule] = out.get(a.rule, 0) + 1
+        return out
+
+    def summary(self) -> dict:
+        """Alert roll-up for reports and benchmark artifacts."""
+        return {
+            "slo_target": self.slo_target,
+            "firing": self.firing(),
+            "active": [a.to_dict() for a in self.alerts.values()],
+            "resolved": [a.to_dict() for a in self.resolved],
+            "transitions": list(self.transitions),
+        }

@@ -11,7 +11,10 @@ post-mortem of an elastic run.
   plus total churn (scale-ups / scale-downs / preemption re-solves);
 * solver latency — a histogram of re-solve wall times with the
   :class:`repro.core.ilp.SolveStats` phase breakdown aggregated across
-  every decision that carried one.
+  every decision that carried one;
+* fleet health (when a :class:`repro.obs.health.FleetHealthEngine` is
+  passed) — alerts that fired/resolved over the run, plus the published
+  throughput-drift corrections still in force.
 
 Everything is derived, nothing is re-simulated: the report renders only
 what the run actually recorded.
@@ -81,9 +84,13 @@ def _agg_stats(stats: list[SolveStats]) -> Optional[dict]:
     }
 
 
-def report_dict(tl: Timeline, snapshot: Optional[dict] = None) -> dict:
+def report_dict(tl: Timeline, snapshot: Optional[dict] = None,
+                health=None) -> dict:
     """The report's data, for programmatic consumers (benchmarks emit
-    this next to their result rows)."""
+    this next to their result rows).  ``health`` is an optional
+    :class:`repro.obs.health.FleetHealthEngine` (or anything with its
+    ``summary()`` shape) whose alert roll-up is attached under
+    ``"health"``."""
     summ = tl.summary()
     lats = tl.solver_latencies
     final_fleet = dict(tl.windows[-1].fleet) if tl.windows else {}
@@ -99,12 +106,32 @@ def report_dict(tl: Timeline, snapshot: Optional[dict] = None) -> dict:
         "per_bucket": _attainment_rows(snapshot, "bucket"),
         "solver_latencies_s": lats,
         "solve_stats": _agg_stats(tl.solve_stats()),
+        "health": health.summary() if health is not None else None,
+        "tput_corrections": _corrections_rows(snapshot),
     }
 
 
+def _corrections_rows(snapshot: Optional[dict]) -> dict[str, dict]:
+    """Published drift corrections out of a metrics snapshot:
+    ``{gpu: {bucket: multiplier}}`` for every non-unit cell."""
+    out: dict[str, dict] = {}
+    if not snapshot:
+        return out
+    for m in snapshot.get("metrics", []):
+        if m.get("name") != "melange_tput_correction":
+            continue
+        for s in m.get("series", []):
+            labels = s.get("labels", {})
+            v = float(s.get("value", 1.0))
+            if abs(v - 1.0) > 1e-9:
+                out.setdefault(labels.get("gpu", ""),
+                               {})[labels.get("bucket", "")] = v
+    return out
+
+
 def render_report(tl: Timeline, snapshot: Optional[dict] = None,
-                  title: str = "run report") -> str:
-    d = report_dict(tl, snapshot)
+                  title: str = "run report", health=None) -> str:
+    d = report_dict(tl, snapshot, health=health)
     summ = d["summary"]
     lines = [f"== {title} ==", ""]
 
@@ -169,4 +196,26 @@ def render_report(tl: Timeline, snapshot: Optional[dict] = None,
             f"deadline {agg['pruned_deadline']} "
             f"({agg['deadline_hits']} budget hits, "
             f"{agg['restricted']} restricted searches)")
+
+    # -- fleet health --------------------------------------------------------
+    hs = d["health"]
+    corr = d["tput_corrections"]
+    if hs is not None or corr:
+        lines.append("")
+        lines.append("fleet health")
+    if hs is not None:
+        firing = hs.get("firing", [])
+        resolved = hs.get("resolved", [])
+        lines.append(f"  slo target: {_pct(hs.get('slo_target', 0.0))}; "
+                     f"{len(firing)} firing, {len(resolved)} resolved, "
+                     f"{len(hs.get('transitions', []))} transitions")
+        for label in firing:
+            lines.append(f"  FIRING {label}")
+        for a in resolved:
+            lines.append(f"  resolved {a['rule']}[{a['key']}] "
+                         f"at t={a['since_t']:.0f}s (value {a['value']})")
+    for g in sorted(corr):
+        cells = ", ".join(f"b{b}x{v:.2f}"
+                          for b, v in sorted(corr[g].items()))
+        lines.append(f"  drift correction {g}: {cells}")
     return "\n".join(lines) + "\n"

@@ -36,9 +36,13 @@ from repro.core.autoscaler import AllocationDiff, Autoscaler, FleetAutoscaler
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
 from repro.core.simulator import (ClusterEngine, SimRequest,
                                   slo_attainment_by_model)
-from repro.core.workload import workload_from_samples
+from repro.core.workload import bucket_indices, grid_edges, \
+    workload_from_samples
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.obs.audit import AuditLog
+from repro.obs.health import (DRIFT_RULE, FleetHealthEngine,
+                              ThroughputDriftDetector)
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer, wall_now
 from repro.traces.trace import FleetEvent, WorkloadTrace
@@ -265,6 +269,17 @@ class _Observed:
             "melange_stockouts_total", "market stockouts", ("gpu",))
         self._m_restocks = mx.counter(
             "melange_restocks_total", "market restocks", ("gpu",))
+        self._seen_rules: set[str] = set()
+        self._m_alerts = mx.gauge(
+            "melange_alerts_firing",
+            "health alerts currently firing", ("rule",))
+        self._m_alert_trans = mx.counter(
+            "melange_alert_transitions_total",
+            "health alert state transitions", ("rule", "state"))
+        self._m_tput_corr = mx.gauge(
+            "melange_tput_correction",
+            "published throughput-drift correction to the solver's MaxTput "
+            "belief", ("gpu", "bucket"))
 
     def _record(self, now: float, kind: str, **detail) -> None:
         """Timeline decision + metrics + a trace instant, in one place."""
@@ -319,6 +334,68 @@ class _Observed:
             attainment=round(rec.slo_attainment, 4),
             cost_rate=round(rec.cost_rate, 4))
 
+    # -- fleet health + decision audit ---------------------------------------
+    # audit scope of this orchestrator's decision log ("cluster" for the
+    # single-model loop; fleet/regional subclasses override)
+    _audit_scope = "cluster"
+
+    def _init_health(self, health: Optional[FleetHealthEngine],
+                     audit: Optional[AuditLog]) -> None:
+        self.health = (health if health is not None
+                       else FleetHealthEngine(att_dim=self._att_dim))
+        self.audit = (audit if audit is not None
+                      else AuditLog(self._audit_scope))
+
+    def _served_tuples(self, eng: ClusterEngine, new_comp, edges,
+                       model: Optional[str] = None):
+        """Drift-detector evidence for one window: ``(gpu, bucket, tpot)``
+        per completed multi-token request, attributed to the instance that
+        served it (retired instances included — a preempted instance's
+        completions still carry evidence)."""
+        gpu_of = {i.inst_id: i.gpu_name for i in eng.instances.values()}
+        for i in eng.retired:
+            gpu_of.setdefault(i.inst_id, i.gpu_name)
+        reqs = [r for r in new_comp
+                if r.decoded > 1 and (model is None or r.model == model)]
+        if not reqs:
+            return []
+        bi = bucket_indices([r.input_len for r in reqs],
+                            [r.output_len for r in reqs], *edges)
+        return [(gpu_of.get(r.inst_id, ""), int(b), r.tpot)
+                for r, b in zip(reqs, bi)]
+
+    def _drift_evidence(self, drifted: dict) -> list:
+        """Alert evidence tuples: every currently-drifted variant breaches;
+        variants with an active drift alert but no longer drifted emit a
+        clear so the alert's hysteresis can resolve it."""
+        active = {a.key.split("=", 1)[1]
+                  for (r, _k), a in self.health.alerts.items()
+                  if r == DRIFT_RULE}
+        return [(g, g in drifted, drifted.get(g, 1.0))
+                for g in sorted(set(drifted) | active)]
+
+    def _obs_health(self, up) -> None:
+        mx = self.metrics
+        if mx.enabled:
+            for tr in up.transitions:
+                self._m_alert_trans.labels(rule=tr["rule"],
+                                           state=tr["state"]).inc()
+            counts = self.health.firing_by_rule()
+            self._seen_rules.update(counts)
+            for rule in self._seen_rules:
+                self._m_alerts.labels(rule=rule).set(counts.get(rule, 0))
+        for tr in up.transitions:
+            self.tracer.instant(f"alert:{tr['state']}", up.t, track="alerts",
+                                rule=tr["rule"], key=tr["key"])
+
+    def _obs_corrections(self, corrections: dict) -> None:
+        mx = self.metrics
+        if not mx.enabled:
+            return
+        for g, arr in corrections.items():
+            for b, v in enumerate(np.atleast_1d(arr)):
+                self._m_tput_corr.labels(gpu=g, bucket=str(b)).set(float(v))
+
 
 class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
     """Runs a ``WorkloadTrace`` against an elastic Mélange-allocated fleet."""
@@ -342,10 +419,24 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
                  spot_restock_s: Optional[float] = None,
                  engine_params: EngineModelParams = DEFAULT_ENGINE,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[SpanTracer] = None):
+                 tracer: Optional[SpanTracer] = None,
+                 health: Optional[FleetHealthEngine] = None,
+                 audit: Optional[AuditLog] = None,
+                 drift_detection: bool = True):
         self.melange = melange
         self.trace = trace
         self._init_obs(metrics, tracer)
+        self._init_health(health, audit)
+        self.drift_detector: Optional[ThroughputDriftDetector] = None
+        self._bucket_edges = None
+        if drift_detection:
+            try:
+                self._bucket_edges = grid_edges(melange.profile.buckets)
+            except ValueError:
+                pass    # non-grid bucket list: no per-bucket telemetry
+            else:
+                self.drift_detector = ThroughputDriftDetector(
+                    melange.profile.max_tput, melange.profile.slo_tpot_s)
         self.window_s = window_s
         self.launch_delay_s = launch_delay_s
         self.seed = seed
@@ -381,7 +472,8 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
             drift_threshold=drift_threshold, ewma=ewma,
             solver_budget_s=solver_budget_s,
             min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=self.replacement_delay_s)
+            replacement_delay_s=self.replacement_delay_s,
+            audit_log=self.audit)
         if self.autoscaler.current is None:
             raise ValueError(
                 f"initial workload of trace '{trace.name}' is infeasible "
@@ -454,6 +546,8 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
         hi = int(np.searchsorted(arrivals, t1, side="right"))  # lint: allow[bucket-edges]
         n_arr = hi - lo
         dt = max(t1 - t0, 1e-9)
+        self.audit.now = t1
+        n0_audit = len(self.audit.records)
         if control:
             if n_arr:
                 window = reqs[lo:hi]
@@ -493,12 +587,54 @@ class ClusterOrchestrator(_SpotPreemptionSampler, _Observed):
             cost_rate=eng.cost_rate())
         self.timeline.windows.append(rec)
         self._obs_window(rec)
+        if control:
+            self._health_window(eng, rec, new_comp, t1)
+            self.audit.annotate(n0_audit, alerts_firing=self.health.firing())
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
+
+    def _health_window(self, eng: ClusterEngine, rec: WindowRecord,
+                       new_comp, t1: float) -> None:
+        """Close the health loop for one control window: feed the drift
+        detector with the window's served requests, update burn-rate /
+        cost / drift alerts, and — when the published corrections moved —
+        install them on the autoscaler and force an incremental re-solve
+        priced at measured capability."""
+        asc = self.autoscaler
+        det = self.drift_detector
+        changed = False
+        drifted: dict[str, float] = {}
+        if det is not None:
+            served = self._served_tuples(eng, new_comp, self._bucket_edges)
+            changed = det.observe(served, rec.fleet, rec.t1 - rec.t0)
+            drifted = det.drifted()
+        predicted = (asc.current.cost_per_hour
+                     if asc.current is not None else None)
+        up = self.health.observe_window(
+            rec, predicted_cost_rate=predicted,
+            drift=self._drift_evidence(drifted))
+        self._obs_health(up)
+        if det is not None and changed \
+                and asc.set_tput_corrections(det.corrections()):
+            self._obs_corrections(asc.tput_corrections)
+            wall0 = wall_now()
+            with self.tracer.span("resolve:tput-drift", track="solver",
+                                  t=t1):
+                diff = asc.maybe_rescale(force=True)
+            wall = wall_now() - wall0
+            if diff is not None and not diff.is_noop:
+                self._apply_diff(
+                    eng, diff, t1, "rescale", trigger="tput_drift",
+                    corrections={g: np.round(v, 3).tolist()
+                                 for g, v in asc.tput_corrections.items()},
+                    solve_time_s=asc.history[-1]["solve_time_s"],
+                    solve_stats=asc.history[-1].get("solve_stats"),
+                    wall_time_s=wall, new_cost=asc.history[-1]["new_cost"])
 
     def _on_fleet_event(self, eng: ClusterEngine, ev: FleetEvent) -> None:
         asc = self.autoscaler
         now = ev.t
+        self.audit.now = now
         if ev.kind == "restock":
             asc.lift_stockout(ev.gpu)
             self._record(now, "restock", gpu=ev.gpu)
@@ -745,7 +881,10 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                  spot_restock_s: Optional[float] = None,
                  engine_params: EngineModelParams = DEFAULT_ENGINE,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[SpanTracer] = None):
+                 tracer: Optional[SpanTracer] = None,
+                 health: Optional[FleetHealthEngine] = None,
+                 audit: Optional[AuditLog] = None,
+                 drift_detection: bool = True):
         self.fleet = fleet
         if traces is None:
             traces = {}
@@ -796,18 +935,36 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                         "traffic")
                 wl = tr.workload_at(t_active, seed=seed)
             initial[m] = wl
+        self._init_health(health, audit)
+        # one drift detector per model: members may differ in profile and
+        # SLO; their corrections are merged conservatively (elementwise
+        # min) before feeding the shared-pool solver
+        self.drift_detectors: dict[str, ThroughputDriftDetector] = {}
+        self._bucket_edges = {}
+        if drift_detection:
+            for m in fleet.models:
+                prof = fleet.members[m].profile
+                try:
+                    self._bucket_edges[m] = grid_edges(prof.buckets)
+                except ValueError:
+                    continue    # non-grid bucket list for this member
+                self.drift_detectors[m] = ThroughputDriftDetector(
+                    prof.max_tput, prof.slo_tpot_s)
         self.autoscaler = FleetAutoscaler(
             fleet, initial, headroom=headroom,
             drift_threshold=drift_threshold, ewma=ewma,
             solver_budget_s=solver_budget_s,
             min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=self.replacement_delay_s)
+            replacement_delay_s=self.replacement_delay_s,
+            audit_log=self.audit)
         if self.autoscaler.current is None:
             raise ValueError(
                 "initial fleet workloads are infeasible for every GPU type "
                 "under the models' SLOs")
         self.timeline = Timeline()
         self._init_obs(metrics, tracer)
+
+    _audit_scope = "fleet"
 
     @property
     def duration(self) -> float:
@@ -921,6 +1078,8 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
                    state: dict, control: bool = True) -> None:
         asc = self.autoscaler
         dt = max(t1 - t0, 1e-9)
+        self.audit.now = t1
+        n0_audit = len(self.audit.records)
         arrived_by_model: dict[str, int] = {}
         if control:
             for m, (reqs_m, arrivals_m) in state["by_model"].items():
@@ -969,12 +1128,68 @@ class FleetOrchestrator(_SpotPreemptionSampler, _Observed):
             per_model=per_model)
         self.timeline.windows.append(rec)
         self._obs_window(rec)
+        if control:
+            self._health_window(eng, rec, new_comp, t1)
+            self.audit.annotate(n0_audit, alerts_firing=self.health.firing())
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
+
+    def _health_window(self, eng: ClusterEngine, rec: WindowRecord,
+                       new_comp, t1: float) -> None:
+        """Fleet health loop: every model's detector sees its own served
+        requests against its own profile; published corrections are merged
+        conservatively (elementwise min — the physical GPU drifted, so the
+        most pessimistic measurement wins) before one forced re-solve."""
+        asc = self.autoscaler
+        changed = False
+        for m, det in self.drift_detectors.items():
+            served = self._served_tuples(eng, new_comp,
+                                         self._bucket_edges[m], model=m)
+            n_inst = (rec.per_model.get(m) or {}).get("fleet", {})
+            if det.observe(served, n_inst, rec.t1 - rec.t0):
+                changed = True
+        drifted: dict[str, float] = {}
+        for det in self.drift_detectors.values():
+            for g, w in det.drifted().items():
+                if g not in drifted or abs(w - 1.0) > abs(drifted[g] - 1.0):
+                    drifted[g] = w
+        predicted = (asc.current.cost_per_hour
+                     if asc.current is not None else None)
+        up = self.health.observe_window(
+            rec, predicted_cost_rate=predicted,
+            drift=self._drift_evidence(drifted))
+        self._obs_health(up)
+        if not changed:
+            return
+        merged: dict[str, np.ndarray] = {}
+        for det in self.drift_detectors.values():
+            for g, arr in det.corrections().items():
+                cur = merged.get(g)
+                if cur is None:
+                    merged[g] = arr.copy()
+                elif len(cur) == len(arr):
+                    merged[g] = np.minimum(cur, arr)
+        if asc.set_tput_corrections(merged):
+            self._obs_corrections(asc.tput_corrections)
+            wall0 = wall_now()
+            with self.tracer.span("resolve:tput-drift", track="solver",
+                                  t=t1):
+                diffs = asc.maybe_rescale(force=True)
+            wall = wall_now() - wall0
+            if diffs and any(not d.is_noop for d in diffs.values()):
+                h = asc.history[-1]
+                self._apply_diffs(
+                    eng, diffs, t1, "rescale", trigger="tput_drift",
+                    corrections={g: np.round(v, 3).tolist()
+                                 for g, v in asc.tput_corrections.items()},
+                    solve_time_s=h["solve_time_s"], wall_time_s=wall,
+                    new_cost=h["new_cost"],
+                    solve_stats=h.get("solve_stats"))
 
     def _on_fleet_event(self, eng: ClusterEngine, ev: FleetEvent) -> None:
         asc = self.autoscaler
         now = ev.t
+        self.audit.now = now
         if ev.kind == "restock":
             asc.lift_stockout(ev.gpu)
             self._record(now, "restock", gpu=ev.gpu)

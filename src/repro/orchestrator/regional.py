@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core.engine_model import DEFAULT_ENGINE, EngineModel, EngineModelParams
 from repro.core.simulator import ClusterEngine, SimRequest
+from repro.obs.audit import AuditLog
+from repro.obs.health import FleetHealthEngine, ThroughputDriftDetector
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import SpanTracer, wall_now
 from repro.core.workload import grid_edges, workload_from_samples
@@ -221,6 +223,7 @@ class RegionalOrchestrator(ClusterOrchestrator):
     """
 
     _att_dim = "region"   # per_model keys are home regions here
+    _audit_scope = "regional"
 
     def __init__(self, melange: RegionalMelange,
                  traces: Mapping[str, WorkloadTrace], *,
@@ -243,7 +246,10 @@ class RegionalOrchestrator(ClusterOrchestrator):
                  spot_restock_s: Optional[float] = None,
                  engine_params: EngineModelParams = DEFAULT_ENGINE,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[SpanTracer] = None):
+                 tracer: Optional[SpanTracer] = None,
+                 health: Optional[FleetHealthEngine] = None,
+                 audit: Optional[AuditLog] = None,
+                 drift_detection: bool = True):
         # deliberately NOT calling ClusterOrchestrator.__init__: demand is
         # a geography, the controller a RegionalAutoscaler — only the
         # fleet-event and diff-application machinery is inherited
@@ -291,12 +297,21 @@ class RegionalOrchestrator(ClusterOrchestrator):
                                     input_edges=self._in_edges,
                                     output_edges=self._out_edges)
             initial[home] = wl
+        self._init_health(health, audit)
+        # the detector watches *local* engine capability (the rtt=0 sim
+        # profile — corrections multiply the MaxTput tables, and RTT
+        # tightening is applied downstream of them in the region problem)
+        self._bucket_edges = (self._in_edges, self._out_edges)
+        self.drift_detector = (ThroughputDriftDetector(
+            melange.profile.max_tput, melange.profile.slo_tpot_s)
+            if drift_detection else None)
         self.autoscaler = RegionalAutoscaler(
             melange, initial, headroom=headroom,
             drift_threshold=drift_threshold, ewma=ewma,
             solver_budget_s=solver_budget_s,
             min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=self.replacement_delay_s)
+            replacement_delay_s=self.replacement_delay_s,
+            audit_log=self.audit)
         if self.autoscaler.current is None:
             raise ValueError(
                 "initial regional demand is infeasible for every (GPU, "
@@ -313,6 +328,8 @@ class RegionalOrchestrator(ClusterOrchestrator):
                    state: dict, control: bool = True) -> None:
         asc = self.autoscaler
         dt = max(t1 - t0, 1e-9)
+        self.audit.now = t1
+        n0_audit = len(self.audit.records)
         arrived_by_home: dict[str, int] = {}
         if control:
             for home, (reqs_h, arrivals_h) in state["by_home"].items():
@@ -376,6 +393,12 @@ class RegionalOrchestrator(ClusterOrchestrator):
             per_model=per_region)
         self.timeline.windows.append(rec)
         self._obs_window(rec)
+        if control:
+            # inherited health loop: the regional autoscaler speaks the
+            # same control interface, so drift-triggered forced re-solves
+            # apply unchanged
+            self._health_window(eng, rec, new_comp, t1)
+            self.audit.annotate(n0_audit, alerts_firing=self.health.firing())
         state["comp_ptr"] = len(comp)
         state["drop_ptr"] = len(drop)
 

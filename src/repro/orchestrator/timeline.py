@@ -49,6 +49,14 @@ class WindowRecord:
         denom = d.get("completed", 0) + d.get("dropped", 0)
         return d.get("slo_ok", 0) / denom if denom else 1.0
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WindowRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
 
 @dataclasses.dataclass
 class Decision:
@@ -160,7 +168,7 @@ class Timeline:
 
     def to_json(self) -> str:
         return json.dumps({
-            "windows": [dataclasses.asdict(w) for w in self.windows],
+            "windows": [w.to_dict() for w in self.windows],
             "decisions": [d.to_dict() for d in self.decisions],
             "summary": self.summary(),
         }, indent=1, default=str)
@@ -170,9 +178,7 @@ class Timeline:
         raw = json.loads(text)
         tl = cls()
         for w in raw.get("windows", []):
-            fields = {f.name for f in dataclasses.fields(WindowRecord)}
-            tl.windows.append(WindowRecord(
-                **{k: v for k, v in w.items() if k in fields}))
+            tl.windows.append(WindowRecord.from_dict(w))
         tl.decisions = [Decision.from_dict(d)
                         for d in raw.get("decisions", [])]
         return tl

@@ -143,6 +143,7 @@ class RegionalMelange:
                  min_ondemand_frac: float = 0.0,
                  replacement_delay_s: float = 0.0,
                  time_budget_s: float = 5.0,
+                 tput_scale: Mapping | None = None,
                  warm: bool = True,
                  warm_from: Optional[RegionAllocation] = None,
                  prev: Optional[RegionAllocation] = None
@@ -167,7 +168,8 @@ class RegionalMelange:
             wls, self.profiles, slice_factor=self.slice_factor,
             caps=caps, chip_caps=chip_caps, gpu_subset=gpu_subset,
             min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=replacement_delay_s)
+            replacement_delay_s=replacement_delay_s,
+            tput_scale=tput_scale)
         if prev is not None:
             # the single-region pre-solve is skipped: the previous
             # allocation already seeds the search
@@ -201,6 +203,7 @@ class RegionalMelange:
                     wls, self.columns_in(region), caps=caps,
                     chip_caps=chip_caps, min_ondemand_frac=min_ondemand_frac,
                     replacement_delay_s=replacement_delay_s,
+                    tput_scale=tput_scale,
                     time_budget_s=pre_budget / len(self.rc.names))
                 if sub is None or sub[1].cost >= best_cost:
                     continue
@@ -219,12 +222,13 @@ class RegionalMelange:
 
     def _solve_restricted(self, wls, subset, *, caps, chip_caps,
                           min_ondemand_frac, replacement_delay_s,
-                          time_budget_s):
+                          time_budget_s, tput_scale=None):
         rp = build_region_problem(
             wls, self.profiles, slice_factor=self.slice_factor,
             caps=caps, chip_caps=chip_caps, gpu_subset=subset,
             min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=replacement_delay_s)
+            replacement_delay_s=replacement_delay_s,
+            tput_scale=tput_scale)
         sol = solve(rp.prob, time_budget_s=time_budget_s)
         return None if sol is None else (rp, sol)
 

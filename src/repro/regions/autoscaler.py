@@ -31,7 +31,8 @@ class RegionalAutoscaler(_ChipPoolCaps):
                  headroom: float = 0.10, drift_threshold: float = 0.15,
                  ewma: float = 0.3, solver_budget_s: float = 5.0,
                  min_ondemand_frac: float = 0.0,
-                 replacement_delay_s: float = 0.0):
+                 replacement_delay_s: float = 0.0,
+                 audit_log=None):
         self.melange = melange
         self.headroom = headroom
         self.drift_threshold = drift_threshold
@@ -51,11 +52,18 @@ class RegionalAutoscaler(_ChipPoolCaps):
         self.buckets = {h: w.buckets for h, w in initial.items()}
         self.caps: dict[str, int] = {}        # per-variant instance caps
         self.chip_caps: dict[str, int] = {}   # per-pool chip caps
+        self.tput_corrections: dict[str, np.ndarray] = {}
+        self.audit_log = audit_log
         self.current: Optional[RegionAllocation] = melange.allocate(
             initial, over_provision=headroom,
             min_ondemand_frac=min_ondemand_frac,
             replacement_delay_s=replacement_delay_s,
             time_budget_s=solver_budget_s)
+        if self.current is not None:
+            self._audit("initial",
+                        rates={h: w.rates for h, w in initial.items()},
+                        caps=None, chip_caps=None, prev=None,
+                        alloc=self.current)
         self.history: list[dict] = []
 
     # -- pool accounting -----------------------------------------------------
@@ -96,15 +104,20 @@ class RegionalAutoscaler(_ChipPoolCaps):
                       ) -> Optional[AllocationDiff]:
         if not force and self.drift() < self.drift_threshold:
             return None
+        demand = self._observed_demand("observed")
         new = self.melange.allocate(
-            self._observed_demand("observed"),
-            over_provision=self.headroom,
+            demand, over_provision=self.headroom,
             caps=self.caps or None, chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             return None
+        self._audit("rescale",
+                    rates={h: w.rates for h, w in demand.items()},
+                    caps=self.caps, chip_caps=self.chip_caps,
+                    prev=self.current, alloc=new)
         diff = allocation_diff(self.current.counts, new.counts)
         self.history.append({
             "event": "rescale", "drift": self.drift(),
@@ -132,17 +145,22 @@ class RegionalAutoscaler(_ChipPoolCaps):
         if stockout:
             pool = self._pool_of(gpu)
             self.chip_caps[pool] = self._chips_of(counts, pool)
+        demand = self._observed_demand("post-failure")
         new = self.melange.allocate(
-            self._observed_demand("post-failure"),
-            over_provision=self.headroom, caps=self.caps or None,
+            demand, over_provision=self.headroom, caps=self.caps or None,
             chip_caps=self.chip_caps or None,
             min_ondemand_frac=self.min_ondemand_frac,
             replacement_delay_s=self.replacement_delay_s,
+            tput_scale=self.tput_corrections or None,
             time_budget_s=self.solver_budget_s, prev=self.current)
         if new is None:
             raise RuntimeError(
                 "infeasible after failure: no region's capacity can serve "
                 "the geography under SLO — page a human")
+        self._audit("failure",
+                    rates={h: w.rates for h, w in demand.items()},
+                    caps=self.caps, chip_caps=self.chip_caps,
+                    prev=self.current, alloc=new)
         diff = allocation_diff(counts, new.counts)
         self.history.append({
             "event": "failure", "gpu": gpu, "n": sum(losses.values()),

@@ -187,7 +187,8 @@ def build_region_problem(demand: Mapping[str, Workload],
                          chip_caps: Mapping[str, int] | None = None,
                          gpu_subset: Optional[list[str]] = None,
                          min_ondemand_frac: float = 0.0,
-                         replacement_delay_s: float = 0.0) -> RegionProblem:
+                         replacement_delay_s: float = 0.0,
+                         tput_scale: Mapping | None = None) -> RegionProblem:
     """Stack every home region's §5.4.2 load matrix (RTT-tightened per
     serving region) into one shared-pool problem.
 
@@ -209,7 +210,8 @@ def build_region_problem(demand: Mapping[str, Workload],
         parts.append(build_problem(
             demand[h], profiles.profile_for(h), slice_factor,
             gpu_subset=gpu_subset, min_ondemand_frac=min_ondemand_frac,
-            replacement_delay_s=replacement_delay_s))
+            replacement_delay_s=replacement_delay_s,
+            tput_scale=tput_scale))
     gpu_names = parts[0].gpu_names
     accs = [profiles.gpus_full[g] for g in gpu_names]
     nb = len(profiles.buckets)

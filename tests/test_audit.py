@@ -1,0 +1,204 @@
+"""Decision audit log (PR 10 tentpole): schema validation, JSONL
+round-trip, and — the core guarantee — record/replay byte-identity:
+re-running the logged solve chain through a freshly-built solver
+reproduces every allocation (counts AND assignment SHA) exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Autoscaler, FleetAutoscaler, Melange, MelangeFleet,
+                        ModelPerf, ModelSpec, PAPER_GPUS, make_workload)
+from repro.obs.audit import (AuditLog, allocation_fingerprint, replay_audit,
+                             validate_audit_record)
+
+
+@pytest.fixture(scope="module")
+def mel():
+    return Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+def test_fingerprint_counts_and_sha():
+    fp = allocation_fingerprint({"B": 2, "A": 1, "C": 0},
+                                np.array([0, 1, 1, 2]))
+    assert fp["counts"] == {"A": 1, "B": 2}          # sorted, zeros dropped
+    assert isinstance(fp["assignment_sha"], str)
+    fp2 = allocation_fingerprint({"A": 1, "B": 2}, np.array([0, 1, 1, 2]))
+    assert fp2["assignment_sha"] == fp["assignment_sha"]
+    fp3 = allocation_fingerprint({"A": 1, "B": 2}, np.array([0, 1, 2, 2]))
+    assert fp3["assignment_sha"] != fp["assignment_sha"]
+    assert allocation_fingerprint({"A": 1})["assignment_sha"] is None
+
+
+# ---------------------------------------------------------------------------
+# schema validation
+# ---------------------------------------------------------------------------
+def _good_record():
+    return {
+        "seq": 0, "t": 0.0, "kind": "initial", "scope": "cluster",
+        "inputs": {"rates": [1.0, 2.0], "over_provision": 0.1,
+                   "caps": {}, "chip_caps": {}, "min_ondemand_frac": 0.0,
+                   "replacement_delay_s": 0.0, "time_budget_s": 1.0,
+                   "tput_scale": {}, "prev": None},
+        "outputs": {"counts": {"A100": 2}, "cost_per_hour": 7.4,
+                    "assignment_sha": "ab" * 20},
+    }
+
+
+def test_validate_good_record():
+    assert validate_audit_record(_good_record()) == []
+
+
+@pytest.mark.parametrize("mutate, needle", [
+    (lambda r: r.update(kind="oops"), "kind"),
+    (lambda r: r.update(scope="oops"), "scope"),
+    (lambda r: r.update(seq=-1), "seq"),
+    (lambda r: r["inputs"].pop("rates"), "rates"),
+    (lambda r: r["inputs"].pop("prev"), "prev"),
+    (lambda r: r["inputs"].update(prev={"counts": {}}), "prev"),
+    (lambda r: r["inputs"].update(tput_scale=3), "tput_scale"),
+    (lambda r: r["outputs"].pop("counts"), "counts"),
+    (lambda r: r["outputs"].update(alerts_firing=[1]), "alerts_firing"),
+])
+def test_validate_rejects(mutate, needle):
+    rec = _good_record()
+    mutate(rec)
+    errs = validate_audit_record(rec)
+    assert errs and any(needle in e for e in errs)
+
+
+def test_record_solve_rejects_invalid():
+    log = AuditLog("cluster")
+    with pytest.raises(ValueError):
+        log.record_solve(kind="nope", inputs=_good_record()["inputs"],
+                         counts={"A100": 1}, cost_per_hour=1.0)
+    with pytest.raises(ValueError):
+        AuditLog("nope")
+
+
+def test_annotate_and_jsonl_roundtrip(tmp_path):
+    log = AuditLog("cluster")
+    ins = _good_record()["inputs"]
+    log.record_solve(kind="initial", inputs=ins, counts={"A100": 2},
+                     cost_per_hour=7.4, assignment=np.array([0, 0]))
+    log.now = 120.0
+    ins2 = dict(ins, prev=allocation_fingerprint({"A100": 2},
+                                                 np.array([0, 0])))
+    log.record_solve(kind="rescale", inputs=ins2, counts={"A100": 3},
+                     cost_per_hour=11.1, assignment=np.array([0, 0, 0]))
+    log.annotate(1, alerts_firing=["slo-fast-burn"])
+    assert log.records[0]["outputs"].get("alerts_firing") is None
+    assert log.records[1]["outputs"]["alerts_firing"] == ["slo-fast-burn"]
+    assert log.validate() == []
+    p = tmp_path / "audit.jsonl"
+    log.save(p)
+    back = AuditLog.load(p)
+    assert back.scope == "cluster"
+    assert back.records == log.records               # exact round-trip
+    with pytest.raises(ValueError):
+        AuditLog.from_jsonl("")
+
+
+def test_from_jsonl_rejects_broken_record():
+    log = AuditLog("cluster")
+    log.record_solve(kind="initial", inputs=_good_record()["inputs"],
+                     counts={"A100": 2}, cost_per_hour=7.4)
+    text = log.to_jsonl().replace('"initial"', '"oops"')
+    with pytest.raises(ValueError):
+        AuditLog.from_jsonl(text)
+
+
+# ---------------------------------------------------------------------------
+# record/replay byte-identity — cluster scope
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_replay_cluster_chain(mel, tmp_path):
+    log = AuditLog("cluster")
+    wl = make_workload("arena", 2.0)
+    asc = Autoscaler(mel, wl, headroom=0.1, drift_threshold=0.2,
+                     solver_budget_s=1.0, audit_log=log)
+    # drift-triggered rescale
+    log.now = 100.0
+    for _ in range(3):
+        asc.observe_rates(make_workload("arena", 16.0).rates)
+    assert asc.maybe_rescale() is not None
+    # drift-correction rescale: a non-unit tput_scale flows into the log
+    log.now = 200.0
+    assert asc.set_tput_corrections({"A100": 0.7})
+    assert asc.maybe_rescale(force=True) is not None
+    # failure re-solve with a stockout cap
+    log.now = 300.0
+    gpu = max(asc.current.counts, key=asc.current.counts.get)
+    asc.on_instance_failure(gpu, 1, stockout=True)
+    kinds = [r["kind"] for r in log.records]
+    assert kinds == ["initial", "rescale", "rescale", "failure"]
+    assert log.records[2]["inputs"]["tput_scale"] == {"A100": 0.7}
+    assert log.validate() == []
+    # replay through the JSONL round-trip (floats survive exactly) and a
+    # freshly-profiled solver: byte-identical allocations
+    log.save(tmp_path / "a.jsonl")
+    back = AuditLog.load(tmp_path / "a.jsonl")
+    fresh = Melange(PAPER_GPUS, ModelPerf.llama2_7b(), 0.12)
+    assert replay_audit(fresh, back.records) == []
+
+
+@pytest.mark.slow
+def test_replay_detects_tampering(mel):
+    log = AuditLog("cluster")
+    asc = Autoscaler(mel, make_workload("arena", 2.0), headroom=0.1,
+                     solver_budget_s=1.0, audit_log=log)
+    assert asc.current is not None and len(log) == 1
+    rec = log.records[0]
+    g = next(iter(rec["outputs"]["counts"]))
+    rec["outputs"]["counts"][g] += 1                 # falsify the log
+    mism = replay_audit(mel, log.records)
+    assert mism and mism[0]["field"] == "counts"
+
+
+# ---------------------------------------------------------------------------
+# record/replay byte-identity — fleet scope (partial re-solves)
+# ---------------------------------------------------------------------------
+def _llama2_13b():
+    p = 13e9 * 2
+    return ModelPerf("llama2-13b", p, p, 2 * 40 * 8 * 128 * 2, 40, 5120)
+
+
+@pytest.mark.slow
+def test_replay_fleet_chain(tmp_path):
+    specs = [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 4.0)),
+        ModelSpec("docs", _llama2_13b(), 0.2,
+                  workload=make_workload("pubmed", 2.0)),
+    ]
+    fleet = MelangeFleet(PAPER_GPUS, specs)
+    log = AuditLog("fleet")
+    asc = FleetAutoscaler(fleet, headroom=0.1, drift_threshold=0.2,
+                          solver_budget_s=1.0, audit_log=log)
+    assert asc.current is not None
+    # drift exactly one model: the partial re-solve covers only "chat"
+    log.now = 100.0
+    for _ in range(3):
+        asc.observe_rates("chat", make_workload("arena", 12.0).rates)
+    diffs = asc.maybe_rescale()
+    assert diffs is not None and set(diffs) == {"chat"}
+    assert log.records[-1]["inputs"]["models"] == ["chat"]
+    # shared-pool failure on the other model
+    log.now = 200.0
+    gpu = max(asc.current.per_model["docs"].counts,
+              key=asc.current.per_model["docs"].counts.get)
+    asc.on_instance_failure("docs", gpu, 1)
+    kinds = [r["kind"] for r in log.records]
+    assert kinds == ["initial", "rescale", "failure"]
+    assert log.validate() == []
+    log.save(tmp_path / "f.jsonl")
+    back = AuditLog.load(tmp_path / "f.jsonl")
+    fresh = MelangeFleet(PAPER_GPUS, [
+        ModelSpec("chat", ModelPerf.llama2_7b(), 0.12,
+                  workload=make_workload("arena", 4.0)),
+        ModelSpec("docs", _llama2_13b(), 0.2,
+                  workload=make_workload("pubmed", 2.0)),
+    ])
+    assert replay_audit(fresh, back.records) == []

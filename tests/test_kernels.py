@@ -100,6 +100,38 @@ def test_decode_direct_jnp_path():
     assert float(jnp.max(jnp.abs(o - o_ref))) < 1e-5
 
 
+@pytest.mark.parametrize("win,cap", [(None, None), (64, None),
+                                     (None, 30.0), (32, 50.0)])
+def test_decode_append_mode_parity(win, cap):
+    """The pinned append-mode contract (see ``ops.decode_attention``):
+    attending over a read-only L-token cache with the current token's
+    (k_new, v_new) merged analytically must equal committed decode over
+    the same cache with the token written at slot L and lengths L+1 —
+    for plain, windowed, and softcapped attention."""
+    from repro.kernels import ops
+    B, S, H, KVH, Dh = 3, 128, 8, 2, 64
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, KVH, Dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, KVH, Dh), jnp.float32)
+    k_new = jax.random.normal(ks[3], (B, KVH, Dh), jnp.float32)
+    v_new = jax.random.normal(ks[4], (B, KVH, Dh), jnp.float32)
+    lens = jnp.array([100, 37, S - 1])     # incl. a boundary: slot S-1
+    # append path through the dispatch wrapper (pinned jnp fallback even
+    # when a Pallas impl is requested)
+    o_append = ops.decode_attention(q, kc, vc, lens, window=win,
+                                    softcap=cap, k_new=k_new, v_new=v_new,
+                                    impl="pallas_interpret")
+    # committed reference: write the token at slot ``lengths``, bump lens
+    idx = jnp.arange(S)
+    at = (idx[None, :, None, None] == lens[:, None, None, None])
+    kc2 = jnp.where(at, k_new[:, None], kc)
+    vc2 = jnp.where(at, v_new[:, None], vc)
+    o_ref = ref.decode_attention_naive(q, kc2, vc2, lens + 1, window=win,
+                                       softcap=cap)
+    assert float(jnp.max(jnp.abs(o_append - o_ref))) < 1e-5
+
+
 # ---------------------------------------------------------------------------
 # RWKV6
 # ---------------------------------------------------------------------------

@@ -403,6 +403,29 @@ def test_timeline_json_round_trip_with_stats():
     assert back.summary()["slo_attainment"] == pytest.approx(0.7)
 
 
+def test_window_record_round_trip_every_field():
+    """PR 10 satellite: ``WindowRecord.to_dict``/``from_dict`` and the
+    Timeline JSON path preserve every field — including ``events`` and
+    the per-model drill-down — and ignore unknown keys on the way in."""
+    rec = WindowRecord(
+        t0=600.0, t1=900.0, arrived=42, completed=40, dropped=2, slo_ok=39,
+        observed_rate=42 / 300, fleet={"A100": 2, "L4": 1},
+        draining={"L4": 1}, cost_rate=9.25,
+        events=[{"kind": "preemption", "gpu": "A100:spot", "n": 1}],
+        per_model={"chat": {"arrived": 30, "completed": 29, "dropped": 1,
+                            "slo_ok": 29, "fleet": {"A100": 2}}})
+    d = rec.to_dict()
+    back = WindowRecord.from_dict(json.loads(json.dumps(d)))
+    assert back == rec                        # dataclass field equality
+    assert back.model_attainment("chat") == pytest.approx(29 / 30)
+    # forward compatibility: unknown keys are dropped, not fatal
+    assert WindowRecord.from_dict({**d, "added_in_pr99": 1}) == rec
+    tl = Timeline()
+    tl.windows.append(rec)
+    back_tl = Timeline.from_json(tl.to_json())
+    assert back_tl.windows == [rec]
+
+
 # ---------------------------------------------------------------------------
 # satellite: dropped-inclusive attainment is one number on both paths
 # ---------------------------------------------------------------------------
